@@ -1,0 +1,73 @@
+//! §6.2 / Table 1 — auto-tune the filter-bank convolution, both ways:
+//!
+//!  * measured: real PJRT executions of the AOT variant pool on this
+//!    host (scaled workloads), winner recorded in the tuning db;
+//!  * modeled: the full paper-scale Table 1 sweep over the simulated
+//!    2009-era GPUs.
+//!
+//! Run: `cargo run --release --example autotune_conv`
+
+use rtcg::apps::conv;
+use rtcg::device;
+use rtcg::kernels::Registry;
+use rtcg::tuner::{TuneOpts, TuningDb};
+use rtcg::util::bench::fmt_time;
+use rtcg::Toolkit;
+
+fn main() -> rtcg::util::error::Result<()> {
+    let tk = Toolkit::init()?;
+    let reg = Registry::open_default(tk)?;
+
+    // --- measured on this host ------------------------------------------------
+    println!("== measured auto-tuning (CPU PJRT, scaled workloads) ==");
+    let mut db = TuningDb::open_default()?;
+    for workload in ["conv0_k9", "conv2_k5"] {
+        let result = conv::tune_measured_workload(
+            &reg,
+            workload,
+            42,
+            &TuneOpts { samples: 3, ..Default::default() },
+        )?;
+        let default_boost = result
+            .boost_over(
+                result
+                    .candidates
+                    .iter()
+                    .map(|c| c.variant.as_str())
+                    .find(|v| v.starts_with("th1_") && v.ends_with("_u0"))
+                    .unwrap_or("th1_fb4_u0"),
+            )
+            .unwrap_or(1.0);
+        println!(
+            "{workload}: best {} ({}) over {} variants — {:.1}% above the default",
+            result.best_variant,
+            fmt_time(result.best_seconds),
+            result.candidates.len(),
+            (default_boost - 1.0) * 100.0
+        );
+        db.record(&result);
+    }
+    db.save()?;
+
+    // --- modeled Table 1 --------------------------------------------------------
+    println!("\n== modeled Table 1 (simulated devices; absolute numbers are modeled) ==");
+    println!(
+        "{:<8} {:<24} {:>9} {:>9} {:>8}",
+        "GPU", "input/filter-bank", "default", "tuned", "boost"
+    );
+    for dev in device::table1_devices() {
+        for cfg in conv::table1_configs() {
+            let cell = conv::model_cell(&cfg, &dev)?;
+            println!(
+                "{:<8} {:<24} {:>8.1}G {:>8.1}G {:>7.1}%",
+                dev.name,
+                cfg.label(),
+                cell.default_gflops,
+                cell.tuned_gflops,
+                cell.boost_pct
+            );
+        }
+    }
+    println!("autotune_conv OK");
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Fig 7 — the Copperhead axpy program:
+//!
+//! ```python
+//! @cu
+//! def axpy(a, x, y):
+//!     def triad(xi, yi):
+//!         return a * xi + yi
+//!     return map(triad, x, y)
+//! ```
+//!
+//! expressed in the embedded data-parallel DSL, compiled through RTCG,
+//! and executed on a million elements.
+//!
+//! Run: `cargo run --release --example copperhead_axpy`
+
+use rtcg::copperhead::{prelude, Copperhead, Shapes};
+use rtcg::util::prng::Rng;
+use rtcg::{HostArray, Toolkit};
+
+fn main() -> rtcg::util::error::Result<()> {
+    let n = 1_000_000;
+    let tk = Toolkit::init()?;
+    let comp = Copperhead::new(tk);
+
+    let (program, dsl_loc) = prelude::axpy()?;
+    println!(
+        "program '{}' ({} DSL lines, {} AST nodes)",
+        program.name,
+        dsl_loc,
+        program.node_count()
+    );
+
+    let mut shapes = Shapes::new();
+    shapes.insert("x".into(), vec![n]);
+    shapes.insert("y".into(), vec![n]);
+    let compiled = comp.compile(&program, &shapes)?;
+
+    let mut rng = Rng::new(7);
+    let a = HostArray::scalar_f32(rng.normal_f32());
+    let x = HostArray::f32(vec![n], rng.normal_vec(n));
+    let y = HostArray::f32(vec![n], rng.normal_vec(n));
+    let z = compiled.call(&[&a, &x, &y])?;
+
+    // verify against host arithmetic
+    let av = a.as_f32()?[0];
+    let (xv, yv, zv) = (x.as_f32()?, y.as_f32()?, z[0].as_f32()?);
+    for i in [0usize, 1, n / 2, n - 1] {
+        let want = av * xv[i] + yv[i];
+        assert!((zv[i] - want).abs() < 1e-4, "{} vs {want}", zv[i]);
+    }
+    println!("z[0..4] = {:?}", &zv[..4]);
+    println!("copperhead_axpy OK ({n} elements)");
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! §6.5 end-to-end driver — SAR filtered backprojection.
+//!
+//! Synthesizes a point-scatterer scene, simulates the range-profile
+//! data matrix, forms the image with the tuned AOT kernel (PJRT), and
+//! verifies the reconstruction focuses at the scatterer positions;
+//! reports the speedup over the scalar CPU implementation.
+//!
+//! Run: `cargo run --release --example sar_imaging`
+
+use std::time::Instant;
+
+use rtcg::apps::sar;
+use rtcg::kernels::Registry;
+use rtcg::util::bench::fmt_time;
+use rtcg::Toolkit;
+
+fn main() -> rtcg::util::error::Result<()> {
+    let tk = Toolkit::init()?;
+    let reg = Registry::open_default(tk)?;
+
+    let scene = sar::Scene::synthesize(
+        96, 96, 120, 256, 1.0,
+        vec![(10.0, -12.0, 1.0), (-20.0, 5.0, 0.7), (25.0, 25.0, 0.5)],
+    );
+    println!(
+        "scene: {}×{} image, {} projections × {} range bins, {} scatterers",
+        scene.nx, scene.ny, scene.m, scene.r, scene.scatterers.len()
+    );
+
+    // first call pays the (cached) compile — Fig 2 economics; time the
+    // warm path the way the paper times kernels
+    let t0 = Instant::now();
+    sar::run_kernel(&reg, &scene, "tx16_cm4")?;
+    let t_cold = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let (img_kernel, _) = sar::run_kernel(&reg, &scene, "tx16_cm4")?;
+    let t_kernel = t0.elapsed().as_secs_f64();
+    println!(
+        "cold call (compile+run) {}, warm {}",
+        fmt_time(t_cold),
+        fmt_time(t_kernel)
+    );
+
+    let t0 = Instant::now();
+    let (img_scalar, _) = sar::scalar_backproject(&scene);
+    let t_scalar = t0.elapsed().as_secs_f64();
+
+    // reconstruction quality: peaks at the scatterers
+    let mean: f32 = img_kernel.iter().map(|v| v.abs()).sum::<f32>()
+        / img_kernel.len() as f32;
+    for &(sx, sy, amp) in &scene.scatterers {
+        let (pi, pk) = scene.pixel_of(sx, sy);
+        let peak = img_kernel[pi * scene.ny + pk];
+        println!(
+            "scatterer ({sx:>6.1},{sy:>6.1}) amp {amp:.1}: image peak {:.1} ({}× field mean)",
+            peak,
+            (peak / mean) as i64
+        );
+        assert!(peak > 4.0 * mean, "reconstruction failed to focus");
+    }
+
+    // numerics agree with the scalar reference
+    let max_err = img_kernel
+        .iter()
+        .zip(&img_scalar)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("max |kernel - scalar| = {max_err:.2e}");
+    assert!(max_err < 1e-2);
+
+    println!(
+        "image formation: kernel {} vs scalar CPU {} — {:.1}× speedup \
+         (paper §6.5: ~50× on a C1060 vs one CPU core)",
+        fmt_time(t_kernel),
+        fmt_time(t_scalar),
+        t_scalar / t_kernel
+    );
+    println!("sar_imaging OK");
+    Ok(())
+}

@@ -1,0 +1,97 @@
+"""Shared build-time infrastructure for the AOT kernel pipeline.
+
+This is the compile-path half of the three-layer architecture (see
+DESIGN.md §2): Python/JAX authors the kernels, enumerates their tuning
+variants, and lowers each variant to HLO *text*, which the Rust
+coordinator loads, caches, compiles via PJRT, and executes at run time.
+
+HLO text (not a serialized ``HloModuleProto``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+
+# Dtype names used in the manifest; must match rust/src/rtcg/dtype.rs.
+DTYPE_NAMES = {
+    jnp.dtype("float32"): "f32",
+    jnp.dtype("float64"): "f64",
+    jnp.dtype("int32"): "i32",
+    jnp.dtype("int64"): "i64",
+}
+
+
+def dtype_name(dt) -> str:
+    return DTYPE_NAMES[jnp.dtype(dt)]
+
+
+@dataclasses.dataclass
+class KernelVariant:
+    """One point in a kernel's tuning space, ready for AOT lowering.
+
+    The paper (§4.1) argues that code variants should be *retained*, not
+    discarded: the tuner picks among them at run time.  Each variant here
+    is a structurally distinct program (different BlockSpec slicing /
+    unrolling), not a re-labeled copy — asserted by tests.
+    """
+
+    kernel: str                  # kernel family, e.g. "filterbank"
+    variant: str                 # variant id, e.g. "th4_fb8_u1"
+    workload: str                # workload id this lowering is specialized to
+    params: dict[str, Any]       # tuning parameters
+    fn: Callable                 # jax-traceable callable
+    example_args: tuple          # ShapeDtypeStructs for .lower()
+    flops: int                   # useful floating point work per call
+    bytes_moved: int             # minimal HBM traffic (read + write)
+    vmem_bytes: int              # per-grid-step scratchpad footprint
+    meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def relpath(self) -> str:
+        return f"{self.kernel}/{self.workload}/{self.variant}.hlo.txt"
+
+
+def sds(shape: Sequence[int], dtype=jnp.float32) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to XLA HLO text (the RTCG currency)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(v: KernelVariant) -> str:
+    return to_hlo_text(jax.jit(v.fn).lower(*v.example_args))
+
+
+def arg_manifest(args: Sequence[jax.ShapeDtypeStruct]) -> list[dict]:
+    return [
+        {"shape": list(a.shape), "dtype": dtype_name(a.dtype)} for a in args
+    ]
+
+
+def write_manifest(path: str, entries: list[dict], extra: dict) -> None:
+    doc = {
+        "format_version": 1,
+        "jax_version": jax.__version__,
+        **extra,
+        "kernels": entries,
+    }
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)

@@ -1,0 +1,160 @@
+"""Pallas filtered backprojection — the §6.5 SAR imaging workload.
+
+    I[x, y] = sum_m  D[m, r] * exp(j * u[m] * r),
+    r = dist((x, y), sensor_m) - standoff_m        (fractional range bin)
+
+with hardware linear interpolation into the range profiles replaced by an
+explicit gather + lerp (the CPU/TPU substrate has no texture units — see
+DESIGN.md §Substitutions).  Complex data travels as separate re/im
+planes.
+
+Following the paper's own §6.5 observation, the imaging constants
+(pixel pitch ``dx``, grid offsets) are *baked into the generated code*
+rather than passed as arguments — "a cleaner and simpler kernel is
+obtained by the use of pre-compiled constants … programmatic modification
+of the source code to update such constants is much more natural" — which
+is precisely what run-time (re)generation buys.
+
+Tuning axes: ``tile_x`` (pixel rows per grid step), ``chunk_m``
+(projections applied per inner iteration, python-unrolled).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from ..common import KernelVariant, sds
+
+
+def make_fn(NX, NY, M, R, dx, *, tile_x, chunk_m, dtype=jnp.float32):
+    if NX % tile_x or M % chunk_m:
+        raise ValueError("tiles must divide")
+
+    def kernel(re_ref, im_ref, px_ref, py_ref, pw_ref, u_ref,
+               ore_ref, oim_ref):
+        i = pl.program_id(0)
+        re = re_ref[...]                    # (M, R)
+        im = im_ref[...]
+        px, py, pw, u = (px_ref[...], py_ref[...], pw_ref[...],
+                         u_ref[...])
+        # dx and the grid offsets are baked constants (§6.5 of the paper)
+        ys = (jnp.arange(NY, dtype=dtype) - NY / 2.0) * dx
+        row = (i * tile_x + jnp.arange(tile_x, dtype=dtype)
+               - NX / 2.0) * dx
+        gx = row[:, None]                   # (tile_x, 1)
+        gy = ys[None, :]                    # (1, NY)
+
+        def apply_one(m, are, aim):
+            rng = jnp.sqrt((gx - px[m]) ** 2 + (gy - py[m]) ** 2) - pw[m]
+            r = jnp.clip(rng, 0.0, R - 2.0)
+            i0 = jnp.floor(r).astype(jnp.int32)
+            frac = r - i0
+            rrow, irow = re[m], im[m]       # (R,)
+            dre = rrow[i0] * (1 - frac) + rrow[i0 + 1] * frac
+            dim = irow[i0] * (1 - frac) + irow[i0 + 1] * frac
+            ph = u[m] * r
+            c, s = jnp.cos(ph), jnp.sin(ph)
+            return are + dre * c - dim * s, aim + dre * s + dim * c
+
+        def body(cidx, acc):
+            are, aim = acc
+            base = cidx * chunk_m
+            for k in range(chunk_m):        # unrolled projection chunk
+                are, aim = apply_one(base + k, are, aim)
+            return are, aim
+
+        zero = jnp.zeros((tile_x, NY), dtype)
+        are, aim = lax.fori_loop(0, M // chunk_m, body, (zero, zero))
+        ore_ref[...] = are
+        oim_ref[...] = aim
+
+    call = pl.pallas_call(
+        kernel,
+        grid=(NX // tile_x,),
+        in_specs=[
+            pl.BlockSpec((M, R), lambda i: (0, 0)),
+            pl.BlockSpec((M, R), lambda i: (0, 0)),
+            pl.BlockSpec((M,), lambda i: (0,)),
+            pl.BlockSpec((M,), lambda i: (0,)),
+            pl.BlockSpec((M,), lambda i: (0,)),
+            pl.BlockSpec((M,), lambda i: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((tile_x, NY), lambda i: (i, 0)),
+            pl.BlockSpec((tile_x, NY), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((NX, NY), dtype),
+            jax.ShapeDtypeStruct((NX, NY), dtype),
+        ),
+        interpret=True,
+    )
+    args = (sds((M, R)), sds((M, R)), sds((M,)), sds((M,)), sds((M,)),
+            sds((M,)))
+    return call, args
+
+
+# ~20 flops per (pixel, projection): dist, sqrt, lerp ×2, sincos, cmul.
+FLOPS_PER_PP = 20
+
+
+def flops(NX, NY, M):
+    return FLOPS_PER_PP * NX * NY * M
+
+
+def bytes_moved(NX, NY, M, R, itemsize=4):
+    return (2 * M * R + 4 * M + 2 * NX * NY) * itemsize
+
+
+def default_params(NX, NY, M, R):
+    return dict(tile_x=1, chunk_m=1)
+
+
+def variant_grid(NX, NY, M, R):
+    out = []
+    for tile_x in (1, 4, 16):
+        if NX % tile_x:
+            continue
+        for chunk_m in (1, 2, 4):
+            if M % chunk_m:
+                continue
+            out.append(dict(tile_x=tile_x, chunk_m=chunk_m))
+    return out
+
+
+def variant_name(p):
+    return f"tx{p['tile_x']}_cm{p['chunk_m']}"
+
+
+def build_variants(workload, NX, NY, M, R, dx, params_list=None):
+    plist = params_list or variant_grid(NX, NY, M, R)
+    out = []
+    for p in plist:
+        fn, args = make_fn(NX, NY, M, R, dx, **p)
+        out.append(
+            KernelVariant(
+                kernel="backproject",
+                variant=variant_name(p),
+                workload=workload,
+                params=dict(p),
+                fn=fn,
+                example_args=args,
+                flops=flops(NX, NY, M),
+                bytes_moved=bytes_moved(NX, NY, M, R),
+                vmem_bytes=(2 * M * R // max(1, M // p["chunk_m"])
+                            + 4 * p["chunk_m"]
+                            + 2 * p["tile_x"] * NY) * 4,
+                meta={
+                    "inner_contig": NY,
+                    "unroll": p["chunk_m"],
+                    "tile_elems": p["tile_x"] * NY,
+                    "grid": NX // p["tile_x"],
+                    "gather": True,
+                    "dx": dx,
+                },
+            )
+        )
+    return out

@@ -1,0 +1,93 @@
+"""Parametric elementwise Pallas kernels — Fig 3 / Fig 4 workloads.
+
+These are the AOT counterparts of the kernels the Rust toolkit also
+generates *at run time* (rtcg templates + XlaBuilder).  Shipping both
+paths lets the benchmarks compare AOT-pallas against rust-RTCG output on
+identical math (an ablation of DESIGN.md §5.1).
+
+Tuning axis: ``block`` — elements per grid step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import KernelVariant, sds
+
+
+def make_multiply_by(n, k, *, block, dtype=jnp.float32):
+    """multiply_by_two from Fig 3 (generalized constant k, baked in)."""
+    if n % block:
+        raise ValueError("block must divide n")
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...] * k
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), dtype),
+        interpret=True,
+    )
+
+
+def make_axpy(n, *, block, dtype=jnp.float32):
+    """z = a*x + b*y with scalar a, b as runtime arguments (Fig 4)."""
+    if n % block:
+        raise ValueError("block must divide n")
+
+    def kernel(a_ref, x_ref, b_ref, y_ref, o_ref):
+        o_ref[...] = a_ref[0] * x_ref[...] + b_ref[0] * y_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), dtype),
+        interpret=True,
+    )
+
+
+def build_variants(workload, n, params_list=None):
+    """AOT axpy variants for one vector length."""
+    blocks = [p["block"] for p in params_list] if params_list else None
+    if blocks is None:
+        # include the degenerate single-block variant: on backends where
+        # grid steps serialize (CPU interpret), it is the tuned winner —
+        # exactly the §4.1 point that optimal slicing is device-specific
+        blocks = [b for b in (1024, 8192, 65536, n) if n % b == 0 and b <= n]
+        if not blocks:
+            blocks = [n]
+    out = []
+    for block in blocks:
+        fn = make_axpy(n, block=block)
+        out.append(
+            KernelVariant(
+                kernel="axpy",
+                variant=f"b{block}",
+                workload=workload,
+                params=dict(block=block),
+                fn=fn,
+                example_args=(sds((1,)), sds((n,)), sds((1,)), sds((n,))),
+                flops=3 * n,
+                bytes_moved=(3 * n + 2) * 4,
+                vmem_bytes=3 * block * 4,
+                meta={
+                    "inner_contig": block,
+                    "unroll": 1,
+                    "tile_elems": block,
+                    "grid": n // block,
+                },
+            )
+        )
+    return out

@@ -1,0 +1,158 @@
+"""Pallas 3D filter-bank correlation — the §6.2 / Table 1 workload.
+
+The paper auto-tunes a CUDA filter-bank convolution over unroll depth,
+register spilling, block/grid dims, thread work size and shared-memory
+padding.  The TPU rethink (DESIGN.md §Hardware-Adaptation): the tuning
+axes become the Pallas *slicing structure* —
+
+  * ``tile_h``   — output rows produced per grid step (thread work size),
+  * ``bank_tile``— filters produced per grid step (block z-dim),
+  * ``unroll``   — filter-tap loop fully unrolled vs. rolled ``fori_loop``
+                   (loop unrolling [21]),
+
+each of which changes the lowered HLO structurally.  The contraction over
+input channels is expressed as a matmul so a real TPU lowering would hit
+the MXU; under ``interpret=True`` we validate structure and numerics on
+the CPU PJRT backend.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from ..common import KernelVariant, sds
+
+
+def make_fn(H, W, C, F, kh, kw, *, tile_h, bank_tile, unroll,
+            dtype=jnp.float32):
+    """Build the pallas_call for one tuning configuration."""
+    oh, ow = H - kh + 1, W - kw + 1
+    if oh % tile_h or F % bank_tile:
+        raise ValueError("tile must divide output")
+
+    def kernel(x_ref, w_ref, o_ref):
+        i = pl.program_id(0)
+        x = x_ref[...]                       # (H, W, C) image stack
+        w = w_ref[...]                       # (bank_tile, kh, kw, C)
+        row0 = i * tile_h
+
+        def tap(dy, dx, wslice, acc):
+            patch = lax.dynamic_slice(
+                x, (row0 + dy, dx, 0), (tile_h, ow, C)
+            )                                # (tile_h, ow, C)
+            # channel contraction as matmul: MXU-shaped on real hardware
+            return acc + jnp.einsum("rwc,fc->rwf", patch, wslice)
+
+        acc = jnp.zeros((tile_h, ow, bank_tile), dtype)
+        if unroll:
+            for dy in range(kh):
+                for dx in range(kw):
+                    acc = tap(dy, dx, w[:, dy, dx, :], acc)
+        else:
+            def body(t, acc):
+                dy, dx = t // kw, t % kw
+                ws = lax.dynamic_slice(
+                    w, (0, dy, dx, 0), (bank_tile, 1, 1, C)
+                ).reshape(bank_tile, C)
+                return tap(dy, dx, ws, acc)
+
+            acc = lax.fori_loop(0, kh * kw, body, acc)
+        o_ref[...] = acc
+
+    return pl.pallas_call(
+        kernel,
+        grid=(oh // tile_h, F // bank_tile),
+        in_specs=[
+            pl.BlockSpec((H, W, C), lambda i, j: (0, 0, 0)),
+            pl.BlockSpec((bank_tile, kh, kw, C), lambda i, j: (j, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (tile_h, ow, bank_tile), lambda i, j: (i, 0, j)
+        ),
+        out_shape=jax.ShapeDtypeStruct((oh, ow, F), dtype),
+        interpret=True,
+    )
+
+
+def flops(H, W, C, F, kh, kw):
+    oh, ow = H - kh + 1, W - kw + 1
+    return 2 * oh * ow * F * kh * kw * C
+
+
+def bytes_moved(H, W, C, F, kh, kw, itemsize=4):
+    oh, ow = H - kh + 1, W - kw + 1
+    return (H * W * C + F * kh * kw * C + oh * ow * F) * itemsize
+
+
+def vmem_bytes(H, W, C, F, kh, kw, tile_h, bank_tile, itemsize=4):
+    """Scratchpad footprint of the *streaming* formulation this kernel
+    models: input row band (with halo) + filter tile + output tile."""
+    ow = W - kw + 1
+    band = (tile_h + kh - 1) * W * C
+    filt = bank_tile * kh * kw * C
+    out = tile_h * ow * bank_tile
+    return (band + filt + out) * itemsize
+
+
+def default_params(H, W, C, F, kh, kw):
+    """The 'default' config of Table 1: the safe, hand-conservative choice
+    that runs correctly everywhere (smallest tiles, rolled loops)."""
+    return dict(tile_h=1, bank_tile=min(4, F), unroll=False)
+
+
+def variant_grid(H, W, C, F, kh, kw):
+    """Tuning grid.  Unrolled taps are skipped for large filters (the
+    lowered HLO would explode — the paper's compile-time cost, §4.2)."""
+    oh = H - kh + 1
+    out = []
+    for tile_h in (1, 2, 4, 8):
+        if oh % tile_h:
+            continue
+        for bank_tile in (2, 4, 8, 16):
+            if F % bank_tile or bank_tile > F:
+                continue
+            for unroll in (False, True):
+                if unroll and kh * kw > 32:
+                    continue
+                out.append(dict(tile_h=tile_h, bank_tile=bank_tile,
+                                unroll=unroll))
+    return out
+
+
+def variant_name(p):
+    return f"th{p['tile_h']}_fb{p['bank_tile']}_u{int(p['unroll'])}"
+
+
+def build_variants(workload: str, H, W, C, F, kh, kw,
+                   params_list=None) -> list[KernelVariant]:
+    """AOT entries for one workload shape (aot.py supplies the shapes)."""
+    plist = params_list or variant_grid(H, W, C, F, kh, kw)
+    out = []
+    for p in plist:
+        fn = make_fn(H, W, C, F, kh, kw, **p)
+        out.append(
+            KernelVariant(
+                kernel="filterbank",
+                variant=variant_name(p),
+                workload=workload,
+                params=dict(p),
+                fn=fn,
+                example_args=(sds((H, W, C)), sds((F, kh, kw, C))),
+                flops=flops(H, W, C, F, kh, kw),
+                bytes_moved=bytes_moved(H, W, C, F, kh, kw),
+                vmem_bytes=vmem_bytes(H, W, C, F, kh, kw,
+                                      p["tile_h"], p["bank_tile"]),
+                meta={
+                    "inner_contig": W - kw + 1,
+                    "unroll": kh * kw if p["unroll"] else 1,
+                    "tile_elems": p["tile_h"] * (W - kw + 1)
+                    * p["bank_tile"],
+                    "grid": (H - kh + 1) // p["tile_h"]
+                    * (F // p["bank_tile"]),
+                },
+            )
+        )
+    return out

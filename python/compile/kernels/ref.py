@@ -1,0 +1,136 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: each Pallas kernel variant must
+``allclose`` against the corresponding function here, for every shape and
+dtype the tests sweep (hypothesis does the sweeping).  Nothing in this
+file is performance-tuned — clarity over speed.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def filterbank(x, w):
+    """3D filter-bank *correlation* (valid), the §6.2 workload.
+
+    x: (H, W, C) input image stack; w: (F, kh, kw, C) filter bank.
+    Returns (H-kh+1, W-kw+1, F).
+
+    out[r, c, f] = sum_{dy,dx,ch} x[r+dy, c+dx, ch] * w[f, dy, dx, ch]
+    """
+    H, W, C = x.shape
+    F, kh, kw, _ = w.shape
+    oh, ow = H - kh + 1, W - kw + 1
+    acc = jnp.zeros((oh, ow, F), dtype=x.dtype)
+    for dy in range(kh):
+        for dx in range(kw):
+            patch = x[dy : dy + oh, dx : dx + ow, :]        # (oh, ow, C)
+            acc = acc + jnp.einsum("rwc,fc->rwf", patch, w[:, dy, dx, :])
+    return acc
+
+
+def nn_l2(targets, neighbors):
+    """Exact nearest neighbor under squared L2 distance (§6.4, Table 4).
+
+    targets: (T, D); neighbors: (N, D).
+    Returns (min_sqdist (T,), argmin (T,) int32).
+    """
+    d = (
+        jnp.sum(targets * targets, axis=1, keepdims=True)
+        - 2.0 * targets @ neighbors.T
+        + jnp.sum(neighbors * neighbors, axis=1)[None, :]
+    )
+    return jnp.min(d, axis=1), jnp.argmin(d, axis=1).astype(jnp.int32)
+
+
+def nn_l2_direct(targets, neighbors):
+    """Direct-form distances; numerically sturdier oracle for tight cases."""
+    d = jnp.sum(
+        (targets[:, None, :] - neighbors[None, :, :]) ** 2, axis=-1
+    )
+    return jnp.min(d, axis=1), jnp.argmin(d, axis=1).astype(jnp.int32)
+
+
+def spmv_ell(data, indices, x):
+    """ELLPACK sparse matrix-vector product (Table 2 row 3).
+
+    data, indices: (R, K) — K nonzeros per row, padded with index 0 /
+    value 0. x: (C,). Returns y: (R,).
+    """
+    return jnp.sum(data * x[indices], axis=1)
+
+
+def batched_matvec(d, u):
+    """Element-local operator application, the §6.1 DG-FEM hot loop.
+
+    d: (N, N) shared per-element operator; u: (E, N) per-element dofs.
+    Returns (E, N): y_e = d @ u_e for every element e.
+    """
+    return u @ d.T
+
+
+def backproject(data_re, data_im, px, py, pw, u, nx, ny, dx):
+    """Filtered backprojection (§6.5), 2-D formulation from the paper:
+
+        I[x, y] = sum_m  D[m, r] * exp(j * u[m] * r),
+        r = r(x, y, p_x[m], p_y[m], p_w[m])
+
+    with linear interpolation into each range profile.  Complex data is
+    carried as separate re/im planes (the rust runtime moves f32 only).
+    data_re/im: (M, R); px, py, pw, u: (M,).  Pixel (i, k) sits at
+    ((i - nx/2) * dx, (k - ny/2) * dx).  Returns (re, im) images (nx, ny).
+    """
+    M, R = data_re.shape
+    data_re, data_im, px, py, pw, u = map(
+        jnp.asarray, (data_re, data_im, px, py, pw, u)
+    )
+    xs = (jnp.arange(nx) - nx / 2.0) * dx
+    ys = (jnp.arange(ny) - ny / 2.0) * dx
+    gx, gy = jnp.meshgrid(xs, ys, indexing="ij")        # (nx, ny)
+
+    def body(m, acc):
+        are, aim = acc
+        rng = jnp.sqrt((gx - px[m]) ** 2 + (gy - py[m]) ** 2) - pw[m]
+        r = jnp.clip(rng, 0.0, R - 2.0)                 # fractional bin
+        i0 = jnp.floor(r).astype(jnp.int32)
+        frac = r - i0
+        dre = data_re[m, i0] * (1 - frac) + data_re[m, i0 + 1] * frac
+        dim = data_im[m, i0] * (1 - frac) + data_im[m, i0 + 1] * frac
+        ph = u[m] * r
+        c, s = jnp.cos(ph), jnp.sin(ph)
+        # (dre + j dim) * (c + j s)
+        return (are + dre * c - dim * s, aim + dre * s + dim * c)
+
+    zero = jnp.zeros((nx, ny), dtype=data_re.dtype)
+    return lax.fori_loop(0, M, body, (zero, zero))
+
+
+def axpy(a, x, b, y):
+    """Two-vector linear combination z = a*x + b*y (Fig 4)."""
+    return a * x + b * y
+
+
+def multiply_by(x, k):
+    """The Fig 3 quickstart kernel."""
+    return x * k
+
+
+def cascade2(x, w1, w2):
+    """Two-layer filterbank cascade with a rectifying nonlinearity —
+    the Fig 6b 'biologically-inspired model' composition (L2 model)."""
+    h = jnp.maximum(filterbank(x, w1), 0.0)
+    return jnp.maximum(filterbank(h, w2), 0.0)
+
+
+def cg_step(ell_data, ell_idx, x, r, p, rz):
+    """One preconditioner-free conjugate-gradient iteration (§5.2.1),
+    matrix in ELL form. Returns (x', r', p', rz')."""
+    ap = spmv_ell(ell_data, ell_idx, p)
+    alpha = rz / jnp.dot(p, ap)
+    x2 = x + alpha * p
+    r2 = r - alpha * ap
+    rz2 = jnp.dot(r2, r2)
+    p2 = r2 + (rz2 / rz) * p
+    return x2, r2, p2, rz2

@@ -1,0 +1,119 @@
+"""Pallas ELLPACK SpMV — the Table 2 'ELL SpMV' workload.
+
+ELL stores a sparse R×C matrix as dense (R, K) value/column-index planes
+(K = max nonzeros per row, short rows zero-padded).  On GPUs its win is
+coalesced access; the analogous layout question here is row-major vs.
+column-major storage of the planes, which is exactly the *data-layout*
+tuning axis the paper calls out in §4.1 ("changing data structure
+layouts").
+
+Tuning axes: ``row_block`` (rows per grid step), ``layout`` (rm = (R,K)
+planes, cm = transposed (K,R) planes — callers pass transposed inputs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import KernelVariant, sds
+
+
+def make_fn(R, K, C, *, row_block, layout, dtype=jnp.float32):
+    if R % row_block:
+        raise ValueError("row_block must divide R")
+
+    if layout == "rm":
+        def kernel(d_ref, i_ref, x_ref, o_ref):
+            d = d_ref[...]                      # (row_block, K)
+            idx = i_ref[...]                    # (row_block, K)
+            x = x_ref[...]                      # (C,)
+            o_ref[...] = jnp.sum(d * x[idx], axis=1)
+
+        in_specs = [
+            pl.BlockSpec((row_block, K), lambda i: (i, 0)),
+            pl.BlockSpec((row_block, K), lambda i: (i, 0)),
+            pl.BlockSpec((C,), lambda i: (0,)),
+        ]
+        args = (sds((R, K)), sds((R, K), jnp.int32), sds((C,)))
+    elif layout == "cm":
+        def kernel(d_ref, i_ref, x_ref, o_ref):
+            d = d_ref[...]                      # (K, row_block)
+            idx = i_ref[...]                    # (K, row_block)
+            x = x_ref[...]
+            o_ref[...] = jnp.sum(d * x[idx], axis=0)
+
+        in_specs = [
+            pl.BlockSpec((K, row_block), lambda i: (0, i)),
+            pl.BlockSpec((K, row_block), lambda i: (0, i)),
+            pl.BlockSpec((C,), lambda i: (0,)),
+        ]
+        args = (sds((K, R)), sds((K, R), jnp.int32), sds((C,)))
+    else:
+        raise ValueError(f"bad layout {layout}")
+
+    call = pl.pallas_call(
+        kernel,
+        grid=(R // row_block,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((row_block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((R,), dtype),
+        interpret=True,
+    )
+    return call, args
+
+
+def flops(R, K):
+    return 2 * R * K
+
+
+def bytes_moved(R, K, C, itemsize=4):
+    return (2 * R * K + C + R) * itemsize
+
+
+def default_params(R, K, C):
+    return dict(row_block=min(64, R), layout="rm")
+
+
+def variant_grid(R, K, C):
+    out = []
+    for row_block in (64, 256, 1024):
+        if R % row_block or row_block > R:
+            continue
+        for layout in ("rm", "cm"):
+            out.append(dict(row_block=row_block, layout=layout))
+    return out
+
+
+def variant_name(p):
+    return f"rb{p['row_block']}_{p['layout']}"
+
+
+def build_variants(workload, R, K, C, params_list=None):
+    plist = params_list or variant_grid(R, K, C)
+    out = []
+    for p in plist:
+        fn, args = make_fn(R, K, C, **p)
+        out.append(
+            KernelVariant(
+                kernel="spmv_ell",
+                variant=variant_name(p),
+                workload=workload,
+                params=dict(p),
+                fn=fn,
+                example_args=args,
+                flops=flops(R, K),
+                bytes_moved=bytes_moved(R, K, C),
+                vmem_bytes=(2 * p["row_block"] * K + C + p["row_block"]) * 4,
+                meta={
+                    "inner_contig": K if p["layout"] == "rm"
+                    else p["row_block"],
+                    "unroll": 1,
+                    "tile_elems": p["row_block"] * K,
+                    "grid": R // p["row_block"],
+                    "gather": True,
+                },
+            )
+        )
+    return out

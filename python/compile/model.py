@@ -1,0 +1,135 @@
+"""L2 — composed JAX compute graphs that call the L1 Pallas kernels.
+
+Each function here is a whole model the Rust coordinator executes as a
+single compiled artifact; XLA fuses the glue (nonlinearities, vector
+updates) around the Pallas kernel bodies so no intermediate round-trips
+to host occur — the paper's "GPU does the inner loops" tier (§5).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import KernelVariant, sds
+from .kernels import batched_matmul, filterbank, nn, spmv_ell
+
+
+def cascade2_fn(H, W, C, F1, k1, F2, k2, *, fb_params1, fb_params2):
+    """Two filter-bank layers with rectification between — the Fig 6b
+    'biologically-inspired model family' composition (one member)."""
+    l1 = filterbank.make_fn(H, W, C, F1, k1, k1, **fb_params1)
+    h1, w1 = H - k1 + 1, W - k1 + 1
+    l2 = filterbank.make_fn(h1, w1, F1, F2, k2, k2, **fb_params2)
+
+    def fn(x, wa, wb):
+        h = jnp.maximum(l1(x, wa), 0.0)
+        return jnp.maximum(l2(h, wb), 0.0)
+
+    return fn
+
+
+def cg_step_fn(R, K):
+    """One CG iteration over an ELL matrix, fully fused — the §5.2.1
+    solver's inner loop, AOT-lowered so Rust drives the iteration."""
+    def fn(ell_data, ell_idx, x, r, p, rz):
+        ap = jnp.sum(ell_data * p[ell_idx], axis=1)
+        alpha = rz / jnp.dot(p, ap)
+        x2 = x + alpha * p
+        r2 = r - alpha * ap
+        rz2 = jnp.dot(r2, r2)
+        p2 = r2 + (rz2 / rz) * p
+        return x2, r2, p2, rz2
+
+    return fn
+
+
+def entropy_stage_fn(T, N, D, *, nn_params):
+    """Entropy-pipeline distance stage (§6.4): mean-center the patch sets,
+    then exact-NN through the Pallas kernel.  Composed so centering fuses
+    into the same executable."""
+    nn_call = nn.make_fn(T, N, D, **nn_params)
+
+    def fn(targets, neighbors):
+        t = targets - jnp.mean(targets, axis=1, keepdims=True)
+        m = neighbors - jnp.mean(neighbors, axis=1, keepdims=True)
+        return nn_call(t, m)
+
+    return fn
+
+
+def dg_rhs_fn(E, N, *, bm_params):
+    """DG-FEM right-hand-side sketch: local operator application plus an
+    elementwise source term, fused (§6.1's operator inside a time step)."""
+    call, _ = batched_matmul.make_fn(E, N, **bm_params)
+
+    def fn(d, u, src):
+        return call(d, u) + 0.5 * src
+
+    return fn
+
+
+def build_model_variants() -> list[KernelVariant]:
+    """Model-level artifacts (fixed shapes; the composed graphs use the
+    kernels' default parameters — the tuner tunes kernels, models inherit
+    the choice at re-lowering time)."""
+    out = []
+
+    # Fig 6b cascade: 70×70×4 input, 8 filters 5×5, then 8 filters 3×3
+    # (70 → layer-1 output 66 → layer-2 output 64, so tile_h=4 divides).
+    H, W, C, F1, k1, F2, k2 = 70, 70, 4, 8, 5, 8, 3
+    fbp1 = dict(tile_h=2, bank_tile=4, unroll=False)   # 2 | 66
+    fbp = dict(tile_h=4, bank_tile=4, unroll=False)    # 4 | 64
+    fn = cascade2_fn(H, W, C, F1, k1, F2, k2,
+                     fb_params1=fbp1, fb_params2=fbp)
+    h1, w1 = H - k1 + 1, W - k1 + 1
+    oh, ow = h1 - k2 + 1, w1 - k2 + 1
+    out.append(KernelVariant(
+        kernel="cascade2", variant="default", workload="vis_64",
+        params=dict(fb=fbp),
+        fn=fn,
+        example_args=(sds((H, W, C)), sds((F1, k1, k1, C)),
+                      sds((F2, k2, k2, F1))),
+        flops=filterbank.flops(H, W, C, F1, k1, k1)
+        + filterbank.flops(h1, w1, F1, F2, k2, k2),
+        bytes_moved=(H * W * C + F1 * k1 * k1 * C
+                     + F2 * k2 * k2 * F1 + oh * ow * F2) * 4,
+        vmem_bytes=filterbank.vmem_bytes(H, W, C, F1, k1, k1, 4, 4),
+        meta={"inner_contig": ow, "unroll": 1,
+              "tile_elems": 4 * ow * 4, "grid": (H - k1 + 1) // 4},
+    ))
+
+    # CG step on Poisson grids: 64×64 (R=4096) and 256×256 (R=65536 —
+    # the "large system" of the §5.2.1 10× claim).
+    for R in (4096, 65536):
+        K = 5
+        out.append(KernelVariant(
+            kernel="cg_step", variant="fused", workload=f"poisson{R}",
+            params=dict(),
+            fn=cg_step_fn(R, K),
+            example_args=(sds((R, K)), sds((R, K), jnp.int32), sds((R,)),
+                          sds((R,)), sds((R,)), sds(())),
+            flops=2 * R * K + 10 * R,
+            bytes_moved=(2 * R * K + 5 * R) * 4,
+            vmem_bytes=(2 * 64 * K + 3 * 64) * 4,
+            meta={"inner_contig": K, "unroll": 1, "tile_elems": 64 * K,
+                  "grid": R // 64, "gather": True},
+        ))
+
+    # Entropy-stage distance executables for the doubling neighbor sets.
+    T, D = 1024, 64
+    for N in (1024, 2048, 4096, 8192, 16384):
+        np_ = dict(tile_t=128, chunk_n=min(1024, N), form="expand")
+        out.append(KernelVariant(
+            kernel="entropy_stage", variant="expand",
+            workload=f"t{T}_n{N}", params=dict(nn=np_),
+            fn=entropy_stage_fn(T, N, D, nn_params=np_),
+            example_args=(sds((T, D)), sds((N, D))),
+            flops=nn.flops(T, N, D, "expand") + 2 * (T + N) * D,
+            bytes_moved=nn.bytes_moved(T, N, D),
+            vmem_bytes=nn.vmem_bytes(D, 128, min(1024, N), "expand"),
+            meta={"inner_contig": D, "unroll": 1,
+                  "tile_elems": 128 * min(1024, N),
+                  "grid": T // 128, "matmul": True},
+        ))
+    return out

@@ -1,0 +1,11 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from hypothesis import settings
+
+# interpret-mode pallas on a single CPU core is slow; keep examples
+# meaningful but bounded, and never fail on wall-clock.
+settings.register_profile("repro", max_examples=12, deadline=None)
+settings.load_profile("repro")

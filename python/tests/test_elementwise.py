@@ -1,0 +1,39 @@
+"""Elementwise AOT kernels (Fig 3 / Fig 4 workloads) vs. oracle."""
+
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.kernels import elementwise as ew, ref
+
+
+@given(
+    blocks=st.integers(1, 8),
+    a=st.floats(-10, 10, allow_nan=False, width=32),
+    b=st.floats(-10, 10, allow_nan=False, width=32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_axpy_sweep(blocks, a, b, seed):
+    n = 256 * blocks
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n).astype(np.float32)
+    y = rng.standard_normal(n).astype(np.float32)
+    got = ew.make_axpy(n, block=256)(
+        np.float32([a]), x, np.float32([b]), y)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.axpy(a, x, b, y)),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+@given(k=st.floats(-100, 100, allow_nan=False, width=32))
+def test_multiply_by_baked_constant(k):
+    """Fig 3: the constant is baked into the generated code."""
+    x = np.linspace(-4, 4, 512, dtype=np.float32)
+    got = ew.make_multiply_by(512, float(k), block=128)(x)
+    np.testing.assert_allclose(np.asarray(got), x * np.float32(k),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_build_variants_blocks_divide():
+    for v in ew.build_variants("w", 524288):
+        assert 524288 % v.params["block"] == 0

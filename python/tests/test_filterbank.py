@@ -1,0 +1,73 @@
+"""Filter-bank kernel (Table 1 workload) vs. the pure-jnp oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.common import lower_variant
+from compile.kernels import filterbank, ref
+
+
+def run(H, W, C, F, kh, kw, params, dtype=np.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((H, W, C)).astype(dtype)
+    w = rng.standard_normal((F, kh, kw, C)).astype(dtype)
+    got = np.asarray(filterbank.make_fn(H, W, C, F, kh, kw, **params)(x, w))
+    want = np.asarray(ref.filterbank(x, w))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("params", filterbank.variant_grid(20, 20, 4, 8, 5, 5))
+def test_all_variants_small(params):
+    """Every point of the tuning grid computes the same function."""
+    run(20, 20, 4, 8, 5, 5, params)
+
+
+@given(
+    kh=st.sampled_from([3, 5]),
+    C=st.sampled_from([1, 2, 4]),
+    F=st.sampled_from([2, 4, 8]),
+    tile_h=st.sampled_from([1, 2, 4]),
+    unroll=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_shape_sweep(kh, C, F, tile_h, unroll, seed):
+    """Hypothesis sweep over filter sizes, channel/bank counts, tiles."""
+    oh = 8 * tile_h               # guarantee divisibility
+    H = W = oh + kh - 1
+    bank = min(4, F)
+    run(H, W, C, F, kh, kh,
+        dict(tile_h=tile_h, bank_tile=bank, unroll=unroll), seed=seed)
+
+
+def test_default_params_valid():
+    for (_, H, W, C, F, kh, kw) in [
+        ("w", 72, 72, 8, 16, 9, 9),
+        ("w", 76, 76, 4, 8, 13, 13),
+    ]:
+        p = filterbank.default_params(H, W, C, F, kh, kw)
+        assert (H - kh + 1) % p["tile_h"] == 0
+        assert F % p["bank_tile"] == 0
+
+
+def test_variants_structurally_distinct():
+    """DESIGN.md §5.3: two tuning points must lower to *different* HLO —
+    the variant pool is real multiplicity, not renamed copies."""
+    a = filterbank.build_variants(
+        "t", 12, 12, 2, 4, 3, 3,
+        params_list=[dict(tile_h=1, bank_tile=2, unroll=False)])[0]
+    b = filterbank.build_variants(
+        "t", 12, 12, 2, 4, 3, 3,
+        params_list=[dict(tile_h=2, bank_tile=2, unroll=True)])[0]
+    assert lower_variant(a) != lower_variant(b)
+
+
+def test_grid_rejects_nondividing_tiles():
+    for p in filterbank.variant_grid(71, 71, 4, 4, 8, 8):
+        assert (71 - 8 + 1) % p["tile_h"] == 0
+
+
+def test_flops_and_vmem_positive():
+    assert filterbank.flops(72, 72, 8, 16, 9, 9) > 0
+    v = filterbank.vmem_bytes(72, 72, 8, 16, 9, 9, 4, 8)
+    assert 0 < v < 16 * 2**20     # fits a TPU-core-scale scratchpad

@@ -1,0 +1,78 @@
+"""Nearest-neighbor kernel (Table 4 / §6.4 workload) vs. oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import nn, ref
+
+
+def check(T, N, D, params, seed=0):
+    rng = np.random.default_rng(seed)
+    t = rng.standard_normal((T, D)).astype(np.float32)
+    nb = rng.standard_normal((N, D)).astype(np.float32)
+    d, i = nn.make_fn(T, N, D, **params)(t, nb)
+    d, i = np.asarray(d), np.asarray(i)
+    dr, _ = ref.nn_l2_direct(t, nb)
+    dr = np.asarray(dr)
+    # distances match the oracle
+    np.testing.assert_allclose(d, dr, rtol=5e-4, atol=5e-4)
+    # the chosen neighbor really is (near-)nearest: its true distance is
+    # within fp-tolerance of the true minimum (robust to argmin ties).
+    true_d = ((t - nb[i]) ** 2).sum(axis=1)
+    np.testing.assert_allclose(true_d, dr, rtol=5e-4, atol=5e-4)
+    assert i.dtype == np.int32 and (i >= 0).all() and (i < N).all()
+
+
+@pytest.mark.parametrize("params", nn.variant_grid(64, 128, 16))
+def test_all_variants_small(params):
+    check(64, 128, 16, params)
+
+
+@given(
+    tile_t=st.sampled_from([32, 64]),
+    chunk_mult=st.integers(1, 4),
+    form=st.sampled_from(["expand", "direct"]),
+    D=st.sampled_from([8, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_shape_sweep(tile_t, chunk_mult, form, D, seed):
+    T = tile_t * 2
+    chunk = 64
+    N = chunk * chunk_mult
+    check(T, N, D, dict(tile_t=tile_t, chunk_n=chunk, form=form), seed=seed)
+
+
+def test_single_chunk():
+    check(32, 64, 8, dict(tile_t=32, chunk_n=64, form="expand"))
+
+
+def test_identical_rows_distance_zero():
+    """A target equal to some neighbor must report ~0 distance."""
+    rng = np.random.default_rng(3)
+    nb = rng.standard_normal((128, 16)).astype(np.float32)
+    t = nb[:32].copy()
+    d, i = nn.make_fn(32, 128, 16, tile_t=32, chunk_n=64, form="direct")(t, nb)
+    np.testing.assert_allclose(np.asarray(d), 0.0, atol=1e-5)
+    assert (np.asarray(i) == np.arange(32)).all()
+
+
+def test_argmin_first_occurrence_within_chunking():
+    """Strict `<` update keeps the earliest chunk's winner on exact ties."""
+    t = np.zeros((32, 8), np.float32)
+    nb = np.ones((128, 8), np.float32)
+    nb[10] = 0.0       # in chunk 0
+    nb[70] = 0.0       # in chunk 1 — must NOT displace index 10
+    d, i = nn.make_fn(32, 128, 8, tile_t=32, chunk_n=64, form="direct")(t, nb)
+    assert (np.asarray(i) == 10).all()
+
+
+def test_flops_formulas():
+    assert nn.flops(4, 8, 2, "expand") == 2 * 4 * 8 * 2
+    assert nn.flops(4, 8, 2, "direct") == 3 * 4 * 8 * 2
+
+
+def test_variant_grid_filters_oversized_direct():
+    for p in nn.variant_grid(1024, 16384, 64):
+        if p["form"] == "direct":
+            assert p["tile_t"] * p["chunk_n"] * 64 <= 1 << 22

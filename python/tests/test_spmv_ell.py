@@ -1,0 +1,74 @@
+"""ELL SpMV kernel (Table 2 workload) vs. oracle, both layouts."""
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import ref, spmv_ell
+
+
+def make_inputs(R, K, C, seed=0):
+    rng = np.random.default_rng(seed)
+    data = rng.standard_normal((R, K)).astype(np.float32)
+    idx = rng.integers(0, C, (R, K)).astype(np.int32)
+    x = rng.standard_normal((C,)).astype(np.float32)
+    return data, idx, x
+
+
+def check(R, K, C, params, seed=0):
+    data, idx, x = make_inputs(R, K, C, seed)
+    fn, _ = spmv_ell.make_fn(R, K, C, **params)
+    if params["layout"] == "cm":
+        got = fn(np.ascontiguousarray(data.T),
+                 np.ascontiguousarray(idx.T), x)
+    else:
+        got = fn(data, idx, x)
+    want = ref.spmv_ell(data, idx, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("params", spmv_ell.variant_grid(256, 8, 256))
+def test_all_variants(params):
+    check(256, 8, 256, params)
+
+
+@given(
+    rb=st.sampled_from([64, 128]),
+    K=st.integers(1, 12),
+    layout=st.sampled_from(["rm", "cm"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_shape_sweep(rb, K, layout, seed):
+    R = rb * 2
+    check(R, K, R, dict(row_block=rb, layout=layout), seed=seed)
+
+
+def test_zero_padding_rows():
+    """ELL zero padding (value 0, index 0) must not perturb the product."""
+    R, K, C = 128, 4, 128
+    data, idx, x = make_inputs(R, K, C)
+    data[:, -1] = 0.0
+    idx[:, -1] = 0
+    fn, _ = spmv_ell.make_fn(R, K, C, row_block=64, layout="rm")
+    got = np.asarray(fn(data, idx, x))
+    want = (data[:, :-1] * x[idx[:, :-1]]).sum(axis=1)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_layouts_agree():
+    R, K, C = 256, 8, 256
+    data, idx, x = make_inputs(R, K, C, seed=7)
+    rm, _ = spmv_ell.make_fn(R, K, C, row_block=64, layout="rm")
+    cm, _ = spmv_ell.make_fn(R, K, C, row_block=64, layout="cm")
+    a = np.asarray(rm(data, idx, x))
+    b = np.asarray(cm(np.ascontiguousarray(data.T),
+                      np.ascontiguousarray(idx.T), x))
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+def test_manifest_shapes_transposed_for_cm():
+    vs = spmv_ell.build_variants("w", 256, 8, 256)
+    by = {v.variant: v for v in vs}
+    assert list(by["rb64_rm"].example_args[0].shape) == [256, 8]
+    assert list(by["rb64_cm"].example_args[0].shape) == [8, 256]

@@ -1,0 +1,90 @@
+//! Table 1 — RTCG auto-tuning of the 3D filter-bank convolution.
+//!
+//! Two regimes (DESIGN.md §5.2):
+//!  * MODELED: paper-scale workloads on the simulated Table 1 GPUs
+//!    (absolute GFLOP/s are modeled; the claim is the *shape*);
+//!  * MEASURED: scaled workloads, real PJRT executions on this host,
+//!    default config vs. the tuner's pick.
+//!
+//! Paper's reported boosts for reference: 8600GT 63–517%, 9400M
+//! 98–626%, C1060 61–86%, GTX295 60–108%, GTX480 5–109%.
+
+use rtcg::apps::conv;
+use rtcg::device;
+use rtcg::kernels::Registry;
+use rtcg::tuner::TuneOpts;
+use rtcg::util::bench::fmt_time;
+use rtcg::Toolkit;
+
+// the paper's Table 1 boost column, for side-by-side printing
+const PAPER_BOOST: [[f64; 4]; 5] = [
+    [516.8, 187.9, 73.7, 63.1],   // 8600GT
+    [625.6, 175.6, 98.0, f64::NAN], // 9400M (3 rows in the paper)
+    [61.3, 86.1, 68.9, 79.0],     // C1060
+    [107.7, 83.6, 60.3, 87.7],    // GTX295
+    [19.2, 15.0, 5.3, 109.4],     // GTX480
+];
+
+fn main() -> rtcg::util::error::Result<()> {
+    println!("=== Table 1: filter-bank convolution auto-tuning ===\n");
+    println!("-- MODELED (paper-scale, simulated devices) --");
+    println!(
+        "{:<8} {:<24} {:>9} {:>9} {:>9} {:>11}",
+        "GPU", "input/filter-bank", "default", "tuned", "boost", "paper boost"
+    );
+    for (di, dev) in device::table1_devices().iter().enumerate() {
+        for (ci, cfg) in conv::table1_configs().iter().enumerate() {
+            let cell = conv::model_cell(cfg, dev)?;
+            let paper = PAPER_BOOST[di][ci];
+            let paper_s = if paper.is_nan() {
+                "-".to_string()
+            } else {
+                format!("{paper:.1}%")
+            };
+            println!(
+                "{:<8} {:<24} {:>8.1}G {:>8.1}G {:>8.1}% {:>11}",
+                dev.name,
+                cfg.label(),
+                cell.default_gflops,
+                cell.tuned_gflops,
+                cell.boost_pct,
+                paper_s
+            );
+        }
+    }
+
+    println!("\n-- MEASURED (scaled workloads, CPU PJRT, wall-clock) --");
+    let tk = Toolkit::init()?;
+    let reg = Registry::open_default(tk)?;
+    println!(
+        "{:<10} {:>9} {:>10} {:>10} {:>8}  {}",
+        "workload", "variants", "default", "tuned", "boost", "winner"
+    );
+    for workload in ["conv0_k9", "conv1_k13", "conv2_k5", "conv3_k8"] {
+        let result = conv::tune_measured_workload(
+            &reg,
+            workload,
+            42,
+            &TuneOpts { samples: 3, ..Default::default() },
+        )?;
+        // the safe default: smallest tiles, rolled loops
+        let default = result
+            .candidates
+            .iter()
+            .filter(|c| c.variant.starts_with("th1_") && c.variant.ends_with("_u0"))
+            .filter_map(|c| c.seconds)
+            .fold(f64::INFINITY, f64::min);
+        let boost = (default / result.best_seconds - 1.0) * 100.0;
+        println!(
+            "{:<10} {:>9} {:>10} {:>10} {:>7.1}%  {}",
+            workload,
+            result.candidates.len(),
+            fmt_time(default),
+            fmt_time(result.best_seconds),
+            boost,
+            result.best_variant
+        );
+    }
+    println!("\n(measured winners are host-CPU winners; the modeled table is the cross-GPU claim)");
+    Ok(())
+}

@@ -1,0 +1,258 @@
+//! Table 2 — Copperhead (DSL) vs hand-written performance.
+//!
+//! Paper (GTX480-era hardware): CSR-scalar 1.8/1.8, CSR-vector 5.5/12.0,
+//! ELL 10.5/13.5, PCG 24.5/34, SVM 36/71 GFLOP/s — i.e. the DSL reaches
+//! 45–100% of hand-written.  Here both sides compile to the same PJRT
+//! backend; the measured ratio is the claim.
+
+use rtcg::copperhead::{prelude, Copperhead, Shapes};
+use rtcg::kernels::Registry;
+use rtcg::runtime::HostArray;
+use rtcg::sparse::{cg, spmv, Csr};
+use rtcg::util::bench::{bench, BenchOpts};
+use rtcg::util::prng::Rng;
+use rtcg::Toolkit;
+
+fn shapes(pairs: &[(&str, Vec<usize>)]) -> Shapes {
+    pairs.iter().map(|(n, d)| (n.to_string(), d.clone())).collect()
+}
+
+struct Row {
+    name: &'static str,
+    paper_cuda: f64,
+    paper_copperhead: f64,
+    hand_gflops: f64,
+    dsl_gflops: f64,
+}
+
+fn main() -> rtcg::util::error::Result<()> {
+    println!("=== Table 2: Copperhead vs hand-written (measured, CPU PJRT) ===\n");
+    let tk = Toolkit::init()?;
+    let ch = Copperhead::new(tk.clone());
+    let opts = BenchOpts { max_samples: 12, ..BenchOpts::quick() };
+    let mut rows: Vec<Row> = Vec::new();
+
+    // ---- SpMV rows -----------------------------------------------------------
+    let (r, k, c) = (16384usize, 16usize, 16384usize);
+    let a = Csr::random(r, c, k, 1);
+    let ell = a.to_ell_cm();
+    let mut rng = Rng::new(2);
+    let x = HostArray::f32(vec![c], rng.normal_vec(c));
+    let vals = HostArray::f32(vec![r * k], a.vals.clone());
+    let cols = HostArray::i32(vec![r * k], a.cols.clone());
+    let vals_cm = HostArray::f32(vec![r * k], ell.vals_cm.clone());
+    let cols_cm = HostArray::i32(vec![r * k], ell.cols_cm.clone());
+    let ones = HostArray::f32(vec![k], vec![1.0; k]);
+    let spmv_flops = spmv::flops(r, k);
+
+    // CSR scalar
+    {
+        let hand = tk.source_module_from_computation(
+            &spmv::csr_scalar(r, k, c)?,
+        )?;
+        let (p, _) = prelude::spmv_csr_scalar(r, k)?;
+        let dsl = ch.compile(
+            &p,
+            &shapes(&[
+                ("vals", vec![r * k]),
+                ("cols", vec![r * k]),
+                ("x", vec![c]),
+            ]),
+        )?;
+        let bh = bench("csr_scalar_hand", &opts, || {
+            hand.call(&[&vals, &cols, &x]).unwrap();
+        });
+        let bd = bench("csr_scalar_dsl", &opts, || {
+            dsl.call(&[&vals, &cols, &x]).unwrap();
+        });
+        rows.push(Row {
+            name: "CSR Scalar SpMV",
+            paper_cuda: 1.8,
+            paper_copperhead: 1.8,
+            hand_gflops: bh.gflops(spmv_flops),
+            dsl_gflops: bd.gflops(spmv_flops),
+        });
+    }
+
+    // CSR vector
+    {
+        let hand = tk.source_module_from_computation(
+            &spmv::csr_vector(r, k, c)?,
+        )?;
+        let (p, _) = prelude::spmv_csr_vector(r, k)?;
+        let dsl = ch.compile(
+            &p,
+            &shapes(&[
+                ("vals", vec![r * k]),
+                ("cols", vec![r * k]),
+                ("x", vec![c]),
+                ("ones", vec![k]),
+            ]),
+        )?;
+        let bh = bench("csr_vector_hand", &opts, || {
+            hand.call(&[&vals, &cols, &x]).unwrap();
+        });
+        let bd = bench("csr_vector_dsl", &opts, || {
+            dsl.call(&[&vals, &cols, &x, &ones]).unwrap();
+        });
+        rows.push(Row {
+            name: "CSR Vector SpMV",
+            paper_cuda: 12.0,
+            paper_copperhead: 5.5,
+            hand_gflops: bh.gflops(spmv_flops),
+            dsl_gflops: bd.gflops(spmv_flops),
+        });
+    }
+
+    // ELL
+    {
+        let hand =
+            tk.source_module_from_computation(&spmv::ell(r, k, c)?)?;
+        let (p, _) = prelude::spmv_ell(r, k)?;
+        let dsl = ch.compile(
+            &p,
+            &shapes(&[
+                ("vals_cm", vec![r * k]),
+                ("cols_cm", vec![r * k]),
+                ("x", vec![c]),
+            ]),
+        )?;
+        let bh = bench("ell_hand", &opts, || {
+            hand.call(&[&vals_cm, &cols_cm, &x]).unwrap();
+        });
+        let bd = bench("ell_dsl", &opts, || {
+            dsl.call(&[&vals_cm, &cols_cm, &x]).unwrap();
+        });
+        rows.push(Row {
+            name: "ELL SpMV",
+            paper_cuda: 13.5,
+            paper_copperhead: 10.5,
+            hand_gflops: bh.gflops(spmv_flops),
+            dsl_gflops: bd.gflops(spmv_flops),
+        });
+    }
+
+    // ---- PCG: fused cg_step artifact vs DSL composition ----------------------
+    {
+        let reg = Registry::open_default(tk.clone())?;
+        let a = Csr::poisson2d(64); // 4096 rows, the shipped artifact
+        let mut rng = Rng::new(3);
+        let b = rng.normal_vec(4096);
+        let iter_flops = cg::iter_flops(&a) as u64;
+        // hand-written: the fused AOT step, 30 iterations
+        let bh = bench("pcg_hand", &BenchOpts::quick(), || {
+            cg::solve_fused(&reg, &a, &b, 0.0, 30).unwrap();
+        });
+        // DSL: the whole iteration as one fused multi-output program
+        let (prog, _) = prelude::pcg_step(4096, 5)?;
+        let mut sh = Shapes::new();
+        for (n, d) in [
+            ("vals", vec![4096 * 5]),
+            ("cols", vec![4096 * 5]),
+            ("x", vec![4096]),
+            ("r", vec![4096]),
+            ("p", vec![4096]),
+        ] {
+            sh.insert(n.to_string(), d);
+        }
+        let step = ch.compile(&prog, &sh)?;
+        let vals_h = HostArray::f32(vec![4096 * 5], a.vals.clone());
+        let cols_h = HostArray::i32(vec![4096 * 5], a.cols.clone());
+        let client = tk.client();
+        let vals_d = client.to_device(&vals_h)?;
+        let cols_d = client.to_device(&cols_h)?;
+        let bd = bench("pcg_dsl", &BenchOpts::quick(), || {
+            // 30 iterations, state device-resident
+            let mut x = client
+                .to_device(&HostArray::f32(vec![4096], vec![0.0; 4096]))
+                .unwrap();
+            let mut r = client
+                .to_device(&HostArray::f32(vec![4096], b.clone()))
+                .unwrap();
+            let mut p = r.clone();
+            let rz0: f32 = b.iter().map(|v| v * v).sum();
+            let mut rz = client
+                .to_device(&HostArray::scalar_f32(rz0))
+                .unwrap();
+            for _ in 0..30 {
+                let outs = step
+                    .executable()
+                    .run_buffers(&[&vals_d, &cols_d, &x, &r, &p, &rz])
+                    .unwrap();
+                let mut it = outs.into_iter();
+                x = it.next().unwrap();
+                r = it.next().unwrap();
+                p = it.next().unwrap();
+                rz = it.next().unwrap();
+            }
+            std::hint::black_box(rz);
+        });
+        rows.push(Row {
+            name: "PCG Solver",
+            paper_cuda: 34.0,
+            paper_copperhead: 24.5,
+            hand_gflops: 30.0 * iter_flops as f64 / bh.mean_s() / 1e9,
+            dsl_gflops: 30.0 * iter_flops as f64 / bd.mean_s() / 1e9,
+        });
+    }
+
+    // ---- SVM: one fused hand graph vs the DSL gradient step ------------------
+    {
+        let (t, d) = (4096usize, 64usize);
+        let mut rng = Rng::new(4);
+        let xflat = HostArray::f32(vec![t * d], rng.normal_vec(t * d));
+        let labels = HostArray::f32(
+            vec![t],
+            (0..t)
+                .map(|_| if rng.f32() < 0.5 { -1.0 } else { 1.0 })
+                .collect(),
+        );
+        let w = HostArray::f32(vec![d], rng.normal_vec(d));
+        let eta = HostArray::scalar_f32(1e-3);
+        let (hand_comp, _) = prelude::svm_handwritten(t, d)?;
+        let hand = tk.source_module_from_computation(&hand_comp)?;
+        let (p, _) = prelude::svm_grad_step(t, d)?;
+        let dsl = ch.compile(
+            &p,
+            &shapes(&[
+                ("xflat", vec![t * d]),
+                ("labels", vec![t]),
+                ("w", vec![d]),
+            ]),
+        )?;
+        let svm_flops = (4 * t * d + 6 * t + 2 * d) as u64;
+        let bh = bench("svm_hand", &opts, || {
+            hand.call(&[&xflat, &labels, &w, &eta]).unwrap();
+        });
+        let bd = bench("svm_dsl", &opts, || {
+            dsl.call(&[&xflat, &labels, &w, &eta]).unwrap();
+        });
+        rows.push(Row {
+            name: "SVM Solver",
+            paper_cuda: 71.0,
+            paper_copperhead: 36.0,
+            hand_gflops: bh.gflops(svm_flops),
+            dsl_gflops: bd.gflops(svm_flops),
+        });
+    }
+
+    println!(
+        "{:<18} {:>10} {:>10} {:>7} | {:>9} {:>11} {:>7}",
+        "Example", "hand GF/s", "DSL GF/s", "ratio",
+        "paper-hand", "paper-DSL", "ratio"
+    );
+    for row in &rows {
+        println!(
+            "{:<18} {:>10.3} {:>10.3} {:>6.0}% | {:>9.1} {:>11.1} {:>6.0}%",
+            row.name,
+            row.hand_gflops,
+            row.dsl_gflops,
+            100.0 * row.dsl_gflops / row.hand_gflops,
+            row.paper_cuda,
+            row.paper_copperhead,
+            100.0 * row.paper_copperhead / row.paper_cuda,
+        );
+    }
+    println!("\npaper claim: DSL reaches 45–100% of hand-written.");
+    Ok(())
+}

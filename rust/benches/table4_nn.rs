@@ -1,0 +1,132 @@
+//! Table 4 — exact nearest-neighbor search vs. a growing neighbor set.
+//!
+//! Paper: 4096 targets, 64-dim patches, neighbors 4096→1M; GPU 26–54×
+//! over single-threaded `gcc -O` C.  Here: 1024 targets (scaled),
+//! neighbors 1024→65536; the measured side is tuned-kernel vs scalar
+//! Rust on the same CPU, the modeled side projects the C1060/GTX295
+//! numbers.
+
+use rtcg::apps::nn;
+use rtcg::device::{profile, sim, traffic};
+use rtcg::kernels::Registry;
+use rtcg::runtime::HostArray;
+use rtcg::tuner::{tune_measured, TuneOpts};
+use rtcg::util::bench::{bench, fmt_time, BenchOpts};
+use rtcg::util::prng::Rng;
+use rtcg::Toolkit;
+
+// paper Table 4: (neighbors, pycuda 8800GTX s, pycuda GTX295 s, C s)
+const PAPER: [(usize, f64, f64, f64); 5] = [
+    (4096, 0.144, 0.089, 3.76),
+    (16384, 0.521, 0.299, 15.03),
+    (65536, 2.047, 1.146, 60.16),
+    (262144, 8.036, 4.508, 242.13),
+    (1048576, 32.093, 17.989, 969.00),
+];
+
+fn main() -> rtcg::util::error::Result<()> {
+    println!("=== Table 4: exact NN search, growing neighbor set ===\n");
+    let (t, d) = (1024usize, 64usize);
+    let tk = Toolkit::init()?;
+    let reg = Registry::open_default(tk)?;
+    let mut rng = Rng::new(4);
+    let targets = rng.normal_vec(t * d);
+    let ta = HostArray::f32(vec![t, d], targets.clone());
+
+    println!(
+        "{:<10} {:>12} {:>12} {:>9}  {}",
+        "neighbors", "tuned kernel", "scalar CPU", "speedup", "winner"
+    );
+    let mut results = Vec::new();
+    for n in [1024usize, 4096, 16384, 65536] {
+        let pool = rng.normal_vec(n * d);
+        let na = HostArray::f32(vec![n, d], pool.clone());
+
+        // tune over the shipped variant pool for this size
+        let entries =
+            reg.manifest().variants("nn", &format!("nn_t{t}_n{n}"));
+        let tune = tune_measured(
+            &reg,
+            &entries,
+            &|_| Ok(vec![ta.clone(), na.clone()]),
+            &TuneOpts { samples: 3, ..Default::default() },
+        )?;
+        let winner = tune.best_variant.clone();
+
+        // warm measured runs of the winner
+        let entry = reg.manifest().entry("nn", &format!("nn_t{t}_n{n}"), &winner)?;
+        let module = reg.load(entry)?;
+        let opts = BenchOpts::quick();
+        let bk = bench("kernel", &opts, || {
+            module.call(&[&ta, &na]).unwrap();
+        });
+
+        // scalar baseline (fewer samples; it is the slow side)
+        let scalar_opts = BenchOpts {
+            warmup_iters: 0,
+            min_samples: 2,
+            max_samples: 3,
+            target_rse: 0.2,
+            max_time: std::time::Duration::from_secs(30),
+        };
+        let bs = bench("scalar", &scalar_opts, || {
+            nn::scalar_baseline(&targets, &pool, t, n, d);
+        });
+
+        let speedup = bs.mean_s() / bk.mean_s();
+        println!(
+            "{:<10} {:>12} {:>12} {:>8.1}x  {winner}",
+            n,
+            fmt_time(bk.mean_s()),
+            fmt_time(bs.mean_s()),
+            speedup
+        );
+        results.push((n, speedup));
+    }
+
+    println!("\n-- paper (measured on 2009/2010 hardware) --");
+    println!(
+        "{:<10} {:>10} {:>10} {:>10} {:>9} {:>9}",
+        "neighbors", "8800GTX", "GTX295", "C gcc -O", "spd 8800", "spd 295"
+    );
+    for (n, a, b, c) in PAPER {
+        println!(
+            "{n:<10} {a:>9.3}s {b:>9.3}s {c:>9.2}s {:>8.1}x {:>8.1}x",
+            c / a,
+            c / b
+        );
+    }
+
+    println!("\n-- modeled GPU speedups (device model, tuned over the variant grid) --");
+    for n in [4096usize, 16384, 65536] {
+        // the modeled pool mirrors the kernel's tuning axes with the
+        // small tiles the 16 KiB-scratch parts require
+        let mut descs = Vec::new();
+        for tt in [16usize, 32, 64] {
+            for cn in [8usize, 16, 32, 64] {
+                for expand in [false, true] {
+                    descs.push(traffic::nn(t, n, d, tt, cn, expand));
+                }
+            }
+        }
+        for dev in [profile::C1060, profile::GTX295] {
+            let best = descs
+                .iter()
+                .filter_map(|desc| sim::estimate(desc, &dev))
+                .map(|e| e.seconds)
+                .fold(f64::INFINITY, f64::min);
+            if best.is_finite() {
+                // scalar CPU model: 3·t·n·d flops at ~1.5 GFLOP/s scalar
+                let scalar_s = (3 * t * n * d) as f64 / 1.5e9;
+                println!(
+                    "  n={n:<7} {}: modeled {:>9} → {:>5.1}× over scalar-C model",
+                    dev.name,
+                    fmt_time(best),
+                    scalar_s / best
+                );
+            }
+        }
+    }
+    println!("\nshape check: speedup grows then saturates with n (bandwidth-bound), paper 26→54×.");
+    Ok(())
+}

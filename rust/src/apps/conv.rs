@@ -1,0 +1,174 @@
+//! Filter-bank convolution driver (§6.2, Table 1): the default
+//! hand-conservative configuration vs. RTCG auto-tuning, in both the
+//! measured (CPU PJRT, scaled workloads) and modeled (Table 1 GPUs,
+//! paper-scale workloads) regimes.
+
+use crate::device::{sim, traffic, DeviceProfile, KernelDesc};
+use crate::kernels::{ManifestEntry, Registry};
+use crate::runtime::HostArray;
+use crate::tuner::{tune_measured, tune_modeled, TuneOpts, TuneResult};
+use crate::util::error::Result;
+use crate::util::prng::Rng;
+
+/// One Table 1 input configuration at paper scale.
+#[derive(Debug, Clone, Copy)]
+pub struct PaperConfig {
+    pub input: (usize, usize, usize),       // H, W, C
+    pub filters: (usize, usize, usize),     // F, kh, kw (C from input)
+}
+
+/// The four Table 1 rows (input / filter-bank columns).
+pub fn table1_configs() -> Vec<PaperConfig> {
+    vec![
+        PaperConfig { input: (256, 256, 8), filters: (64, 9, 9) },
+        PaperConfig { input: (512, 512, 4), filters: (32, 13, 13) },
+        PaperConfig { input: (1024, 1024, 8), filters: (16, 5, 5) },
+        PaperConfig { input: (2048, 2048, 4), filters: (4, 8, 8) },
+    ]
+}
+
+impl PaperConfig {
+    pub fn label(&self) -> String {
+        format!(
+            "{}x{}x{} / {}x{}x{}x{}",
+            self.input.0, self.input.1, self.input.2,
+            self.filters.0, self.filters.1, self.filters.2, self.input.2
+        )
+    }
+
+    pub fn flops(&self) -> f64 {
+        let (h, w, c) = self.input;
+        let (f, kh, kw) = self.filters;
+        (2 * (h - kh + 1) * (w - kw + 1) * f * kh * kw * c) as f64
+    }
+
+    /// The full modeled variant pool for this configuration, including
+    /// unroll depths (the model-only knob; see DESIGN.md).
+    pub fn variant_descs(&self) -> Vec<KernelDesc> {
+        let (h, w, c) = self.input;
+        let (f, kh, kw) = self.filters;
+        let mut out = Vec::new();
+        for th in [1usize, 2, 4, 8] {
+            for fb in [2usize, 4, 8, 16] {
+                if fb > f {
+                    continue;
+                }
+                for u in [1u32, kw as u32, (kh * kw) as u32] {
+                    out.push(traffic::filterbank(
+                        h, w, c, f, kh, kw, th, fb, u,
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// The "default" config: safe everywhere (smallest tiles, rolled).
+    pub fn default_desc(&self) -> KernelDesc {
+        let (h, w, c) = self.input;
+        let (f, kh, kw) = self.filters;
+        traffic::filterbank(h, w, c, f, kh, kw, 1, 4.min(f), 1)
+    }
+}
+
+/// Modeled Table 1 cell: default vs. tuned GFLOP/s + boost on `dev`.
+#[derive(Debug, Clone)]
+pub struct ModeledCell {
+    pub default_gflops: f64,
+    pub tuned_gflops: f64,
+    pub boost_pct: f64,
+    pub tuned_variant: String,
+    pub tune: TuneResult,
+}
+
+pub fn model_cell(cfg: &PaperConfig, dev: &DeviceProfile) -> Result<ModeledCell> {
+    let default = cfg.default_desc();
+    let def_est = sim::estimate(&default, dev).ok_or_else(|| {
+        crate::util::error::Error::msg(format!(
+            "default config invalid on {}",
+            dev.name
+        ))
+    })?;
+    let descs = cfg.variant_descs();
+    let tune = tune_modeled("filterbank", &cfg.label(), &descs, dev)?;
+    let default_gflops = cfg.flops() / def_est.seconds / 1e9;
+    let tuned_gflops = cfg.flops() / tune.best_seconds / 1e9;
+    Ok(ModeledCell {
+        default_gflops,
+        tuned_gflops,
+        boost_pct: (tuned_gflops / default_gflops - 1.0) * 100.0,
+        tuned_variant: tune.best_variant.clone(),
+        tune,
+    })
+}
+
+/// Measured tuning of one scaled workload on the CPU PJRT backend.
+pub fn tune_measured_workload(
+    registry: &Registry,
+    workload: &str,
+    seed: u64,
+    opts: &TuneOpts,
+) -> Result<TuneResult> {
+    let entries = registry.manifest().variants("filterbank", workload);
+    let refs: Vec<&ManifestEntry> = entries;
+    tune_measured(
+        registry,
+        &refs,
+        &|e| {
+            let mut rng = Rng::new(seed);
+            Ok(e.inputs
+                .iter()
+                .map(|spec| {
+                    HostArray::f32(
+                        spec.shape.clone(),
+                        rng.normal_vec(spec.elems()),
+                    )
+                })
+                .collect())
+        },
+        opts,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profile::{table1_devices, G8600GT, GTX480};
+
+    #[test]
+    fn modeled_table1_shape() {
+        // boosts positive everywhere; old parts gain more on cfg 0
+        let cfg = table1_configs()[0];
+        let mut boosts = Vec::new();
+        for dev in table1_devices() {
+            let cell = model_cell(&cfg, &dev).unwrap();
+            assert!(
+                cell.boost_pct > 0.0,
+                "{}: boost {}",
+                dev.name,
+                cell.boost_pct
+            );
+            assert!(cell.tuned_gflops < dev.peak_gflops);
+            boosts.push((dev.name, cell.boost_pct));
+        }
+        let old = boosts[0].1; // 8600GT
+        let new = boosts[4].1; // GTX480
+        assert!(old > new, "8600GT {old}% !> GTX480 {new}%");
+    }
+
+    #[test]
+    fn per_device_winners_can_differ() {
+        let cfg = table1_configs()[0];
+        let a = model_cell(&cfg, &G8600GT).unwrap();
+        let b = model_cell(&cfg, &GTX480).unwrap();
+        // the 8600GT winner must fit 16 KiB; GTX480's may not
+        assert!(a.tune.pruned() >= b.tune.pruned());
+    }
+
+    #[test]
+    fn flops_of_paper_configs() {
+        // cfg0: 2·248²·64·81·8 ≈ 5.1 GF
+        let f = table1_configs()[0].flops();
+        assert!((5.0e9..5.2e9).contains(&f), "{f}");
+    }
+}

@@ -1,0 +1,199 @@
+//! Entropy of natural scenes (§6.4): estimate the entropy of 8×8 image
+//! patches from nearest-neighbor distances over an exponentially
+//! growing neighbor set [Chandler & Field, 4].
+//!
+//! The image database of [48] is unavailable (repro gate); synthetic
+//! pink-noise (1/f-spectrum) images stand in — the 1/f amplitude
+//! spectrum is the defining second-order statistic of natural scenes,
+//! and the pipeline exercises exactly the same code path
+//! (DESIGN.md §Substitutions).
+
+use crate::kernels::Registry;
+use crate::runtime::HostArray;
+use crate::util::error::Result;
+use crate::util::prng::Rng;
+
+/// Synthetic "natural" image: sum of bilinearly-interpolated value-noise
+/// octaves with amplitude 1/2^o at scale 2^o — an approximately
+/// 1/f-spectrum field.
+pub fn synth_image(size: usize, octaves: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut img = vec![0.0f32; size * size];
+    for o in 0..octaves {
+        let res = 2usize << o; // grid resolution of this octave
+        let amp = 1.0 / (1 << o) as f32;
+        let grid: Vec<f32> =
+            (0..(res + 1) * (res + 1)).map(|_| rng.normal_f32()).collect();
+        for y in 0..size {
+            for x in 0..size {
+                let fx = x as f32 / size as f32 * res as f32;
+                let fy = y as f32 / size as f32 * res as f32;
+                let (x0, y0) = (fx as usize, fy as usize);
+                let (tx, ty) = (fx - x0 as f32, fy - y0 as f32);
+                let g = |i: usize, j: usize| grid[j * (res + 1) + i];
+                let v = g(x0, y0) * (1.0 - tx) * (1.0 - ty)
+                    + g(x0 + 1, y0) * tx * (1.0 - ty)
+                    + g(x0, y0 + 1) * (1.0 - tx) * ty
+                    + g(x0 + 1, y0 + 1) * tx * ty;
+                img[y * size + x] += amp * v;
+            }
+        }
+    }
+    img
+}
+
+/// Extract `count` random 8×8 patches, flattened to 64-d rows.
+pub fn extract_patches(
+    img: &[f32],
+    size: usize,
+    count: usize,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    let mut out = Vec::with_capacity(count * 64);
+    for _ in 0..count {
+        let x = rng.usize_below(size - 8);
+        let y = rng.usize_below(size - 8);
+        for dy in 0..8 {
+            for dx in 0..8 {
+                out.push(img[(y + dy) * size + (x + dx)]);
+            }
+        }
+    }
+    out
+}
+
+/// Kozachenko–Leonenko-style differential entropy estimate (nats) from
+/// nearest-neighbor distances: H ≈ (D/T)·Σ ln d_i + ln(N) + const.
+/// The additive constant cancels in the convergence-with-N analysis the
+/// paper's §6.4 workload performs, so it is omitted.
+pub fn entropy_from_nn(sq_dists: &[f32], d: usize, n_neighbors: usize) -> f64 {
+    let t = sq_dists.len() as f64;
+    let sum_log: f64 = sq_dists
+        .iter()
+        .map(|&x| (x.max(1e-20) as f64).sqrt().ln())
+        .sum();
+    (d as f64) * sum_log / t + (n_neighbors as f64).ln()
+}
+
+/// One doubling step of the §6.4 pipeline: exact NN of `t` target
+/// patches against `n` neighbor patches through the composed
+/// `entropy_stage` artifact (centering fused in), then the estimate.
+pub fn estimate_step(
+    registry: &Registry,
+    targets: &HostArray,
+    neighbors: &HostArray,
+) -> Result<(f64, Vec<f32>)> {
+    let t = targets.shape[0];
+    let n = neighbors.shape[0];
+    let d = targets.shape[1];
+    let entry = registry.manifest().entry(
+        "entropy_stage",
+        &format!("t{t}_n{n}"),
+        "expand",
+    )?;
+    let module = registry.load(entry)?;
+    let out = module.call(&[targets, neighbors])?;
+    let dists = out[0].as_f32()?.to_vec();
+    Ok((entropy_from_nn(&dists, d, n), dists))
+}
+
+/// Scalar CPU version of one doubling step (the 3-hours-on-CPU side of
+/// §6.4's comparison, at our scale).
+pub fn estimate_step_scalar(
+    targets: &[f32],
+    neighbors: &[f32],
+    t: usize,
+    n: usize,
+    d: usize,
+) -> (f64, Vec<f32>) {
+    let center = |rows: &[f32], count: usize| -> Vec<f32> {
+        let mut out = rows.to_vec();
+        for i in 0..count {
+            let mean: f32 =
+                rows[i * d..(i + 1) * d].iter().sum::<f32>() / d as f32;
+            for v in &mut out[i * d..(i + 1) * d] {
+                *v -= mean;
+            }
+        }
+        out
+    };
+    let tc = center(targets, t);
+    let nc = center(neighbors, n);
+    let (dists, _) = crate::apps::nn::scalar_baseline(&tc, &nc, t, n, d);
+    (entropy_from_nn(&dists, d, n), dists)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rtcg::module::Toolkit;
+
+    #[test]
+    fn synth_image_has_scale_structure() {
+        let mut rng = Rng::new(7);
+        let img = synth_image(64, 4, &mut rng);
+        assert_eq!(img.len(), 64 * 64);
+        // low-octave dominance: neighboring pixels correlate strongly
+        let mut near = 0.0;
+        let mut far = 0.0;
+        for i in 0..1000 {
+            let a = img[i];
+            near += (a - img[i + 1]).abs();
+            far += (a - img[(i + 2048) % 4096]).abs();
+        }
+        assert!(near < far, "near {near} far {far}");
+    }
+
+    #[test]
+    fn patches_extracted_in_range() {
+        let mut rng = Rng::new(8);
+        let img = synth_image(32, 3, &mut rng);
+        let p = extract_patches(&img, 32, 10, &mut rng);
+        assert_eq!(p.len(), 640);
+        assert!(p.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn entropy_orders_gaussians_correctly() {
+        // wider distribution ⇒ higher differential entropy
+        let mut rng = Rng::new(9);
+        let d = 8;
+        let (t, n) = (128, 512);
+        let narrow_n: Vec<f32> =
+            (0..n * d).map(|_| rng.normal_f32() * 0.5).collect();
+        let narrow_t: Vec<f32> =
+            (0..t * d).map(|_| rng.normal_f32() * 0.5).collect();
+        let wide_n: Vec<f32> =
+            (0..n * d).map(|_| rng.normal_f32() * 2.0).collect();
+        let wide_t: Vec<f32> =
+            (0..t * d).map(|_| rng.normal_f32() * 2.0).collect();
+        let (dn, _) =
+            crate::apps::nn::scalar_baseline(&narrow_t, &narrow_n, t, n, d);
+        let (dw, _) =
+            crate::apps::nn::scalar_baseline(&wide_t, &wide_n, t, n, d);
+        assert!(
+            entropy_from_nn(&dw, d, n) > entropy_from_nn(&dn, d, n)
+        );
+    }
+
+    #[test]
+    fn kernel_step_matches_scalar_step() {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts");
+        let reg = Registry::open(Toolkit::init_ephemeral().unwrap(), &dir)
+            .unwrap();
+        let (t, n, d) = (1024usize, 1024usize, 64usize);
+        let mut rng = Rng::new(10);
+        let img = synth_image(256, 5, &mut rng);
+        let tg = extract_patches(&img, 256, t, &mut rng);
+        let nb = extract_patches(&img, 256, n, &mut rng);
+        let (h_scalar, _) = estimate_step_scalar(&tg, &nb, t, n, d);
+        let ta = HostArray::f32(vec![t, d], tg);
+        let na = HostArray::f32(vec![n, d], nb);
+        let (h_kernel, dists) = estimate_step(&reg, &ta, &na).unwrap();
+        assert_eq!(dists.len(), t);
+        assert!(
+            (h_scalar - h_kernel).abs() < 0.15 * h_scalar.abs().max(1.0),
+            "scalar {h_scalar} vs kernel {h_kernel}"
+        );
+    }
+}

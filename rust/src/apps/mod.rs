@@ -1,0 +1,8 @@
+//! Application studies from the paper's §6: drivers, workload
+//! generators, and scalar baselines for the benches and examples.
+
+pub mod conv;
+pub mod dgfem;
+pub mod entropy;
+pub mod nn;
+pub mod sar;

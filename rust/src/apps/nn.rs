@@ -1,0 +1,118 @@
+//! Exact nearest-neighbor search (§6.4, Table 4): kernel driver plus the
+//! paper's scalar CPU baseline ("a compiler optimized C version",
+//! single-threaded, straightforward loops — deliberately unblocked).
+
+use crate::kernels::Registry;
+use crate::runtime::HostArray;
+use crate::util::error::{Error, Result};
+
+/// The `gcc -O`-style baseline: exact NN by three nested scalar loops.
+/// `#[inline(never)]` + simple indexing keeps the compiler from turning
+/// it into the tuned kernel we are comparing against.
+#[inline(never)]
+pub fn scalar_baseline(
+    targets: &[f32],
+    neighbors: &[f32],
+    t: usize,
+    n: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<i32>) {
+    assert_eq!(targets.len(), t * d);
+    assert_eq!(neighbors.len(), n * d);
+    let mut best = vec![f32::INFINITY; t];
+    let mut besti = vec![0i32; t];
+    for i in 0..t {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for kk in 0..d {
+                let diff = targets[i * d + kk] - neighbors[j * d + kk];
+                acc += diff * diff;
+            }
+            if acc < best[i] {
+                best[i] = acc;
+                besti[i] = j as i32;
+            }
+        }
+    }
+    (best, besti)
+}
+
+/// Run one NN kernel variant from the artifact pool.
+pub fn run_kernel(
+    registry: &Registry,
+    t: usize,
+    n: usize,
+    variant: &str,
+    targets: &HostArray,
+    neighbors: &HostArray,
+) -> Result<(Vec<f32>, Vec<i32>)> {
+    let workload = format!("nn_t{t}_n{n}");
+    let entry = registry.manifest().entry("nn", &workload, variant)?;
+    let module = registry.load(entry)?;
+    let out = module.call(&[targets, neighbors])?;
+    if out.len() != 2 {
+        return Err(Error::msg(format!(
+            "nn kernel returned {} outputs",
+            out.len()
+        )));
+    }
+    Ok((out[0].as_f32()?.to_vec(), out[1].as_i32()?.to_vec()))
+}
+
+/// Variants available for a given (t, n) workload.
+pub fn variants(registry: &Registry, t: usize, n: usize) -> Vec<String> {
+    registry
+        .manifest()
+        .variants("nn", &format!("nn_t{t}_n{n}"))
+        .iter()
+        .map(|e| e.variant.clone())
+        .collect()
+}
+
+/// flops of the expand-form distance computation (Table 4 accounting).
+pub fn flops(t: usize, n: usize, d: usize) -> u64 {
+    (2 * t * n * d) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rtcg::module::Toolkit;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn baseline_finds_exact_neighbor() {
+        let mut rng = Rng::new(1);
+        let nb = rng.normal_vec(128 * 8);
+        let tg = nb[..16 * 8].to_vec(); // targets are neighbors 0..16
+        let (d, i) = scalar_baseline(&tg, &nb, 16, 128, 8);
+        assert!(d.iter().all(|&x| x < 1e-9));
+        assert_eq!(i, (0..16).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn kernel_matches_baseline() {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts");
+        let reg = Registry::open(Toolkit::init_ephemeral().unwrap(), &dir)
+            .unwrap();
+        let (t, n, d) = (1024usize, 1024usize, 64usize);
+        let mut rng = Rng::new(2);
+        let tg = rng.normal_vec(t * d);
+        let nb = rng.normal_vec(n * d);
+        let (bd, _) = scalar_baseline(&tg, &nb, t, n, d);
+        let ta = HostArray::f32(vec![t, d], tg);
+        let na = HostArray::f32(vec![n, d], nb);
+        for variant in ["tt32_cn64_direct", "tt128_cn1024_expand"] {
+            let (kd, ki) =
+                run_kernel(&reg, t, n, variant, &ta, &na).unwrap();
+            for ((a, b), idx) in kd.iter().zip(&bd).zip(&ki) {
+                assert!(
+                    (a - b).abs() < 1e-2 + 1e-3 * b.abs(),
+                    "{variant}: {a} vs {b}"
+                );
+                assert!(*idx >= 0 && (*idx as usize) < n);
+            }
+        }
+    }
+}

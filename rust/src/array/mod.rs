@@ -1,0 +1,503 @@
+//! `GpuArray` — the §5.2.1 "numerical arrays on the compute device":
+//! a numpy-flavored device array whose every operation is a *generated*
+//! kernel compiled at run time behind the op cache.
+//!
+//! "This array class … offers a complete set of features: elementwise
+//! algebraic operations, a full set of floating-point transcendental as
+//! well as utility functions, type promotion …, reductions such as
+//! sums, maxima, and inner products, and tight integration with numpy."
+//!
+//! Scalars fused into operations are *baked into the generated code* —
+//! the §4.2 point that hardcoding is free once RTCG is available.
+
+pub mod opcache;
+
+use std::sync::Arc;
+
+use crate::rtcg::dtype::{promote, DType};
+use crate::rtcg::hlobuild;
+use crate::rtcg::module::Toolkit;
+use crate::runtime::{DeviceBuffer, HostArray};
+use crate::util::error::{Error, Result};
+
+use opcache::OpCache;
+
+/// Shared array-layer context: toolkit + generated-op cache.
+#[derive(Clone)]
+pub struct ArrayContext {
+    tk: Toolkit,
+    ops: Arc<OpCache>,
+}
+
+impl ArrayContext {
+    pub fn new(tk: Toolkit) -> ArrayContext {
+        ArrayContext { tk, ops: Arc::new(OpCache::new()) }
+    }
+
+    pub fn toolkit(&self) -> &Toolkit {
+        &self.tk
+    }
+
+    pub fn op_cache(&self) -> &OpCache {
+        &self.ops
+    }
+
+    /// `pycuda.gpuarray.to_gpu` (Fig 3b).
+    pub fn to_gpu(&self, host: &HostArray) -> Result<GpuArray> {
+        Ok(GpuArray {
+            ctx: self.clone(),
+            buf: self.tk.client().to_device(host)?,
+        })
+    }
+
+    pub fn zeros(&self, dtype: DType, shape: &[usize]) -> Result<GpuArray> {
+        self.to_gpu(&HostArray::zeros(dtype, shape.to_vec()))
+    }
+}
+
+fn shape_sig(dtype: DType, shape: &[usize]) -> String {
+    let dims: Vec<String> = shape.iter().map(|d| d.to_string()).collect();
+    format!("{}[{}]", dtype.name(), dims.join(","))
+}
+
+/// Device-resident n-d array.
+#[derive(Clone)]
+pub struct GpuArray {
+    ctx: ArrayContext,
+    buf: DeviceBuffer,
+}
+
+impl GpuArray {
+    pub fn shape(&self) -> &[usize] {
+        &self.buf.shape
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.buf.dtype
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn context(&self) -> &ArrayContext {
+        &self.ctx
+    }
+
+    pub fn buffer(&self) -> &DeviceBuffer {
+        &self.buf
+    }
+
+    pub fn from_buffer(ctx: &ArrayContext, buf: DeviceBuffer) -> GpuArray {
+        GpuArray { ctx: ctx.clone(), buf }
+    }
+
+    /// `.get()` — fetch to host (Fig 3b).
+    pub fn get(&self) -> Result<HostArray> {
+        self.buf.to_host()
+    }
+
+    // ---------------- elementwise binary -------------------------------
+
+    fn binary(&self, name: &str, op_build: BinFn, rhs: &GpuArray) -> Result<GpuArray> {
+        let (ls, rs) = (self.shape(), rhs.shape());
+        let compatible = ls == rs || ls.is_empty() || rs.is_empty();
+        if !compatible {
+            return Err(Error::msg(format!(
+                "shape mismatch in {name}: {ls:?} vs {rs:?}"
+            )));
+        }
+        let out_dtype = promote(self.dtype(), rhs.dtype());
+        let out_shape: Vec<usize> =
+            if ls.is_empty() { rs.to_vec() } else { ls.to_vec() };
+        let key = format!(
+            "{name}|{}|{}",
+            shape_sig(self.dtype(), ls),
+            shape_sig(rhs.dtype(), rs)
+        );
+        let (lsv, rsv) = (ls.to_vec(), rs.to_vec());
+        let (ld, rd) = (self.dtype(), rhs.dtype());
+        let osv = out_shape.clone();
+        let exe = self.ctx.ops.get_or_build(&self.ctx.tk, &key, move || {
+            let b = xla::XlaBuilder::new(name);
+            let mut p0 = hlobuild::param(&b, 0, ld, &lsv, "lhs")?;
+            let mut p1 = hlobuild::param(&b, 1, rd, &rsv, "rhs")?;
+            if ld != out_dtype {
+                p0 = p0.convert(out_dtype.to_primitive_type())?;
+            }
+            if rd != out_dtype {
+                p1 = p1.convert(out_dtype.to_primitive_type())?;
+            }
+            if lsv.is_empty() && !osv.is_empty() {
+                p0 = hlobuild::broadcast_scalar(&p0, &osv)?;
+            }
+            if rsv.is_empty() && !osv.is_empty() {
+                p1 = hlobuild::broadcast_scalar(&p1, &osv)?;
+            }
+            op_build(&p0, &p1)?.build().map_err(Into::into)
+        })?;
+        let outs = exe.run_buffers(&[&self.buf, &rhs.buf])?;
+        Ok(GpuArray { ctx: self.ctx.clone(), buf: outs.into_iter().next().unwrap() })
+    }
+
+    pub fn add(&self, rhs: &GpuArray) -> Result<GpuArray> {
+        self.binary("add", |a, b| a.add_(b).map_err(Into::into), rhs)
+    }
+    pub fn sub(&self, rhs: &GpuArray) -> Result<GpuArray> {
+        self.binary("sub", |a, b| a.sub_(b).map_err(Into::into), rhs)
+    }
+    pub fn mul(&self, rhs: &GpuArray) -> Result<GpuArray> {
+        self.binary("mul", |a, b| a.mul_(b).map_err(Into::into), rhs)
+    }
+    pub fn div(&self, rhs: &GpuArray) -> Result<GpuArray> {
+        self.binary("div", |a, b| a.div_(b).map_err(Into::into), rhs)
+    }
+    pub fn maximum(&self, rhs: &GpuArray) -> Result<GpuArray> {
+        self.binary("max", |a, b| a.max(b).map_err(Into::into), rhs)
+    }
+    pub fn minimum(&self, rhs: &GpuArray) -> Result<GpuArray> {
+        self.binary("min", |a, b| a.min(b).map_err(Into::into), rhs)
+    }
+    pub fn pow(&self, rhs: &GpuArray) -> Result<GpuArray> {
+        self.binary("pow", |a, b| a.pow(b).map_err(Into::into), rhs)
+    }
+
+    // ---------------- fused scalar ops (constants baked in) ------------
+
+    fn scalar_op(&self, name: &str, v: f64, op_build: BinFn) -> Result<GpuArray> {
+        let key = format!(
+            "{name}#{v}|{}",
+            shape_sig(self.dtype(), self.shape())
+        );
+        let (sv, dt) = (self.shape().to_vec(), self.dtype());
+        let exe = self.ctx.ops.get_or_build(&self.ctx.tk, &key, move || {
+            let b = xla::XlaBuilder::new(name);
+            let p = hlobuild::param(&b, 0, dt, &sv, "x")?;
+            let cdt = if dt.is_float() { dt } else { DType::F64 };
+            let mut c = hlobuild::constant(&b, cdt, v)?;
+            let p = if cdt != dt {
+                p.convert(cdt.to_primitive_type())?
+            } else {
+                p
+            };
+            if !sv.is_empty() {
+                c = hlobuild::broadcast_scalar(&c, &sv)?;
+            }
+            op_build(&p, &c)?.build().map_err(Into::into)
+        })?;
+        let outs = exe.run_buffers(&[&self.buf])?;
+        Ok(GpuArray { ctx: self.ctx.clone(), buf: outs.into_iter().next().unwrap() })
+    }
+
+    /// `2 * a` from Fig 3b — the constant is compiled into the kernel.
+    pub fn scale(&self, k: f64) -> Result<GpuArray> {
+        self.scalar_op("smul", k, |a, b| a.mul_(b).map_err(Into::into))
+    }
+    pub fn add_scalar(&self, k: f64) -> Result<GpuArray> {
+        self.scalar_op("sadd", k, |a, b| a.add_(b).map_err(Into::into))
+    }
+    pub fn sub_scalar(&self, k: f64) -> Result<GpuArray> {
+        self.scalar_op("ssub", k, |a, b| a.sub_(b).map_err(Into::into))
+    }
+    pub fn div_scalar(&self, k: f64) -> Result<GpuArray> {
+        self.scalar_op("sdiv", k, |a, b| a.div_(b).map_err(Into::into))
+    }
+
+    // ---------------- unary math ----------------------------------------
+
+    fn unary(&self, name: &str, op_build: UnFn) -> Result<GpuArray> {
+        let key =
+            format!("{name}|{}", shape_sig(self.dtype(), self.shape()));
+        let (sv, dt) = (self.shape().to_vec(), self.dtype());
+        let exe = self.ctx.ops.get_or_build(&self.ctx.tk, &key, move || {
+            let b = xla::XlaBuilder::new(name);
+            let p = hlobuild::param(&b, 0, dt, &sv, "x")?;
+            op_build(&p)?.build().map_err(Into::into)
+        })?;
+        let outs = exe.run_buffers(&[&self.buf])?;
+        Ok(GpuArray { ctx: self.ctx.clone(), buf: outs.into_iter().next().unwrap() })
+    }
+
+    pub fn exp(&self) -> Result<GpuArray> {
+        self.unary("exp", |a| a.exp().map_err(Into::into))
+    }
+    pub fn log(&self) -> Result<GpuArray> {
+        self.unary("log", |a| a.log().map_err(Into::into))
+    }
+    pub fn sqrt(&self) -> Result<GpuArray> {
+        self.unary("sqrt", |a| a.sqrt().map_err(Into::into))
+    }
+    pub fn rsqrt(&self) -> Result<GpuArray> {
+        self.unary("rsqrt", |a| a.rsqrt().map_err(Into::into))
+    }
+    pub fn sin(&self) -> Result<GpuArray> {
+        self.unary("sin", |a| a.sin().map_err(Into::into))
+    }
+    pub fn cos(&self) -> Result<GpuArray> {
+        self.unary("cos", |a| a.cos().map_err(Into::into))
+    }
+    pub fn tanh(&self) -> Result<GpuArray> {
+        self.unary("tanh", |a| a.tanh().map_err(Into::into))
+    }
+    pub fn abs(&self) -> Result<GpuArray> {
+        self.unary("abs", |a| a.abs().map_err(Into::into))
+    }
+    pub fn neg(&self) -> Result<GpuArray> {
+        self.unary("neg", |a| a.neg().map_err(Into::into))
+    }
+    pub fn floor(&self) -> Result<GpuArray> {
+        self.unary("floor", |a| a.floor().map_err(Into::into))
+    }
+    pub fn ceil(&self) -> Result<GpuArray> {
+        self.unary("ceil", |a| a.ceil().map_err(Into::into))
+    }
+
+    /// Type conversion (`astype`).
+    pub fn astype(&self, dtype: DType) -> Result<GpuArray> {
+        if dtype == self.dtype() {
+            return Ok(self.clone());
+        }
+        let key = format!(
+            "cast-{}|{}",
+            dtype.name(),
+            shape_sig(self.dtype(), self.shape())
+        );
+        let (sv, dt) = (self.shape().to_vec(), self.dtype());
+        let exe = self.ctx.ops.get_or_build(&self.ctx.tk, &key, move || {
+            let b = xla::XlaBuilder::new("cast");
+            let p = hlobuild::param(&b, 0, dt, &sv, "x")?;
+            p.convert(dtype.to_primitive_type())?
+                .build()
+                .map_err(Into::into)
+        })?;
+        let outs = exe.run_buffers(&[&self.buf])?;
+        Ok(GpuArray { ctx: self.ctx.clone(), buf: outs.into_iter().next().unwrap() })
+    }
+
+    // ---------------- reductions ----------------------------------------
+
+    fn reduce_all(&self, name: &str, op_build: ReduceFn) -> Result<GpuArray> {
+        let key =
+            format!("{name}|{}", shape_sig(self.dtype(), self.shape()));
+        let (sv, dt) = (self.shape().to_vec(), self.dtype());
+        let rank = sv.len() as i64;
+        let exe = self.ctx.ops.get_or_build(&self.ctx.tk, &key, move || {
+            let b = xla::XlaBuilder::new(name);
+            let p = hlobuild::param(&b, 0, dt, &sv, "x")?;
+            let dims: Vec<i64> = (0..rank).collect();
+            op_build(&p, &dims)?.build().map_err(Into::into)
+        })?;
+        let outs = exe.run_buffers(&[&self.buf])?;
+        Ok(GpuArray { ctx: self.ctx.clone(), buf: outs.into_iter().next().unwrap() })
+    }
+
+    pub fn sum(&self) -> Result<GpuArray> {
+        self.reduce_all("sum", |a, d| a.reduce_sum(d, false).map_err(Into::into))
+    }
+    pub fn max_reduce(&self) -> Result<GpuArray> {
+        self.reduce_all("rmax", |a, d| a.reduce_max(d, false).map_err(Into::into))
+    }
+    pub fn min_reduce(&self) -> Result<GpuArray> {
+        self.reduce_all("rmin", |a, d| a.reduce_min(d, false).map_err(Into::into))
+    }
+    pub fn mean(&self) -> Result<GpuArray> {
+        let n = self.len() as f64;
+        self.sum()?.div_scalar(n)
+    }
+
+    /// Inner product (the §5.2.1 reduction family).
+    pub fn dot(&self, rhs: &GpuArray) -> Result<GpuArray> {
+        if self.shape() != rhs.shape() || self.shape().len() != 1 {
+            return Err(Error::msg(format!(
+                "dot expects equal 1-d shapes, got {:?} vs {:?}",
+                self.shape(),
+                rhs.shape()
+            )));
+        }
+        let key = format!(
+            "dot|{}|{}",
+            shape_sig(self.dtype(), self.shape()),
+            shape_sig(rhs.dtype(), rhs.shape())
+        );
+        let (sv, ld, rd) = (self.shape().to_vec(), self.dtype(), rhs.dtype());
+        let out_dtype = promote(ld, rd);
+        let exe = self.ctx.ops.get_or_build(&self.ctx.tk, &key, move || {
+            let b = xla::XlaBuilder::new("dot");
+            let mut p0 = hlobuild::param(&b, 0, ld, &sv, "x")?;
+            let mut p1 = hlobuild::param(&b, 1, rd, &sv, "y")?;
+            if ld != out_dtype {
+                p0 = p0.convert(out_dtype.to_primitive_type())?;
+            }
+            if rd != out_dtype {
+                p1 = p1.convert(out_dtype.to_primitive_type())?;
+            }
+            p0.mul_(&p1)?
+                .reduce_sum(&[0], false)?
+                .build()
+                .map_err(Into::into)
+        })?;
+        let outs = exe.run_buffers(&[&self.buf, &rhs.buf])?;
+        Ok(GpuArray { ctx: self.ctx.clone(), buf: outs.into_iter().next().unwrap() })
+    }
+
+    /// Squared L2 norm.
+    pub fn norm2(&self) -> Result<GpuArray> {
+        self.dot(self)
+    }
+
+    /// Read a scalar result back as f64.
+    pub fn item(&self) -> Result<f64> {
+        self.get()?.first_as_f64()
+    }
+}
+
+type BinFn = fn(&xla::XlaOp, &xla::XlaOp) -> Result<xla::XlaOp>;
+type UnFn = fn(&xla::XlaOp) -> Result<xla::XlaOp>;
+type ReduceFn = fn(&xla::XlaOp, &[i64]) -> Result<xla::XlaOp>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> ArrayContext {
+        ArrayContext::new(Toolkit::init_ephemeral().unwrap())
+    }
+
+    fn arr(c: &ArrayContext, v: Vec<f32>) -> GpuArray {
+        c.to_gpu(&HostArray::f32(vec![v.len()], v)).unwrap()
+    }
+
+    #[test]
+    fn fig3b_scale_by_two() {
+        let c = ctx();
+        let a = arr(&c, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = a.scale(2.0).unwrap();
+        assert_eq!(b.get().unwrap().as_f32().unwrap(), &[2., 4., 6., 8.]);
+    }
+
+    #[test]
+    fn elementwise_algebra() {
+        let c = ctx();
+        let a = arr(&c, vec![1.0, 2.0, 3.0]);
+        let b = arr(&c, vec![10.0, 20.0, 30.0]);
+        assert_eq!(
+            a.add(&b).unwrap().get().unwrap().as_f32().unwrap(),
+            &[11., 22., 33.]
+        );
+        assert_eq!(
+            b.sub(&a).unwrap().get().unwrap().as_f32().unwrap(),
+            &[9., 18., 27.]
+        );
+        assert_eq!(
+            a.mul(&b).unwrap().get().unwrap().as_f32().unwrap(),
+            &[10., 40., 90.]
+        );
+        assert_eq!(
+            b.div(&a).unwrap().get().unwrap().as_f32().unwrap(),
+            &[10., 10., 10.]
+        );
+    }
+
+    #[test]
+    fn type_promotion_i32_plus_f32_is_f64() {
+        // the paper's §5.2.1 example, end to end on device
+        let c = ctx();
+        let i = c.to_gpu(&HostArray::i32(vec![3], vec![1, 2, 3])).unwrap();
+        let f = arr(&c, vec![0.5, 0.5, 0.5]);
+        let s = i.add(&f).unwrap();
+        assert_eq!(s.dtype(), DType::F64);
+        assert_eq!(s.get().unwrap().as_f64().unwrap(), &[1.5, 2.5, 3.5]);
+    }
+
+    #[test]
+    fn transcendentals() {
+        let c = ctx();
+        let a = arr(&c, vec![0.0, 1.0]);
+        let e = a.exp().unwrap().get().unwrap();
+        let v = e.as_f32().unwrap();
+        assert!((v[0] - 1.0).abs() < 1e-6);
+        assert!((v[1] - std::f32::consts::E).abs() < 1e-5);
+        let s = arr(&c, vec![4.0, 9.0]).sqrt().unwrap().get().unwrap();
+        assert_eq!(s.as_f32().unwrap(), &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn reductions_and_dot() {
+        let c = ctx();
+        let a = arr(&c, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.sum().unwrap().item().unwrap(), 10.0);
+        assert_eq!(a.max_reduce().unwrap().item().unwrap(), 4.0);
+        assert_eq!(a.min_reduce().unwrap().item().unwrap(), 1.0);
+        assert_eq!(a.mean().unwrap().item().unwrap(), 2.5);
+        let b = arr(&c, vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.dot(&b).unwrap().item().unwrap(), 10.0);
+        assert_eq!(a.norm2().unwrap().item().unwrap(), 30.0);
+    }
+
+    #[test]
+    fn op_cache_reuses_generated_kernels() {
+        let c = ctx();
+        let a = arr(&c, vec![1.0; 8]);
+        let b = arr(&c, vec![2.0; 8]);
+        a.add(&b).unwrap();
+        a.add(&b).unwrap();
+        a.add(&b).unwrap();
+        use std::sync::atomic::Ordering;
+        assert_eq!(c.op_cache().misses.load(Ordering::Relaxed), 1);
+        assert_eq!(c.op_cache().hits.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn shape_mismatch_is_loud() {
+        let c = ctx();
+        let a = arr(&c, vec![1.0; 4]);
+        let b = arr(&c, vec![1.0; 5]);
+        assert!(a.add(&b).is_err());
+        assert!(a.dot(&b).is_err());
+    }
+
+    #[test]
+    fn scalar_broadcast_binary() {
+        let c = ctx();
+        let a = arr(&c, vec![1.0, 2.0]);
+        let s = c.to_gpu(&HostArray::scalar_f32(10.0)).unwrap();
+        assert_eq!(
+            a.mul(&s).unwrap().get().unwrap().as_f32().unwrap(),
+            &[10.0, 20.0]
+        );
+    }
+
+    #[test]
+    fn astype_roundtrip() {
+        let c = ctx();
+        let a = arr(&c, vec![1.5, 2.5]);
+        let i = a.astype(DType::I32).unwrap();
+        assert_eq!(i.get().unwrap().as_i32().unwrap(), &[1, 2]);
+        let back = i.astype(DType::F32).unwrap();
+        assert_eq!(back.get().unwrap().as_f32().unwrap(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn relu_via_maximum_scalar() {
+        let c = ctx();
+        let a = arr(&c, vec![-1.0, 2.0, -3.0]);
+        let z = c.to_gpu(&HostArray::scalar_f32(0.0)).unwrap();
+        assert_eq!(
+            a.maximum(&z).unwrap().get().unwrap().as_f32().unwrap(),
+            &[0.0, 2.0, 0.0]
+        );
+    }
+
+    #[test]
+    fn mean_of_2d() {
+        let c = ctx();
+        let a = c
+            .to_gpu(&HostArray::f32(vec![2, 2], vec![1., 2., 3., 4.]))
+            .unwrap();
+        assert_eq!(a.mean().unwrap().item().unwrap(), 2.5);
+    }
+}

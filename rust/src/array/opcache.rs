@@ -1,0 +1,91 @@
+//! Descriptor-keyed executable cache for generated array operations.
+//!
+//! `XlaBuilder`-built computations don't pass through the HLO-text cache
+//! (there is no text to hash), so the array layer keys compiled ops on a
+//! *descriptor* string ("add|f32[100]|f32[100]") instead — same Fig 2
+//! economics, same invisibility to the user.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::runtime::Executable;
+use crate::rtcg::module::Toolkit;
+use crate::util::error::Result;
+
+#[derive(Default)]
+pub struct OpCache {
+    map: Mutex<HashMap<String, Executable>>,
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+}
+
+impl OpCache {
+    pub fn new() -> OpCache {
+        OpCache::default()
+    }
+
+    /// Fetch the compiled op for `key`, building + compiling on miss.
+    pub fn get_or_build(
+        &self,
+        tk: &Toolkit,
+        key: &str,
+        build: impl FnOnce() -> Result<xla::XlaComputation>,
+    ) -> Result<Executable> {
+        if let Some(e) = self.map.lock().unwrap().get(key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(e.clone());
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let comp = build()?;
+        let exe = tk.client().compile_computation(&comp)?;
+        self.map
+            .lock()
+            .unwrap()
+            .insert(key.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rtcg::dtype::DType;
+    use crate::rtcg::hlobuild;
+
+    #[test]
+    fn caches_by_key() {
+        let tk = Toolkit::init_ephemeral().unwrap();
+        let cache = OpCache::new();
+        let build = || {
+            let b = xla::XlaBuilder::new("t");
+            let p = hlobuild::param(&b, 0, DType::F32, &[4], "p")?;
+            p.add_(&p)?.build().map_err(Into::into)
+        };
+        cache.get_or_build(&tk, "dbl|f32[4]", build).unwrap();
+        cache
+            .get_or_build(&tk, "dbl|f32[4]", || unreachable!())
+            .unwrap();
+        assert_eq!(cache.hits.load(Ordering::Relaxed), 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn failed_build_not_cached() {
+        let tk = Toolkit::init_ephemeral().unwrap();
+        let cache = OpCache::new();
+        let r = cache.get_or_build(&tk, "bad", || {
+            Err(crate::util::error::Error::msg("boom"))
+        });
+        assert!(r.is_err());
+        assert!(cache.is_empty());
+    }
+}

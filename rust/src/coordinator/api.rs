@@ -1,0 +1,45 @@
+//! Coordinator request/response types.
+
+use crate::runtime::HostArray;
+
+/// A unit of work submitted to the coordinator.
+#[derive(Debug)]
+pub enum Request {
+    /// Launch a named AOT kernel variant with host inputs.
+    Launch {
+        kernel: String,
+        workload: String,
+        /// None = use the tuning database's (or first) variant
+        variant: Option<String>,
+        inputs: Vec<HostArray>,
+    },
+    /// Compile + run run-time-generated HLO text (SourceModule service).
+    RunSource { hlo_text: String, inputs: Vec<HostArray> },
+    /// Auto-tune a kernel/workload on the live backend and remember the
+    /// winner in the tuning database.
+    Tune { kernel: String, workload: String, seed: u64 },
+    /// Fetch a metrics snapshot.
+    Stats,
+    /// Orderly shutdown.
+    Shutdown,
+}
+
+/// Result of one request.
+#[derive(Debug)]
+pub enum Response {
+    Outputs(Vec<HostArray>),
+    Tuned { variant: String, seconds: f64, evaluated: usize, pruned: usize },
+    Stats(crate::coordinator::metrics::Snapshot),
+    ShuttingDown,
+    Error(String),
+}
+
+impl Response {
+    pub fn outputs(self) -> Result<Vec<HostArray>, String> {
+        match self {
+            Response::Outputs(o) => Ok(o),
+            Response::Error(e) => Err(e),
+            other => Err(format!("unexpected response {other:?}")),
+        }
+    }
+}

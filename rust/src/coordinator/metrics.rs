@@ -1,0 +1,75 @@
+//! Coordinator metrics — the §5 run-time services (timing, counters)
+//! surfaced at system level.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub launches: AtomicU64,
+    pub source_runs: AtomicU64,
+    pub tunes: AtomicU64,
+    pub errors: AtomicU64,
+    pub busy_ns: AtomicU64,
+    pub queue_wait_ns: AtomicU64,
+}
+
+/// A point-in-time copy for reporting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub launches: u64,
+    pub source_runs: u64,
+    pub tunes: u64,
+    pub errors: u64,
+    pub busy_ms: f64,
+    pub queue_wait_ms: f64,
+}
+
+impl Metrics {
+    pub fn note(&self, counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn time<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.busy_ns
+            .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        out
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            launches: self.launches.load(Ordering::Relaxed),
+            source_runs: self.source_runs.load(Ordering::Relaxed),
+            tunes: self.tunes.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            busy_ms: self.busy_ns.load(Ordering::Relaxed) as f64 / 1e6,
+            queue_wait_ms: self.queue_wait_ns.load(Ordering::Relaxed)
+                as f64
+                / 1e6,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_timing() {
+        let m = Metrics::default();
+        m.note(&m.requests);
+        m.note(&m.requests);
+        m.note(&m.errors);
+        let x = m.time(|| 21 * 2);
+        assert_eq!(x, 42);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.errors, 1);
+        assert!(s.busy_ms >= 0.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! L3 coordinator: a threaded request-service loop exposing the toolkit
+//! as a service — kernel launches, array ops, tuning jobs — with
+//! metrics.  The paper's two-tier thesis at system scale: the high-level
+//! tier orchestrates ("control input is needed by the GPU about once
+//! every millisecond"), generated device code computes.
+
+pub mod api;
+pub mod metrics;
+pub mod server;
+
+pub use api::{Request, Response};
+pub use server::{Coordinator, CoordinatorConfig};

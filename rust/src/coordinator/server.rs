@@ -1,0 +1,340 @@
+//! The coordinator event loop.
+//!
+//! PJRT handles wrap raw pointers (!Send), so the device, registry,
+//! compile cache and tuning database all live on a dedicated service
+//! thread; clients talk to it over a bounded channel (backpressure =
+//! channel depth).  This is the L3 topology: Rust owns the event loop
+//! and process lifecycle, generated code owns the flops.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::api::{Request, Response};
+use crate::coordinator::metrics::{Metrics, Snapshot};
+use crate::kernels::Registry;
+use crate::rtcg::module::Toolkit;
+use crate::tuner::{tune_measured, TuneOpts, TuningDb};
+use crate::util::error::{Error, Result};
+
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub artifacts_dir: PathBuf,
+    /// bounded queue depth (backpressure)
+    pub queue_depth: usize,
+    /// persist tuning outcomes
+    pub tuning_db: Option<PathBuf>,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            queue_depth: 64,
+            tuning_db: None,
+        }
+    }
+}
+
+struct Job {
+    req: Request,
+    reply: mpsc::Sender<Response>,
+    enqueued: Instant,
+}
+
+/// Handle to a running coordinator service thread.
+pub struct Coordinator {
+    tx: mpsc::SyncSender<Job>,
+    metrics: Arc<Metrics>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the service thread; fails fast if the artifacts are
+    /// missing (checked on the service thread, reported here).
+    pub fn start(cfg: CoordinatorConfig) -> Result<Coordinator> {
+        let (tx, rx) = mpsc::sync_channel::<Job>(cfg.queue_depth);
+        let metrics = Arc::new(Metrics::default());
+        let m2 = metrics.clone();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("rtcg-coordinator".into())
+            .spawn(move || service_loop(cfg, rx, m2, ready_tx))
+            .map_err(|e| Error::msg(format!("spawn failed: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::msg("coordinator died during startup"))??;
+        Ok(Coordinator { tx, metrics, handle: Some(handle) })
+    }
+
+    /// Submit a request and wait for its response.
+    pub fn submit(&self, req: Request) -> Response {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let job = Job { req, reply: reply_tx, enqueued: Instant::now() };
+        if self.tx.send(job).is_err() {
+            return Response::Error("coordinator is down".into());
+        }
+        reply_rx
+            .recv()
+            .unwrap_or(Response::Error("coordinator dropped reply".into()))
+    }
+
+    pub fn metrics(&self) -> Snapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Orderly shutdown (also triggered by drop).
+    pub fn shutdown(&mut self) {
+        let _ = self.submit(Request::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn service_loop(
+    cfg: CoordinatorConfig,
+    rx: mpsc::Receiver<Job>,
+    metrics: Arc<Metrics>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    // all !Send state lives here
+    let init = (|| -> Result<(Registry, Option<TuningDb>)> {
+        let tk = Toolkit::init()?;
+        let registry = Registry::open(tk, &cfg.artifacts_dir)?;
+        let db = match &cfg.tuning_db {
+            Some(p) => Some(TuningDb::open(p)?),
+            None => None,
+        };
+        Ok((registry, db))
+    })();
+    let (registry, mut db) = match init {
+        Ok(v) => {
+            let _ = ready.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    while let Ok(job) = rx.recv() {
+        metrics.note(&metrics.requests);
+        metrics.queue_wait_ns.fetch_add(
+            job.enqueued.elapsed().as_nanos() as u64,
+            std::sync::atomic::Ordering::Relaxed,
+        );
+        let resp = metrics.time(|| {
+            handle(&registry, &mut db, &metrics, job.req)
+        });
+        let stop = matches!(resp, Response::ShuttingDown);
+        let _ = job.reply.send(resp);
+        if stop {
+            break;
+        }
+    }
+    if let Some(db) = &db {
+        let _ = db.save();
+    }
+}
+
+fn handle(
+    registry: &Registry,
+    db: &mut Option<TuningDb>,
+    metrics: &Metrics,
+    req: Request,
+) -> Response {
+    match req {
+        Request::Shutdown => Response::ShuttingDown,
+        Request::Stats => Response::Stats(metrics.snapshot()),
+        Request::Launch { kernel, workload, variant, inputs } => {
+            metrics.note(&metrics.launches);
+            let r = (|| -> Result<Vec<crate::runtime::HostArray>> {
+                let name = match &variant {
+                    Some(v) => v.clone(),
+                    None => {
+                        // tuned choice, if the db knows one
+                        let platform =
+                            registry.toolkit().client().platform_name();
+                        db.as_ref()
+                            .and_then(|d| {
+                                d.lookup(&kernel, &workload, &platform)
+                            })
+                            .map(|e| e.variant.clone())
+                            .or_else(|| {
+                                registry
+                                    .manifest()
+                                    .variants(&kernel, &workload)
+                                    .first()
+                                    .map(|e| e.variant.clone())
+                            })
+                            .ok_or_else(|| {
+                                Error::msg(format!(
+                                    "no variants for {kernel}/{workload}"
+                                ))
+                            })?
+                    }
+                };
+                let entry =
+                    registry.manifest().entry(&kernel, &workload, &name)?;
+                let module = registry.load(entry)?;
+                let refs: Vec<&crate::runtime::HostArray> =
+                    inputs.iter().collect();
+                module.call(&refs)
+            })();
+            match r {
+                Ok(outputs) => Response::Outputs(outputs),
+                Err(e) => {
+                    metrics.note(&metrics.errors);
+                    Response::Error(e.to_string())
+                }
+            }
+        }
+        Request::RunSource { hlo_text, inputs } => {
+            metrics.note(&metrics.source_runs);
+            let r = (|| -> Result<Vec<crate::runtime::HostArray>> {
+                let module =
+                    registry.toolkit().source_module(&hlo_text)?;
+                let refs: Vec<&crate::runtime::HostArray> =
+                    inputs.iter().collect();
+                module.call(&refs)
+            })();
+            match r {
+                Ok(outputs) => Response::Outputs(outputs),
+                Err(e) => {
+                    metrics.note(&metrics.errors);
+                    Response::Error(e.to_string())
+                }
+            }
+        }
+        Request::Tune { kernel, workload, seed } => {
+            metrics.note(&metrics.tunes);
+            let entries = registry.manifest().variants(&kernel, &workload);
+            let index_bound = entries
+                .first()
+                .and_then(|e| e.inputs.last())
+                .map(|t| t.shape[0])
+                .unwrap_or(1);
+            let r = tune_measured(
+                registry,
+                &entries,
+                &|e| Ok(registry.synth_inputs(e, seed, index_bound)),
+                &TuneOpts::default(),
+            );
+            match r {
+                Ok(result) => {
+                    if let Some(d) = db {
+                        d.record(&result);
+                    }
+                    let (evaluated, pruned) =
+                        (result.evaluated(), result.pruned());
+                    Response::Tuned {
+                        variant: result.best_variant,
+                        seconds: result.best_seconds,
+                        evaluated,
+                        pruned,
+                    }
+                }
+                Err(e) => {
+                    metrics.note(&metrics.errors);
+                    Response::Error(e.to_string())
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HostArray;
+
+    fn start() -> Coordinator {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts");
+        Coordinator::start(CoordinatorConfig {
+            artifacts_dir: dir,
+            queue_depth: 8,
+            tuning_db: None,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn launch_axpy_through_service() {
+        let c = start();
+        let n = 524288;
+        let out = c
+            .submit(Request::Launch {
+                kernel: "axpy".into(),
+                workload: "axpy_524288".into(),
+                variant: Some("b8192".into()),
+                inputs: vec![
+                    HostArray::f32(vec![1], vec![2.0]),
+                    HostArray::f32(vec![n], vec![1.0; n]),
+                    HostArray::f32(vec![1], vec![0.5]),
+                    HostArray::f32(vec![n], vec![4.0; n]),
+                ],
+            })
+            .outputs()
+            .unwrap();
+        assert_eq!(out[0].as_f32().unwrap()[0], 4.0);
+        let m = c.metrics();
+        assert_eq!(m.launches, 1);
+        assert_eq!(m.errors, 0);
+    }
+
+    #[test]
+    fn run_source_service() {
+        let c = start();
+        let hlo = r#"
+HloModule svc_add
+
+ENTRY main {
+  p = f32[3] parameter(0)
+  ROOT r = f32[3] add(p, p)
+}
+"#;
+        let out = c
+            .submit(Request::RunSource {
+                hlo_text: hlo.into(),
+                inputs: vec![HostArray::f32(vec![3], vec![1., 2., 3.])],
+            })
+            .outputs()
+            .unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[2., 4., 6.]);
+    }
+
+    #[test]
+    fn errors_are_responses_not_crashes() {
+        let c = start();
+        let r = c.submit(Request::Launch {
+            kernel: "nope".into(),
+            workload: "w".into(),
+            variant: None,
+            inputs: vec![],
+        });
+        assert!(matches!(r, Response::Error(_)));
+        // service still alive
+        assert!(matches!(c.submit(Request::Stats), Response::Stats(_)));
+        assert_eq!(c.metrics().errors, 1);
+    }
+
+    #[test]
+    fn startup_failure_reports() {
+        let r = Coordinator::start(CoordinatorConfig {
+            artifacts_dir: PathBuf::from("/nonexistent-artifacts"),
+            queue_depth: 2,
+            tuning_db: None,
+        });
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,209 @@
+//! Copperhead-style data-parallel AST (§6.3): programs are compositions
+//! of data-parallel primitives (map, gather, reduce, …) over named
+//! inputs; an embedded compiler lowers them through RTCG.
+//!
+//! "Using Copperhead, programmers express computation in terms of
+//! composition of data parallel primitives … Copperhead is implemented
+//! as a standard Python library that uses RTCG to map compositions of
+//! data parallel primitives onto GPU hardware."
+
+use crate::elementwise::ast::{parse_expr, Expr as SExpr};
+use crate::rtcg::dtype::DType;
+use crate::util::error::{Error, Result};
+
+/// Scalar lambda: named parameters + a scalar-expression body.  Free
+/// names that are not parameters must be declared scalar inputs of the
+/// program (closure capture, as in Fig 7's `a`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Lambda {
+    pub params: Vec<String>,
+    pub body: SExpr,
+}
+
+impl Lambda {
+    /// Parse e.g. `Lambda::new(&["xi", "yi"], "a * xi + yi")`.
+    pub fn new(params: &[&str], body: &str) -> Result<Lambda> {
+        Ok(Lambda {
+            params: params.iter().map(|s| s.to_string()).collect(),
+            body: parse_expr(body)?,
+        })
+    }
+}
+
+/// Reduction operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ROp {
+    Sum,
+    Max,
+    Min,
+}
+
+/// Data-parallel expression.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    /// named program input (array or scalar)
+    Var(String),
+    /// scalar literal
+    Lit(f64),
+    /// elementwise map of a scalar lambda over equal-length arrays
+    Map { f: Lambda, args: Vec<Expr> },
+    /// `data[idx]` — data-dependent gather
+    Gather { data: Box<Expr>, idx: Box<Expr> },
+    /// full reduction to a scalar
+    Reduce { op: ROp, arg: Box<Expr> },
+    /// row-sum of a 2-D array → 1-D (the segmented-sum of regular
+    /// sparsity; see prelude::spmv_*)
+    SumRows(Box<Expr>),
+    /// reshape a 1-D array to 2-D (row-major)
+    Reshape2 { arg: Box<Expr>, rows: usize, cols: usize },
+    /// 2-D × 1-D matrix-vector product
+    MatVec { mat: Box<Expr>, vec: Box<Expr> },
+    /// scalar ⊕ scalar arithmetic ('+','-','*','/') on scalar-typed
+    /// sub-expressions (reduce results, scalar inputs, lets)
+    SBin(char, Box<Expr>, Box<Expr>),
+    /// transpose a 2-D array
+    Transpose(Box<Expr>),
+}
+
+/// Program input kind.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Kind {
+    Array(DType),
+    Scalar(DType),
+}
+
+/// A named program: inputs, shared `let` bindings (evaluated in order,
+/// visible to later bindings and all outputs — the phase-fusion device
+/// of §6.3's compiler), and one or more outputs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Program {
+    pub name: String,
+    pub inputs: Vec<(String, Kind)>,
+    pub lets: Vec<(String, Expr)>,
+    pub outputs: Vec<Expr>,
+}
+
+impl Program {
+    pub fn new(name: &str, inputs: Vec<(&str, Kind)>, body: Expr) -> Program {
+        Program {
+            name: name.to_string(),
+            inputs: inputs
+                .into_iter()
+                .map(|(n, k)| (n.to_string(), k))
+                .collect(),
+            lets: Vec::new(),
+            outputs: vec![body],
+        }
+    }
+
+    /// Multi-output program with shared bindings.
+    pub fn multi(
+        name: &str,
+        inputs: Vec<(&str, Kind)>,
+        lets: Vec<(&str, Expr)>,
+        outputs: Vec<Expr>,
+    ) -> Program {
+        Program {
+            name: name.to_string(),
+            inputs: inputs
+                .into_iter()
+                .map(|(n, k)| (n.to_string(), k))
+                .collect(),
+            lets: lets
+                .into_iter()
+                .map(|(n, e)| (n.to_string(), e))
+                .collect(),
+            outputs,
+        }
+    }
+
+    /// The single output of a classic program.
+    pub fn body(&self) -> &Expr {
+        &self.outputs[0]
+    }
+
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|(n, _)| n == name)
+            .ok_or_else(|| Error::msg(format!("unknown input '{name}'")))
+    }
+
+    /// Count of primitive nodes (complexity metric used by the fusion
+    /// pass tests and the Table 3 discussion).
+    pub fn node_count(&self) -> usize {
+        fn walk(e: &Expr) -> usize {
+            1 + match e {
+                Expr::Var(_) | Expr::Lit(_) => 0,
+                Expr::Map { args, .. } => {
+                    args.iter().map(walk).sum::<usize>()
+                }
+                Expr::Gather { data, idx } => walk(data) + walk(idx),
+                Expr::Reduce { arg, .. } => walk(arg),
+                Expr::SumRows(a) | Expr::Reshape2 { arg: a, .. } => walk(a),
+                Expr::MatVec { mat, vec } => walk(mat) + walk(vec),
+                Expr::Transpose(a) => walk(a),
+                Expr::SBin(_, a, b) => walk(a) + walk(b),
+            }
+        }
+        self.lets.iter().map(|(_, e)| walk(e)).sum::<usize>()
+            + self.outputs.iter().map(walk).sum::<usize>()
+    }
+}
+
+// convenience constructors
+pub fn var(name: &str) -> Expr {
+    Expr::Var(name.to_string())
+}
+pub fn map(f: Lambda, args: Vec<Expr>) -> Expr {
+    Expr::Map { f, args }
+}
+pub fn gather(data: Expr, idx: Expr) -> Expr {
+    Expr::Gather { data: Box::new(data), idx: Box::new(idx) }
+}
+pub fn reduce(op: ROp, arg: Expr) -> Expr {
+    Expr::Reduce { op, arg: Box::new(arg) }
+}
+pub fn sum_rows(arg: Expr) -> Expr {
+    Expr::SumRows(Box::new(arg))
+}
+pub fn reshape2(arg: Expr, rows: usize, cols: usize) -> Expr {
+    Expr::Reshape2 { arg: Box::new(arg), rows, cols }
+}
+pub fn matvec(mat: Expr, vec: Expr) -> Expr {
+    Expr::MatVec { mat: Box::new(mat), vec: Box::new(vec) }
+}
+pub fn sbin(op: char, a: Expr, b: Expr) -> Expr {
+    Expr::SBin(op, Box::new(a), Box::new(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_axpy_builds() {
+        // def axpy(a, x, y): return map(lambda xi, yi: a*xi + yi, x, y)
+        let p = Program::new(
+            "axpy",
+            vec![
+                ("a", Kind::Scalar(DType::F32)),
+                ("x", Kind::Array(DType::F32)),
+                ("y", Kind::Array(DType::F32)),
+            ],
+            map(
+                Lambda::new(&["xi", "yi"], "a * xi + yi").unwrap(),
+                vec![var("x"), var("y")],
+            ),
+        );
+        assert_eq!(p.inputs.len(), 3);
+        assert_eq!(p.node_count(), 3); // map + two vars
+        assert_eq!(p.input_index("y").unwrap(), 2);
+        assert!(p.input_index("q").is_err());
+    }
+
+    #[test]
+    fn lambda_parse_errors_propagate() {
+        assert!(Lambda::new(&["x"], "x +").is_err());
+    }
+}

@@ -1,0 +1,474 @@
+//! Copperhead backend: lower the (fused) data-parallel AST to HLO via
+//! `XlaBuilder`, compile through the op cache, and hand back a callable
+//! — "an embedded source-to-source compiler creates [device] code which
+//! implements the desired computation, which is then compiled and
+//! executed" (§6.3).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::array::opcache::OpCache;
+use crate::copperhead::ast::{Expr, Kind, Program, ROp};
+use crate::copperhead::fuse::fuse_program;
+use crate::copperhead::types::{infer_all, Shapes, Ty};
+use crate::elementwise::ast::Expr as SExpr;
+use crate::rtcg::dtype::DType;
+use crate::rtcg::hlobuild;
+use crate::rtcg::module::Toolkit;
+use crate::runtime::HostArray;
+use crate::util::error::{Error, Result};
+use crate::util::hash::digest_hex;
+
+/// The embedded compiler.  `fusion` is the Table 2 ablation knob.
+#[derive(Clone)]
+pub struct Copperhead {
+    tk: Toolkit,
+    cache: Arc<OpCache>,
+    pub fusion: bool,
+}
+
+impl Copperhead {
+    pub fn new(tk: Toolkit) -> Copperhead {
+        Copperhead { tk, cache: Arc::new(OpCache::new()), fusion: true }
+    }
+
+    pub fn without_fusion(tk: Toolkit) -> Copperhead {
+        Copperhead { tk, cache: Arc::new(OpCache::new()), fusion: false }
+    }
+
+    pub fn cache(&self) -> &OpCache {
+        &self.cache
+    }
+
+    /// Compile a program for concrete input shapes (specialization is
+    /// the point: §6.3's input-property-driven code generation).
+    pub fn compile(&self, p: &Program, shapes: &Shapes) -> Result<Compiled> {
+        let p = if self.fusion { fuse_program(p) } else { p.clone() };
+        let out_tys = infer_all(&p, shapes)?;
+        let key = format!(
+            "ch|{}|{}",
+            p.name,
+            digest_hex(format!("{:?}|{shapes:?}|{}", p, self.fusion).as_bytes())
+        );
+        let (prog, shapes2) = (p.clone(), shapes.clone());
+        let exe = self.cache.get_or_build(&self.tk, &key, move || {
+            build(&prog, &shapes2)
+        })?;
+        Ok(Compiled {
+            program: p,
+            exe,
+            out_tys,
+        })
+    }
+}
+
+/// A compiled, shape-specialized program.
+pub struct Compiled {
+    pub program: Program,
+    exe: crate::runtime::Executable,
+    pub out_tys: Vec<Ty>,
+}
+
+impl Compiled {
+    /// Invoke with host arrays in the program's input order.
+    pub fn call(&self, args: &[&HostArray]) -> Result<Vec<HostArray>> {
+        if args.len() != self.program.inputs.len() {
+            return Err(Error::msg(format!(
+                "program '{}' expects {} inputs, got {}",
+                self.program.name,
+                self.program.inputs.len(),
+                args.len()
+            )));
+        }
+        self.exe.run(args)
+    }
+
+    pub fn executable(&self) -> &crate::runtime::Executable {
+        &self.exe
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lowering
+// ---------------------------------------------------------------------------
+
+struct Ctx<'a> {
+    b: &'a xla::XlaBuilder,
+    /// program inputs: name → (op, type)
+    inputs: BTreeMap<String, (xla::XlaOp, Ty)>,
+}
+
+fn build(p: &Program, shapes: &Shapes) -> Result<xla::XlaComputation> {
+    let b = xla::XlaBuilder::new(&p.name);
+    let mut inputs = BTreeMap::new();
+    for (i, (name, kind)) in p.inputs.iter().enumerate() {
+        let (dims, dt): (Vec<usize>, DType) = match kind {
+            Kind::Scalar(dt) => (vec![], *dt),
+            Kind::Array(dt) => (
+                shapes
+                    .get(name)
+                    .cloned()
+                    .ok_or_else(|| {
+                        Error::msg(format!("no shape for '{name}'"))
+                    })?,
+                *dt,
+            ),
+        };
+        let op = hlobuild::param(&b, i as i64, dt, &dims, name)?;
+        inputs.insert(name.clone(), (op, Ty { dims, dtype: dt }));
+    }
+    let mut ctx = Ctx { b: &b, inputs };
+    // shared let bindings, in order (visible to later lets and outputs)
+    for (name, e) in &p.lets {
+        let (op, ty) = lower(e, &ctx)?;
+        ctx.inputs.insert(name.clone(), (op, ty));
+    }
+    let roots = p
+        .outputs
+        .iter()
+        .map(|e| lower(e, &ctx).map(|(op, _)| op))
+        .collect::<Result<Vec<_>>>()?;
+    let root = if roots.len() == 1 {
+        roots.into_iter().next().unwrap()
+    } else {
+        b.tuple(&roots)?
+    };
+    root.build().map_err(Into::into)
+}
+
+fn lower(e: &Expr, ctx: &Ctx) -> Result<(xla::XlaOp, Ty)> {
+    match e {
+        Expr::Var(n) => ctx
+            .inputs
+            .get(n)
+            .cloned()
+            .ok_or_else(|| Error::msg(format!("unbound '{n}'"))),
+        Expr::Lit(v) => Ok((
+            hlobuild::constant(ctx.b, DType::F32, *v)?,
+            Ty::scalar(DType::F32),
+        )),
+        Expr::Map { f, args } => {
+            let lowered = args
+                .iter()
+                .map(|a| lower(a, ctx))
+                .collect::<Result<Vec<_>>>()?;
+            let dims = lowered
+                .iter()
+                .find(|(_, t)| !t.is_scalar())
+                .map(|(_, t)| t.dims.clone())
+                .ok_or_else(|| Error::msg("map needs an array arg"))?;
+            // bind lambda params (broadcast scalars to the map shape)
+            let mut bind: BTreeMap<String, xla::XlaOp> = BTreeMap::new();
+            for (p, (op, ty)) in f.params.iter().zip(&lowered) {
+                let op = if ty.is_scalar() {
+                    hlobuild::broadcast_scalar(op, &dims)?
+                } else {
+                    op.clone()
+                };
+                bind.insert(p.clone(), op);
+            }
+            let out = lower_lambda(&f.body, &bind, ctx, &dims)?;
+            Ok((out, Ty { dims, dtype: DType::F32 }))
+        }
+        Expr::Gather { data, idx } => {
+            let (d, dt) = lower(data, ctx)?;
+            let (i, it) = lower(idx, ctx)?;
+            let out = d.take(&i, 0)?;
+            Ok((out, Ty { dims: it.dims, dtype: dt.dtype }))
+        }
+        Expr::Reduce { op, arg } => {
+            let (a, t) = lower(arg, ctx)?;
+            let dims: Vec<i64> = (0..t.dims.len() as i64).collect();
+            let out = match op {
+                ROp::Sum => a.reduce_sum(&dims, false)?,
+                ROp::Max => a.reduce_max(&dims, false)?,
+                ROp::Min => a.reduce_min(&dims, false)?,
+            };
+            Ok((out, Ty::scalar(t.dtype)))
+        }
+        Expr::SumRows(arg) => {
+            let (a, t) = lower(arg, ctx)?;
+            let out = a.reduce_sum(&[1], false)?;
+            Ok((out, Ty::vec(t.dims[0], t.dtype)))
+        }
+        Expr::Reshape2 { arg, rows, cols } => {
+            let (a, t) = lower(arg, ctx)?;
+            let out = a.reshape(&[*rows as i64, *cols as i64])?;
+            Ok((out, Ty { dims: vec![*rows, *cols], dtype: t.dtype }))
+        }
+        Expr::MatVec { mat, vec } => {
+            let (m, mt) = lower(mat, ctx)?;
+            let (v, _) = lower(vec, ctx)?;
+            let out = m.dot_general(&v, &[1], &[0], &[], &[])?;
+            Ok((out, Ty::vec(mt.dims[0], mt.dtype)))
+        }
+        Expr::Transpose(arg) => {
+            let (a, t) = lower(arg, ctx)?;
+            let out = a.transpose(&[1, 0])?;
+            Ok((
+                out,
+                Ty { dims: vec![t.dims[1], t.dims[0]], dtype: t.dtype },
+            ))
+        }
+        Expr::SBin(op, a, b) => {
+            let (x, t) = lower(a, ctx)?;
+            let (y, _) = lower(b, ctx)?;
+            let out = match op {
+                '+' => x.add_(&y),
+                '-' => x.sub_(&y),
+                '*' => x.mul_(&y),
+                '/' => x.div_(&y),
+                o => return Err(Error::msg(format!("bad scalar op '{o}'"))),
+            }?;
+            Ok((out, Ty::scalar(t.dtype)))
+        }
+    }
+}
+
+/// Lower a scalar lambda body over bound, already-shaped operands.
+/// Free variables resolve to program scalar inputs (closure capture).
+fn lower_lambda(
+    body: &SExpr,
+    bind: &BTreeMap<String, xla::XlaOp>,
+    ctx: &Ctx,
+    dims: &[usize],
+) -> Result<xla::XlaOp> {
+    match body {
+        SExpr::Num(v) => {
+            let c = hlobuild::constant(ctx.b, DType::F32, *v)?;
+            hlobuild::broadcast_scalar(&c, dims)
+        }
+        SExpr::Scalar(n) => {
+            if let Some(op) = bind.get(n) {
+                return Ok(op.clone());
+            }
+            // closure capture: must be a declared scalar input
+            match ctx.inputs.get(n) {
+                Some((op, ty)) if ty.is_scalar() => {
+                    hlobuild::broadcast_scalar(op, dims)
+                }
+                Some(_) => Err(Error::msg(format!(
+                    "'{n}' is an array; lambdas see arrays only via params"
+                ))),
+                None => Err(Error::msg(format!(
+                    "unbound lambda variable '{n}'"
+                ))),
+            }
+        }
+        SExpr::Elem(_) => {
+            Err(Error::msg("indexing not allowed in lambda bodies"))
+        }
+        SExpr::Neg(x) => {
+            lower_lambda(x, bind, ctx, dims)?.neg().map_err(Into::into)
+        }
+        SExpr::Bin(a, op, b) => {
+            let x = lower_lambda(a, bind, ctx, dims)?;
+            let y = lower_lambda(b, bind, ctx, dims)?;
+            match op {
+                '+' => x.add_(&y),
+                '-' => x.sub_(&y),
+                '*' => x.mul_(&y),
+                '/' => x.div_(&y),
+                o => return Err(Error::msg(format!("bad op '{o}'"))),
+            }
+            .map_err(Into::into)
+        }
+        SExpr::Call(f, args) => {
+            let l: Vec<xla::XlaOp> = args
+                .iter()
+                .map(|a| lower_lambda(a, bind, ctx, dims))
+                .collect::<Result<_>>()?;
+            let r = match (f.as_str(), l.as_slice()) {
+                ("exp", [a]) => a.exp(),
+                ("log", [a]) => a.log(),
+                ("sqrt", [a]) => a.sqrt(),
+                ("abs", [a]) => a.abs(),
+                ("tanh", [a]) => a.tanh(),
+                ("max", [a, b]) => a.max(b),
+                ("min", [a, b]) => a.min(b),
+                ("pow", [a, b]) => a.pow(b),
+                _ => {
+                    return Err(Error::msg(format!(
+                        "unknown lambda function '{f}'/{}",
+                        l.len()
+                    )))
+                }
+            };
+            r.map_err(Into::into)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::copperhead::ast::*;
+
+    fn shapes(pairs: &[(&str, &[usize])]) -> Shapes {
+        pairs
+            .iter()
+            .map(|(n, d)| (n.to_string(), d.to_vec()))
+            .collect()
+    }
+
+    fn ch() -> Copperhead {
+        Copperhead::new(Toolkit::init_ephemeral().unwrap())
+    }
+
+    #[test]
+    fn fig7_axpy_executes() {
+        let p = Program::new(
+            "axpy",
+            vec![
+                ("a", Kind::Scalar(DType::F32)),
+                ("x", Kind::Array(DType::F32)),
+                ("y", Kind::Array(DType::F32)),
+            ],
+            map(
+                Lambda::new(&["xi", "yi"], "a * xi + yi").unwrap(),
+                vec![var("x"), var("y")],
+            ),
+        );
+        let c = ch()
+            .compile(&p, &shapes(&[("x", &[4]), ("y", &[4])]))
+            .unwrap();
+        let a = HostArray::scalar_f32(2.0);
+        let x = HostArray::f32(vec![4], vec![1., 2., 3., 4.]);
+        let y = HostArray::f32(vec![4], vec![10., 10., 10., 10.]);
+        let out = c.call(&[&a, &x, &y]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[12., 14., 16., 18.]);
+    }
+
+    #[test]
+    fn gather_reduce_pipeline() {
+        // sum(x[idx] * w)
+        let p = Program::new(
+            "gsum",
+            vec![
+                ("x", Kind::Array(DType::F32)),
+                ("idx", Kind::Array(DType::I32)),
+                ("w", Kind::Array(DType::F32)),
+            ],
+            reduce(
+                ROp::Sum,
+                map(
+                    Lambda::new(&["g", "wi"], "g * wi").unwrap(),
+                    vec![gather(var("x"), var("idx")), var("w")],
+                ),
+            ),
+        );
+        let c = ch()
+            .compile(
+                &p,
+                &shapes(&[("x", &[6]), ("idx", &[3]), ("w", &[3])]),
+            )
+            .unwrap();
+        let x = HostArray::f32(vec![6], vec![0., 10., 20., 30., 40., 50.]);
+        let idx = HostArray::i32(vec![3], vec![5, 0, 2]);
+        let w = HostArray::f32(vec![3], vec![1., 2., 3.]);
+        let out = c.call(&[&x, &idx, &w]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[110.0]); // 50+0+60
+    }
+
+    #[test]
+    fn fused_and_unfused_agree() {
+        let p = Program::new(
+            "chain",
+            vec![("x", Kind::Array(DType::F32))],
+            map(
+                Lambda::new(&["u"], "u + 1").unwrap(),
+                vec![map(
+                    Lambda::new(&["v"], "v * 2").unwrap(),
+                    vec![var("x")],
+                )],
+            ),
+        );
+        let tkf = Toolkit::init_ephemeral().unwrap();
+        let s = shapes(&[("x", &[5])]);
+        let fused = Copperhead::new(tkf.clone()).compile(&p, &s).unwrap();
+        let unfused =
+            Copperhead::without_fusion(tkf).compile(&p, &s).unwrap();
+        let x = HostArray::f32(vec![5], vec![0., 1., 2., 3., 4.]);
+        let a = fused.call(&[&x]).unwrap();
+        let b = unfused.call(&[&x]).unwrap();
+        assert_eq!(a[0], b[0]);
+        assert_eq!(a[0].as_f32().unwrap(), &[1., 3., 5., 7., 9.]);
+    }
+
+    #[test]
+    fn sum_rows_reshape_matvec() {
+        // row sums two ways: SumRows vs MatVec(·, ones)
+        let p1 = Program::new(
+            "sr",
+            vec![("x", Kind::Array(DType::F32))],
+            sum_rows(reshape2(var("x"), 2, 3)),
+        );
+        let p2 = Program::new(
+            "mv",
+            vec![
+                ("x", Kind::Array(DType::F32)),
+                ("ones", Kind::Array(DType::F32)),
+            ],
+            matvec(reshape2(var("x"), 2, 3), var("ones")),
+        );
+        let c = ch();
+        let x = HostArray::f32(vec![6], vec![1., 2., 3., 4., 5., 6.]);
+        let ones = HostArray::f32(vec![3], vec![1.0; 3]);
+        let r1 = c
+            .compile(&p1, &shapes(&[("x", &[6])]))
+            .unwrap()
+            .call(&[&x])
+            .unwrap();
+        let r2 = c
+            .compile(&p2, &shapes(&[("x", &[6]), ("ones", &[3])]))
+            .unwrap()
+            .call(&[&x, &ones])
+            .unwrap();
+        assert_eq!(r1[0].as_f32().unwrap(), &[6.0, 15.0]);
+        assert_eq!(r2[0].as_f32().unwrap(), &[6.0, 15.0]);
+    }
+
+    #[test]
+    fn compile_caches_by_program_and_shape() {
+        let c = ch();
+        let p = Program::new(
+            "sq",
+            vec![("x", Kind::Array(DType::F32))],
+            map(Lambda::new(&["v"], "v * v").unwrap(), vec![var("x")]),
+        );
+        c.compile(&p, &shapes(&[("x", &[8])])).unwrap();
+        c.compile(&p, &shapes(&[("x", &[8])])).unwrap();
+        c.compile(&p, &shapes(&[("x", &[16])])).unwrap();
+        use std::sync::atomic::Ordering;
+        assert_eq!(c.cache().misses.load(Ordering::Relaxed), 2);
+        assert_eq!(c.cache().hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn wrong_arity_call_rejected() {
+        let c = ch();
+        let p = Program::new(
+            "id",
+            vec![("x", Kind::Array(DType::F32))],
+            map(Lambda::new(&["v"], "v").unwrap(), vec![var("x")]),
+        );
+        let comp = c.compile(&p, &shapes(&[("x", &[2])])).unwrap();
+        assert!(comp.call(&[]).is_err());
+    }
+
+    #[test]
+    fn lambda_referencing_array_without_param_rejected() {
+        let c = ch();
+        let p = Program::new(
+            "bad",
+            vec![
+                ("x", Kind::Array(DType::F32)),
+                ("y", Kind::Array(DType::F32)),
+            ],
+            map(Lambda::new(&["v"], "v + y").unwrap(), vec![var("x")]),
+        );
+        assert!(c
+            .compile(&p, &shapes(&[("x", &[2]), ("y", &[2])]))
+            .is_err());
+    }
+}

@@ -1,0 +1,206 @@
+//! Map fusion pass.  `map(f, map(g, xs), y)` → `map(f∘g, xs…, y)`:
+//! producer maps are inlined into their consumers so one generated
+//! kernel does the work of a chain — the §6.3 compiler's mapping
+//! decision, and the ablation knob for the Table 2 bench (fusion off
+//! mimics the unfused primitive-per-kernel execution).
+
+use crate::copperhead::ast::{Expr, Lambda, Program};
+use crate::elementwise::ast::Expr as SExpr;
+
+/// Fuse all map-into-map compositions, bottom-up.
+pub fn fuse_program(p: &Program) -> Program {
+    Program {
+        name: p.name.clone(),
+        inputs: p.inputs.clone(),
+        lets: p.lets.iter().map(|(n, e)| (n.clone(), fuse(e))).collect(),
+        outputs: p.outputs.iter().map(fuse).collect(),
+    }
+}
+
+pub fn fuse(e: &Expr) -> Expr {
+    match e {
+        Expr::Map { f, args } => {
+            let args: Vec<Expr> = args.iter().map(fuse).collect();
+            fuse_map(f, args)
+        }
+        Expr::Gather { data, idx } => Expr::Gather {
+            data: Box::new(fuse(data)),
+            idx: Box::new(fuse(idx)),
+        },
+        Expr::Reduce { op, arg } => {
+            Expr::Reduce { op: *op, arg: Box::new(fuse(arg)) }
+        }
+        Expr::SumRows(a) => Expr::SumRows(Box::new(fuse(a))),
+        Expr::Reshape2 { arg, rows, cols } => Expr::Reshape2 {
+            arg: Box::new(fuse(arg)),
+            rows: *rows,
+            cols: *cols,
+        },
+        Expr::MatVec { mat, vec } => Expr::MatVec {
+            mat: Box::new(fuse(mat)),
+            vec: Box::new(fuse(vec)),
+        },
+        Expr::Transpose(a) => Expr::Transpose(Box::new(fuse(a))),
+        Expr::SBin(op, a, b) => {
+            Expr::SBin(*op, Box::new(fuse(a)), Box::new(fuse(b)))
+        }
+        Expr::Var(_) | Expr::Lit(_) => e.clone(),
+    }
+}
+
+/// Inline any argument that is itself a `Map` into the outer lambda.
+fn fuse_map(f: &Lambda, args: Vec<Expr>) -> Expr {
+    let mut new_params: Vec<String> = Vec::new();
+    let mut new_args: Vec<Expr> = Vec::new();
+    let mut body = f.body.clone();
+    let mut fresh = 0usize;
+
+    for (param, arg) in f.params.iter().zip(args) {
+        match arg {
+            Expr::Map { f: inner, args: inner_args } => {
+                // rename inner params to fresh names, splice them in
+                let mut inner_body = inner.body.clone();
+                for (ip, ia) in inner.params.iter().zip(inner_args) {
+                    let fresh_name = format!("_fz{fresh}");
+                    fresh += 1;
+                    inner_body = rename(&inner_body, ip, &fresh_name);
+                    new_params.push(fresh_name);
+                    new_args.push(ia);
+                }
+                body = substitute(&body, param, &inner_body);
+            }
+            other => {
+                new_params.push(param.clone());
+                new_args.push(other);
+            }
+        }
+    }
+    Expr::Map {
+        f: Lambda { params: new_params, body },
+        args: new_args,
+    }
+}
+
+/// Rename a scalar variable in a scalar expression.
+fn rename(e: &SExpr, from: &str, to: &str) -> SExpr {
+    substitute(e, from, &SExpr::Scalar(to.to_string()))
+}
+
+/// Substitute a scalar variable by an expression.
+fn substitute(e: &SExpr, name: &str, with: &SExpr) -> SExpr {
+    match e {
+        SExpr::Scalar(n) if n == name => with.clone(),
+        SExpr::Num(_) | SExpr::Scalar(_) | SExpr::Elem(_) => e.clone(),
+        SExpr::Neg(x) => SExpr::Neg(Box::new(substitute(x, name, with))),
+        SExpr::Bin(a, op, b) => SExpr::Bin(
+            Box::new(substitute(a, name, with)),
+            *op,
+            Box::new(substitute(b, name, with)),
+        ),
+        SExpr::Call(f, args) => SExpr::Call(
+            f.clone(),
+            args.iter().map(|a| substitute(a, name, with)).collect(),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::copperhead::ast::*;
+
+    #[test]
+    fn map_map_fuses_to_one_map() {
+        // map(λu: u + 1, map(λv: v * 2, x)) → map(λ_fz0: _fz0*2 + 1, x)
+        let inner = map(
+            Lambda::new(&["v"], "v * 2").unwrap(),
+            vec![var("x")],
+        );
+        let outer = map(Lambda::new(&["u"], "u + 1").unwrap(), vec![inner]);
+        let fused = fuse(&outer);
+        match &fused {
+            Expr::Map { f, args } => {
+                assert_eq!(args.len(), 1);
+                assert_eq!(args[0], var("x"));
+                assert_eq!(f.params.len(), 1);
+                // body contains the composed expression
+                let printed = format!("{:?}", f.body);
+                assert!(printed.contains('2') && printed.contains('1'));
+            }
+            o => panic!("expected map, got {o:?}"),
+        }
+    }
+
+    #[test]
+    fn fusion_preserves_free_variables() {
+        // closure capture 'a' must survive fusion untouched
+        let inner =
+            map(Lambda::new(&["v"], "a * v").unwrap(), vec![var("x")]);
+        let outer = map(Lambda::new(&["u"], "u + b").unwrap(), vec![inner]);
+        let fused = fuse(&outer);
+        let printed = format!("{fused:?}");
+        assert!(printed.contains("Scalar(\"a\")"));
+        assert!(printed.contains("Scalar(\"b\")"));
+    }
+
+    #[test]
+    fn mixed_args_partially_fuse() {
+        let inner =
+            map(Lambda::new(&["v"], "v * v").unwrap(), vec![var("x")]);
+        let outer = map(
+            Lambda::new(&["u", "w"], "u + w").unwrap(),
+            vec![inner, var("y")],
+        );
+        match fuse(&outer) {
+            Expr::Map { f, args } => {
+                assert_eq!(args, vec![var("x"), var("y")]);
+                assert_eq!(f.params.len(), 2);
+            }
+            o => panic!("{o:?}"),
+        }
+    }
+
+    #[test]
+    fn fusion_reduces_node_count() {
+        let p = Program::new(
+            "chain",
+            vec![("x", Kind::Array(crate::rtcg::dtype::DType::F32))],
+            map(
+                Lambda::new(&["u"], "u + 1").unwrap(),
+                vec![map(
+                    Lambda::new(&["v"], "v * 2").unwrap(),
+                    vec![map(
+                        Lambda::new(&["w"], "w - 3").unwrap(),
+                        vec![var("x")],
+                    )],
+                )],
+            ),
+        );
+        let fused = fuse_program(&p);
+        assert!(fused.node_count() < p.node_count());
+        assert_eq!(fused.node_count(), 2); // one map + one var
+    }
+
+    #[test]
+    fn fuse_under_reduce() {
+        let e = reduce(
+            ROp::Sum,
+            map(
+                Lambda::new(&["u"], "u * u").unwrap(),
+                vec![map(
+                    Lambda::new(&["v"], "v + 1").unwrap(),
+                    vec![var("x")],
+                )],
+            ),
+        );
+        match fuse(&e) {
+            Expr::Reduce { arg, .. } => match *arg {
+                Expr::Map { ref args, .. } => {
+                    assert_eq!(args[0], var("x"))
+                }
+                ref o => panic!("{o:?}"),
+            },
+            o => panic!("{o:?}"),
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Copperhead (§6.3): a data-parallel language embedded in the host
+//! language, compiled onto the device through RTCG.
+
+pub mod ast;
+pub mod codegen;
+pub mod fuse;
+pub mod prelude;
+pub mod types;
+
+pub use ast::{Expr, Kind, Lambda, Program, ROp};
+pub use codegen::{Compiled, Copperhead};
+pub use types::{infer, Shapes, Ty};

@@ -1,0 +1,266 @@
+//! Shape/dtype inference over the data-parallel AST.  Runs before
+//! codegen so errors surface with program context, not XLA builder
+//! errors (§5: "errors are detected and reported automatically").
+
+use std::collections::BTreeMap;
+
+use crate::copperhead::ast::{Expr, Kind, Program};
+use crate::rtcg::dtype::DType;
+use crate::util::error::{Error, Result};
+
+/// Inferred type of a sub-expression.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ty {
+    pub dims: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl Ty {
+    pub fn scalar(dtype: DType) -> Ty {
+        Ty { dims: vec![], dtype }
+    }
+    pub fn vec(n: usize, dtype: DType) -> Ty {
+        Ty { dims: vec![n], dtype }
+    }
+    pub fn is_scalar(&self) -> bool {
+        self.dims.is_empty()
+    }
+}
+
+/// Concrete input shapes supplied at compile time (RTCG: the program is
+/// specialized to them, §6.3's "specialize the resulting code for those
+/// inputs").
+pub type Shapes = BTreeMap<String, Vec<usize>>;
+
+/// Infer the first output's type; checks every primitive's constraints
+/// across all lets and outputs.
+pub fn infer(p: &Program, shapes: &Shapes) -> Result<Ty> {
+    Ok(infer_all(p, shapes)?.into_iter().next().unwrap())
+}
+
+/// Infer every output's type (multi-output programs).
+pub fn infer_all(p: &Program, shapes: &Shapes) -> Result<Vec<Ty>> {
+    let mut env: BTreeMap<String, Ty> = p
+        .inputs
+        .iter()
+        .map(|(n, k)| {
+            let ty = match k {
+                Kind::Scalar(dt) => Ty::scalar(*dt),
+                Kind::Array(dt) => {
+                    let dims = shapes.get(n).cloned().ok_or_else(|| {
+                        Error::msg(format!("no shape for input '{n}'"))
+                    })?;
+                    Ty { dims, dtype: *dt }
+                }
+            };
+            Ok((n.clone(), ty))
+        })
+        .collect::<Result<_>>()?;
+    for (name, e) in &p.lets {
+        let ty = infer_expr(e, &env)?;
+        env.insert(name.clone(), ty);
+    }
+    p.outputs.iter().map(|e| infer_expr(e, &env)).collect()
+}
+
+fn infer_expr(e: &Expr, env: &BTreeMap<String, Ty>) -> Result<Ty> {
+    match e {
+        Expr::Var(n) => env
+            .get(n)
+            .cloned()
+            .ok_or_else(|| Error::msg(format!("unbound '{n}'"))),
+        Expr::Lit(_) => Ok(Ty::scalar(DType::F32)),
+        Expr::Map { f, args } => {
+            if f.params.len() != args.len() {
+                return Err(Error::msg(format!(
+                    "map lambda takes {} params, got {} args",
+                    f.params.len(),
+                    args.len()
+                )));
+            }
+            let tys = args
+                .iter()
+                .map(|a| infer_expr(a, env))
+                .collect::<Result<Vec<_>>>()?;
+            let mut n: Option<&[usize]> = None;
+            for t in &tys {
+                if !t.is_scalar() {
+                    match n {
+                        None => n = Some(&t.dims),
+                        Some(m) if m == t.dims.as_slice() => {}
+                        Some(m) => {
+                            return Err(Error::msg(format!(
+                                "map over mismatched shapes {m:?} vs {:?}",
+                                t.dims
+                            )))
+                        }
+                    }
+                }
+            }
+            let dims = n
+                .ok_or_else(|| {
+                    Error::msg("map needs at least one array argument")
+                })?
+                .to_vec();
+            Ok(Ty { dims, dtype: DType::F32 })
+        }
+        Expr::Gather { data, idx } => {
+            let d = infer_expr(data, env)?;
+            let i = infer_expr(idx, env)?;
+            if d.dims.len() != 1 {
+                return Err(Error::msg("gather data must be 1-d"));
+            }
+            if i.dtype != DType::I32 {
+                return Err(Error::msg("gather indices must be i32"));
+            }
+            Ok(Ty { dims: i.dims, dtype: d.dtype })
+        }
+        Expr::Reduce { arg, .. } => {
+            let t = infer_expr(arg, env)?;
+            if t.is_scalar() {
+                return Err(Error::msg("reduce of a scalar"));
+            }
+            Ok(Ty::scalar(t.dtype))
+        }
+        Expr::SumRows(a) => {
+            let t = infer_expr(a, env)?;
+            if t.dims.len() != 2 {
+                return Err(Error::msg(format!(
+                    "sum_rows expects 2-d, got {:?}",
+                    t.dims
+                )));
+            }
+            Ok(Ty::vec(t.dims[0], t.dtype))
+        }
+        Expr::Reshape2 { arg, rows, cols } => {
+            let t = infer_expr(arg, env)?;
+            if t.dims.iter().product::<usize>() != rows * cols {
+                return Err(Error::msg(format!(
+                    "cannot reshape {:?} to ({rows}, {cols})",
+                    t.dims
+                )));
+            }
+            Ok(Ty { dims: vec![*rows, *cols], dtype: t.dtype })
+        }
+        Expr::MatVec { mat, vec } => {
+            let m = infer_expr(mat, env)?;
+            let v = infer_expr(vec, env)?;
+            if m.dims.len() != 2 || v.dims.len() != 1 {
+                return Err(Error::msg("matvec expects (2-d, 1-d)"));
+            }
+            if m.dims[1] != v.dims[0] {
+                return Err(Error::msg(format!(
+                    "matvec inner dims: {} vs {}",
+                    m.dims[1], v.dims[0]
+                )));
+            }
+            Ok(Ty::vec(m.dims[0], m.dtype))
+        }
+        Expr::Transpose(a) => {
+            let t = infer_expr(a, env)?;
+            if t.dims.len() != 2 {
+                return Err(Error::msg("transpose expects 2-d"));
+            }
+            Ok(Ty { dims: vec![t.dims[1], t.dims[0]], dtype: t.dtype })
+        }
+        Expr::SBin(op, a, b) => {
+            let ta = infer_expr(a, env)?;
+            let tb = infer_expr(b, env)?;
+            if !ta.is_scalar() || !tb.is_scalar() {
+                return Err(Error::msg(format!(
+                    "scalar op '{op}' over non-scalars"
+                )));
+            }
+            if !"+-*/".contains(*op) {
+                return Err(Error::msg(format!("bad scalar op '{op}'")));
+            }
+            Ok(Ty::scalar(ta.dtype))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::copperhead::ast::*;
+
+    fn shapes(pairs: &[(&str, &[usize])]) -> Shapes {
+        pairs
+            .iter()
+            .map(|(n, d)| (n.to_string(), d.to_vec()))
+            .collect()
+    }
+
+    #[test]
+    fn axpy_types() {
+        let p = Program::new(
+            "axpy",
+            vec![
+                ("a", Kind::Scalar(DType::F32)),
+                ("x", Kind::Array(DType::F32)),
+                ("y", Kind::Array(DType::F32)),
+            ],
+            map(
+                Lambda::new(&["xi", "yi"], "a * xi + yi").unwrap(),
+                vec![var("x"), var("y")],
+            ),
+        );
+        let t = infer(&p, &shapes(&[("x", &[100]), ("y", &[100])])).unwrap();
+        assert_eq!(t, Ty::vec(100, DType::F32));
+        // mismatched lengths rejected
+        assert!(infer(&p, &shapes(&[("x", &[100]), ("y", &[99])])).is_err());
+    }
+
+    #[test]
+    fn gather_and_reduce() {
+        let p = Program::new(
+            "g",
+            vec![
+                ("x", Kind::Array(DType::F32)),
+                ("i", Kind::Array(DType::I32)),
+            ],
+            reduce(ROp::Sum, gather(var("x"), var("i"))),
+        );
+        let t = infer(&p, &shapes(&[("x", &[50]), ("i", &[8])])).unwrap();
+        assert!(t.is_scalar());
+    }
+
+    #[test]
+    fn gather_requires_i32() {
+        let p = Program::new(
+            "g",
+            vec![
+                ("x", Kind::Array(DType::F32)),
+                ("i", Kind::Array(DType::F32)),
+            ],
+            gather(var("x"), var("i")),
+        );
+        assert!(infer(&p, &shapes(&[("x", &[50]), ("i", &[8])])).is_err());
+    }
+
+    #[test]
+    fn reshape_and_sum_rows() {
+        let p = Program::new(
+            "sr",
+            vec![("x", Kind::Array(DType::F32))],
+            sum_rows(reshape2(var("x"), 4, 8)),
+        );
+        let t = infer(&p, &shapes(&[("x", &[32])])).unwrap();
+        assert_eq!(t, Ty::vec(4, DType::F32));
+        assert!(infer(&p, &shapes(&[("x", &[33])])).is_err());
+    }
+
+    #[test]
+    fn matvec_dims_checked() {
+        let p = Program::new(
+            "mv",
+            vec![
+                ("m", Kind::Array(DType::F32)),
+                ("v", Kind::Array(DType::F32)),
+            ],
+            matvec(var("m"), var("v")),
+        );
+        assert!(infer(&p, &shapes(&[("m", &[4, 8]), ("v", &[8])])).is_ok());
+        assert!(infer(&p, &shapes(&[("m", &[4, 8]), ("v", &[9])])).is_err());
+    }
+}

@@ -1,0 +1,69 @@
+//! Kernel descriptors — the analytic summary of one kernel variant that
+//! the performance model consumes.  Descriptors are derived either from
+//! the AOT manifest (measured-scale workloads) or from the per-family
+//! traffic models in [`super::traffic`] (paper-scale workloads, which
+//! need no artifacts).
+
+/// What the device model needs to know about one kernel variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelDesc {
+    pub kernel: String,
+    pub variant: String,
+    /// useful floating point work (the GFLOP/s numerator in Tables 1–2)
+    pub useful_flops: f64,
+    /// flops actually executed (≥ useful; padding, recompute)
+    pub executed_flops: f64,
+    /// DRAM traffic of the *staged* schedule this variant encodes, bytes
+    pub dram_bytes: f64,
+    /// ideal (compulsory) traffic — what a perfect cache would move
+    pub ideal_bytes: f64,
+    /// on-chip buffer footprint per block, bytes
+    pub scratch_bytes: u64,
+    /// execution contexts per block (for occupancy)
+    pub block_contexts: u32,
+    /// grid steps (blocks) per launch
+    pub grid: u64,
+    /// innermost contiguous run, bytes (coalescing input)
+    pub inner_contig_bytes: u64,
+    /// inner-loop unroll factor (≥ 1)
+    pub unroll: u32,
+    /// dominated by matmul-shaped FMA work (MXU/tensor-unit friendly)
+    pub matmul: bool,
+    /// performs data-dependent gathers (texture-path analog)
+    pub gather: bool,
+}
+
+impl KernelDesc {
+    /// Arithmetic intensity actually executed (flop / DRAM byte).
+    pub fn intensity(&self) -> f64 {
+        self.executed_flops / self.dram_bytes.max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn d() -> KernelDesc {
+        KernelDesc {
+            kernel: "k".into(),
+            variant: "v".into(),
+            useful_flops: 100.0,
+            executed_flops: 200.0,
+            dram_bytes: 50.0,
+            ideal_bytes: 25.0,
+            scratch_bytes: 1024,
+            block_contexts: 128,
+            grid: 64,
+            inner_contig_bytes: 512,
+            unroll: 4,
+            matmul: true,
+            gather: false,
+        }
+    }
+
+    #[test]
+    fn intensity() {
+        assert_eq!(d().intensity(), 4.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Device layer: profiles for the paper's evaluation GPUs, per-kernel
+//! traffic models, and the analytical timing simulator that stands in
+//! for the unavailable hardware (DESIGN.md §Substitutions).
+
+pub mod desc;
+pub mod profile;
+pub mod sim;
+pub mod traffic;
+
+pub use desc::KernelDesc;
+pub use profile::{by_name, table1_devices, DeviceProfile, HOST_CPU};
+pub use sim::{estimate, gflops, Estimate};

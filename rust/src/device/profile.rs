@@ -1,0 +1,221 @@
+//! Device profiles for the five GPUs of Table 1 (plus this host).
+//!
+//! The paper's evaluation hardware is unavailable (repro gate); per the
+//! substitution rule these profiles drive an analytical performance
+//! model (`device::sim`) built from each part's public specifications.
+//! Fields are chosen to be exactly the §3 architectural parameters the
+//! paper says the mapping depends on: width/number of compute units,
+//! register file, on-chip buffer memory, access-pattern speeds, DRAM
+//! bandwidth : compute ratio, and launch (host↔device) latency.
+
+/// One compute device (§2's chip—unit—context hierarchy).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// management subdomains ("multiprocessors" / compute units)
+    pub units: u32,
+    /// SIMD lanes per unit (warp width × issue)
+    pub lanes: u32,
+    /// max resident execution contexts per unit
+    pub contexts_per_unit: u32,
+    /// on-chip buffer memory per unit, bytes (shared mem / VMEM analog)
+    pub scratch_bytes: u64,
+    /// register file per unit, bytes
+    pub regfile_bytes: u64,
+    /// peak single-precision GFLOP/s
+    pub peak_gflops: f64,
+    /// DRAM bandwidth, GB/s
+    pub dram_gbs: f64,
+    /// kernel launch + driver overhead, µs
+    pub launch_us: f64,
+    /// penalty multiplier for fully uncoalesced access (≈ transactions
+    /// per warp when each lane hits its own DRAM segment)
+    pub uncoalesced_penalty: f64,
+    /// per-iteration loop overhead in equivalent unrolled iterations —
+    /// the §6.2 unrolling payoff. G8x pays dearly (in-order, no dual
+    /// issue); Fermi much less; an OoO host CPU almost nothing.
+    pub loop_overhead: f64,
+    /// gather/texture path efficiency (0..1] relative to streaming loads
+    pub gather_eff: f64,
+}
+
+/// The Table 1 evaluation parts, public specs.
+pub const G8600GT: DeviceProfile = DeviceProfile {
+    name: "8600GT",
+    units: 4,
+    lanes: 32,
+    contexts_per_unit: 768,
+    scratch_bytes: 16 << 10,
+    regfile_bytes: 32 << 10,
+    peak_gflops: 113.0,
+    dram_gbs: 22.4,
+    launch_us: 15.0,
+    uncoalesced_penalty: 16.0, // G8x: strict segment coalescing
+    loop_overhead: 3.5,
+    gather_eff: 0.55,
+};
+
+pub const G9400M: DeviceProfile = DeviceProfile {
+    name: "9400M",
+    units: 2,
+    lanes: 32,
+    contexts_per_unit: 768,
+    scratch_bytes: 16 << 10,
+    regfile_bytes: 32 << 10,
+    peak_gflops: 54.0,
+    dram_gbs: 21.0, // shared system memory
+    launch_us: 20.0,
+    uncoalesced_penalty: 16.0,
+    loop_overhead: 3.5,
+    gather_eff: 0.45,
+};
+
+pub const C1060: DeviceProfile = DeviceProfile {
+    name: "C1060",
+    units: 30,
+    lanes: 32,
+    contexts_per_unit: 1024,
+    scratch_bytes: 16 << 10,
+    regfile_bytes: 64 << 10,
+    peak_gflops: 622.0,
+    dram_gbs: 102.0,
+    launch_us: 10.0,
+    uncoalesced_penalty: 8.0, // GT200 relaxed coalescing
+    loop_overhead: 1.6,
+    gather_eff: 0.65,
+};
+
+pub const GTX295: DeviceProfile = DeviceProfile {
+    name: "GTX295",
+    units: 30, // one of the two GPUs, as the paper uses it
+    lanes: 32,
+    contexts_per_unit: 1024,
+    scratch_bytes: 16 << 10,
+    regfile_bytes: 64 << 10,
+    peak_gflops: 596.0,
+    dram_gbs: 112.0,
+    launch_us: 10.0,
+    uncoalesced_penalty: 8.0,
+    loop_overhead: 1.6,
+    gather_eff: 0.65,
+};
+
+pub const GTX480: DeviceProfile = DeviceProfile {
+    name: "GTX480",
+    units: 15,
+    lanes: 64, // GF100: 32 cores ×2 clock domains per SM equivalent
+    contexts_per_unit: 1536,
+    scratch_bytes: 48 << 10,
+    regfile_bytes: 128 << 10,
+    peak_gflops: 1345.0,
+    dram_gbs: 177.0,
+    launch_us: 6.0,
+    uncoalesced_penalty: 4.0, // Fermi L1 absorbs much of the scatter
+    loop_overhead: 0.5,
+    gather_eff: 0.8,
+};
+
+/// The measured substrate: this machine's CPU PJRT backend.  Numbers are
+/// rough (XLA CPU, single core) and only used when the *modeled* path is
+/// asked about the host for cross-checks; real host numbers come from
+/// wall-clock measurement.
+pub const HOST_CPU: DeviceProfile = DeviceProfile {
+    name: "host-cpu",
+    units: 1,
+    lanes: 8, // AVX2 f32
+    contexts_per_unit: 1,
+    scratch_bytes: 32 << 10, // L1d
+    regfile_bytes: 2 << 10,
+    peak_gflops: 38.0,
+    dram_gbs: 12.0,
+    launch_us: 1.0,
+    uncoalesced_penalty: 4.0,
+    loop_overhead: 0.15,
+    gather_eff: 0.5,
+};
+
+/// All modeled GPUs of Table 1, in the paper's row order.
+pub fn table1_devices() -> Vec<DeviceProfile> {
+    vec![G8600GT, G9400M, C1060, GTX295, GTX480]
+}
+
+pub fn by_name(name: &str) -> Option<DeviceProfile> {
+    let all = [G8600GT, G9400M, C1060, GTX295, GTX480, HOST_CPU];
+    all.iter().find(|d| d.name.eq_ignore_ascii_case(name)).cloned()
+}
+
+impl DeviceProfile {
+    /// Machine balance (flop:byte) — the §3 "ratio of available memory
+    /// bandwidth to compute bandwidth".
+    pub fn balance(&self) -> f64 {
+        self.peak_gflops / self.dram_gbs
+    }
+
+    /// Total resident contexts when each needs `scratch` bytes of
+    /// on-chip buffer (occupancy limiter #1).
+    pub fn occupancy(&self, scratch_per_block: u64, block_contexts: u32) -> f64 {
+        if scratch_per_block == 0 || block_contexts == 0 {
+            return 1.0;
+        }
+        let blocks_by_scratch =
+            (self.scratch_bytes / scratch_per_block.max(1)).max(0) as u32;
+        let blocks_by_ctx =
+            (self.contexts_per_unit / block_contexts.max(1)).max(0) as u32;
+        let blocks = blocks_by_scratch.min(blocks_by_ctx);
+        if blocks == 0 {
+            return 0.0; // does not fit: invalid configuration
+        }
+        let resident = (blocks * block_contexts).min(self.contexts_per_unit);
+        resident as f64 / self.contexts_per_unit as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(by_name("c1060").unwrap().name, "C1060");
+        assert_eq!(by_name("GTX480").unwrap().units, 15);
+        assert!(by_name("a100").is_none());
+    }
+
+    #[test]
+    fn table1_order_matches_paper() {
+        let names: Vec<&str> =
+            table1_devices().iter().map(|d| d.name).collect();
+        assert_eq!(
+            names,
+            vec!["8600GT", "9400M", "C1060", "GTX295", "GTX480"]
+        );
+    }
+
+    #[test]
+    fn newer_parts_are_faster() {
+        assert!(GTX480.peak_gflops > C1060.peak_gflops);
+        assert!(C1060.peak_gflops > G8600GT.peak_gflops);
+        assert!(GTX480.dram_gbs > G8600GT.dram_gbs);
+    }
+
+    #[test]
+    fn occupancy_limits() {
+        // fits exactly: full occupancy
+        assert_eq!(C1060.occupancy(0, 0), 1.0);
+        // scratch-hungry blocks cut occupancy
+        let o_small = C1060.occupancy(1 << 10, 128);
+        let o_big = C1060.occupancy(8 << 10, 128);
+        assert!(o_big <= o_small);
+        // does not fit at all
+        assert_eq!(C1060.occupancy(64 << 10, 32), 0.0);
+    }
+
+    #[test]
+    fn balance_is_sane() {
+        // GPUs of this era: ~5–10 flops per byte
+        for d in table1_devices() {
+            let b = d.balance();
+            assert!(b > 2.0 && b < 12.0, "{}: {b}", d.name);
+        }
+    }
+}

@@ -1,0 +1,388 @@
+//! Expression language for `ElementwiseKernel` / `ReductionKernel`
+//! (§5.2, Fig 4): C-flavored argument declarations and elementwise
+//! assignment expressions, e.g.
+//!
+//! ```text
+//! decl: "float a, float *x, float b, float *y, float *z"
+//! op:   "z[i] = a*x[i] + b*y[i]"
+//! ```
+
+use crate::rtcg::dtype::DType;
+use crate::util::error::{Error, Result};
+
+/// One declared kernel argument.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Arg {
+    pub name: String,
+    pub dtype: DType,
+    pub vector: bool,
+}
+
+impl Arg {
+    pub fn scalar(name: &str, dtype: DType) -> Arg {
+        Arg { name: name.into(), dtype, vector: false }
+    }
+    pub fn vector(name: &str, dtype: DType) -> Arg {
+        Arg { name: name.into(), dtype, vector: true }
+    }
+}
+
+/// Parse a C-style declaration list: `float a, float *x, int n` —
+/// exactly the Fig 4a string format.
+pub fn parse_decl(decl: &str) -> Result<Vec<Arg>> {
+    let mut out = Vec::new();
+    for part in decl.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let toks: Vec<&str> = part.split_whitespace().collect();
+        if toks.len() != 2 {
+            return Err(Error::msg(format!("bad declaration '{part}'")));
+        }
+        let dtype = match toks[0] {
+            "float" => DType::F32,
+            "double" => DType::F64,
+            "int" => DType::I32,
+            "long" => DType::I64,
+            t => {
+                return Err(Error::msg(format!(
+                    "unknown C type '{t}' in '{part}'"
+                )))
+            }
+        };
+        let (vector, name) = match toks[1].strip_prefix('*') {
+            Some(n) => (true, n),
+            None => (false, toks[1]),
+        };
+        if name.is_empty()
+            || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+        {
+            return Err(Error::msg(format!("bad identifier '{name}'")));
+        }
+        out.push(Arg {
+            name: name.to_string(),
+            dtype,
+            vector,
+        });
+    }
+    if out.is_empty() {
+        return Err(Error::msg("empty declaration"));
+    }
+    Ok(out)
+}
+
+/// Expression AST.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    Num(f64),
+    /// scalar argument reference
+    Scalar(String),
+    /// `name[i]` vector element reference
+    Elem(String),
+    Neg(Box<Expr>),
+    Bin(Box<Expr>, char, Box<Expr>),
+    Call(String, Vec<Expr>),
+}
+
+/// One `target[i] = expr` statement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Assign {
+    pub target: String,
+    pub expr: Expr,
+}
+
+/// Parse `;`-separated assignment statements.
+pub fn parse_ops(src: &str) -> Result<Vec<Assign>> {
+    let mut out = Vec::new();
+    for stmt in src.split(';') {
+        let stmt = stmt.trim();
+        if stmt.is_empty() {
+            continue;
+        }
+        let (lhs, rhs) = stmt
+            .split_once('=')
+            .ok_or_else(|| Error::msg(format!("missing '=' in '{stmt}'")))?;
+        let lhs = lhs.trim();
+        let target = lhs
+            .strip_suffix("[i]")
+            .ok_or_else(|| {
+                Error::msg(format!("assignment target must be 'v[i]': '{lhs}'"))
+            })?
+            .trim()
+            .to_string();
+        out.push(Assign { target, expr: parse_expr(rhs)? });
+    }
+    if out.is_empty() {
+        return Err(Error::msg("no statements in operation"));
+    }
+    Ok(out)
+}
+
+/// Parse a standalone expression (used for reduction combiners too).
+pub fn parse_expr(src: &str) -> Result<Expr> {
+    let mut p = P { b: src.as_bytes(), i: 0 };
+    let e = p.additive()?;
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(Error::msg(format!(
+            "trailing junk at '{}'",
+            &src[p.i..]
+        )));
+    }
+    Ok(e)
+}
+
+struct P<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> P<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn additive(&mut self) -> Result<Expr> {
+        let mut e = self.multiplicative()?;
+        loop {
+            self.ws();
+            match self.b.get(self.i) {
+                Some(&c @ (b'+' | b'-')) => {
+                    self.i += 1;
+                    let r = self.multiplicative()?;
+                    e = Expr::Bin(Box::new(e), c as char, Box::new(r));
+                }
+                _ => return Ok(e),
+            }
+        }
+    }
+
+    fn multiplicative(&mut self) -> Result<Expr> {
+        let mut e = self.unary()?;
+        loop {
+            self.ws();
+            match self.b.get(self.i) {
+                Some(&c @ (b'*' | b'/')) => {
+                    self.i += 1;
+                    let r = self.unary()?;
+                    e = Expr::Bin(Box::new(e), c as char, Box::new(r));
+                }
+                _ => return Ok(e),
+            }
+        }
+    }
+
+    fn unary(&mut self) -> Result<Expr> {
+        self.ws();
+        if self.b.get(self.i) == Some(&b'-') {
+            self.i += 1;
+            return Ok(Expr::Neg(Box::new(self.unary()?)));
+        }
+        self.atom()
+    }
+
+    fn atom(&mut self) -> Result<Expr> {
+        self.ws();
+        match self.b.get(self.i) {
+            None => Err(Error::msg("unexpected end of expression")),
+            Some(b'(') => {
+                self.i += 1;
+                let e = self.additive()?;
+                self.ws();
+                if self.b.get(self.i) != Some(&b')') {
+                    return Err(Error::msg("missing ')'"));
+                }
+                self.i += 1;
+                Ok(e)
+            }
+            Some(c) if c.is_ascii_digit() || *c == b'.' => {
+                let start = self.i;
+                while self.i < self.b.len()
+                    && (self.b[self.i].is_ascii_digit()
+                        || matches!(self.b[self.i], b'.' | b'e' | b'E'))
+                {
+                    // allow exponent sign
+                    if matches!(self.b[self.i], b'e' | b'E')
+                        && matches!(
+                            self.b.get(self.i + 1),
+                            Some(b'+') | Some(b'-')
+                        )
+                    {
+                        self.i += 1;
+                    }
+                    self.i += 1;
+                }
+                let t = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+                // consume a C float suffix (1.0f)
+                if matches!(self.b.get(self.i), Some(b'f') | Some(b'F')) {
+                    self.i += 1;
+                }
+                t.parse::<f64>().map(Expr::Num).map_err(|_| {
+                    Error::msg(format!("bad numeric literal '{t}'"))
+                })
+            }
+            Some(c) if c.is_ascii_alphabetic() || *c == b'_' => {
+                let start = self.i;
+                while self.i < self.b.len()
+                    && (self.b[self.i].is_ascii_alphanumeric()
+                        || self.b[self.i] == b'_')
+                {
+                    self.i += 1;
+                }
+                let name = std::str::from_utf8(&self.b[start..self.i])
+                    .unwrap()
+                    .to_string();
+                self.ws();
+                match self.b.get(self.i) {
+                    Some(b'[') => {
+                        // expect exactly [i]
+                        let rest = &self.b[self.i..];
+                        if rest.len() >= 3 && &rest[..3] == b"[i]" {
+                            self.i += 3;
+                            Ok(Expr::Elem(name))
+                        } else {
+                            Err(Error::msg(format!(
+                                "only '[i]' indexing is supported: '{name}['"
+                            )))
+                        }
+                    }
+                    Some(b'(') => {
+                        self.i += 1;
+                        let mut args = Vec::new();
+                        self.ws();
+                        if self.b.get(self.i) == Some(&b')') {
+                            self.i += 1;
+                        } else {
+                            loop {
+                                args.push(self.additive()?);
+                                self.ws();
+                                match self.b.get(self.i) {
+                                    Some(b',') => self.i += 1,
+                                    Some(b')') => {
+                                        self.i += 1;
+                                        break;
+                                    }
+                                    _ => {
+                                        return Err(Error::msg(
+                                            "missing ')' in call",
+                                        ))
+                                    }
+                                }
+                            }
+                        }
+                        Ok(Expr::Call(name, args))
+                    }
+                    _ => Ok(Expr::Scalar(name)),
+                }
+            }
+            Some(c) => {
+                Err(Error::msg(format!("unexpected '{}'", *c as char)))
+            }
+        }
+    }
+}
+
+/// Names referenced by an expression, split by kind.
+pub fn referenced(e: &Expr, scalars: &mut Vec<String>, vectors: &mut Vec<String>) {
+    match e {
+        Expr::Num(_) => {}
+        Expr::Scalar(n) => {
+            if !scalars.contains(n) {
+                scalars.push(n.clone());
+            }
+        }
+        Expr::Elem(n) => {
+            if !vectors.contains(n) {
+                vectors.push(n.clone());
+            }
+        }
+        Expr::Neg(x) => referenced(x, scalars, vectors),
+        Expr::Bin(a, _, b) => {
+            referenced(a, scalars, vectors);
+            referenced(b, scalars, vectors);
+        }
+        Expr::Call(_, args) => {
+            for a in args {
+                referenced(a, scalars, vectors);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decl_fig4a() {
+        let args = parse_decl(
+            "float a, float *x, float b, float *y, float *z",
+        )
+        .unwrap();
+        assert_eq!(args.len(), 5);
+        assert_eq!(args[0], Arg::scalar("a", DType::F32));
+        assert_eq!(args[1], Arg::vector("x", DType::F32));
+        assert_eq!(args[4], Arg::vector("z", DType::F32));
+    }
+
+    #[test]
+    fn decl_mixed_types() {
+        let args = parse_decl("double d, int *idx, long n").unwrap();
+        assert_eq!(args[0].dtype, DType::F64);
+        assert_eq!(args[1], Arg::vector("idx", DType::I32));
+        assert_eq!(args[2].dtype, DType::I64);
+    }
+
+    #[test]
+    fn decl_rejects_garbage() {
+        assert!(parse_decl("floot x").is_err());
+        assert!(parse_decl("float").is_err());
+        assert!(parse_decl("").is_err());
+        assert!(parse_decl("float *").is_err());
+    }
+
+    #[test]
+    fn ops_fig4() {
+        let ops = parse_ops("z[i] = a*x[i] + b*y[i]").unwrap();
+        assert_eq!(ops.len(), 1);
+        assert_eq!(ops[0].target, "z");
+        let mut s = vec![];
+        let mut v = vec![];
+        referenced(&ops[0].expr, &mut s, &mut v);
+        assert_eq!(s, vec!["a", "b"]);
+        assert_eq!(v, vec!["x", "y"]);
+    }
+
+    #[test]
+    fn multiple_statements() {
+        let ops =
+            parse_ops("u[i] = x[i] + 1; w[i] = x[i] * x[i];").unwrap();
+        assert_eq!(ops.len(), 2);
+        assert_eq!(ops[1].target, "w");
+    }
+
+    #[test]
+    fn calls_and_precedence() {
+        let e = parse_expr("exp(x[i]) * 2 + -y[i] / (a - 1.5e-3)").unwrap();
+        // spot check the tree shape: top is '+'
+        match e {
+            Expr::Bin(_, '+', _) => {}
+            o => panic!("expected +, got {o:?}"),
+        }
+    }
+
+    #[test]
+    fn float_suffix_tolerated() {
+        assert_eq!(parse_expr("1.0f").unwrap(), Expr::Num(1.0));
+    }
+
+    #[test]
+    fn rejects_bad_indexing() {
+        assert!(parse_ops("z[j] = x[i]").is_err());
+        assert!(parse_expr("x[i+1]").is_err());
+        assert!(parse_ops("z = x[i]").is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! Elementwise / reduction kernel generators (§5.2, Fig 4): user-facing
+//! RTCG tools that accept C-like snippets and generate whole kernels.
+
+pub mod ast;
+pub mod kernel;
+
+pub use ast::Arg;
+pub use kernel::{ElementwiseKernel, EwValue, ReductionKernel};

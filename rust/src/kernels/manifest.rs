@@ -1,0 +1,289 @@
+//! AOT kernel manifest — the L1→L3 bridge.  `make artifacts` (Python,
+//! build time) enumerates every Pallas kernel's tuning grid, lowers each
+//! variant to HLO text, and records it here; the Rust coordinator loads
+//! this at startup and never touches Python again.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::rtcg::dtype::DType;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| Error::msg("shape must be an array"))?
+            .iter()
+            .map(|d| d.as_u64().map(|x| x as usize))
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| Error::msg("bad shape entry"))?;
+        let dtype = DType::from_name(
+            j.req("dtype")?
+                .as_str()
+                .ok_or_else(|| Error::msg("dtype must be a string"))?,
+        )?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One kernel variant: a structurally distinct lowering of one kernel
+/// family for one workload shape (§4.1's retained variant pool).
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub kernel: String,
+    pub variant: String,
+    pub workload: String,
+    pub params: Json,
+    pub path: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub flops: u64,
+    pub bytes: u64,
+    pub vmem_bytes: u64,
+    pub meta: Json,
+}
+
+impl ManifestEntry {
+    /// Integer tuning parameter with default.
+    pub fn param_u(&self, key: &str, default: u64) -> u64 {
+        self.params.get(key).and_then(|v| v.as_u64()).unwrap_or(default)
+    }
+
+    /// String tuning parameter.
+    pub fn param_s(&self, key: &str) -> Option<&str> {
+        self.params.get(key).and_then(|v| v.as_str())
+    }
+
+    /// Boolean tuning parameter.
+    pub fn param_b(&self, key: &str) -> bool {
+        match self.params.get(key) {
+            Some(Json::Bool(b)) => *b,
+            Some(Json::Num(n)) => *n != 0.0,
+            _ => false,
+        }
+    }
+
+    pub fn meta_u(&self, key: &str, default: u64) -> u64 {
+        self.meta.get(key).and_then(|v| v.as_u64()).unwrap_or(default)
+    }
+
+    pub fn meta_b(&self, key: &str) -> bool {
+        matches!(self.meta.get(key), Some(Json::Bool(true)))
+    }
+}
+
+/// The loaded manifest: all variants, indexed by (kernel, workload).
+pub struct Manifest {
+    root: PathBuf,
+    entries: Vec<ManifestEntry>,
+    index: HashMap<(String, String), Vec<usize>>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::msg(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                path.display()
+            ))
+        })?;
+        let doc = Json::parse(&text)?;
+        let mut entries = Vec::new();
+        for k in doc
+            .req("kernels")?
+            .as_arr()
+            .ok_or_else(|| Error::msg("kernels must be an array"))?
+        {
+            let inputs = k
+                .req("inputs")?
+                .as_arr()
+                .ok_or_else(|| Error::msg("inputs must be an array"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = k
+                .req("outputs")?
+                .as_arr()
+                .ok_or_else(|| Error::msg("outputs must be an array"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            entries.push(ManifestEntry {
+                kernel: req_str(k, "kernel")?,
+                variant: req_str(k, "variant")?,
+                workload: req_str(k, "workload")?,
+                params: k.req("params")?.clone(),
+                path: req_str(k, "path")?,
+                inputs,
+                outputs,
+                flops: k.req("flops")?.as_u64().unwrap_or(0),
+                bytes: k.req("bytes")?.as_u64().unwrap_or(0),
+                vmem_bytes: k.req("vmem_bytes")?.as_u64().unwrap_or(0),
+                meta: k.req("meta")?.clone(),
+            });
+        }
+        let mut index: HashMap<(String, String), Vec<usize>> =
+            HashMap::new();
+        for (i, e) in entries.iter().enumerate() {
+            index
+                .entry((e.kernel.clone(), e.workload.clone()))
+                .or_default()
+                .push(i);
+        }
+        Ok(Manifest { root: dir.to_path_buf(), entries, index })
+    }
+
+    /// Default artifacts directory: `$RTCG_ARTIFACTS` or `artifacts/`.
+    pub fn load_default() -> Result<Manifest> {
+        let dir = std::env::var("RTCG_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(Path::new(&dir))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn entries(&self) -> &[ManifestEntry] {
+        &self.entries
+    }
+
+    /// All variants of one kernel family for one workload.
+    pub fn variants(&self, kernel: &str, workload: &str) -> Vec<&ManifestEntry> {
+        self.index
+            .get(&(kernel.to_string(), workload.to_string()))
+            .map(|v| v.iter().map(|&i| &self.entries[i]).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn entry(
+        &self,
+        kernel: &str,
+        workload: &str,
+        variant: &str,
+    ) -> Result<&ManifestEntry> {
+        self.variants(kernel, workload)
+            .into_iter()
+            .find(|e| e.variant == variant)
+            .ok_or_else(|| {
+                Error::msg(format!(
+                    "no variant {kernel}/{workload}/{variant} in manifest"
+                ))
+            })
+    }
+
+    /// Workload ids available for a kernel family.
+    pub fn workloads(&self, kernel: &str) -> Vec<String> {
+        let mut w: Vec<String> = self
+            .index
+            .keys()
+            .filter(|(k, _)| k == kernel)
+            .map(|(_, wl)| wl.clone())
+            .collect();
+        w.sort();
+        w
+    }
+
+    pub fn hlo_path(&self, e: &ManifestEntry) -> PathBuf {
+        self.root.join(&e.path)
+    }
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String> {
+    j.req(key)?
+        .as_str()
+        .map(|s| s.to_string())
+        .ok_or_else(|| Error::msg(format!("'{key}' must be a string")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> PathBuf {
+        // tests run from the crate root; artifacts/ is built by make
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn load() -> Manifest {
+        Manifest::load(&manifest_dir()).expect("run `make artifacts` first")
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let m = load();
+        assert!(m.len() > 100, "expected a substantive pool, got {}", m.len());
+        let convs = m.variants("filterbank", "conv0_k9");
+        assert!(convs.len() >= 8, "conv0_k9 variants: {}", convs.len());
+    }
+
+    #[test]
+    fn entries_have_artifacts_on_disk() {
+        let m = load();
+        for e in m.entries().iter().take(25) {
+            assert!(
+                m.hlo_path(e).exists(),
+                "missing artifact {}",
+                e.path
+            );
+        }
+    }
+
+    #[test]
+    fn params_accessors() {
+        let m = load();
+        let e = m.entry("filterbank", "conv0_k9", "th4_fb8_u0").unwrap();
+        assert_eq!(e.param_u("tile_h", 0), 4);
+        assert_eq!(e.param_u("bank_tile", 0), 8);
+        assert!(!e.param_b("unroll"));
+        assert!(e.flops > 0 && e.vmem_bytes > 0);
+    }
+
+    #[test]
+    fn variant_lookup_errors() {
+        let m = load();
+        assert!(m.entry("filterbank", "conv0_k9", "nope").is_err());
+        assert!(m.variants("nokernel", "now").is_empty());
+    }
+
+    #[test]
+    fn nn_workloads_cover_doubling_chain() {
+        let m = load();
+        let w = m.workloads("nn");
+        for n in [1024, 2048, 4096, 8192, 16384, 65536] {
+            assert!(
+                w.contains(&format!("nn_t1024_n{n}")),
+                "missing nn workload n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn spmv_cm_inputs_are_transposed() {
+        let m = load();
+        let rm = m.entry("spmv_ell", "ell_16k", "rb256_rm").unwrap();
+        let cm = m.entry("spmv_ell", "ell_16k", "rb256_cm").unwrap();
+        assert_eq!(rm.inputs[0].shape, vec![16384, 16]);
+        assert_eq!(cm.inputs[0].shape, vec![16, 16384]);
+        assert_eq!(rm.inputs[1].dtype, DType::I32);
+    }
+}

@@ -1,0 +1,8 @@
+//! Kernel pool: AOT manifest loading and the registry the tuner and
+//! apps drive.
+
+pub mod manifest;
+pub mod registry;
+
+pub use manifest::{Manifest, ManifestEntry, TensorSpec};
+pub use registry::{desc_for_entry, Registry};

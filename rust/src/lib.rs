@@ -1,0 +1,41 @@
+//! # rtcg — GPU Run-Time Code Generation, the Rust + JAX + Pallas way
+//!
+//! A reproduction of Klöckner et al., *"PyCUDA and PyOpenCL: A
+//! Scripting-Based Approach to GPU Run-Time Code Generation"* (2009/
+//! Parallel Computing 2012), re-architected for the three-layer
+//! Rust + JAX + Pallas stack: the Rust coordinator performs run-time
+//! code generation over **HLO text** (the analog of CUDA C source
+//! strings), compiles through PJRT behind a compiler cache, and
+//! auto-tunes over AOT-lowered Pallas kernel variant pools.
+//!
+//! See DESIGN.md for the full system inventory and the per-experiment
+//! index, EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod util;
+
+pub mod runtime;
+
+pub mod rtcg;
+
+pub mod array;
+
+pub mod elementwise;
+
+pub mod mempool;
+
+pub mod device;
+
+pub mod kernels;
+
+pub mod tuner;
+
+pub mod copperhead;
+
+pub mod sparse;
+
+pub mod apps;
+
+pub mod coordinator;
+
+pub use rtcg::module::Toolkit;
+pub use runtime::{Client, HostArray};

@@ -1,0 +1,281 @@
+//! `rtcg` — leader binary: CLI over the coordinator and toolkit.
+//!
+//! Subcommands:
+//!   info     platform + artifact pool + device profile summary
+//!   demo     the Fig 3 quickstart via run-time templated HLO
+//!   tune     measured auto-tuning of one kernel/workload (records db)
+//!   table1   the modeled Table 1 (paper-scale, simulated devices)
+//!   serve    run the coordinator service over a synthetic request mix
+
+use std::path::PathBuf;
+
+use rtcg::apps::conv;
+use rtcg::coordinator::{Coordinator, CoordinatorConfig, Request};
+use rtcg::device;
+use rtcg::kernels::Registry;
+use rtcg::rtcg::template::ctx;
+use rtcg::tuner::TuningDb;
+use rtcg::util::cli::Args;
+use rtcg::util::error::Result;
+use rtcg::util::prng::Rng;
+use rtcg::{HostArray, Toolkit};
+
+const FLAGS: &[(&str, &str)] = &[
+    ("artifacts", "artifacts directory (default: artifacts/)"),
+    ("kernel", "kernel family for `tune`"),
+    ("workload", "workload id for `tune`"),
+    ("requests", "request count for `serve` (default 64)"),
+    ("seed", "workload RNG seed (default 42)"),
+    ("device", "device profile name for modeled output"),
+];
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1), FLAGS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
+    let r = match cmd {
+        "info" => cmd_info(&args),
+        "demo" => cmd_demo(),
+        "tune" => cmd_tune(&args),
+        "table1" => cmd_table1(),
+        "serve" => cmd_serve(&args),
+        other => {
+            eprintln!("unknown command '{other}'");
+            eprintln!("commands: info demo tune table1 serve");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let tk = Toolkit::init()?;
+    println!("platform : {}", tk.client().platform_id());
+    match Registry::open(tk.clone(), &artifacts_dir(args)) {
+        Ok(reg) => {
+            let m = reg.manifest();
+            println!("artifacts: {} kernel variants", m.len());
+            let mut families: Vec<String> = m
+                .entries()
+                .iter()
+                .map(|e| e.kernel.clone())
+                .collect();
+            families.sort();
+            families.dedup();
+            for f in families {
+                let n = m
+                    .entries()
+                    .iter()
+                    .filter(|e| e.kernel == f)
+                    .count();
+                println!("  {f:<16} {n} variants over {} workloads",
+                    m.workloads(&f).len());
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    println!("modeled devices:");
+    for d in device::table1_devices() {
+        println!(
+            "  {:<8} {:>3} units × {:>2} lanes, {:>5.0} GFLOP/s, {:>5.1} GB/s, {:>2} KiB scratch",
+            d.name, d.units, d.lanes, d.peak_gflops, d.dram_gbs,
+            d.scratch_bytes >> 10
+        );
+    }
+    Ok(())
+}
+
+fn cmd_demo() -> Result<()> {
+    // Fig 3: multiply a 4×4 array by two via run-time generated code.
+    let tk = Toolkit::init()?;
+    let tpl = r#"
+HloModule multiply_by_{{ k }}
+
+ENTRY main {
+  p = f32[{{ rows }},{{ cols }}] parameter(0)
+  c = f32[] constant({{ k }})
+  cb = f32[{{ rows }},{{ cols }}] broadcast(c), dimensions={}
+  ROOT r = f32[{{ rows }},{{ cols }}] multiply(p, cb)
+}
+"#;
+    let m = tk.source_module_from_template(
+        tpl,
+        &ctx(vec![("rows", 4.into()), ("cols", 4.into()), ("k", 2.into())]),
+    )?;
+    let mut rng = Rng::new(0);
+    let a = HostArray::f32(vec![4, 4], rng.normal_vec(16));
+    let out = m.call(&[&a])?;
+    println!("a         = {:?}", a.as_f32()?);
+    println!("a_doubled = {:?}", out[0].as_f32()?);
+    let (hits, _, misses) = tk.cache().stats.snapshot();
+    println!("cache: {hits} hits, {misses} misses (run again → disk note)");
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let kernel = args.get_or("kernel", "filterbank").to_string();
+    let workload = args.get_or("workload", "conv0_k9").to_string();
+    let seed = args.get_usize("seed", 42)? as u64;
+    let tk = Toolkit::init()?;
+    let reg = Registry::open(tk, &artifacts_dir(args))?;
+    let entries = reg.manifest().variants(&kernel, &workload);
+    if entries.is_empty() {
+        return Err(rtcg::util::error::Error::msg(format!(
+            "no variants for {kernel}/{workload}; available workloads: {:?}",
+            reg.manifest().workloads(&kernel)
+        )));
+    }
+    println!("tuning {kernel}/{workload} over {} variants…", entries.len());
+    let index_bound = entries[0]
+        .inputs
+        .last()
+        .map(|t| t.shape[0])
+        .unwrap_or(1);
+    let result = rtcg::tuner::tune_measured(
+        &reg,
+        &entries,
+        &|e| Ok(reg.synth_inputs(e, seed, index_bound)),
+        &rtcg::tuner::TuneOpts::default(),
+    )?;
+    for c in &result.candidates {
+        let t = c
+            .seconds
+            .map(rtcg::util::bench::fmt_time)
+            .unwrap_or_else(|| "-".into());
+        let mark = if c.variant == result.best_variant {
+            "  ← best"
+        } else if c.pruned {
+            "  (pruned)"
+        } else {
+            ""
+        };
+        println!("  {:<24} {t}{mark}", c.variant);
+    }
+    println!(
+        "winner: {} ({}) — tuned in {:.2}s, {} evaluated / {} pruned",
+        result.best_variant,
+        rtcg::util::bench::fmt_time(result.best_seconds),
+        result.tuning_seconds,
+        result.evaluated(),
+        result.pruned()
+    );
+    let mut db = TuningDb::open_default()?;
+    db.record(&result);
+    db.save()?;
+    println!("recorded in tuning db ({} entries)", db.len());
+    Ok(())
+}
+
+fn cmd_table1() -> Result<()> {
+    println!("Table 1 (modeled on simulated devices — see DESIGN.md §Substitutions)");
+    println!(
+        "{:<8} {:<24} {:>10} {:>10} {:>8}  {}",
+        "GPU", "input/filter", "default", "tuned", "boost", "winner"
+    );
+    for dev in device::table1_devices() {
+        for cfg in conv::table1_configs() {
+            match conv::model_cell(&cfg, &dev) {
+                Ok(cell) => println!(
+                    "{:<8} {:<24} {:>9.1}G {:>9.1}G {:>7.1}%  {}",
+                    dev.name,
+                    cfg.label(),
+                    cell.default_gflops,
+                    cell.tuned_gflops,
+                    cell.boost_pct,
+                    cell.tuned_variant
+                ),
+                Err(e) => println!(
+                    "{:<8} {:<24} {e}",
+                    dev.name,
+                    cfg.label()
+                ),
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let n = args.get_usize("requests", 64)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let mut c = Coordinator::start(CoordinatorConfig {
+        artifacts_dir: artifacts_dir(args),
+        queue_depth: 64,
+        tuning_db: None,
+    })?;
+    println!("coordinator up; driving {n} synthetic requests…");
+    let mut rng = Rng::new(seed);
+    let nn = 524288;
+    let mut errors = 0;
+    for i in 0..n {
+        let resp = match i % 3 {
+            0 => c.submit(Request::Launch {
+                kernel: "axpy".into(),
+                workload: format!("axpy_{nn}"),
+                variant: None,
+                inputs: vec![
+                    HostArray::f32(vec![1], vec![rng.normal_f32()]),
+                    HostArray::f32(vec![nn], rng.uniform_vec(nn)),
+                    HostArray::f32(vec![1], vec![rng.normal_f32()]),
+                    HostArray::f32(vec![nn], rng.uniform_vec(nn)),
+                ],
+            }),
+            1 => c.submit(Request::Launch {
+                kernel: "spmv_ell".into(),
+                workload: "ell_poisson".into(),
+                variant: Some("rb256_rm".into()),
+                inputs: {
+                    let r = 4096;
+                    let k = 5;
+                    vec![
+                        HostArray::f32(vec![r, k], rng.uniform_vec(r * k)),
+                        HostArray::i32(
+                            vec![r, k],
+                            (0..r * k)
+                                .map(|_| rng.usize_below(r) as i32)
+                                .collect(),
+                        ),
+                        HostArray::f32(vec![r], rng.uniform_vec(r)),
+                    ]
+                },
+            }),
+            _ => c.submit(Request::RunSource {
+                hlo_text: format!(
+                    "HloModule sq_{i}\n\nENTRY main {{\n  p = f32[256] parameter(0)\n  ROOT r = f32[256] multiply(p, p)\n}}\n"
+                ),
+                inputs: vec![HostArray::f32(
+                    vec![256],
+                    rng.uniform_vec(256),
+                )],
+            }),
+        };
+        if let rtcg::coordinator::Response::Error(e) = resp {
+            errors += 1;
+            eprintln!("request {i}: {e}");
+        }
+    }
+    let m = c.metrics();
+    println!(
+        "done: {} requests ({} launches, {} source runs), {} errors",
+        m.requests, m.launches, m.source_runs, errors
+    );
+    println!(
+        "busy {:.1} ms, mean queue wait {:.3} ms",
+        m.busy_ms,
+        m.queue_wait_ms / m.requests.max(1) as f64
+    );
+    c.shutdown();
+    Ok(())
+}

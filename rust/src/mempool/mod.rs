@@ -1,0 +1,218 @@
+//! Memory pool (§6.3): "PyCUDA manages … all GPU memory resources,
+//! thanks to its efficient memory pool facility which avoids extraneous
+//! calls to cudaMalloc and cudaFree when repeatedly reallocating data of
+//! similar shapes."
+//!
+//! Substrate note (DESIGN.md §Substitutions): the `xla` crate's PJRT
+//! surface exposes no raw writable device allocations — device buffers
+//! are created full and immutable.  The pool therefore manages the
+//! *host staging* allocations that feed H2D transfers (the analog
+//! allocation churn on this substrate) with exactly PyCUDA's policy:
+//! power-of-two bins, freelists per bin, held-memory accounting, and
+//! explicit `free_held`.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Pool statistics (the paper's run-time services: observability).
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct PoolStats {
+    pub allocs: u64,
+    pub pool_hits: u64,
+    pub fresh_allocs: u64,
+    pub frees: u64,
+    pub bytes_held: usize,
+    pub bytes_active: usize,
+}
+
+struct Inner {
+    bins: BTreeMap<usize, Vec<Vec<u8>>>,
+    stats: PoolStats,
+}
+
+/// Power-of-two-binned byte pool.
+#[derive(Clone)]
+pub struct MemoryPool {
+    inner: Arc<Mutex<Inner>>,
+}
+
+/// A pooled allocation; returns its storage to the pool on drop.
+pub struct Block {
+    data: Option<Vec<u8>>,
+    len: usize,
+    pool: MemoryPool,
+}
+
+impl Default for MemoryPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MemoryPool {
+    pub fn new() -> MemoryPool {
+        MemoryPool {
+            inner: Arc::new(Mutex::new(Inner {
+                bins: BTreeMap::new(),
+                stats: PoolStats::default(),
+            })),
+        }
+    }
+
+    /// Bin size: next power of two (PyCUDA uses this exact policy to
+    /// bound internal fragmentation at 2× while maximizing reuse).
+    pub fn bin_for(size: usize) -> usize {
+        size.max(1).next_power_of_two()
+    }
+
+    /// Allocate at least `size` bytes, reusing a held block if any.
+    pub fn alloc(&self, size: usize) -> Block {
+        let bin = Self::bin_for(size);
+        let mut g = self.inner.lock().unwrap();
+        g.stats.allocs += 1;
+        g.stats.bytes_active += bin;
+        let data = match g.bins.get_mut(&bin).and_then(|v| v.pop()) {
+            Some(buf) => {
+                g.stats.pool_hits += 1;
+                g.stats.bytes_held -= bin;
+                buf
+            }
+            None => {
+                g.stats.fresh_allocs += 1;
+                vec![0u8; bin]
+            }
+        };
+        Block { data: Some(data), len: size, pool: self.clone() }
+    }
+
+    fn release(&self, data: Vec<u8>) {
+        let bin = data.len();
+        let mut g = self.inner.lock().unwrap();
+        g.stats.frees += 1;
+        g.stats.bytes_active = g.stats.bytes_active.saturating_sub(bin);
+        g.stats.bytes_held += bin;
+        g.bins.entry(bin).or_default().push(data);
+    }
+
+    /// Drop all held (free) blocks — PyCUDA's `free_held`, the paper's
+    /// escape hatch for "a program under tight memory constraints".
+    pub fn free_held(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.bins.clear();
+        g.stats.bytes_held = 0;
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.inner.lock().unwrap().stats.clone()
+    }
+}
+
+impl Block {
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Usable bytes (the requested size, not the bin size).
+    pub fn as_slice(&self) -> &[u8] {
+        &self.data.as_ref().unwrap()[..self.len]
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [u8] {
+        let len = self.len;
+        &mut self.data.as_mut().unwrap()[..len]
+    }
+
+    /// View as f32 (len must be 4-aligned).
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        assert_eq!(self.len % 4, 0);
+        let len = self.len / 4;
+        unsafe {
+            std::slice::from_raw_parts_mut(
+                self.data.as_mut().unwrap().as_mut_ptr() as *mut f32,
+                len,
+            )
+        }
+    }
+}
+
+impl Drop for Block {
+    fn drop(&mut self) {
+        if let Some(data) = self.data.take() {
+            self.pool.release(data);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bins_are_powers_of_two() {
+        assert_eq!(MemoryPool::bin_for(1), 1);
+        assert_eq!(MemoryPool::bin_for(3), 4);
+        assert_eq!(MemoryPool::bin_for(4096), 4096);
+        assert_eq!(MemoryPool::bin_for(4097), 8192);
+        assert_eq!(MemoryPool::bin_for(0), 1);
+    }
+
+    #[test]
+    fn reuse_after_free() {
+        let p = MemoryPool::new();
+        {
+            let _b = p.alloc(1000);
+        } // freed into bin 1024
+        let _c = p.alloc(900); // same bin → hit
+        let s = p.stats();
+        assert_eq!(s.allocs, 2);
+        assert_eq!(s.fresh_allocs, 1);
+        assert_eq!(s.pool_hits, 1);
+    }
+
+    #[test]
+    fn different_bins_no_reuse() {
+        let p = MemoryPool::new();
+        {
+            let _b = p.alloc(100);
+        }
+        let _c = p.alloc(10_000);
+        assert_eq!(p.stats().pool_hits, 0);
+    }
+
+    #[test]
+    fn accounting_tracks_held_and_active() {
+        let p = MemoryPool::new();
+        let b = p.alloc(1000); // bin 1024
+        assert_eq!(p.stats().bytes_active, 1024);
+        assert_eq!(p.stats().bytes_held, 0);
+        drop(b);
+        assert_eq!(p.stats().bytes_active, 0);
+        assert_eq!(p.stats().bytes_held, 1024);
+        p.free_held();
+        assert_eq!(p.stats().bytes_held, 0);
+    }
+
+    #[test]
+    fn block_is_usable_memory() {
+        let p = MemoryPool::new();
+        let mut b = p.alloc(16);
+        b.as_f32_mut().copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(b.as_f32_mut(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(b.as_slice().len(), 16);
+    }
+
+    #[test]
+    fn many_allocs_amortize() {
+        let p = MemoryPool::new();
+        for _ in 0..100 {
+            let _b = p.alloc(4096);
+        }
+        let s = p.stats();
+        assert_eq!(s.fresh_allocs, 1);
+        assert_eq!(s.pool_hits, 99);
+    }
+}

@@ -1,0 +1,225 @@
+//! The compiler cache (Fig 2): "the result of the compilation process is
+//! stored in a semi-permanent cache and reused if possible.  The cache
+//! is sensitive to changes in the hardware and software environment and
+//! initiates recompilation when necessary.  As a result, compilation of
+//! source code … becomes nearly instantaneous and invisible to the
+//! user."
+//!
+//! Two levels:
+//!
+//! * **memory** — digest(source)‖platform → compiled [`Executable`]
+//!   (process lifetime; the Fig 2 hot path, sub-µs),
+//! * **disk**   — digest → rendered source + environment metadata.
+//!   The `xla` crate (0.1.6 / xla_extension 0.5.1) exposes no executable
+//!   serialization, so unlike PyCUDA's cubin cache the disk level cannot
+//!   hold device binaries; it persists the *generation* product and the
+//!   identifying hw/sw information the paper's §5 prescribes for
+//!   application-level caches (see DESIGN.md §Substitutions).  Compile
+//!   economics (backend-compile ≫ cache-hit, bench `fig2_cache`) are
+//!   unaffected.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::runtime::{Client, Executable};
+use crate::util::error::Result;
+use crate::util::hash::digest_hex;
+use crate::util::json::Json;
+
+#[derive(Debug, Default)]
+pub struct CacheStats {
+    pub mem_hits: AtomicU64,
+    pub disk_hits: AtomicU64,
+    pub misses: AtomicU64,
+}
+
+impl CacheStats {
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        (
+            self.mem_hits.load(Ordering::Relaxed),
+            self.disk_hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Two-level compile cache bound to one PJRT client.
+pub struct CompileCache {
+    client: Client,
+    mem: Mutex<HashMap<String, Executable>>,
+    disk_dir: Option<PathBuf>,
+    pub stats: CacheStats,
+}
+
+impl CompileCache {
+    /// Disk level rooted at `$RTCG_CACHE_DIR` or `.rtcg-cache/`;
+    /// pass `disk=false` for a memory-only cache (tests, benches).
+    pub fn new(client: Client, disk: bool) -> CompileCache {
+        let disk_dir = if disk {
+            let root = std::env::var("RTCG_CACHE_DIR")
+                .unwrap_or_else(|_| ".rtcg-cache".to_string());
+            Some(PathBuf::from(root))
+        } else {
+            None
+        };
+        CompileCache {
+            client,
+            mem: Mutex::new(HashMap::new()),
+            disk_dir,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn client(&self) -> &Client {
+        &self.client
+    }
+
+    /// Cache key: source digest ‖ platform identity ‖ toolkit version.
+    /// Platform sensitivity is what lets one cache directory serve
+    /// several backends (§5).
+    pub fn key_for(&self, source: &str) -> String {
+        let env = format!(
+            "{}|{}|rtcg-{}",
+            digest_hex(source.as_bytes()),
+            self.client.platform_id(),
+            env!("CARGO_PKG_VERSION"),
+        );
+        digest_hex(env.as_bytes())
+    }
+
+    /// The Fig 2 workflow: memory hit → disk note → compile + store.
+    pub fn get_or_compile(&self, source: &str) -> Result<Executable> {
+        let key = self.key_for(source);
+        if let Some(exe) = self.mem.lock().unwrap().get(&key) {
+            self.stats.mem_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(exe.clone());
+        }
+        // Disk level: count a hit when the generation product was
+        // already persisted (a prior process compiled this source).
+        if self.disk_lookup(&key) {
+            self.stats.disk_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.stats.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        let exe = self.client.compile_hlo_text(source)?;
+        self.disk_store(&key, source);
+        self.mem.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled modules held in memory.
+    pub fn len(&self) -> usize {
+        self.mem.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all in-memory executables ("unused code variants can be
+    /// disposed of immediately", §4.2).
+    pub fn clear_memory(&self) {
+        self.mem.lock().unwrap().clear();
+    }
+
+    fn disk_path(&self, key: &str) -> Option<PathBuf> {
+        self.disk_dir.as_ref().map(|d| d.join(format!("{key}.json")))
+    }
+
+    fn disk_lookup(&self, key: &str) -> bool {
+        self.disk_path(key).map(|p| p.exists()).unwrap_or(false)
+    }
+
+    fn disk_store(&self, key: &str, source: &str) {
+        let Some(path) = self.disk_path(key) else { return };
+        if path.exists() {
+            return;
+        }
+        if let Some(dir) = path.parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        let doc = Json::obj(vec![
+            ("key", Json::str(key)),
+            ("platform", Json::str(self.client.platform_id())),
+            ("toolkit", Json::str(env!("CARGO_PKG_VERSION"))),
+            ("source_bytes", Json::num(source.len() as f64)),
+            ("source", Json::str(source)),
+        ]);
+        let _ = std::fs::write(path, doc.to_string_pretty());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ADD_HLO: &str = r#"
+HloModule add_two
+
+ENTRY main {
+  p = f32[4] parameter(0)
+  c = f32[] constant(2)
+  cb = f32[4] broadcast(c), dimensions={}
+  ROOT r = f32[4] add(p, cb)
+}
+"#;
+
+    fn cache() -> CompileCache {
+        CompileCache::new(Client::cpu().unwrap(), false)
+    }
+
+    #[test]
+    fn compile_and_hit() {
+        let c = cache();
+        let e1 = c.get_or_compile(ADD_HLO).unwrap();
+        let (h0, _, m0) = c.stats.snapshot();
+        assert_eq!((h0, m0), (0, 1));
+        let _e2 = c.get_or_compile(ADD_HLO).unwrap();
+        let (h1, _, m1) = c.stats.snapshot();
+        assert_eq!((h1, m1), (1, 1));
+        // and the executable actually runs
+        let x = crate::runtime::HostArray::f32(
+            vec![4],
+            vec![1.0, 2.0, 3.0, 4.0],
+        );
+        let out = e1.run(&[&x]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn distinct_sources_distinct_entries() {
+        let c = cache();
+        c.get_or_compile(ADD_HLO).unwrap();
+        c.get_or_compile(&ADD_HLO.replace("constant(2)", "constant(3)"))
+            .unwrap();
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn key_depends_on_source() {
+        let c = cache();
+        assert_ne!(c.key_for("a"), c.key_for("b"));
+        assert_eq!(c.key_for("a"), c.key_for("a"));
+    }
+
+    #[test]
+    fn clear_memory_forces_recompile() {
+        let c = cache();
+        c.get_or_compile(ADD_HLO).unwrap();
+        c.clear_memory();
+        assert!(c.is_empty());
+        c.get_or_compile(ADD_HLO).unwrap();
+        let (_, _, misses) = c.stats.snapshot();
+        assert_eq!(misses, 2);
+    }
+
+    #[test]
+    fn bad_hlo_is_a_loud_error() {
+        let c = cache();
+        assert!(c.get_or_compile("HloModule broken\nENTRY {").is_err());
+        // failed compiles must not poison the cache
+        assert!(c.is_empty());
+    }
+}

@@ -1,0 +1,157 @@
+//! Data types and the numpy-compatible promotion table (§5.2.1: "type
+//! promotion and arbitrary combinations of data types (e.g. adding
+//! 32-bit integers to 32-bit floating point values results in 64-bit
+//! floating point values to preserve precision)").
+
+use crate::util::error::{Error, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DType {
+    I32,
+    I64,
+    F32,
+    F64,
+}
+
+impl DType {
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::I32 => "i32",
+            DType::I64 => "i64",
+            DType::F32 => "f32",
+            DType::F64 => "f64",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<DType> {
+        match s {
+            "i32" => Ok(DType::I32),
+            "i64" => Ok(DType::I64),
+            "f32" => Ok(DType::F32),
+            "f64" => Ok(DType::F64),
+            _ => Err(Error::msg(format!("unknown dtype '{s}'"))),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::I32 | DType::F32 => 4,
+            DType::I64 | DType::F64 => 8,
+        }
+    }
+
+    pub fn is_float(self) -> bool {
+        matches!(self, DType::F32 | DType::F64)
+    }
+
+    pub fn to_element_type(self) -> xla::ElementType {
+        match self {
+            DType::I32 => xla::ElementType::S32,
+            DType::I64 => xla::ElementType::S64,
+            DType::F32 => xla::ElementType::F32,
+            DType::F64 => xla::ElementType::F64,
+        }
+    }
+
+    pub fn to_primitive_type(self) -> xla::PrimitiveType {
+        match self {
+            DType::I32 => xla::PrimitiveType::S32,
+            DType::I64 => xla::PrimitiveType::S64,
+            DType::F32 => xla::PrimitiveType::F32,
+            DType::F64 => xla::PrimitiveType::F64,
+        }
+    }
+
+    pub fn from_primitive_type(p: xla::PrimitiveType) -> Result<DType> {
+        match p {
+            xla::PrimitiveType::S32 => Ok(DType::I32),
+            xla::PrimitiveType::S64 => Ok(DType::I64),
+            xla::PrimitiveType::F32 => Ok(DType::F32),
+            xla::PrimitiveType::F64 => Ok(DType::F64),
+            p => Err(Error::msg(format!("unsupported primitive type {p:?}"))),
+        }
+    }
+
+    /// The HLO-text spelling of this type (e.g. `f32[4,4]` shapes).
+    pub fn hlo_name(self) -> &'static str {
+        match self {
+            DType::I32 => "s32",
+            DType::I64 => "s64",
+            DType::F32 => "f32",
+            DType::F64 => "f64",
+        }
+    }
+}
+
+/// numpy-compatible promotion: float beats int; within a class, wider
+/// beats narrower; int crossing into float widens to preserve precision
+/// (i32 + f32 → f64, the paper's own example).
+pub fn promote(a: DType, b: DType) -> DType {
+    use DType::*;
+    if a == b {
+        return a;
+    }
+    match (a.is_float(), b.is_float()) {
+        (true, true) => {
+            if a == F64 || b == F64 {
+                F64
+            } else {
+                F32
+            }
+        }
+        (false, false) => {
+            if a == I64 || b == I64 {
+                I64
+            } else {
+                I32
+            }
+        }
+        // mixed int/float: i32 fits exactly in f64 but not f32; i64
+        // cannot be represented exactly at all, numpy still says f64.
+        _ => F64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use DType::*;
+
+    #[test]
+    fn identity() {
+        for t in [I32, I64, F32, F64] {
+            assert_eq!(promote(t, t), t);
+        }
+    }
+
+    #[test]
+    fn commutative() {
+        for a in [I32, I64, F32, F64] {
+            for b in [I32, I64, F32, F64] {
+                assert_eq!(promote(a, b), promote(b, a));
+            }
+        }
+    }
+
+    #[test]
+    fn papers_example() {
+        // "adding 32-bit integers to 32-bit floating point values
+        //  results in 64-bit floating point values"
+        assert_eq!(promote(I32, F32), F64);
+    }
+
+    #[test]
+    fn widening() {
+        assert_eq!(promote(F32, F64), F64);
+        assert_eq!(promote(I32, I64), I64);
+        assert_eq!(promote(I64, F64), F64);
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for t in [I32, I64, F32, F64] {
+            assert_eq!(DType::from_name(t.name()).unwrap(), t);
+        }
+        assert!(DType::from_name("u8").is_err());
+    }
+}

@@ -1,0 +1,155 @@
+//! Strategy (c): syntax-tree building (§5.3, Fig 5b).
+//!
+//! Where PyCUDA pairs with the authors' CodePy package to assemble a C
+//! syntax tree, this toolkit builds the computation directly with the
+//! XLA client's `XlaBuilder` — the same "full representation of the
+//! target code in the host language" with host-language control flow
+//! (loops, functions) generating the program.  Helpers here cover the
+//! patterns the array layer and the Copperhead compiler need.
+
+use crate::rtcg::dtype::DType;
+use crate::util::error::{Error, Result};
+
+/// Typed parameter declaration helper.
+pub fn param(
+    b: &xla::XlaBuilder,
+    index: i64,
+    dtype: DType,
+    dims: &[usize],
+    name: &str,
+) -> Result<xla::XlaOp> {
+    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    let shape = xla::Shape::array_with_type(dtype.to_element_type(), dims);
+    b.parameter_s(index, &shape, name).map_err(Error::from)
+}
+
+/// Scalar constant of a given dtype.
+pub fn constant(b: &xla::XlaBuilder, dtype: DType, v: f64) -> Result<xla::XlaOp> {
+    let op = match dtype {
+        DType::F32 => b.c0(v as f32)?,
+        DType::F64 => b.c0(v)?,
+        DType::I32 => b.c0(v as i32)?,
+        DType::I64 => b.c0(v as i64)?,
+    };
+    Ok(op)
+}
+
+/// Broadcast a scalar op to an explicit shape.
+pub fn broadcast_scalar(op: &xla::XlaOp, dims: &[usize]) -> Result<xla::XlaOp> {
+    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    op.broadcast(&dims).map_err(Error::from)
+}
+
+/// A scalar→scalar→scalar computation for use as a `reduce` combiner.
+pub fn combiner(
+    name: &str,
+    dtype: DType,
+    f: impl Fn(&xla::XlaOp, &xla::XlaOp) -> Result<xla::XlaOp>,
+) -> Result<xla::XlaComputation> {
+    let b = xla::XlaBuilder::new(name);
+    let x = param(&b, 0, dtype, &[], "x")?;
+    let y = param(&b, 1, dtype, &[], "y")?;
+    let r = f(&x, &y)?;
+    r.build().map_err(Error::from)
+}
+
+/// The Fig 5b demonstration: generate an *unrolled* vector addition by
+/// assembling the syntax tree in host-language loops — semantically
+/// identical to the Fig 5a template output (`examples/rtcg_strategies`
+/// diffs the two).  `block_size` chunks of `thread_block_size` elements
+/// are emitted as separate slice/add/concat groups.
+pub fn unrolled_vector_add(
+    n: usize,
+    block_size: usize,
+    thread_block_size: usize,
+) -> Result<xla::XlaComputation> {
+    if block_size * thread_block_size == 0
+        || n % (block_size * thread_block_size) != 0
+    {
+        return Err(Error::msg(format!(
+            "unrolled add: {n} not divisible by {block_size}×{thread_block_size}"
+        )));
+    }
+    let b = xla::XlaBuilder::new("unrolled_add");
+    let op1 = param(&b, 0, DType::F32, &[n], "op1")?;
+    let op2 = param(&b, 1, DType::F32, &[n], "op2")?;
+    let stride = block_size * thread_block_size;
+    let mut pieces: Vec<xla::XlaOp> = Vec::new();
+    for blk in 0..(n / stride) {
+        for i in 0..block_size {
+            // {% set offset = i*thread_block_size %} — as host code
+            let offset = (blk * stride + i * thread_block_size) as i64;
+            let end = offset + thread_block_size as i64;
+            let a = op1.slice_in_dim(offset, end, 1, 0)?;
+            let c = op2.slice_in_dim(offset, end, 1, 0)?;
+            pieces.push(a.add_(&c)?);
+        }
+    }
+    let first = pieces[0].clone();
+    let root = if pieces.len() == 1 {
+        first
+    } else {
+        first.concat_in_dim(&pieces[1..], 0)?
+    };
+    root.build().map_err(Error::from)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Client, HostArray};
+
+    #[test]
+    fn unrolled_add_is_correct() {
+        let client = Client::cpu().unwrap();
+        let comp = unrolled_vector_add(16, 2, 4).unwrap();
+        let exe = client.compile_computation(&comp).unwrap();
+        let a = HostArray::f32(vec![16], (0..16).map(|i| i as f32).collect());
+        let b = HostArray::f32(vec![16], vec![10.0; 16]);
+        let out = exe.run(&[&a, &b]).unwrap();
+        let want: Vec<f32> = (0..16).map(|i| i as f32 + 10.0).collect();
+        assert_eq!(out[0].as_f32().unwrap(), want.as_slice());
+    }
+
+    #[test]
+    fn unrolled_add_rejects_bad_sizes() {
+        assert!(unrolled_vector_add(10, 3, 4).is_err());
+        assert!(unrolled_vector_add(8, 0, 4).is_err());
+    }
+
+    #[test]
+    fn combiner_builds_scalar_reducer() {
+        let client = Client::cpu().unwrap();
+        let add = combiner("add", DType::F32, |x, y| {
+            x.add_(y).map_err(Error::from)
+        })
+        .unwrap();
+        // reduce a vector with it
+        let b = xla::XlaBuilder::new("sum");
+        let p = param(&b, 0, DType::F32, &[8], "p").unwrap();
+        let init = constant(&b, DType::F32, 0.0).unwrap();
+        let r = p.reduce(init, add, &[0], false).unwrap();
+        let exe = client
+            .compile_computation(&r.build().unwrap())
+            .unwrap();
+        let x = HostArray::f32(vec![8], vec![1.0; 8]);
+        let out = exe.run(&[&x]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[8.0]);
+    }
+
+    #[test]
+    fn typed_params_and_constants() {
+        let b = xla::XlaBuilder::new("t");
+        let p = param(&b, 0, DType::I32, &[3], "p").unwrap();
+        let c = constant(&b, DType::I32, 5.0).unwrap();
+        let cb = broadcast_scalar(&c, &[3]).unwrap();
+        let comp = p.add_(&cb).unwrap().build().unwrap();
+        let client = Client::cpu().unwrap();
+        let exe = client.compile_computation(&comp).unwrap();
+        let x = HostArray::i32(vec![3], vec![1, 2, 3]);
+        assert_eq!(
+            exe.run(&[&x]).unwrap()[0].as_i32().unwrap(),
+            &[6, 7, 8]
+        );
+    }
+}

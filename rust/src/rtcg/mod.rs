@@ -1,0 +1,17 @@
+//! RTCG core — the paper's central contribution (§5): make *generated*
+//! code a cheap library service.  Three generation strategies (§5.3):
+//!
+//! * [`subst`]    — textual keyword substitution (strategy a),
+//! * [`template`] — a mini templating engine (strategy b, Fig 5a),
+//! * [`hlobuild`] — programmatic construction over `XlaBuilder`
+//!                  (strategy c, Fig 5b),
+//!
+//! all feeding [`module::SourceModule`], which compiles through the
+//! two-level [`cache`] (Fig 2) and hands back callables.
+
+pub mod cache;
+pub mod dtype;
+pub mod hlobuild;
+pub mod module;
+pub mod subst;
+pub mod template;

@@ -1,0 +1,178 @@
+//! `SourceModule` — the user-facing RTCG entry point (Fig 3): hand it
+//! source text (from any generation strategy, §5.3 — "either package
+//! makes no assumptions about the origins of the code it processes"),
+//! get back a callable, with caching and compilation invisible.
+
+use std::sync::Arc;
+
+use crate::rtcg::cache::CompileCache;
+use crate::rtcg::template::{Context, Template};
+use crate::runtime::{Client, DeviceBuffer, Executable, HostArray};
+use crate::util::error::Result;
+
+/// Shared toolkit environment: one PJRT client + one compile cache.
+/// The analog of `import pycuda.autoinit`.
+#[derive(Clone)]
+pub struct Toolkit {
+    cache: Arc<CompileCache>,
+}
+
+impl Toolkit {
+    /// CPU PJRT client with the on-disk cache level enabled.
+    pub fn init() -> Result<Toolkit> {
+        Ok(Toolkit {
+            cache: Arc::new(CompileCache::new(Client::cpu()?, true)),
+        })
+    }
+
+    /// Memory-only cache (tests/benches that must not touch disk).
+    pub fn init_ephemeral() -> Result<Toolkit> {
+        Ok(Toolkit {
+            cache: Arc::new(CompileCache::new(Client::cpu()?, false)),
+        })
+    }
+
+    pub fn client(&self) -> &Client {
+        self.cache.client()
+    }
+
+    pub fn cache(&self) -> &CompileCache {
+        &self.cache
+    }
+
+    /// Compile HLO text through the cache (Fig 2 workflow).
+    pub fn source_module(&self, hlo_text: &str) -> Result<SourceModule> {
+        Ok(SourceModule {
+            exe: self.cache.get_or_compile(hlo_text)?,
+        })
+    }
+
+    /// Strategy (b) one-stop: render a template, then compile.
+    pub fn source_module_from_template(
+        &self,
+        template_src: &str,
+        context: &Context,
+    ) -> Result<SourceModule> {
+        let rendered = Template::parse(template_src)?.render(context)?;
+        self.source_module(&rendered)
+    }
+
+    /// Strategy (c): compile an `XlaBuilder`-built computation.  These
+    /// bypass the text cache (the builder already is the in-memory
+    /// representation); callers that want caching render to HLO first.
+    pub fn source_module_from_computation(
+        &self,
+        comp: &xla::XlaComputation,
+    ) -> Result<SourceModule> {
+        Ok(SourceModule {
+            exe: self.client().compile_computation(comp)?,
+        })
+    }
+
+    /// Load an AOT artifact produced by `make artifacts`.
+    pub fn load_artifact(&self, path: &std::path::Path) -> Result<SourceModule> {
+        let text = std::fs::read_to_string(path)?;
+        self.source_module(&text)
+    }
+}
+
+/// A compiled module, callable like Fig 3's `mod.get_function(...)`.
+#[derive(Clone)]
+pub struct SourceModule {
+    exe: Executable,
+}
+
+impl SourceModule {
+    /// Host-array call (stages H2D/D2H around the launch).
+    pub fn call(&self, args: &[&HostArray]) -> Result<Vec<HostArray>> {
+        self.exe.run(args)
+    }
+
+    /// Device-resident call — the coordinator hot path.
+    pub fn call_buffers(
+        &self,
+        args: &[&DeviceBuffer],
+    ) -> Result<Vec<DeviceBuffer>> {
+        self.exe.run_buffers(args)
+    }
+
+    pub fn executable(&self) -> &Executable {
+        &self.exe
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rtcg::template::ctx;
+
+    /// The Fig 3 quickstart, end to end: a run-time *templated* HLO
+    /// kernel that multiplies an N-vector by K.
+    const MUL_TPL: &str = r#"
+HloModule multiply_by_{{ k }}
+
+ENTRY main {
+  p = f32[{{ n }}] parameter(0)
+  c = f32[] constant({{ k }})
+  cb = f32[{{ n }}] broadcast(c), dimensions={}
+  ROOT r = f32[{{ n }}] multiply(p, cb)
+}
+"#;
+
+    #[test]
+    fn fig3_multiply_by_two() {
+        let tk = Toolkit::init_ephemeral().unwrap();
+        let m = tk
+            .source_module_from_template(
+                MUL_TPL,
+                &ctx(vec![("n", 16.into()), ("k", 2.into())]),
+            )
+            .unwrap();
+        let a = HostArray::f32(vec![16], (0..16).map(|i| i as f32).collect());
+        let out = m.call(&[&a]).unwrap();
+        let want: Vec<f32> = (0..16).map(|i| (2 * i) as f32).collect();
+        assert_eq!(out[0].as_f32().unwrap(), want.as_slice());
+    }
+
+    #[test]
+    fn template_rerender_hits_cache() {
+        let tk = Toolkit::init_ephemeral().unwrap();
+        let c = ctx(vec![("n", 8.into()), ("k", 3.into())]);
+        tk.source_module_from_template(MUL_TPL, &c).unwrap();
+        tk.source_module_from_template(MUL_TPL, &c).unwrap();
+        let (hits, _, misses) = tk.cache().stats.snapshot();
+        assert_eq!((hits, misses), (1, 1));
+    }
+
+    #[test]
+    fn different_context_different_kernel() {
+        let tk = Toolkit::init_ephemeral().unwrap();
+        tk.source_module_from_template(
+            MUL_TPL,
+            &ctx(vec![("n", 8.into()), ("k", 3.into())]),
+        )
+        .unwrap();
+        tk.source_module_from_template(
+            MUL_TPL,
+            &ctx(vec![("n", 8.into()), ("k", 4.into())]),
+        )
+        .unwrap();
+        assert_eq!(tk.cache().len(), 2);
+    }
+
+    #[test]
+    fn builder_module_runs() {
+        let tk = Toolkit::init_ephemeral().unwrap();
+        let b = xla::XlaBuilder::new("sq");
+        let p = b
+            .parameter_s(0, &xla::Shape::array::<f32>(vec![4]), "p")
+            .unwrap();
+        let comp = p.mul_(&p).unwrap().build().unwrap();
+        let m = tk.source_module_from_computation(&comp).unwrap();
+        let a = HostArray::f32(vec![4], vec![1., 2., 3., 4.]);
+        assert_eq!(
+            m.call(&[&a]).unwrap()[0].as_f32().unwrap(),
+            &[1., 4., 9., 16.]
+        );
+    }
+}

@@ -1,0 +1,99 @@
+//! Strategy (a): simple textual keyword replacement (§5.3).
+//!
+//! "This simple technique performs the equivalent of search-and-replace
+//! on source code.  It suffices for a surprisingly large range of use
+//! cases, such as the substitution of types and constants into source
+//! code at run time."
+//!
+//! Keywords are spelled `{{name}}` in the source.  Unlike the templating
+//! engine, no expressions or control flow — by design.
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{Error, Result};
+
+/// Substitution map builder.
+#[derive(Debug, Default, Clone)]
+pub struct Subst {
+    map: BTreeMap<String, String>,
+}
+
+impl Subst {
+    pub fn new() -> Subst {
+        Subst::default()
+    }
+
+    pub fn set(mut self, key: &str, value: impl ToString) -> Subst {
+        self.map.insert(key.to_string(), value.to_string());
+        self
+    }
+
+    /// Replace every `{{key}}`; error on unknown or unreplaced keywords
+    /// (silent partial substitution is how generated code grows bugs).
+    pub fn apply(&self, source: &str) -> Result<String> {
+        let mut out = String::with_capacity(source.len());
+        let mut rest = source;
+        while let Some(start) = rest.find("{{") {
+            out.push_str(&rest[..start]);
+            let after = &rest[start + 2..];
+            let end = after.find("}}").ok_or_else(|| {
+                Error::msg("unterminated '{{' in source".to_string())
+            })?;
+            let key = after[..end].trim();
+            let val = self.map.get(key).ok_or_else(|| {
+                Error::msg(format!("no substitution for keyword '{key}'"))
+            })?;
+            out.push_str(val);
+            rest = &after[end + 2..];
+        }
+        out.push_str(rest);
+        Ok(out)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn substitutes_types_and_constants() {
+        let s = Subst::new().set("type", "f32").set("n", 16);
+        assert_eq!(
+            s.apply("p = {{type}}[{{n}}] parameter(0)").unwrap(),
+            "p = f32[16] parameter(0)"
+        );
+    }
+
+    #[test]
+    fn repeated_keyword() {
+        let s = Subst::new().set("x", 3);
+        assert_eq!(s.apply("{{x}}+{{x}}").unwrap(), "3+3");
+    }
+
+    #[test]
+    fn whitespace_in_braces() {
+        let s = Subst::new().set("k", "v");
+        assert_eq!(s.apply("{{ k }}").unwrap(), "v");
+    }
+
+    #[test]
+    fn unknown_keyword_errors() {
+        assert!(Subst::new().apply("{{nope}}").is_err());
+    }
+
+    #[test]
+    fn unterminated_errors() {
+        let s = Subst::new().set("a", 1);
+        assert!(s.apply("{{a").is_err());
+    }
+
+    #[test]
+    fn no_keywords_passthrough() {
+        let src = "ROOT r = f32[] add(a, b)";
+        assert_eq!(Subst::new().apply(src).unwrap(), src);
+    }
+}

@@ -1,0 +1,678 @@
+//! Strategy (b): textual templating (§5.3, Fig 5a).
+//!
+//! A deliberately small Jinja2-flavored engine — enough to express the
+//! paper's Fig 5a example (an unrolled vector add) and the HLO templates
+//! under `rust/templates/`:
+//!
+//! * `{{ expr }}`                      — interpolation
+//! * `{% for x in range(a, b) %}…{% endfor %}`
+//! * `{% if expr %}…{% else %}…{% endif %}`
+//! * `{% set name = expr %}`
+//!
+//! Expressions: integers, strings, variables, `+ - * / %`, comparisons
+//! (`== != < <= > >=`), and parentheses.  Everything is checked; errors
+//! carry the offending construct (generated-code debugging is hard
+//! enough without silent failures).
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{Error, Result};
+
+/// Template value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Str(String),
+    Bool(bool),
+}
+
+impl Value {
+    fn render(&self) -> String {
+        match self {
+            Value::Int(i) => i.to_string(),
+            Value::Str(s) => s.clone(),
+            Value::Bool(b) => b.to_string(),
+        }
+    }
+
+    fn truthy(&self) -> bool {
+        match self {
+            Value::Int(i) => *i != 0,
+            Value::Str(s) => !s.is_empty(),
+            Value::Bool(b) => *b,
+        }
+    }
+
+    fn as_int(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            v => Err(Error::msg(format!("expected integer, got {v:?}"))),
+        }
+    }
+}
+
+impl From<i64> for Value {
+    fn from(v: i64) -> Self {
+        Value::Int(v)
+    }
+}
+impl From<i32> for Value {
+    fn from(v: i32) -> Self {
+        Value::Int(v as i64)
+    }
+}
+impl From<usize> for Value {
+    fn from(v: usize) -> Self {
+        Value::Int(v as i64)
+    }
+}
+impl From<&str> for Value {
+    fn from(v: &str) -> Self {
+        Value::Str(v.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(v: String) -> Self {
+        Value::Str(v)
+    }
+}
+impl From<bool> for Value {
+    fn from(v: bool) -> Self {
+        Value::Bool(v)
+    }
+}
+
+pub type Context = BTreeMap<String, Value>;
+
+/// Build a context from pairs.
+pub fn ctx(pairs: Vec<(&str, Value)>) -> Context {
+    pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// AST
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+enum Node {
+    Text(String),
+    Interp(Expr),
+    For { var: String, from: Expr, to: Expr, body: Vec<Node> },
+    If { cond: Expr, then: Vec<Node>, els: Vec<Node> },
+    Set { var: String, expr: Expr },
+}
+
+#[derive(Debug, Clone)]
+enum Expr {
+    Int(i64),
+    Str(String),
+    Var(String),
+    Bin(Box<Expr>, BinOp, Box<Expr>),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+/// A parsed template, reusable across renders.
+#[derive(Debug, Clone)]
+pub struct Template {
+    nodes: Vec<Node>,
+}
+
+impl Template {
+    pub fn parse(src: &str) -> Result<Template> {
+        let toks = lex(src)?;
+        let mut pos = 0;
+        let nodes = parse_nodes(&toks, &mut pos, None)?;
+        if pos != toks.len() {
+            return Err(Error::msg("unexpected trailing block tag"));
+        }
+        Ok(Template { nodes })
+    }
+
+    pub fn render(&self, context: &Context) -> Result<String> {
+        let mut scope = context.clone();
+        let mut out = String::new();
+        render_nodes(&self.nodes, &mut scope, &mut out)?;
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lexer: split into Text / {{expr}} / {%tag%} tokens
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+enum Tok {
+    Text(String),
+    Interp(String),
+    Tag(String),
+}
+
+fn lex(src: &str) -> Result<Vec<Tok>> {
+    let mut out = Vec::new();
+    let mut rest = src;
+    loop {
+        let next_interp = rest.find("{{");
+        let next_tag = rest.find("{%");
+        let (idx, is_tag) = match (next_interp, next_tag) {
+            (None, None) => {
+                if !rest.is_empty() {
+                    out.push(Tok::Text(rest.to_string()));
+                }
+                return Ok(out);
+            }
+            (Some(i), None) => (i, false),
+            (None, Some(t)) => (t, true),
+            (Some(i), Some(t)) => {
+                if i < t {
+                    (i, false)
+                } else {
+                    (t, true)
+                }
+            }
+        };
+        if idx > 0 {
+            out.push(Tok::Text(rest[..idx].to_string()));
+        }
+        let after = &rest[idx + 2..];
+        let close = if is_tag { "%}" } else { "}}" };
+        let end = after.find(close).ok_or_else(|| {
+            Error::msg(format!("unterminated '{}'", if is_tag { "{%" } else { "{{" }))
+        })?;
+        let inner = after[..end].trim().to_string();
+        out.push(if is_tag { Tok::Tag(inner) } else { Tok::Interp(inner) });
+        rest = &after[end + 2..];
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parser
+// ---------------------------------------------------------------------------
+
+fn parse_nodes(
+    toks: &[Tok],
+    pos: &mut usize,
+    until: Option<&[&str]>,
+) -> Result<Vec<Node>> {
+    let mut nodes = Vec::new();
+    while *pos < toks.len() {
+        match &toks[*pos] {
+            Tok::Text(t) => {
+                nodes.push(Node::Text(t.clone()));
+                *pos += 1;
+            }
+            Tok::Interp(e) => {
+                nodes.push(Node::Interp(parse_expr_str(e)?));
+                *pos += 1;
+            }
+            Tok::Tag(tag) => {
+                let word = tag.split_whitespace().next().unwrap_or("");
+                if let Some(stops) = until {
+                    if stops.contains(&word) {
+                        return Ok(nodes); // caller consumes the tag
+                    }
+                }
+                *pos += 1;
+                match word {
+                    "for" => nodes.push(parse_for(tag, toks, pos)?),
+                    "if" => nodes.push(parse_if(tag, toks, pos)?),
+                    "set" => nodes.push(parse_set(tag)?),
+                    w => {
+                        return Err(Error::msg(format!(
+                            "unexpected tag '{w}'"
+                        )))
+                    }
+                }
+            }
+        }
+    }
+    if until.is_some() {
+        return Err(Error::msg("missing closing tag"));
+    }
+    Ok(nodes)
+}
+
+fn expect_tag(toks: &[Tok], pos: &mut usize, word: &str) -> Result<String> {
+    match toks.get(*pos) {
+        Some(Tok::Tag(t))
+            if t.split_whitespace().next() == Some(word) =>
+        {
+            let t = t.clone();
+            *pos += 1;
+            Ok(t)
+        }
+        other => Err(Error::msg(format!(
+            "expected '{{% {word} %}}', found {other:?}"
+        ))),
+    }
+}
+
+fn parse_for(tag: &str, toks: &[Tok], pos: &mut usize) -> Result<Node> {
+    // for <var> in range(<a>[, <b>])
+    let rest = tag.trim_start_matches("for").trim();
+    let (var, tail) = rest
+        .split_once(" in ")
+        .ok_or_else(|| Error::msg(format!("bad for tag '{tag}'")))?;
+    let tail = tail.trim();
+    let inner = tail
+        .strip_prefix("range(")
+        .and_then(|t| t.strip_suffix(')'))
+        .ok_or_else(|| {
+            Error::msg(format!("for supports 'range(a[, b])' only: '{tag}'"))
+        })?;
+    let (from, to) = match split_top_comma(inner) {
+        Some((a, b)) => (parse_expr_str(a)?, parse_expr_str(b)?),
+        None => (Expr::Int(0), parse_expr_str(inner)?),
+    };
+    let body = parse_nodes(toks, pos, Some(&["endfor"]))?;
+    expect_tag(toks, pos, "endfor")?;
+    Ok(Node::For { var: var.trim().to_string(), from, to, body })
+}
+
+fn parse_if(tag: &str, toks: &[Tok], pos: &mut usize) -> Result<Node> {
+    let cond = parse_expr_str(tag.trim_start_matches("if").trim())?;
+    let then = parse_nodes(toks, pos, Some(&["else", "endif"]))?;
+    let els = match toks.get(*pos) {
+        Some(Tok::Tag(t)) if t.trim() == "else" => {
+            *pos += 1;
+            let e = parse_nodes(toks, pos, Some(&["endif"]))?;
+            e
+        }
+        _ => Vec::new(),
+    };
+    expect_tag(toks, pos, "endif")?;
+    Ok(Node::If { cond, then, els })
+}
+
+fn parse_set(tag: &str) -> Result<Node> {
+    let rest = tag.trim_start_matches("set").trim();
+    let (var, expr) = rest
+        .split_once('=')
+        .ok_or_else(|| Error::msg(format!("bad set tag '{tag}'")))?;
+    let var = var.trim();
+    if var.is_empty()
+        || !var.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+        || var.starts_with(|c: char| c.is_ascii_digit())
+    {
+        return Err(Error::msg(format!("bad set variable in '{tag}'")));
+    }
+    Ok(Node::Set {
+        var: var.to_string(),
+        expr: parse_expr_str(expr.trim())?,
+    })
+}
+
+fn split_top_comma(s: &str) -> Option<(&str, &str)> {
+    let mut depth = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => depth -= 1,
+            ',' if depth == 0 => return Some((&s[..i], &s[i + 1..])),
+            _ => {}
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// Expression parsing (precedence climbing) and evaluation
+// ---------------------------------------------------------------------------
+
+fn parse_expr_str(s: &str) -> Result<Expr> {
+    let mut p = EParser { s: s.as_bytes(), i: 0 };
+    let e = p.comparison()?;
+    p.ws();
+    if p.i != p.s.len() {
+        return Err(Error::msg(format!("trailing junk in expr '{s}'")));
+    }
+    Ok(e)
+}
+
+struct EParser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl<'a> EParser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn comparison(&mut self) -> Result<Expr> {
+        let lhs = self.additive()?;
+        self.ws();
+        let ops: [(&str, BinOp); 6] = [
+            ("==", BinOp::Eq),
+            ("!=", BinOp::Ne),
+            ("<=", BinOp::Le),
+            (">=", BinOp::Ge),
+            ("<", BinOp::Lt),
+            (">", BinOp::Gt),
+        ];
+        for (pat, op) in ops {
+            if self.s[self.i..].starts_with(pat.as_bytes()) {
+                self.i += pat.len();
+                let rhs = self.additive()?;
+                return Ok(Expr::Bin(Box::new(lhs), op, Box::new(rhs)));
+            }
+        }
+        Ok(lhs)
+    }
+
+    fn additive(&mut self) -> Result<Expr> {
+        let mut e = self.multiplicative()?;
+        loop {
+            self.ws();
+            let op = match self.s.get(self.i) {
+                Some(b'+') => BinOp::Add,
+                Some(b'-') => BinOp::Sub,
+                _ => return Ok(e),
+            };
+            self.i += 1;
+            let rhs = self.multiplicative()?;
+            e = Expr::Bin(Box::new(e), op, Box::new(rhs));
+        }
+    }
+
+    fn multiplicative(&mut self) -> Result<Expr> {
+        let mut e = self.atom()?;
+        loop {
+            self.ws();
+            let op = match self.s.get(self.i) {
+                Some(b'*') => BinOp::Mul,
+                Some(b'/') => BinOp::Div,
+                Some(b'%') => BinOp::Mod,
+                _ => return Ok(e),
+            };
+            self.i += 1;
+            let rhs = self.atom()?;
+            e = Expr::Bin(Box::new(e), op, Box::new(rhs));
+        }
+    }
+
+    fn atom(&mut self) -> Result<Expr> {
+        self.ws();
+        match self.s.get(self.i) {
+            None => Err(Error::msg("unexpected end of expression")),
+            Some(b'(') => {
+                self.i += 1;
+                let e = self.comparison()?;
+                self.ws();
+                if self.s.get(self.i) != Some(&b')') {
+                    return Err(Error::msg("missing ')'"));
+                }
+                self.i += 1;
+                Ok(e)
+            }
+            Some(b'\'') | Some(b'"') => {
+                let quote = self.s[self.i];
+                self.i += 1;
+                let start = self.i;
+                while self.i < self.s.len() && self.s[self.i] != quote {
+                    self.i += 1;
+                }
+                if self.i == self.s.len() {
+                    return Err(Error::msg("unterminated string"));
+                }
+                let v = std::str::from_utf8(&self.s[start..self.i])
+                    .map_err(|_| Error::msg("bad utf8 in string"))?
+                    .to_string();
+                self.i += 1;
+                Ok(Expr::Str(v))
+            }
+            Some(c) if c.is_ascii_digit() => {
+                let start = self.i;
+                while self.i < self.s.len()
+                    && self.s[self.i].is_ascii_digit()
+                {
+                    self.i += 1;
+                }
+                let t = std::str::from_utf8(&self.s[start..self.i]).unwrap();
+                Ok(Expr::Int(t.parse().unwrap()))
+            }
+            Some(c) if c.is_ascii_alphabetic() || *c == b'_' => {
+                let start = self.i;
+                while self.i < self.s.len()
+                    && (self.s[self.i].is_ascii_alphanumeric()
+                        || self.s[self.i] == b'_')
+                {
+                    self.i += 1;
+                }
+                let name = std::str::from_utf8(&self.s[start..self.i])
+                    .unwrap()
+                    .to_string();
+                match name.as_str() {
+                    "true" => Ok(Expr::Int(1)),
+                    "false" => Ok(Expr::Int(0)),
+                    _ => Ok(Expr::Var(name)),
+                }
+            }
+            Some(c) => {
+                Err(Error::msg(format!("unexpected '{}'", *c as char)))
+            }
+        }
+    }
+}
+
+fn eval(e: &Expr, scope: &Context) -> Result<Value> {
+    match e {
+        Expr::Int(i) => Ok(Value::Int(*i)),
+        Expr::Str(s) => Ok(Value::Str(s.clone())),
+        Expr::Var(name) => scope.get(name).cloned().ok_or_else(|| {
+            Error::msg(format!("undefined template variable '{name}'"))
+        }),
+        Expr::Bin(l, op, r) => {
+            let lv = eval(l, scope)?;
+            let rv = eval(r, scope)?;
+            use BinOp::*;
+            // string concatenation via '+'
+            if *op == Add {
+                if let (Value::Str(a), b) = (&lv, &rv) {
+                    return Ok(Value::Str(format!("{a}{}", b.render())));
+                }
+                if let (a, Value::Str(b)) = (&lv, &rv) {
+                    return Ok(Value::Str(format!("{}{b}", a.render())));
+                }
+            }
+            if matches!(op, Eq | Ne) && !matches!((&lv, &rv),
+                (Value::Int(_), Value::Int(_))) {
+                let eq = lv == rv;
+                return Ok(Value::Bool(if *op == Eq { eq } else { !eq }));
+            }
+            let a = lv.as_int()?;
+            let b = rv.as_int()?;
+            Ok(match op {
+                Add => Value::Int(a + b),
+                Sub => Value::Int(a - b),
+                Mul => Value::Int(a * b),
+                Div => {
+                    if b == 0 {
+                        return Err(Error::msg("template division by zero"));
+                    }
+                    Value::Int(a / b)
+                }
+                Mod => {
+                    if b == 0 {
+                        return Err(Error::msg("template modulo by zero"));
+                    }
+                    Value::Int(a % b)
+                }
+                Eq => Value::Bool(a == b),
+                Ne => Value::Bool(a != b),
+                Lt => Value::Bool(a < b),
+                Le => Value::Bool(a <= b),
+                Gt => Value::Bool(a > b),
+                Ge => Value::Bool(a >= b),
+            })
+        }
+    }
+}
+
+fn render_nodes(
+    nodes: &[Node],
+    scope: &mut Context,
+    out: &mut String,
+) -> Result<()> {
+    for n in nodes {
+        match n {
+            Node::Text(t) => out.push_str(t),
+            Node::Interp(e) => out.push_str(&eval(e, scope)?.render()),
+            Node::Set { var, expr } => {
+                let v = eval(expr, scope)?;
+                scope.insert(var.clone(), v);
+            }
+            Node::If { cond, then, els } => {
+                if eval(cond, scope)?.truthy() {
+                    render_nodes(then, scope, out)?;
+                } else {
+                    render_nodes(els, scope, out)?;
+                }
+            }
+            Node::For { var, from, to, body } => {
+                let a = eval(from, scope)?.as_int()?;
+                let b = eval(to, scope)?.as_int()?;
+                let saved = scope.get(var).cloned();
+                for i in a..b {
+                    scope.insert(var.clone(), Value::Int(i));
+                    render_nodes(body, scope, out)?;
+                }
+                match saved {
+                    Some(v) => {
+                        scope.insert(var.clone(), v);
+                    }
+                    None => {
+                        scope.remove(var);
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// One-shot convenience: parse + render.
+pub fn render(src: &str, context: &Context) -> Result<String> {
+    Template::parse(src)?.render(context)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interpolation_and_arith() {
+        let c = ctx(vec![("n", 4.into()), ("ty", "f32".into())]);
+        assert_eq!(
+            render("{{ ty }}[{{ n * 2 + 1 }}]", &c).unwrap(),
+            "f32[9]"
+        );
+    }
+
+    #[test]
+    fn for_loop_unrolls() {
+        let c = ctx(vec![("k", 3.into())]);
+        let s = render(
+            "{% for i in range(k) %}x[{{ i }}]; {% endfor %}",
+            &c,
+        )
+        .unwrap();
+        assert_eq!(s, "x[0]; x[1]; x[2]; ");
+    }
+
+    #[test]
+    fn for_with_bounds_and_nested_expr() {
+        let c = ctx(vec![("b", 2.into()), ("w", 8.into())]);
+        let s = render(
+            "{% for i in range(1, b + 1) %}{{ i * w }},{% endfor %}",
+            &c,
+        )
+        .unwrap();
+        assert_eq!(s, "8,16,");
+    }
+
+    #[test]
+    fn if_else() {
+        let c = ctx(vec![("unroll", true.into())]);
+        assert_eq!(
+            render("{% if unroll %}U{% else %}R{% endif %}", &c).unwrap(),
+            "U"
+        );
+        let c = ctx(vec![("unroll", false.into())]);
+        assert_eq!(
+            render("{% if unroll %}U{% else %}R{% endif %}", &c).unwrap(),
+            "R"
+        );
+    }
+
+    #[test]
+    fn set_statement_fig5a() {
+        // mirrors Fig 5a: {% set offset = i*thread_block_size %}
+        let c = ctx(vec![("tbs", 16.into())]);
+        let s = render(
+            "{% for i in range(2) %}{% set offset = i * tbs %}o={{ offset }};{% endfor %}",
+            &c,
+        )
+        .unwrap();
+        assert_eq!(s, "o=0;o=16;");
+    }
+
+    #[test]
+    fn nested_loops() {
+        let s = render(
+            "{% for i in range(2) %}{% for j in range(2) %}{{ i }}{{ j }} {% endfor %}{% endfor %}",
+            &Context::new(),
+        )
+        .unwrap();
+        assert_eq!(s, "00 01 10 11 ");
+    }
+
+    #[test]
+    fn loop_var_scoping_restored() {
+        let c = ctx(vec![("i", 99.into())]);
+        let s =
+            render("{% for i in range(1) %}{{ i }}{% endfor %}{{ i }}", &c)
+                .unwrap();
+        assert_eq!(s, "099");
+    }
+
+    #[test]
+    fn string_comparison() {
+        let c = ctx(vec![("ty", "f32".into())]);
+        assert_eq!(
+            render("{% if ty == 'f32' %}float{% endif %}", &c).unwrap(),
+            "float"
+        );
+    }
+
+    #[test]
+    fn errors_are_loud() {
+        assert!(render("{{ undefined }}", &Context::new()).is_err());
+        assert!(render("{% for i in x %}{% endfor %}", &Context::new())
+            .is_err());
+        assert!(render("{% if 1 %}no end", &Context::new()).is_err());
+        assert!(render("{{ 1 / 0 }}", &Context::new()).is_err());
+    }
+
+    #[test]
+    fn comparison_ops() {
+        let c = ctx(vec![("n", 5.into())]);
+        assert_eq!(render("{% if n >= 5 %}y{% endif %}", &c).unwrap(), "y");
+        assert_eq!(render("{% if n < 5 %}y{% else %}n{% endif %}", &c).unwrap(), "n");
+    }
+}

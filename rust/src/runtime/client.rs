@@ -1,0 +1,255 @@
+//! PJRT client wrapper — the "thin object-oriented shell" of §5: the
+//! *entirety* of the run-time system reachable from the coordinator,
+//! with automatic error propagation and resource management.
+//!
+//! `client.compile()` here plays the role nvcc plays in PyCUDA: an
+//! opaque, comparatively slow, run-time-invocable compiler whose output
+//! the rtcg cache amortizes (Fig 2).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::runtime::host::HostArray;
+use crate::util::error::{Error, Result};
+
+/// Counters mirroring PyCUDA's run-time services (§5: timing, code
+/// property access): compiles performed and time spent in the backend
+/// compiler — the quantities the Fig 2 cache exists to reduce.
+#[derive(Debug, Default)]
+pub struct ClientStats {
+    pub compiles: AtomicU64,
+    pub compile_ns: AtomicU64,
+    pub executions: AtomicU64,
+    pub execute_ns: AtomicU64,
+    pub h2d_transfers: AtomicU64,
+}
+
+/// Shared handle to a PJRT backend.
+#[derive(Clone)]
+pub struct Client {
+    inner: Arc<xla::PjRtClient>,
+    stats: Arc<ClientStats>,
+}
+
+impl Client {
+    pub fn cpu() -> Result<Client> {
+        Ok(Client {
+            inner: Arc::new(xla::PjRtClient::cpu()?),
+            stats: Arc::new(ClientStats::default()),
+        })
+    }
+
+    /// Identity string folded into compile-cache keys — the cache "is
+    /// sensitive to changes in the hardware and software environment and
+    /// initiates recompilation when necessary" (§5).
+    pub fn platform_id(&self) -> String {
+        format!(
+            "{}-{}-d{}",
+            self.inner.platform_name(),
+            self.inner.platform_version(),
+            self.inner.device_count(),
+        )
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.inner.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.inner.device_count()
+    }
+
+    pub fn stats(&self) -> &ClientStats {
+        &self.stats
+    }
+
+    /// Compile HLO text already in memory (run-time generated code).
+    pub fn compile_hlo_text(&self, text: &str) -> Result<Executable> {
+        let proto =
+            xla::HloModuleProto::parse_and_return_unverified_module(
+                text.as_bytes(),
+            )?;
+        self.compile_proto(&proto)
+    }
+
+    /// Compile an HLO text file (AOT artifact from `make artifacts`).
+    pub fn compile_hlo_file(&self, path: &std::path::Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        self.compile_proto(&proto)
+    }
+
+    /// Compile an `XlaBuilder`-built computation (syntax-tree RTCG).
+    pub fn compile_computation(
+        &self,
+        comp: &xla::XlaComputation,
+    ) -> Result<Executable> {
+        let t = Instant::now();
+        let exe = self.inner.compile(comp)?;
+        self.note_compile(t);
+        Ok(Executable { exe: Arc::new(exe), client: self.clone() })
+    }
+
+    fn compile_proto(&self, proto: &xla::HloModuleProto) -> Result<Executable> {
+        let comp = xla::XlaComputation::from_proto(proto);
+        self.compile_computation(&comp)
+    }
+
+    fn note_compile(&self, started: Instant) {
+        self.stats.compiles.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .compile_ns
+            .fetch_add(started.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Stage a host array onto the device (H2D).
+    ///
+    /// Uses the typed `buffer_from_host_buffer` entry point: the raw-
+    /// bytes variant in xla 0.1.6 passes an `ElementType` discriminant
+    /// where PJRT expects a `PrimitiveType` (F32 → F16), corrupting the
+    /// buffer element type.
+    pub fn to_device(&self, a: &HostArray) -> Result<DeviceBuffer> {
+        use crate::runtime::host::HostData;
+        self.stats.h2d_transfers.fetch_add(1, Ordering::Relaxed);
+        let buf = match &a.data {
+            HostData::F32(v) => {
+                self.inner.buffer_from_host_buffer(v, &a.shape, None)?
+            }
+            HostData::F64(v) => {
+                self.inner.buffer_from_host_buffer(v, &a.shape, None)?
+            }
+            HostData::I32(v) => {
+                self.inner.buffer_from_host_buffer(v, &a.shape, None)?
+            }
+            HostData::I64(v) => {
+                self.inner.buffer_from_host_buffer(v, &a.shape, None)?
+            }
+        };
+        Ok(DeviceBuffer {
+            buf: Arc::new(buf),
+            shape: a.shape.clone(),
+            dtype: a.dtype(),
+        })
+    }
+}
+
+/// A device-resident buffer with host-known shape/dtype metadata.
+#[derive(Clone)]
+pub struct DeviceBuffer {
+    pub(crate) buf: Arc<xla::PjRtBuffer>,
+    pub shape: Vec<usize>,
+    pub dtype: crate::rtcg::dtype::DType,
+}
+
+impl DeviceBuffer {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.len() * self.dtype.size_bytes()
+    }
+
+    /// Fetch to host (D2H).
+    pub fn to_host(&self) -> Result<HostArray> {
+        let lit = self.buf.to_literal_sync()?;
+        HostArray::from_literal(&lit)
+    }
+}
+
+/// A compiled executable — the analog of a loaded cubin (`SourceModule`
+/// hands these out as callables).
+#[derive(Clone)]
+pub struct Executable {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    client: Client,
+}
+
+impl Executable {
+    /// Execute with host arrays in and out (stages H2D per call).
+    pub fn run(&self, args: &[&HostArray]) -> Result<Vec<HostArray>> {
+        let lits: Vec<xla::Literal> =
+            args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        let t = Instant::now();
+        let outs = self.exe.execute::<xla::Literal>(&lits)?;
+        let result = self.collect_outputs(outs);
+        self.note_execute(t);
+        result
+    }
+
+    /// Execute device-to-device: inputs stay resident, outputs stay
+    /// resident.  This is the coordinator's hot path (no host copies).
+    pub fn run_buffers(&self, args: &[&DeviceBuffer]) -> Result<Vec<DeviceBuffer>> {
+        let bufs: Vec<&xla::PjRtBuffer> =
+            args.iter().map(|b| b.buf.as_ref()).collect();
+        let t = Instant::now();
+        let outs = self.exe.execute_b::<&xla::PjRtBuffer>(&bufs)?;
+        self.note_execute(t);
+        let mut result = Vec::new();
+        for replica in outs {
+            for buf in replica {
+                let shape = buf.on_device_shape()?;
+                match shape {
+                    xla::Shape::Array(a) => {
+                        let dims: Vec<usize> =
+                            a.dims().iter().map(|&d| d as usize).collect();
+                        result.push(DeviceBuffer {
+                            buf: Arc::new(buf),
+                            shape: dims,
+                            dtype:
+                                crate::rtcg::dtype::DType::from_primitive_type(
+                                    a.primitive_type(),
+                                )?,
+                        });
+                    }
+                    // Tuple-rooted executables come back as one buffer;
+                    // fetch + decompose through the literal path.
+                    _ => {
+                        let lit = buf.to_literal_sync()?;
+                        let mut l = lit;
+                        for part in l.decompose_tuple()? {
+                            let host = HostArray::from_literal(&part)?;
+                            result.push(self.client.to_device(&host)?);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(result)
+    }
+
+    fn collect_outputs(
+        &self,
+        outs: Vec<Vec<xla::PjRtBuffer>>,
+    ) -> Result<Vec<HostArray>> {
+        let mut result = Vec::new();
+        for replica in outs {
+            for buf in replica {
+                let mut lit = buf.to_literal_sync()?;
+                let shape = lit.shape()?;
+                if shape.is_tuple() {
+                    for part in lit.decompose_tuple()? {
+                        result.push(HostArray::from_literal(&part)?);
+                    }
+                } else {
+                    result.push(HostArray::from_literal(&lit)?);
+                }
+            }
+        }
+        if result.is_empty() {
+            return Err(Error::msg("executable produced no outputs"));
+        }
+        Ok(result)
+    }
+
+    fn note_execute(&self, started: Instant) {
+        let s = self.client.stats();
+        s.executions.fetch_add(1, Ordering::Relaxed);
+        s.execute_ns
+            .fetch_add(started.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+}

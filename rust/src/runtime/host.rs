@@ -1,0 +1,234 @@
+//! Host-side n-dimensional arrays — the numpy-integration edge of the
+//! toolkit (§5.2.1).  `HostArray` is the dtype-erased tensor the
+//! coordinator moves across the PJRT boundary.
+
+use crate::rtcg::dtype::DType;
+use crate::util::error::{Error, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostData {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+}
+
+impl HostData {
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostData::F32(_) => DType::F32,
+            HostData::F64(_) => DType::F64,
+            HostData::I32(_) => DType::I32,
+            HostData::I64(_) => DType::I64,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostData::F32(v) => v.len(),
+            HostData::F64(v) => v.len(),
+            HostData::I32(v) => v.len(),
+            HostData::I64(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        unsafe {
+            match self {
+                HostData::F32(v) => std::slice::from_raw_parts(
+                    v.as_ptr() as *const u8,
+                    v.len() * 4,
+                ),
+                HostData::F64(v) => std::slice::from_raw_parts(
+                    v.as_ptr() as *const u8,
+                    v.len() * 8,
+                ),
+                HostData::I32(v) => std::slice::from_raw_parts(
+                    v.as_ptr() as *const u8,
+                    v.len() * 4,
+                ),
+                HostData::I64(v) => std::slice::from_raw_parts(
+                    v.as_ptr() as *const u8,
+                    v.len() * 8,
+                ),
+            }
+        }
+    }
+}
+
+/// Dense row-major host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostArray {
+    pub shape: Vec<usize>,
+    pub data: HostData,
+}
+
+impl HostArray {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> HostArray {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostArray { shape, data: HostData::F32(data) }
+    }
+
+    pub fn f64(shape: Vec<usize>, data: Vec<f64>) -> HostArray {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostArray { shape, data: HostData::F64(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> HostArray {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostArray { shape, data: HostData::I32(data) }
+    }
+
+    pub fn i64(shape: Vec<usize>, data: Vec<i64>) -> HostArray {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostArray { shape, data: HostData::I64(data) }
+    }
+
+    pub fn scalar_f32(v: f32) -> HostArray {
+        HostArray::f32(vec![], vec![v])
+    }
+
+    pub fn zeros(dtype: DType, shape: Vec<usize>) -> HostArray {
+        let n: usize = shape.iter().product();
+        let data = match dtype {
+            DType::F32 => HostData::F32(vec![0.0; n]),
+            DType::F64 => HostData::F64(vec![0.0; n]),
+            DType::I32 => HostData::I32(vec![0; n]),
+            DType::I64 => HostData::I64(vec![0; n]),
+        };
+        HostArray { shape, data }
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.data.dtype()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.len() * self.dtype().size_bytes()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            HostData::F32(v) => Ok(v),
+            d => Err(Error::msg(format!(
+                "expected f32 array, got {}", d.dtype().name()
+            ))),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            HostData::I32(v) => Ok(v),
+            d => Err(Error::msg(format!(
+                "expected i32 array, got {}", d.dtype().name()
+            ))),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<&[f64]> {
+        match &self.data {
+            HostData::F64(v) => Ok(v),
+            d => Err(Error::msg(format!(
+                "expected f64 array, got {}", d.dtype().name()
+            ))),
+        }
+    }
+
+    /// First element as f64 regardless of dtype (scalar reads).
+    pub fn first_as_f64(&self) -> Result<f64> {
+        if self.is_empty() {
+            return Err(Error::msg("empty array"));
+        }
+        Ok(match &self.data {
+            HostData::F32(v) => v[0] as f64,
+            HostData::F64(v) => v[0],
+            HostData::I32(v) => v[0] as f64,
+            HostData::I64(v) => v[0] as f64,
+        })
+    }
+
+    /// Convert to an XLA literal (H2D staging format).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        xla::Literal::create_from_shape_and_untyped_data(
+            self.dtype().to_element_type(),
+            &self.shape,
+            self.data.as_bytes(),
+        )
+        .map_err(Error::from)
+    }
+
+    /// Read an XLA literal back into a host tensor (D2H).
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostArray> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> =
+            shape.dims().iter().map(|&d| d as usize).collect();
+        let dtype = DType::from_primitive_type(shape.primitive_type())?;
+        let data = match dtype {
+            DType::F32 => HostData::F32(lit.to_vec::<f32>()?),
+            DType::F64 => HostData::F64(lit.to_vec::<f64>()?),
+            DType::I32 => HostData::I32(lit.to_vec::<i32>()?),
+            DType::I64 => HostData::I64(lit.to_vec::<i64>()?),
+        };
+        Ok(HostArray { shape: dims, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let a = HostArray::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = a.to_literal().unwrap();
+        let b = HostArray::from_literal(&lit).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let a = HostArray::i32(vec![4], vec![9, -2, 0, 7]);
+        let b = HostArray::from_literal(&a.to_literal().unwrap()).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn literal_roundtrip_scalar() {
+        let a = HostArray::scalar_f32(3.25);
+        let b = HostArray::from_literal(&a.to_literal().unwrap()).unwrap();
+        assert_eq!(b.shape, Vec::<usize>::new());
+        assert_eq!(b.as_f32().unwrap(), &[3.25]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        HostArray::f32(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn dtype_mismatch_reads_fail() {
+        let a = HostArray::i32(vec![1], vec![1]);
+        assert!(a.as_f32().is_err());
+    }
+
+    #[test]
+    fn zeros_and_size() {
+        let z = HostArray::zeros(DType::F64, vec![3, 2]);
+        assert_eq!(z.len(), 6);
+        assert_eq!(z.size_bytes(), 48);
+        assert_eq!(z.as_f64().unwrap(), &[0.0; 6]);
+    }
+}

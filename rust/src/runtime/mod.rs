@@ -1,0 +1,10 @@
+//! Runtime layer: wraps the `xla` crate's PJRT CPU client so the
+//! coordinator can load AOT artifacts (`artifacts/*.hlo.txt`), compile
+//! run-time-generated HLO, and execute — Python never appears on this
+//! path (DESIGN.md §2).
+
+pub mod client;
+pub mod host;
+
+pub use client::{Client, DeviceBuffer, Executable};
+pub use host::{HostArray, HostData};

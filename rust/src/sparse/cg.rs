@@ -1,0 +1,249 @@
+//! Conjugate-gradient solver (§5.2.1): "based on this feature, in turn,
+//! we were able to include a fast conjugate-gradient-based linear system
+//! solver, which uses the GPU to solve large systems about ten times
+//! faster than competing CPU implementations."
+//!
+//! Three implementations for the benches:
+//! * [`solve_fused`]   — drives the AOT-fused `cg_step` artifact (the
+//!                       "hand-written" device solver, one launch/iter);
+//! * [`solve_gpuarray`]— composes `GpuArray` ops (unfused abstraction
+//!                       cost, the §5.2 temporaries discussion);
+//! * [`solve_scalar`]  — the single-threaded CPU comparator.
+
+use crate::array::{ArrayContext, GpuArray};
+use crate::kernels::Registry;
+use crate::runtime::HostArray;
+use crate::sparse::formats::Csr;
+use crate::util::error::{Error, Result};
+
+/// Result of a CG solve.
+#[derive(Debug, Clone)]
+pub struct CgOutcome {
+    pub x: Vec<f32>,
+    pub iterations: usize,
+    pub residual2: f64,
+}
+
+/// Scalar single-threaded CG (the paper's "competing CPU" role).
+pub fn solve_scalar(
+    a: &Csr,
+    b: &[f32],
+    tol2: f64,
+    max_iter: usize,
+) -> CgOutcome {
+    let n = a.rows;
+    let mut x = vec![0.0f32; n];
+    let mut r = b.to_vec();
+    let mut p = r.clone();
+    let mut rz: f64 = r.iter().map(|v| (*v as f64) * (*v as f64)).sum();
+    let mut it = 0;
+    while it < max_iter && rz > tol2 {
+        let ap = a.matvec_ref(&p);
+        let pap: f64 =
+            p.iter().zip(&ap).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        let alpha = (rz / pap) as f32;
+        for i in 0..n {
+            x[i] += alpha * p[i];
+            r[i] -= alpha * ap[i];
+        }
+        let rz2: f64 = r.iter().map(|v| (*v as f64) * (*v as f64)).sum();
+        let beta = (rz2 / rz) as f32;
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+        }
+        rz = rz2;
+        it += 1;
+    }
+    CgOutcome { x, iterations: it, residual2: rz }
+}
+
+/// CG over `GpuArray` ops: every vector op is a generated (cached)
+/// kernel; device-resident between ops, scalars fetched per iteration.
+pub fn solve_gpuarray(
+    ctx: &ArrayContext,
+    a: &Csr,
+    b: &[f32],
+    tol2: f64,
+    max_iter: usize,
+) -> Result<CgOutcome> {
+    let n = a.rows;
+    // SpMV via the hand ELL graph (fused gather+reduce), device-resident
+    let ell = a.to_ell_cm();
+    let spmv =
+        crate::sparse::spmv::ell(a.rows, a.k, a.cols_n).and_then(|c| {
+            ctx.toolkit().source_module_from_computation(&c)
+        })?;
+    let vals = ctx.to_gpu(&HostArray::f32(
+        vec![ell.vals_cm.len()],
+        ell.vals_cm.clone(),
+    ))?;
+    let cols = ctx.to_gpu(&HostArray::i32(
+        vec![ell.cols_cm.len()],
+        ell.cols_cm.clone(),
+    ))?;
+
+    let mut x = ctx.zeros(crate::rtcg::dtype::DType::F32, &[n])?;
+    let mut r = ctx.to_gpu(&HostArray::f32(vec![n], b.to_vec()))?;
+    let mut p = r.clone();
+    // scalars stay device-resident (rank-0 arrays) — the host only sees
+    // rz at convergence-check granularity (§Perf: sync amortization)
+    let mut rz = r.norm2()?;
+    let mut rz_host = rz.item()?;
+    let check_every = 8usize;
+    let mut it = 0;
+    while it < max_iter && rz_host > tol2 {
+        let ap_buf = spmv.call_buffers(&[
+            vals.buffer(),
+            cols.buffer(),
+            p.buffer(),
+        ])?;
+        let ap =
+            GpuArray::from_buffer(ctx, ap_buf.into_iter().next().unwrap());
+        let alpha = rz.div(&p.dot(&ap)?)?;
+        x = x.add(&p.mul(&alpha)?)?;
+        r = r.sub(&ap.mul(&alpha)?)?;
+        let rz2 = r.norm2()?;
+        p = r.add(&p.mul(&rz2.div(&rz)?)?)?;
+        rz = rz2;
+        it += 1;
+        if it % check_every == 0 || it == max_iter {
+            rz_host = rz.item()?;
+        }
+    }
+    Ok(CgOutcome {
+        x: x.get()?.as_f32()?.to_vec(),
+        iterations: it,
+        residual2: rz.item()?,
+    })
+}
+
+/// CG driving the AOT-fused `cg_step` artifact: the whole iteration is
+/// one compiled launch (state stays on device; Rust only checks the
+/// returned residual).  Requires the `cg_step` artifact for this matrix
+/// shape (`poisson4096` ships by default).
+pub fn solve_fused(
+    registry: &Registry,
+    a: &Csr,
+    b: &[f32],
+    tol2: f64,
+    max_iter: usize,
+) -> Result<CgOutcome> {
+    let workload = format!("poisson{}", a.rows);
+    let entry = registry
+        .manifest()
+        .entry("cg_step", &workload, "fused")
+        .map_err(|_| {
+            Error::msg(format!(
+                "no cg_step artifact for {} rows (K={})",
+                a.rows, a.k
+            ))
+        })?;
+    if entry.inputs[0].shape != vec![a.rows, a.k] {
+        return Err(Error::msg("cg_step artifact shape mismatch"));
+    }
+    let step = registry.load(entry)?;
+    let client = registry.toolkit().client();
+
+    let ell = HostArray::f32(vec![a.rows, a.k], a.vals.clone());
+    let idx = HostArray::i32(vec![a.rows, a.k], a.cols.clone());
+    let ell_d = client.to_device(&ell)?;
+    let idx_d = client.to_device(&idx)?;
+    let mut x = client.to_device(&HostArray::f32(
+        vec![a.rows],
+        vec![0.0; a.rows],
+    ))?;
+    let mut r = client.to_device(&HostArray::f32(vec![a.rows], b.to_vec()))?;
+    let mut p = r.clone();
+    let rz0: f64 =
+        b.iter().map(|v| (*v as f64) * (*v as f64)).sum();
+    let mut rz_host = rz0;
+    let mut rz = client.to_device(&HostArray::f32(vec![], vec![rz0 as f32]))?;
+    let mut it = 0;
+    // the residual is fetched at check granularity, not every launch —
+    // host/device sync amortization (§Perf)
+    let check_every = 8usize;
+    while it < max_iter && rz_host > tol2 {
+        let outs =
+            step.call_buffers(&[&ell_d, &idx_d, &x, &r, &p, &rz])?;
+        let mut outs = outs.into_iter();
+        x = outs.next().unwrap();
+        r = outs.next().unwrap();
+        p = outs.next().unwrap();
+        rz = outs.next().unwrap();
+        it += 1;
+        if it % check_every == 0 || it == max_iter {
+            rz_host = rz.to_host()?.first_as_f64()?;
+        }
+    }
+    rz_host = rz.to_host()?.first_as_f64()?;
+    Ok(CgOutcome {
+        x: x.to_host()?.as_f32()?.to_vec(),
+        iterations: it,
+        residual2: rz_host,
+    })
+}
+
+/// flops of one CG iteration (for GFLOP/s reporting).
+pub fn iter_flops(a: &Csr) -> u64 {
+    (2 * a.rows * a.k + 10 * a.rows) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rtcg::module::Toolkit;
+    use crate::util::prng::Rng;
+
+    fn check_solution(a: &Csr, x: &[f32], b: &[f32], tol: f32) {
+        let ax = a.matvec_ref(x);
+        for (l, r) in ax.iter().zip(b) {
+            assert!((l - r).abs() < tol, "{l} vs {r}");
+        }
+    }
+
+    #[test]
+    fn scalar_cg_solves_poisson() {
+        let a = Csr::poisson2d(8);
+        let mut rng = Rng::new(1);
+        let b = rng.normal_vec(64);
+        let out = solve_scalar(&a, &b, 1e-10, 500);
+        assert!(out.residual2 <= 1e-10, "res {}", out.residual2);
+        check_solution(&a, &out.x, &b, 1e-3);
+    }
+
+    #[test]
+    fn gpuarray_cg_matches_scalar() {
+        let a = Csr::poisson2d(8);
+        let mut rng = Rng::new(2);
+        let b = rng.normal_vec(64);
+        let ctx = ArrayContext::new(Toolkit::init_ephemeral().unwrap());
+        let gpu = solve_gpuarray(&ctx, &a, &b, 1e-10, 500).unwrap();
+        check_solution(&a, &gpu.x, &b, 1e-2);
+    }
+
+    #[test]
+    fn fused_cg_solves_the_shipped_poisson_workload() {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts");
+        let reg =
+            Registry::open(Toolkit::init_ephemeral().unwrap(), &dir)
+                .unwrap();
+        let a = Csr::poisson2d(64); // 4096 rows = the shipped artifact
+        let mut rng = Rng::new(3);
+        let b = rng.normal_vec(4096);
+        let out = solve_fused(&reg, &a, &b, 1e-8, 400).unwrap();
+        assert!(out.iterations > 10);
+        check_solution(&a, &out.x, &b, 5e-2);
+    }
+
+    #[test]
+    fn fused_cg_rejects_unknown_shape() {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts");
+        let reg =
+            Registry::open(Toolkit::init_ephemeral().unwrap(), &dir)
+                .unwrap();
+        let a = Csr::poisson2d(5);
+        assert!(solve_fused(&reg, &a, &[0.0; 25], 1e-8, 10).is_err());
+    }
+}

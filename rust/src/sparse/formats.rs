@@ -1,0 +1,217 @@
+//! Sparse matrix formats (§5.2.1, Table 2): CSR and ELL, with the
+//! fixed-degree random generators the benchmarks use and a dense
+//! reference multiply for correctness.
+
+use crate::util::prng::Rng;
+
+/// CSR with uniform row degree K (see prelude's sparsity note): row i's
+/// entries live at `vals[i*k .. (i+1)*k]` / `cols[...]`.
+#[derive(Debug, Clone)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols_n: usize,
+    pub k: usize,
+    pub vals: Vec<f32>,
+    pub cols: Vec<i32>,
+}
+
+impl Csr {
+    /// Random matrix with exactly `k` nonzeros per row, distinct column
+    /// indices within each row.
+    pub fn random(rows: usize, cols_n: usize, k: usize, seed: u64) -> Csr {
+        assert!(k <= cols_n);
+        let mut rng = Rng::new(seed);
+        let mut vals = Vec::with_capacity(rows * k);
+        let mut cols = Vec::with_capacity(rows * k);
+        let mut scratch: Vec<usize> = Vec::with_capacity(k);
+        for _ in 0..rows {
+            scratch.clear();
+            while scratch.len() < k {
+                let c = rng.usize_below(cols_n);
+                if !scratch.contains(&c) {
+                    scratch.push(c);
+                }
+            }
+            scratch.sort_unstable();
+            for &c in &scratch {
+                cols.push(c as i32);
+                vals.push(rng.normal_f32());
+            }
+        }
+        Csr { rows, cols_n, k, vals, cols }
+    }
+
+    /// 2-D Poisson (5-point) operator on an n×n grid, as uniform-degree
+    /// CSR (missing neighbors padded with explicit zeros at column 0) —
+    /// the §5.2.1 CG benchmark matrix.  SPD.
+    pub fn poisson2d(n: usize) -> Csr {
+        let rows = n * n;
+        let k = 5;
+        let mut vals = vec![0.0f32; rows * k];
+        let mut cols = vec![0i32; rows * k];
+        for i in 0..n {
+            for j in 0..n {
+                let r = i * n + j;
+                let base = r * k;
+                vals[base] = 4.0;
+                cols[base] = r as i32;
+                let mut slot = 1;
+                let mut neighbor = |rr: i64| {
+                    vals[base + slot] = -1.0;
+                    cols[base + slot] = rr as i32;
+                    slot += 1;
+                };
+                if i > 0 {
+                    neighbor(((i - 1) * n + j) as i64);
+                }
+                if i + 1 < n {
+                    neighbor(((i + 1) * n + j) as i64);
+                }
+                if j > 0 {
+                    neighbor((i * n + j - 1) as i64);
+                }
+                if j + 1 < n {
+                    neighbor((i * n + j + 1) as i64);
+                }
+                // remaining slots stay (0.0, col 0): harmless padding
+            }
+        }
+        Csr { rows, cols_n: rows, k, vals, cols }
+    }
+
+    /// Scalar reference multiply.
+    pub fn matvec_ref(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols_n);
+        let mut y = vec![0.0f32; self.rows];
+        for i in 0..self.rows {
+            let mut acc = 0.0f32;
+            for j in 0..self.k {
+                let idx = i * self.k + j;
+                acc += self.vals[idx] * x[self.cols[idx] as usize];
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// Column-major ELL planes (K, R) — the coalesced GPU layout.
+    pub fn to_ell_cm(&self) -> Ell {
+        let (r, k) = (self.rows, self.k);
+        let mut vals = vec![0.0f32; r * k];
+        let mut cols = vec![0i32; r * k];
+        for i in 0..r {
+            for j in 0..k {
+                vals[j * r + i] = self.vals[i * k + j];
+                cols[j * r + i] = self.cols[i * k + j];
+            }
+        }
+        Ell { rows: r, cols_n: self.cols_n, k, vals_cm: vals, cols_cm: cols }
+    }
+}
+
+/// ELLPACK, column-major planes.
+#[derive(Debug, Clone)]
+pub struct Ell {
+    pub rows: usize,
+    pub cols_n: usize,
+    pub k: usize,
+    pub vals_cm: Vec<f32>,
+    pub cols_cm: Vec<i32>,
+}
+
+impl Ell {
+    /// Row-major planes (R, K) for the rm kernel layout.
+    pub fn vals_rm(&self) -> Vec<f32> {
+        let (r, k) = (self.rows, self.k);
+        let mut out = vec![0.0f32; r * k];
+        for i in 0..r {
+            for j in 0..k {
+                out[i * k + j] = self.vals_cm[j * r + i];
+            }
+        }
+        out
+    }
+
+    pub fn cols_rm(&self) -> Vec<i32> {
+        let (r, k) = (self.rows, self.k);
+        let mut out = vec![0i32; r * k];
+        for i in 0..r {
+            for j in 0..k {
+                out[i * k + j] = self.cols_cm[j * r + i];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_csr_shape_and_degree() {
+        let a = Csr::random(64, 64, 8, 1);
+        assert_eq!(a.vals.len(), 64 * 8);
+        // distinct columns within each row
+        for i in 0..a.rows {
+            let row = &a.cols[i * 8..(i + 1) * 8];
+            let mut s = row.to_vec();
+            s.dedup();
+            assert_eq!(s.len(), 8);
+        }
+    }
+
+    #[test]
+    fn ell_roundtrip_preserves_product() {
+        let a = Csr::random(32, 32, 4, 2);
+        let mut rng = Rng::new(9);
+        let x = rng.normal_vec(32);
+        let want = a.matvec_ref(&x);
+        let ell = a.to_ell_cm();
+        // multiply via the cm planes
+        let mut y = vec![0.0f32; 32];
+        for j in 0..ell.k {
+            for i in 0..ell.rows {
+                y[i] += ell.vals_cm[j * 32 + i]
+                    * x[ell.cols_cm[j * 32 + i] as usize];
+            }
+        }
+        for (a, b) in y.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        // and rm views agree with the original csr layout
+        assert_eq!(ell.vals_rm(), a.vals);
+        assert_eq!(ell.cols_rm(), a.cols);
+    }
+
+    #[test]
+    fn poisson_is_symmetric_diagonally_dominant() {
+        let a = Csr::poisson2d(8);
+        assert_eq!(a.rows, 64);
+        // row sums ≥ 0 (dominance) and diagonal = 4
+        for i in 0..a.rows {
+            let mut diag = 0.0;
+            let mut off = 0.0;
+            for j in 0..a.k {
+                let idx = i * a.k + j;
+                if a.cols[idx] as usize == i && a.vals[idx] != 0.0 {
+                    diag += a.vals[idx];
+                } else {
+                    off += a.vals[idx].abs();
+                }
+            }
+            assert_eq!(diag, 4.0);
+            assert!(off <= 4.0);
+        }
+    }
+
+    #[test]
+    fn poisson_matvec_of_constant_vector() {
+        // interior rows of A·1 are 0; boundary rows positive
+        let a = Csr::poisson2d(4);
+        let y = a.matvec_ref(&vec![1.0; 16]);
+        // corner rows: 4 - 2 = 2; interior: 0
+        assert_eq!(y[0], 2.0);
+        assert_eq!(y[5], 0.0);
+    }
+}

@@ -1,0 +1,8 @@
+//! Sparse linear algebra (§5.2.1, Table 2): formats, hand-written SpMV
+//! comparators, and the conjugate-gradient solver family.
+
+pub mod cg;
+pub mod formats;
+pub mod spmv;
+
+pub use formats::{Csr, Ell};

@@ -1,0 +1,106 @@
+//! Hand-written SpMV comparators (Table 2's "CUDA" column): the same
+//! three formulations as `copperhead::prelude`, built directly against
+//! `XlaBuilder` by an expert — single fused graphs, layout chosen by
+//! hand.  Following Bell & Garland [1] via §5.2.1.
+
+use crate::rtcg::dtype::DType;
+use crate::rtcg::hlobuild::param;
+use crate::util::error::Result;
+
+/// CSR-scalar: one context per row, row-major planes.
+pub fn csr_scalar(r: usize, k: usize, c: usize) -> Result<xla::XlaComputation> {
+    let b = xla::XlaBuilder::new("spmv_csr_scalar_hand");
+    let vals = param(&b, 0, DType::F32, &[r * k], "vals")?;
+    let cols = param(&b, 1, DType::I32, &[r * k], "cols")?;
+    let x = param(&b, 2, DType::F32, &[c], "x")?;
+    let gathered = x.take(&cols, 0)?;
+    let prod = vals.mul_(&gathered)?.reshape(&[r as i64, k as i64])?;
+    prod.reduce_sum(&[1], false)?.build().map_err(Into::into)
+}
+
+/// CSR-vector: dot-shaped row sums (warp-per-row analog).
+pub fn csr_vector(r: usize, k: usize, c: usize) -> Result<xla::XlaComputation> {
+    let b = xla::XlaBuilder::new("spmv_csr_vector_hand");
+    let vals = param(&b, 0, DType::F32, &[r * k], "vals")?;
+    let cols = param(&b, 1, DType::I32, &[r * k], "cols")?;
+    let x = param(&b, 2, DType::F32, &[c], "x")?;
+    let gathered = x.take(&cols, 0)?;
+    let prod = vals.mul_(&gathered)?.reshape(&[r as i64, k as i64])?;
+    let ones = b.c0(1.0f32)?.broadcast(&[k as i64])?;
+    prod.dot_general(&ones, &[1], &[0], &[], &[])?
+        .build()
+        .map_err(Into::into)
+}
+
+/// ELL: column-major (K, R) planes, coalesced streaming.
+pub fn ell(r: usize, k: usize, c: usize) -> Result<xla::XlaComputation> {
+    let b = xla::XlaBuilder::new("spmv_ell_hand");
+    let vals = param(&b, 0, DType::F32, &[k * r], "vals_cm")?;
+    let cols = param(&b, 1, DType::I32, &[k * r], "cols_cm")?;
+    let x = param(&b, 2, DType::F32, &[c], "x")?;
+    let gathered = x.take(&cols, 0)?;
+    let prod = vals.mul_(&gathered)?.reshape(&[k as i64, r as i64])?;
+    prod.reduce_sum(&[0], false)?.build().map_err(Into::into)
+}
+
+/// Useful flops of one SpMV (Table 2's GFLOP/s numerator).
+pub fn flops(r: usize, k: usize) -> u64 {
+    (2 * r * k) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rtcg::module::Toolkit;
+    use crate::runtime::HostArray;
+    use crate::sparse::formats::Csr;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn all_handwritten_formulations_match_reference() {
+        let (r, k, c) = (64usize, 8usize, 64usize);
+        let a = Csr::random(r, c, k, 3);
+        let mut rng = Rng::new(4);
+        let x = rng.normal_vec(c);
+        let want = a.matvec_ref(&x);
+        let ell_m = a.to_ell_cm();
+
+        let tk = Toolkit::init_ephemeral().unwrap();
+        let xa = HostArray::f32(vec![c], x);
+
+        let run = |comp: xla::XlaComputation,
+                   vals: Vec<f32>,
+                   cols: Vec<i32>| {
+            let m = tk.source_module_from_computation(&comp).unwrap();
+            let v = HostArray::f32(vec![vals.len()], vals);
+            let ci = HostArray::i32(vec![cols.len()], cols);
+            m.call(&[&v, &ci, &xa]).unwrap()[0].clone()
+        };
+
+        let y1 = run(
+            csr_scalar(r, k, c).unwrap(),
+            a.vals.clone(),
+            a.cols.clone(),
+        );
+        let y2 = run(
+            csr_vector(r, k, c).unwrap(),
+            a.vals.clone(),
+            a.cols.clone(),
+        );
+        let y3 = run(
+            ell(r, k, c).unwrap(),
+            ell_m.vals_cm.clone(),
+            ell_m.cols_cm.clone(),
+        );
+        for y in [y1, y2, y3] {
+            for (a, b) in y.as_f32().unwrap().iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn flops_formula() {
+        assert_eq!(flops(100, 7), 1400);
+    }
+}

@@ -1,0 +1,179 @@
+//! The tuning database (§6.2): "for applications that are widely
+//! deployed on a variety of user hardware, optimal performance can be
+//! achieved by either optimizing in situ or shipping with a database of
+//! optimization configurations for different platforms."
+//!
+//! Keyed by (kernel, workload, device); JSON on disk next to the
+//! compile cache.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::tuner::search::TuneResult;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct DbEntry {
+    pub variant: String,
+    pub seconds: f64,
+    pub tuning_seconds: f64,
+}
+
+pub struct TuningDb {
+    path: PathBuf,
+    map: BTreeMap<String, DbEntry>,
+}
+
+fn key(kernel: &str, workload: &str, device: &str) -> String {
+    format!("{kernel}|{workload}|{device}")
+}
+
+impl TuningDb {
+    /// Open (or create) the database at `path`.
+    pub fn open(path: &Path) -> Result<TuningDb> {
+        let mut map = BTreeMap::new();
+        if path.exists() {
+            let doc = Json::parse(&std::fs::read_to_string(path)?)?;
+            let obj = doc
+                .as_obj()
+                .ok_or_else(|| Error::msg("tuning db must be an object"))?;
+            for (k, v) in obj {
+                map.insert(
+                    k.clone(),
+                    DbEntry {
+                        variant: v
+                            .req("variant")?
+                            .as_str()
+                            .unwrap_or_default()
+                            .to_string(),
+                        seconds: v
+                            .req("seconds")?
+                            .as_f64()
+                            .unwrap_or(f64::NAN),
+                        tuning_seconds: v
+                            .get("tuning_seconds")
+                            .and_then(|x| x.as_f64())
+                            .unwrap_or(0.0),
+                    },
+                );
+            }
+        }
+        Ok(TuningDb { path: path.to_path_buf(), map })
+    }
+
+    /// Default location: `$RTCG_CACHE_DIR`/tuning.json or
+    /// `.rtcg-cache/tuning.json`.
+    pub fn open_default() -> Result<TuningDb> {
+        let root = std::env::var("RTCG_CACHE_DIR")
+            .unwrap_or_else(|_| ".rtcg-cache".to_string());
+        Self::open(&Path::new(&root).join("tuning.json"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn lookup(
+        &self,
+        kernel: &str,
+        workload: &str,
+        device: &str,
+    ) -> Option<&DbEntry> {
+        self.map.get(&key(kernel, workload, device))
+    }
+
+    /// Record a tuning outcome (in memory; call [`save`](Self::save)).
+    pub fn record(&mut self, r: &TuneResult) {
+        self.map.insert(
+            key(&r.kernel, &r.workload, &r.device),
+            DbEntry {
+                variant: r.best_variant.clone(),
+                seconds: r.best_seconds,
+                tuning_seconds: r.tuning_seconds,
+            },
+        );
+    }
+
+    pub fn save(&self) -> Result<()> {
+        let mut obj = BTreeMap::new();
+        for (k, v) in &self.map {
+            obj.insert(
+                k.clone(),
+                Json::obj(vec![
+                    ("variant", Json::str(&v.variant)),
+                    ("seconds", Json::num(v.seconds)),
+                    ("tuning_seconds", Json::num(v.tuning_seconds)),
+                ]),
+            );
+        }
+        if let Some(dir) = self.path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(&self.path, Json::Obj(obj).to_string_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tuner::search::Candidate;
+
+    fn result(kernel: &str, device: &str, variant: &str) -> TuneResult {
+        TuneResult {
+            kernel: kernel.into(),
+            workload: "w".into(),
+            device: device.into(),
+            best_variant: variant.into(),
+            best_seconds: 0.5,
+            candidates: vec![Candidate {
+                variant: variant.into(),
+                seconds: Some(0.5),
+                pruned: false,
+            }],
+            tuning_seconds: 1.2,
+        }
+    }
+
+    #[test]
+    fn record_lookup_roundtrip_via_disk() {
+        let dir = std::env::temp_dir()
+            .join(format!("rtcg-db-test-{}", std::process::id()));
+        let path = dir.join("tuning.json");
+        let mut db = TuningDb::open(&path).unwrap();
+        db.record(&result("conv", "C1060", "th8_fb16_u0"));
+        db.record(&result("conv", "8600GT", "th2_fb4_u0"));
+        db.save().unwrap();
+
+        let db2 = TuningDb::open(&path).unwrap();
+        assert_eq!(db2.len(), 2);
+        assert_eq!(
+            db2.lookup("conv", "w", "C1060").unwrap().variant,
+            "th8_fb16_u0"
+        );
+        // per-device entries are distinct — the §6.2 cross-platform point
+        assert_eq!(
+            db2.lookup("conv", "w", "8600GT").unwrap().variant,
+            "th2_fb4_u0"
+        );
+        assert!(db2.lookup("conv", "w", "GTX480").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rerecord_overwrites() {
+        let dir = std::env::temp_dir()
+            .join(format!("rtcg-db-test2-{}", std::process::id()));
+        let mut db = TuningDb::open(&dir.join("t.json")).unwrap();
+        db.record(&result("k", "d", "v1"));
+        db.record(&result("k", "d", "v2"));
+        assert_eq!(db.len(), 1);
+        assert_eq!(db.lookup("k", "w", "d").unwrap().variant, "v2");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

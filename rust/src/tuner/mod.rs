@@ -1,0 +1,9 @@
+//! Run-time auto-tuning (§4.1, §6.2): retain the variant pool, measure
+//! (or model) each candidate, pick the best per (workload, device), and
+//! remember the choice in a configuration database.
+
+pub mod db;
+pub mod search;
+
+pub use db::TuningDb;
+pub use search::{tune_measured, tune_modeled, Candidate, TuneOpts, TuneResult};

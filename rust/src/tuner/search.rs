@@ -1,0 +1,257 @@
+//! The tuning loop: "a trivial auto-tuning scheme (coarse grid search)"
+//! (§6.2), with the early poor-solution pruning heuristic §6.1 calls
+//! out, over either wall-clock measurement (this host, real PJRT
+//! executions) or the analytical device model (the Table 1 GPUs).
+
+use std::time::Instant;
+
+use crate::device::{sim, DeviceProfile, KernelDesc};
+use crate::kernels::{ManifestEntry, Registry};
+use crate::runtime::HostArray;
+use crate::util::error::{Error, Result};
+
+#[derive(Debug, Clone)]
+pub struct TuneOpts {
+    /// timing samples per surviving candidate
+    pub samples: usize,
+    /// a candidate whose first probe exceeds `prune_factor × best` is
+    /// dropped without further samples (§6.1's heuristic)
+    pub prune_factor: f64,
+    /// warmup executions before probing (compile + first-touch)
+    pub warmup: usize,
+}
+
+impl Default for TuneOpts {
+    fn default() -> Self {
+        TuneOpts { samples: 5, prune_factor: 2.0, warmup: 1 }
+    }
+}
+
+/// One evaluated candidate.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub variant: String,
+    /// mean seconds (measured) or modeled seconds; None = invalid/pruned
+    pub seconds: Option<f64>,
+    pub pruned: bool,
+}
+
+/// Outcome of one tuning run.
+#[derive(Debug, Clone)]
+pub struct TuneResult {
+    pub kernel: String,
+    pub workload: String,
+    pub device: String,
+    pub best_variant: String,
+    pub best_seconds: f64,
+    pub candidates: Vec<Candidate>,
+    /// wall-clock spent tuning (the cost RTCG amortizes via the db)
+    pub tuning_seconds: f64,
+}
+
+impl TuneResult {
+    pub fn evaluated(&self) -> usize {
+        self.candidates.iter().filter(|c| !c.pruned).count()
+    }
+
+    pub fn pruned(&self) -> usize {
+        self.candidates.iter().filter(|c| c.pruned).count()
+    }
+
+    /// Speedup of the winner over a named baseline variant.
+    pub fn boost_over(&self, variant: &str) -> Option<f64> {
+        let base = self
+            .candidates
+            .iter()
+            .find(|c| c.variant == variant)?
+            .seconds?;
+        Some(base / self.best_seconds)
+    }
+}
+
+/// Measure-based tuning on the real PJRT backend: compile every variant
+/// (through the cache), run with the given inputs, keep the fastest.
+pub fn tune_measured(
+    registry: &Registry,
+    entries: &[&ManifestEntry],
+    inputs_for: &dyn Fn(&ManifestEntry) -> Result<Vec<HostArray>>,
+    opts: &TuneOpts,
+) -> Result<TuneResult> {
+    if entries.is_empty() {
+        return Err(Error::msg("no variants to tune over"));
+    }
+    let started = Instant::now();
+    let mut best: Option<(String, f64)> = None;
+    let mut candidates = Vec::new();
+
+    for e in entries {
+        let module = registry.load(e)?;
+        let inputs = inputs_for(e)?;
+        let refs: Vec<&HostArray> = inputs.iter().collect();
+        for _ in 0..opts.warmup {
+            module.call(&refs)?;
+        }
+        // probe once; prune if clearly poor (§6.1)
+        let t0 = Instant::now();
+        module.call(&refs)?;
+        let probe = t0.elapsed().as_secs_f64();
+        if let Some((_, b)) = &best {
+            if probe > b * opts.prune_factor {
+                candidates.push(Candidate {
+                    variant: e.variant.clone(),
+                    seconds: Some(probe),
+                    pruned: true,
+                });
+                continue;
+            }
+        }
+        let mut total = probe;
+        let mut n = 1;
+        for _ in 1..opts.samples {
+            let t = Instant::now();
+            module.call(&refs)?;
+            total += t.elapsed().as_secs_f64();
+            n += 1;
+        }
+        let mean = total / n as f64;
+        if best.as_ref().map(|(_, b)| mean < *b).unwrap_or(true) {
+            best = Some((e.variant.clone(), mean));
+        }
+        candidates.push(Candidate {
+            variant: e.variant.clone(),
+            seconds: Some(mean),
+            pruned: false,
+        });
+    }
+    let (best_variant, best_seconds) = best.unwrap();
+    Ok(TuneResult {
+        kernel: entries[0].kernel.clone(),
+        workload: entries[0].workload.clone(),
+        device: registry.toolkit().client().platform_name(),
+        best_variant,
+        best_seconds,
+        candidates,
+        tuning_seconds: started.elapsed().as_secs_f64(),
+    })
+}
+
+/// Model-based tuning against a simulated device profile: evaluate the
+/// analytic estimate of every descriptor; invalid configs are skipped —
+/// the "runs up against hardware limitations" case of §6.2.
+pub fn tune_modeled(
+    kernel: &str,
+    workload: &str,
+    descs: &[KernelDesc],
+    device: &DeviceProfile,
+) -> Result<TuneResult> {
+    if descs.is_empty() {
+        return Err(Error::msg("no variants to tune over"));
+    }
+    let started = Instant::now();
+    let mut best: Option<(String, f64)> = None;
+    let mut candidates = Vec::new();
+    for d in descs {
+        match sim::estimate(d, device) {
+            None => candidates.push(Candidate {
+                variant: d.variant.clone(),
+                seconds: None,
+                pruned: true,
+            }),
+            Some(est) => {
+                if best
+                    .as_ref()
+                    .map(|(_, b)| est.seconds < *b)
+                    .unwrap_or(true)
+                {
+                    best = Some((d.variant.clone(), est.seconds));
+                }
+                candidates.push(Candidate {
+                    variant: d.variant.clone(),
+                    seconds: Some(est.seconds),
+                    pruned: false,
+                });
+            }
+        }
+    }
+    let (best_variant, best_seconds) = best.ok_or_else(|| {
+        Error::msg(format!(
+            "no variant of {kernel}/{workload} is valid on {}",
+            device.name
+        ))
+    })?;
+    Ok(TuneResult {
+        kernel: kernel.to_string(),
+        workload: workload.to_string(),
+        device: device.name.to_string(),
+        best_variant,
+        best_seconds,
+        candidates,
+        tuning_seconds: started.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profile::{C1060, G8600GT};
+    use crate::device::traffic;
+
+    fn conv_descs() -> Vec<KernelDesc> {
+        let mut out = Vec::new();
+        for th in [1usize, 2, 4, 8] {
+            for fb in [4usize, 8, 16] {
+                out.push(traffic::filterbank(
+                    256, 256, 8, 64, 9, 9, th, fb, 1,
+                ));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn modeled_tuning_picks_a_winner() {
+        let r =
+            tune_modeled("filterbank", "t1", &conv_descs(), &C1060).unwrap();
+        assert!(!r.best_variant.is_empty());
+        assert!(r.best_seconds > 0.0);
+        assert_eq!(r.candidates.len(), 12);
+        // default must not beat the winner
+        let boost = r.boost_over("th1_fb4_u1").unwrap();
+        assert!(boost >= 1.0, "boost {boost}");
+    }
+
+    #[test]
+    fn modeled_tuning_skips_invalid() {
+        // shrink the scratchpad so the largest tiles become invalid
+        let mut dev = G8600GT.clone();
+        dev.scratch_bytes = 14 << 10;
+        let r =
+            tune_modeled("filterbank", "t1", &conv_descs(), &dev).unwrap();
+        assert!(r.pruned() > 0, "expected invalid candidates");
+        assert!(r.evaluated() > 0);
+    }
+
+    #[test]
+    fn modeled_winner_differs_across_devices() {
+        // §6.2: "a different peak-performing optimization configuration
+        // was chosen … for distinct hardware platforms" — with the same
+        // pool, the 16 KiB-scratch parts cannot pick what fits in 48 KiB
+        let descs = conv_descs();
+        let small = tune_modeled("fb", "t", &descs, &G8600GT).unwrap();
+        let big = tune_modeled(
+            "fb",
+            "t",
+            &descs,
+            &crate::device::profile::GTX480,
+        )
+        .unwrap();
+        // not asserting inequality of names (model may coincide), but
+        // the valid sets must differ:
+        assert!(small.pruned() >= big.pruned());
+    }
+
+    #[test]
+    fn empty_pool_is_an_error() {
+        assert!(tune_modeled("k", "w", &[], &C1060).is_err());
+    }
+}

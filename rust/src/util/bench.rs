@@ -1,0 +1,143 @@
+//! Mini benchmark harness (no `criterion` in this environment).
+//!
+//! Warmup, then adaptive sampling until the relative standard error of
+//! the mean falls below a target or a sample/time budget is hit.  Every
+//! `cargo bench` target in `rust/benches/` uses this to print the
+//! paper's table rows next to our measured/modeled values.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    pub warmup_iters: usize,
+    pub min_samples: usize,
+    pub max_samples: usize,
+    pub target_rse: f64,
+    pub max_time: Duration,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            warmup_iters: 3,
+            min_samples: 5,
+            max_samples: 50,
+            target_rse: 0.02,
+            max_time: Duration::from_secs(10),
+        }
+    }
+}
+
+impl BenchOpts {
+    /// A faster profile for expensive end-to-end workloads.
+    pub fn quick() -> Self {
+        BenchOpts {
+            warmup_iters: 1,
+            min_samples: 3,
+            max_samples: 10,
+            target_rse: 0.05,
+            max_time: Duration::from_secs(20),
+        }
+    }
+}
+
+/// Measured result of one benchmark case (times in seconds).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        self.summary.mean
+    }
+    /// GFLOP/s given a per-iteration flop count — the unit of Tables 1–2.
+    pub fn gflops(&self, flops: u64) -> f64 {
+        flops as f64 / self.summary.mean / 1e9
+    }
+}
+
+/// Run `f` under the harness and return timing statistics.
+pub fn bench<F: FnMut()>(name: &str, opts: &BenchOpts, mut f: F) -> BenchResult {
+    for _ in 0..opts.warmup_iters {
+        f();
+    }
+    let started = Instant::now();
+    let mut samples = Vec::with_capacity(opts.max_samples);
+    loop {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+        if samples.len() >= opts.min_samples {
+            let s = Summary::of(&samples);
+            if s.rse() <= opts.target_rse
+                || samples.len() >= opts.max_samples
+                || started.elapsed() >= opts.max_time
+            {
+                return BenchResult { name: name.to_string(), summary: s };
+            }
+        }
+    }
+}
+
+/// Format seconds human-readably (µs/ms/s).
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+/// Print a fixed-width table row (used by all bench binaries so output
+/// across tables is uniform and greppable).
+pub fn row(cols: &[&str], widths: &[usize]) -> String {
+    let mut out = String::new();
+    for (i, c) in cols.iter().enumerate() {
+        let w = widths.get(i).copied().unwrap_or(12);
+        out.push_str(&format!("{c:<w$} "));
+    }
+    out.trim_end().to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let opts = BenchOpts {
+            warmup_iters: 1,
+            min_samples: 3,
+            max_samples: 5,
+            target_rse: 0.5,
+            max_time: Duration::from_secs(2),
+        };
+        let r = bench("noop", &opts, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.summary.n >= 3);
+        assert!(r.mean_s() >= 0.0);
+    }
+
+    #[test]
+    fn gflops_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            summary: Summary::of(&[0.5]),
+        };
+        assert!((r.gflops(1_000_000_000) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(5e-7).ends_with("µs"));
+        assert!(fmt_time(5e-3).ends_with("ms"));
+        assert!(fmt_time(5.0).ends_with('s'));
+    }
+}

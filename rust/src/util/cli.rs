@@ -1,0 +1,144 @@
+//! Tiny CLI argument parser (no `clap` in this environment).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args;
+//! collects unknown flags as errors with a usage hint.
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{Error, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    known: Vec<(String, String)>, // (name, help)
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable) — pass
+    /// `std::env::args().skip(1)` in production.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        it: I,
+        known: &[(&str, &str)],
+    ) -> Result<Args> {
+        let mut out = Args {
+            known: known
+                .iter()
+                .map(|(a, b)| (a.to_string(), b.to_string()))
+                .collect(),
+            ..Default::default()
+        };
+        let mut it = it.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                if !out.known.iter().any(|(k, _)| *k == key) {
+                    return Err(Error::msg(format!(
+                        "unknown flag --{key}\n{}",
+                        out.usage()
+                    )));
+                }
+                let val = match inline_val {
+                    Some(v) => v,
+                    None => {
+                        // value-less if next token is a flag or absent
+                        match it.peek() {
+                            Some(n) if !n.starts_with("--") => {
+                                it.next().unwrap()
+                            }
+                            _ => "true".to_string(),
+                        }
+                    }
+                };
+                out.flags.insert(key, val);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::from("flags:\n");
+        for (k, h) in &self.known {
+            s.push_str(&format!("  --{k:<18} {h}\n"));
+        }
+        s
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::msg(format!("--{key} expects an integer, got '{v}'"))
+            }),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::msg(format!("--{key} expects a number, got '{v}'"))
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Result<Args> {
+        Args::parse(
+            args.iter().map(|s| s.to_string()),
+            &[
+                ("size", "problem size"),
+                ("verbose", "chatty output"),
+                ("device", "device profile name"),
+            ],
+        )
+    }
+
+    #[test]
+    fn key_value_styles() {
+        let a = parse(&["--size", "32", "--device=c1060", "run"]).unwrap();
+        assert_eq!(a.get("size"), Some("32"));
+        assert_eq!(a.get("device"), Some("c1060"));
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get_usize("size", 0).unwrap(), 32);
+    }
+
+    #[test]
+    fn bare_flag_is_true() {
+        let a = parse(&["--verbose", "--size", "8"]).unwrap();
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("verbose"), Some("true"));
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(parse(&["--nope"]).is_err());
+    }
+
+    #[test]
+    fn bad_int_errors() {
+        let a = parse(&["--size", "many"]).unwrap();
+        assert!(a.get_usize("size", 0).is_err());
+    }
+}

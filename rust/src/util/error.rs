@@ -1,0 +1,15 @@
+//! Crate-wide error type.  `anyhow` is in the vendored dependency set;
+//! this module pins the crate to a single `Error`/`Result` pair so the
+//! backing store can change without touching call sites.
+//! (`anyhow::Error::msg` provides the string constructor used
+//! throughout.)
+
+pub type Error = anyhow::Error;
+pub type Result<T> = anyhow::Result<T>;
+
+/// Shorthand for formatted errors, mirroring `anyhow::anyhow!` without
+/// requiring the macro import at call sites.
+#[macro_export]
+macro_rules! err {
+    ($($t:tt)*) => { $crate::util::error::Error::msg(format!($($t)*)) };
+}

@@ -1,0 +1,51 @@
+//! FNV-1a and a compact hex digest — cache keys for generated source.
+//!
+//! PyCUDA keys its compiler cache on a cryptographic hash of (source,
+//! compiler options, hardware identity).  Collision resistance at that
+//! strength is not load-bearing here (keys also embed source length and
+//! platform), so a fast 128-bit FNV pair keeps the substrate
+//! dependency-free.
+
+/// 64-bit FNV-1a.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// 128-bit digest as hex: FNV over the data and over the reversed-salted
+/// data, plus the length folded in. Stable across runs and platforms.
+pub fn digest_hex(bytes: &[u8]) -> String {
+    let a = fnv1a(bytes);
+    let mut salted = Vec::with_capacity(bytes.len() + 8);
+    salted.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+    salted.extend(bytes.iter().rev());
+    let b = fnv1a(&salted);
+    format!("{a:016x}{b:016x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stable() {
+        assert_eq!(digest_hex(b"hello"), digest_hex(b"hello"));
+    }
+
+    #[test]
+    fn distinct_for_small_changes() {
+        assert_ne!(digest_hex(b"hello"), digest_hex(b"hellp"));
+        assert_ne!(digest_hex(b""), digest_hex(b"\0"));
+        assert_ne!(digest_hex(b"ab"), digest_hex(b"ba"));
+    }
+
+    #[test]
+    fn fnv_known_vector() {
+        // FNV-1a("") is the offset basis.
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+    }
+}

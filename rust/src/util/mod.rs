@@ -1,0 +1,13 @@
+//! Substrate utilities implemented from scratch (the environment vendors
+//! only the `xla` crate closure — see DESIGN.md §5.5): JSON, CLI
+//! parsing, PRNG, statistics, a benchmark harness, property testing,
+//! and hashing.
+
+pub mod bench;
+pub mod cli;
+pub mod error;
+pub mod hash;
+pub mod json;
+pub mod prng;
+pub mod proptest;
+pub mod stats;

@@ -1,0 +1,140 @@
+//! Property-test harness (no `proptest` crate in this environment).
+//!
+//! `check` runs a property over N seeded random cases; on failure it
+//! performs greedy shrinking over the generator's size parameter and
+//! reports the minimal failing seed/size so the case replays exactly.
+
+use crate::util::prng::Rng;
+
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // RTCG_PROPTEST_CASES trades coverage for CI time.
+        let cases = std::env::var("RTCG_PROPTEST_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(32);
+        Config { cases, seed: 0x5EED, max_size: 64 }
+    }
+}
+
+/// Outcome of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop(rng, size)` for `cfg.cases` random (seed, size) pairs.
+/// On failure, shrink `size` greedily toward 1 while the property still
+/// fails, then panic with the minimal reproduction.
+pub fn check<F>(name: &str, cfg: &Config, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> PropResult,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B9);
+        let size = 1 + (case * cfg.max_size / cfg.cases.max(1));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // shrink: halve size while still failing with the same seed
+            let mut best = (size, msg);
+            let mut s = size;
+            while s > 1 {
+                s /= 2;
+                let mut rng = Rng::new(seed);
+                match prop(&mut rng, s) {
+                    Err(m) => best = (s, m),
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed={seed:#x}, size={}):\n{}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Approximate float equality for property bodies.
+pub fn close(a: f32, b: f32, rtol: f32, atol: f32) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+}
+
+pub fn all_close(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> PropResult {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if !close(*x, *y, rtol, atol) {
+            return Err(format!("elem {i}: {x} vs {y}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-commutes", &Config::default(), |rng, size| {
+            let v: Vec<f32> = (0..size).map(|_| rng.f32()).collect();
+            let a: f32 = v.iter().sum();
+            let b: f32 = v.iter().rev().sum();
+            if (a - b).abs() < 1e-3 {
+                Ok(())
+            } else {
+                Err(format!("{a} != {b}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            "always-fails",
+            &Config { cases: 2, ..Default::default() },
+            |_, _| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn shrink_reports_smaller_size() {
+        let result = std::panic::catch_unwind(|| {
+            check(
+                "fails-when-big",
+                &Config { cases: 8, max_size: 64, ..Default::default() },
+                |_, size| {
+                    if size >= 2 {
+                        Err("too big".into())
+                    } else {
+                        Ok(())
+                    }
+                },
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // greedy halving should land well below max_size
+        assert!(msg.contains("size=2") || msg.contains("size=1"), "{msg}");
+    }
+
+    #[test]
+    fn all_close_reports_index() {
+        let e = all_close(&[1.0, 2.0], &[1.0, 3.0], 1e-3, 1e-3);
+        assert!(e.unwrap_err().contains("elem 1"));
+    }
+}

@@ -1,0 +1,133 @@
+//! Summary statistics for benchmark timing (no `criterion` in this
+//! environment).  The paper reports mean ± std over repeated runs
+//! (Table 1, Table 4); `Summary` carries exactly that plus robust
+//! percentiles for the harness's own decisions.
+
+/// Streaming mean/variance (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Batch summary of a sample vector.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub median: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "empty sample set");
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut w = Welford::default();
+        for &s in samples {
+            w.push(s);
+        }
+        Summary {
+            n: samples.len(),
+            mean: w.mean(),
+            std: w.std(),
+            min: sorted[0],
+            median: percentile_sorted(&sorted, 50.0),
+            p95: percentile_sorted(&sorted, 95.0),
+            max: *sorted.last().unwrap(),
+        }
+    }
+
+    /// Relative standard error — the harness's convergence criterion.
+    pub fn rse(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            self.std / (self.n as f64).sqrt() / self.mean.abs()
+        }
+    }
+}
+
+/// Linear-interpolated percentile over a pre-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut w = Welford::default();
+        xs.iter().for_each(|&x| w.push(x));
+        assert!((w.mean() - 3.0).abs() < 1e-12);
+        assert!((w.variance() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.median - 50.5).abs() < 1e-9);
+        assert!((s.p95 - 95.05).abs() < 0.1);
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = Summary::of(&[7.0]);
+        assert_eq!(s.mean, 7.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.median, 7.0);
+    }
+
+    #[test]
+    fn rse_shrinks_with_n() {
+        let a = Summary::of(&[1.0, 2.0, 1.0, 2.0]);
+        let many: Vec<f64> =
+            std::iter::repeat([1.0, 2.0]).take(64).flatten().collect();
+        let b = Summary::of(&many);
+        assert!(b.rse() < a.rse());
+    }
+}

@@ -1,0 +1,101 @@
+//! End-to-end smoke tests: the §6 application pipelines at miniature
+//! scale, through the full stack (artifacts → registry → PJRT).
+
+use std::path::PathBuf;
+
+use rtcg::apps::{entropy, sar};
+use rtcg::kernels::Registry;
+use rtcg::runtime::HostArray;
+use rtcg::util::prng::Rng;
+use rtcg::Toolkit;
+
+fn registry() -> Registry {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Registry::open(Toolkit::init_ephemeral().unwrap(), &dir)
+        .expect("run `make artifacts` first")
+}
+
+#[test]
+fn entropy_pipeline_doubling_chain() {
+    // full §6.4 pipeline: images → patches → NN kernel → estimates,
+    // with the doubling property: estimates drift smoothly with N
+    let reg = registry();
+    let (t, d) = (1024usize, 64usize);
+    let mut rng = Rng::new(31);
+    let img = entropy::synth_image(256, 6, &mut rng);
+    let targets = entropy::extract_patches(&img, 256, t, &mut rng);
+    let pool = entropy::extract_patches(&img, 256, 4096, &mut rng);
+    let ta = HostArray::f32(vec![t, d], targets.clone());
+
+    let mut estimates = Vec::new();
+    for n in [1024usize, 2048, 4096] {
+        let na = HostArray::f32(vec![n, d], pool[..n * d].to_vec());
+        let (h, dists) = entropy::estimate_step(&reg, &ta, &na).unwrap();
+        assert_eq!(dists.len(), t);
+        assert!(dists.iter().all(|&x| x.is_finite() && x >= -1e-3));
+        estimates.push(h);
+    }
+    // more neighbors ⇒ smaller NN distances: with the ln N term the
+    // estimate decreases monotonically toward convergence (64-dim
+    // patches make the Σln(d) term dominate), without wild jumps
+    for w in estimates.windows(2) {
+        assert!(w[1] < w[0] + 1.0, "not converging: {estimates:?}");
+        assert!((w[1] - w[0]).abs() < 80.0, "jump: {estimates:?}");
+    }
+}
+
+#[test]
+fn sar_pipeline_reconstructs_scene() {
+    let reg = registry();
+    let scene = sar::Scene::synthesize(
+        96, 96, 120, 256, 1.0,
+        vec![(8.0, 14.0, 1.0), (-15.0, -9.0, 0.8)],
+    );
+    let (img, _) = sar::run_kernel(&reg, &scene, "tx4_cm2").unwrap();
+    let mean: f32 =
+        img.iter().map(|v| v.abs()).sum::<f32>() / img.len() as f32;
+    for &(sx, sy, _) in &scene.scatterers {
+        let (pi, pk) = scene.pixel_of(sx, sy);
+        assert!(
+            img[pi * scene.ny + pk] > 4.0 * mean,
+            "no peak at ({sx},{sy})"
+        );
+    }
+}
+
+#[test]
+fn nn_kernel_speedup_trend_holds() {
+    // warm kernel wall-clock grows sublinearly vs the scalar baseline's
+    // linear growth — the Table 4 speedup trend, sampled at two sizes
+    use std::time::Instant;
+    let reg = registry();
+    let (t, d) = (1024usize, 64usize);
+    let mut rng = Rng::new(17);
+    let targets = rng.normal_vec(t * d);
+    let ta = HostArray::f32(vec![t, d], targets.clone());
+
+    let mut ratios = Vec::new();
+    for n in [1024usize, 4096] {
+        let pool = rng.normal_vec(n * d);
+        let na = HostArray::f32(vec![n, d], pool.clone());
+        let workload = format!("nn_t{t}_n{n}");
+        let entry = reg
+            .manifest()
+            .entry("nn", &workload, "tt128_cn1024_expand")
+            .unwrap();
+        let m = reg.load(entry).unwrap();
+        m.call(&[&ta, &na]).unwrap(); // warm
+        let t0 = Instant::now();
+        m.call(&[&ta, &na]).unwrap();
+        let kernel = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        rtcg::apps::nn::scalar_baseline(&targets, &pool, t, n, d);
+        let scalar = t0.elapsed().as_secs_f64();
+        ratios.push(scalar / kernel);
+    }
+    assert!(
+        ratios[1] > ratios[0] * 0.8,
+        "speedup should not collapse with n: {ratios:?}"
+    );
+    assert!(ratios[1] > 1.0, "kernel should beat scalar at n=4096: {ratios:?}");
+}

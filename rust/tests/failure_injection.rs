@@ -1,0 +1,197 @@
+//! Failure injection: the §5 expectation that "programs do not abort
+//! upon executing erroneous code, most error conditions are recoverable
+//! and useful feedback is available".  Every failure here must surface
+//! as a recoverable `Err`/`Response::Error`, never a crash, and must
+//! not poison caches or wedge the service.
+
+use std::path::PathBuf;
+
+use rtcg::coordinator::{Coordinator, CoordinatorConfig, Request, Response};
+use rtcg::kernels::{Manifest, Registry};
+use rtcg::rtcg::template::{ctx, render};
+use rtcg::runtime::HostArray;
+use rtcg::tuner::TuningDb;
+use rtcg::Toolkit;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn malformed_hlo_fails_cleanly_and_cache_recovers() {
+    let tk = Toolkit::init_ephemeral().unwrap();
+    for bad in [
+        "",                                   // empty
+        "not hlo at all",                     // garbage
+        "HloModule x\n\nENTRY main {",        // truncated
+        "HloModule x\n\nENTRY main {\n  ROOT r = f32[2] parameter(0)\n  ROOT q = f32[2] parameter(1)\n}", // two roots
+    ] {
+        assert!(tk.source_module(bad).is_err(), "accepted: {bad:?}");
+    }
+    // the cache is not poisoned: a good module still compiles
+    let good = "HloModule ok\n\nENTRY main {\n  p = f32[2] parameter(0)\n  ROOT r = f32[2] add(p, p)\n}\n";
+    let m = tk.source_module(good).unwrap();
+    let x = HostArray::f32(vec![2], vec![1.0, 2.0]);
+    assert_eq!(m.call(&[&x]).unwrap()[0].as_f32().unwrap(), &[2.0, 4.0]);
+    assert_eq!(tk.cache().len(), 1);
+}
+
+#[test]
+fn wrong_arity_and_shape_execution_errors() {
+    let tk = Toolkit::init_ephemeral().unwrap();
+    let good = "HloModule ok2\n\nENTRY main {\n  p = f32[4] parameter(0)\n  ROOT r = f32[4] add(p, p)\n}\n";
+    let m = tk.source_module(good).unwrap();
+    // wrong arity
+    assert!(m.call(&[]).is_err());
+    // wrong shape
+    let bad = HostArray::f32(vec![3], vec![0.0; 3]);
+    assert!(m.call(&[&bad]).is_err());
+    // wrong dtype of a different byte width is caught by PJRT; a
+    // same-width reinterpretation (i32 for f32) is NOT — the substrate
+    // checks buffer sizes only, a documented footgun
+    let badt = HostArray::f64(vec![4], vec![0.0; 4]);
+    assert!(m.call(&[&badt]).is_err());
+    // and the module still works afterwards
+    let x = HostArray::f32(vec![4], vec![1.0; 4]);
+    assert!(m.call(&[&x]).is_ok());
+}
+
+#[test]
+fn corrupted_artifact_file_reports_not_crashes() {
+    // copy the manifest dir structure with one corrupted artifact
+    let src = artifacts();
+    let dir = std::env::temp_dir()
+        .join(format!("rtcg-corrupt-{}", std::process::id()));
+    std::fs::create_dir_all(dir.join("axpy/axpy_524288")).unwrap();
+    std::fs::copy(
+        src.join("manifest.json"),
+        dir.join("manifest.json"),
+    )
+    .unwrap();
+    std::fs::write(
+        dir.join("axpy/axpy_524288/b8192.hlo.txt"),
+        "CORRUPTED GARBAGE",
+    )
+    .unwrap();
+    let reg =
+        Registry::open(Toolkit::init_ephemeral().unwrap(), &dir).unwrap();
+    let e = reg
+        .manifest()
+        .entry("axpy", "axpy_524288", "b8192")
+        .unwrap();
+    assert!(reg.load(e).is_err(), "corrupted artifact must not load");
+    // a missing file is also a clean error
+    let e2 = reg
+        .manifest()
+        .entry("axpy", "axpy_524288", "b65536")
+        .unwrap();
+    assert!(reg.load(e2).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn manifest_parse_failures_are_informative() {
+    let dir = std::env::temp_dir()
+        .join(format!("rtcg-badmanifest-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    // missing file
+    let err = match Manifest::load(&dir) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("expected missing-manifest error"),
+    };
+    assert!(err.contains("make artifacts"), "{err}");
+    // malformed json
+    std::fs::write(dir.join("manifest.json"), "{ not json").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+    // valid json, wrong schema
+    std::fs::write(dir.join("manifest.json"), r#"{"kernels": 5}"#).unwrap();
+    assert!(Manifest::load(&dir).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn tuning_db_survives_corruption() {
+    let dir = std::env::temp_dir()
+        .join(format!("rtcg-baddb-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("tuning.json");
+    std::fs::write(&p, "###").unwrap();
+    assert!(TuningDb::open(&p).is_err()); // loud, not silent reset
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn coordinator_survives_a_burst_of_bad_requests() {
+    let mut c = Coordinator::start(CoordinatorConfig {
+        artifacts_dir: artifacts(),
+        queue_depth: 4,
+        tuning_db: None,
+    })
+    .unwrap();
+    for i in 0..10 {
+        let r = match i % 3 {
+            0 => c.submit(Request::Launch {
+                kernel: "missing".into(),
+                workload: "w".into(),
+                variant: None,
+                inputs: vec![],
+            }),
+            1 => c.submit(Request::RunSource {
+                hlo_text: "garbage".into(),
+                inputs: vec![],
+            }),
+            _ => c.submit(Request::Launch {
+                kernel: "axpy".into(),
+                workload: "axpy_524288".into(),
+                variant: Some("b8192".into()),
+                inputs: vec![], // wrong arity
+            }),
+        };
+        assert!(matches!(r, Response::Error(_)), "req {i}: {r:?}");
+    }
+    // still serving good requests afterwards
+    assert!(matches!(c.submit(Request::Stats), Response::Stats(_)));
+    assert_eq!(c.metrics().errors, 10);
+    c.shutdown();
+}
+
+#[test]
+fn template_engine_rejects_pathological_inputs() {
+    let c = ctx(vec![("n", 4.into())]);
+    for bad in [
+        "{% for i in range(n) %}",              // unclosed
+        "{% endfor %}",                         // stray close
+        "{{ n n }}",                            // junk expr
+        "{% if %}x{% endif %}",                 // empty condition
+        "{% set = 4 %}",                        // nameless set
+        "{{ 5 % 0 }}",                          // modulo by zero
+    ] {
+        assert!(render(bad, &c).is_err(), "accepted: {bad}");
+    }
+    // deep but legal nesting still renders
+    let mut src = String::new();
+    for _ in 0..12 {
+        src.push_str("{% for i in range(1) %}");
+    }
+    src.push('x');
+    for _ in 0..12 {
+        src.push_str("{% endfor %}");
+    }
+    assert_eq!(render(&src, &c).unwrap(), "x");
+}
+
+#[test]
+fn registry_synth_inputs_bound_zero_is_safe() {
+    // a gather bound of 1 must yield only index 0 (always valid)
+    let reg = Registry::open(Toolkit::init_ephemeral().unwrap(), &artifacts())
+        .unwrap();
+    let e = reg
+        .manifest()
+        .entry("spmv_ell", "ell_poisson", "rb256_rm")
+        .unwrap();
+    let inputs = reg.synth_inputs(e, 1, 1);
+    assert!(inputs[1].as_i32().unwrap().iter().all(|&i| i == 0));
+    // and executing with them works
+    let refs: Vec<&HostArray> = inputs.iter().collect();
+    assert!(reg.load(e).unwrap().call(&refs).is_ok());
+}

@@ -1,0 +1,233 @@
+//! Integration tests: cross-module flows over the real PJRT backend and
+//! the shipped artifact pool (requires `make artifacts`).
+
+use std::path::PathBuf;
+
+use rtcg::array::ArrayContext;
+use rtcg::coordinator::{Coordinator, CoordinatorConfig, Request, Response};
+use rtcg::copperhead::{prelude, Copperhead, Shapes};
+use rtcg::elementwise::{ElementwiseKernel, EwValue};
+use rtcg::kernels::Registry;
+use rtcg::rtcg::template::ctx;
+use rtcg::runtime::HostArray;
+use rtcg::sparse::{cg, Csr};
+use rtcg::tuner::{tune_measured, TuneOpts};
+use rtcg::util::prng::Rng;
+use rtcg::Toolkit;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn registry() -> Registry {
+    Registry::open(Toolkit::init_ephemeral().unwrap(), &artifacts())
+        .expect("run `make artifacts` first")
+}
+
+#[test]
+fn template_to_execution_roundtrip() {
+    // strategy (b) → cache → compile → run, twice, second from cache
+    let tk = Toolkit::init_ephemeral().unwrap();
+    let tpl = "HloModule t\n\nENTRY main {\n  p = f32[{{ n }}] parameter(0)\n  ROOT r = f32[{{ n }}] add(p, p)\n}\n";
+    for _ in 0..2 {
+        let m = tk
+            .source_module_from_template(tpl, &ctx(vec![("n", 8.into())]))
+            .unwrap();
+        let x = HostArray::f32(vec![8], vec![1.0; 8]);
+        assert_eq!(m.call(&[&x]).unwrap()[0].as_f32().unwrap(), &[2.0; 8]);
+    }
+    let (hits, _, misses) = tk.cache().stats.snapshot();
+    assert_eq!((hits, misses), (1, 1));
+}
+
+#[test]
+fn measured_tuning_end_to_end_spmv() {
+    // tune the ELL spmv pool on the live backend; the winner must be a
+    // real variant and rerunning it must work
+    let reg = registry();
+    let entries = reg.manifest().variants("spmv_ell", "ell_poisson");
+    assert!(entries.len() >= 4);
+    let result = tune_measured(
+        &reg,
+        &entries,
+        &|e| Ok(reg.synth_inputs(e, 11, 4096)),
+        &TuneOpts { samples: 2, ..Default::default() },
+    )
+    .unwrap();
+    let entry = reg
+        .manifest()
+        .entry("spmv_ell", "ell_poisson", &result.best_variant)
+        .unwrap();
+    let module = reg.load(entry).unwrap();
+    let inputs = reg.synth_inputs(entry, 11, 4096);
+    let refs: Vec<&HostArray> = inputs.iter().collect();
+    let out = module.call(&refs).unwrap();
+    assert_eq!(out[0].shape, vec![4096]);
+}
+
+#[test]
+fn gpuarray_pipeline_matches_elementwise_kernel() {
+    // two different RTCG surfaces computing the same expression
+    let tk = Toolkit::init_ephemeral().unwrap();
+    let ctxa = ArrayContext::new(tk);
+    let mut rng = Rng::new(3);
+    let n = 4096;
+    let xv = rng.normal_vec(n);
+    let yv = rng.normal_vec(n);
+    let x = ctxa.to_gpu(&HostArray::f32(vec![n], xv)).unwrap();
+    let y = ctxa.to_gpu(&HostArray::f32(vec![n], yv)).unwrap();
+
+    let via_ops = x.scale(2.5).unwrap().add(&y.scale(-1.5).unwrap()).unwrap();
+    let k = ElementwiseKernel::new(
+        &ctxa,
+        "float a, float *x, float b, float *y, float *z",
+        "z[i] = a*x[i] + b*y[i]",
+        "lc",
+    )
+    .unwrap();
+    let via_kernel = k
+        .call(&[
+            EwValue::S(2.5),
+            EwValue::V(&x),
+            EwValue::S(-1.5),
+            EwValue::V(&y),
+            EwValue::V(&x),
+        ])
+        .unwrap();
+    let a = via_ops.get().unwrap();
+    let b = via_kernel[0].get().unwrap();
+    for (p, q) in a.as_f32().unwrap().iter().zip(b.as_f32().unwrap()) {
+        assert!((p - q).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn copperhead_spmv_agrees_with_aot_pallas_kernel() {
+    // DSL-generated HLO vs the AOT Pallas kernel on the same matrix
+    let reg = registry();
+    let a = Csr::poisson2d(64); // matches ell_poisson workload shape
+    let mut rng = Rng::new(4);
+    let xv = rng.normal_vec(4096);
+    let want = a.matvec_ref(&xv);
+
+    // AOT pallas rm kernel
+    let entry = reg
+        .manifest()
+        .entry("spmv_ell", "ell_poisson", "rb256_rm")
+        .unwrap();
+    let m = reg.load(entry).unwrap();
+    let vals = HostArray::f32(vec![4096, 5], a.vals.clone());
+    let cols = HostArray::i32(vec![4096, 5], a.cols.clone());
+    let x = HostArray::f32(vec![4096], xv.clone());
+    let aot = m.call(&[&vals, &cols, &x]).unwrap();
+
+    // copperhead DSL
+    let ch = Copperhead::new(Toolkit::init_ephemeral().unwrap());
+    let (p, _) = prelude::spmv_csr_scalar(4096, 5).unwrap();
+    let mut shapes = Shapes::new();
+    shapes.insert("vals".into(), vec![4096 * 5]);
+    shapes.insert("cols".into(), vec![4096 * 5]);
+    shapes.insert("x".into(), vec![4096]);
+    let c = ch.compile(&p, &shapes).unwrap();
+    let vflat = HostArray::f32(vec![4096 * 5], a.vals.clone());
+    let cflat = HostArray::i32(vec![4096 * 5], a.cols.clone());
+    let dsl = c.call(&[&vflat, &cflat, &x]).unwrap();
+
+    for ((u, v), w) in aot[0]
+        .as_f32()
+        .unwrap()
+        .iter()
+        .zip(dsl[0].as_f32().unwrap())
+        .zip(&want)
+    {
+        assert!((u - w).abs() < 1e-3, "aot {u} vs ref {w}");
+        assert!((v - w).abs() < 1e-3, "dsl {v} vs ref {w}");
+    }
+}
+
+#[test]
+fn coordinator_serves_tuning_and_launches() {
+    let mut c = Coordinator::start(CoordinatorConfig {
+        artifacts_dir: artifacts(),
+        queue_depth: 4,
+        tuning_db: None,
+    })
+    .unwrap();
+    // tune a small pool, then launch without naming a variant
+    let resp = c.submit(Request::Tune {
+        kernel: "axpy".into(),
+        workload: "axpy_524288".into(),
+        seed: 9,
+    });
+    let tuned_variant = match resp {
+        Response::Tuned { variant, evaluated, .. } => {
+            assert!(evaluated >= 1);
+            variant
+        }
+        other => panic!("expected Tuned, got {other:?}"),
+    };
+    assert!(tuned_variant.starts_with('b'));
+    let n = 524288;
+    let out = c
+        .submit(Request::Launch {
+            kernel: "axpy".into(),
+            workload: "axpy_524288".into(),
+            variant: None,
+            inputs: vec![
+                HostArray::f32(vec![1], vec![1.0]),
+                HostArray::f32(vec![n], vec![2.0; n]),
+                HostArray::f32(vec![1], vec![1.0]),
+                HostArray::f32(vec![n], vec![3.0; n]),
+            ],
+        })
+        .outputs()
+        .unwrap();
+    assert_eq!(out[0].as_f32().unwrap()[0], 5.0);
+    c.shutdown();
+}
+
+#[test]
+fn fused_cg_beats_scalar_on_wallclock_typically() {
+    // not a strict perf assertion (CI noise) — verifies both produce the
+    // same solution on the shipped Poisson workload
+    let reg = registry();
+    let a = Csr::poisson2d(64);
+    let mut rng = Rng::new(5);
+    let b = rng.normal_vec(4096);
+    let s = cg::solve_scalar(&a, &b, 1e-8, 300);
+    let f = cg::solve_fused(&reg, &a, &b, 1e-8, 300).unwrap();
+    for (x, y) in s.x.iter().zip(&f.x) {
+        assert!((x - y).abs() < 5e-2, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn variant_pool_numerically_consistent_across_families() {
+    // for every family with ≥2 variants on one workload, two variants
+    // agree on synthesized inputs (spot check: first and last)
+    let reg = registry();
+    for (kernel, workload, bound) in [
+        ("filterbank", "conv2_k5", 1usize),
+        ("axpy", "axpy_524288", 1),
+        ("backproject", "sar_96", 1),
+    ] {
+        let vs = reg.manifest().variants(kernel, workload);
+        assert!(vs.len() >= 2, "{kernel}: want ≥2 variants");
+        let a = vs.first().unwrap();
+        let b = vs.last().unwrap();
+        let inputs = reg.synth_inputs(a, 21, bound);
+        let refs: Vec<&HostArray> = inputs.iter().collect();
+        let oa = reg.load(a).unwrap().call(&refs).unwrap();
+        let ob = reg.load(b).unwrap().call(&refs).unwrap();
+        assert_eq!(oa.len(), ob.len());
+        for (x, y) in oa.iter().zip(&ob) {
+            let (xa, ya) = (x.as_f32().unwrap(), y.as_f32().unwrap());
+            for (p, q) in xa.iter().zip(ya) {
+                assert!(
+                    (p - q).abs() < 1e-2 + 1e-3 * q.abs(),
+                    "{kernel}/{workload}: {p} vs {q}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,279 @@
+//! Property-based tests over toolkit invariants, using the in-repo
+//! proptest harness (`rtcg::util::proptest`).
+
+use rtcg::copperhead::{ast, fuse, Copperhead, Shapes};
+use rtcg::mempool::MemoryPool;
+use rtcg::rtcg::dtype::{promote, DType};
+use rtcg::rtcg::subst::Subst;
+use rtcg::rtcg::template::{ctx, render};
+use rtcg::runtime::HostArray;
+use rtcg::util::json::Json;
+use rtcg::util::prng::Rng;
+use rtcg::util::proptest::{check, Config};
+use rtcg::util::stats::Summary;
+use rtcg::Toolkit;
+
+fn cfg(cases: usize) -> Config {
+    Config { cases, ..Default::default() }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    // serialize(parse(x)) is a fixpoint for generated documents
+    check("json-roundtrip", &cfg(64), |rng, size| {
+        let v = gen_json(rng, size.min(12));
+        let s = v.to_string();
+        let v2 = Json::parse(&s)
+            .map_err(|e| format!("parse failed: {e}\n{s}"))?;
+        if v2 != v {
+            return Err(format!("roundtrip mismatch:\n{s}"));
+        }
+        if v2.to_string() != s {
+            return Err("serialization not a fixpoint".into());
+        }
+        Ok(())
+    });
+}
+
+fn gen_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.usize_below(4) } else { rng.usize_below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.f32() < 0.5),
+        2 => Json::Num((rng.normal_f32() * 100.0).round() as f64),
+        3 => {
+            let n = rng.usize_below(8);
+            Json::Str(
+                (0..n)
+                    .map(|_| {
+                        char::from_u32(32 + rng.below(90) as u32)
+                            .unwrap_or('x')
+                    })
+                    .collect(),
+            )
+        }
+        4 => Json::Arr(
+            (0..rng.usize_below(4))
+                .map(|_| gen_json(rng, depth - 1))
+                .collect(),
+        ),
+        _ => Json::Obj(
+            (0..rng.usize_below(4))
+                .map(|i| (format!("k{i}"), gen_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_dtype_promotion_lattice() {
+    // commutative, idempotent, associative, never narrows
+    let all = [DType::I32, DType::I64, DType::F32, DType::F64];
+    for a in all {
+        for b in all {
+            assert_eq!(promote(a, b), promote(b, a));
+            assert!(promote(a, b).size_bytes() >= a.size_bytes().min(b.size_bytes()));
+            for c in all {
+                assert_eq!(
+                    promote(promote(a, b), c),
+                    promote(a, promote(b, c)),
+                    "assoc fails at {a:?} {b:?} {c:?}"
+                );
+            }
+        }
+        assert_eq!(promote(a, a), a);
+    }
+}
+
+#[test]
+fn prop_template_loop_unroll_count() {
+    // a for-loop over range(k) emits exactly k copies
+    check("template-unroll", &cfg(32), |rng, size| {
+        let k = 1 + rng.usize_below(size.max(1));
+        let out = render(
+            "{% for i in range(k) %}X{% endfor %}",
+            &ctx(vec![("k", (k as i64).into())]),
+        )
+        .map_err(|e| e.to_string())?;
+        if out.len() != k {
+            return Err(format!("expected {k} X's, got {}", out.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_subst_is_total_on_known_keys() {
+    check("subst-total", &cfg(32), |rng, size| {
+        let n = rng.below(1 << 16);
+        let src = "a{{x}}b{{ x }}c".repeat(size.max(1));
+        let out = Subst::new()
+            .set("x", n)
+            .apply(&src)
+            .map_err(|e| e.to_string())?;
+        if out.contains("{{") || out.matches(&n.to_string()).count() < 2 {
+            return Err(format!("bad substitution: {out}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mempool_conservation() {
+    // bytes_active + bytes_held accounting is conserved across any
+    // interleaving of allocs and frees
+    check("mempool-conservation", &cfg(48), |rng, size| {
+        let pool = MemoryPool::new();
+        let mut live = Vec::new();
+        let mut expected_active = 0usize;
+        for _ in 0..size {
+            if rng.f32() < 0.6 || live.is_empty() {
+                let sz = 1 + rng.usize_below(4096);
+                expected_active += MemoryPool::bin_for(sz);
+                live.push(pool.alloc(sz));
+            } else {
+                let i = rng.usize_below(live.len());
+                let blk = live.swap_remove(i);
+                expected_active -= MemoryPool::bin_for(blk.len());
+                drop(blk);
+            }
+            let s = pool.stats();
+            if s.bytes_active != expected_active {
+                return Err(format!(
+                    "active {} != expected {expected_active}",
+                    s.bytes_active
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fusion_preserves_semantics() {
+    // random map-chains evaluate identically fused and unfused
+    let tk = Toolkit::init_ephemeral().unwrap();
+    check("fusion-semantics", &cfg(8), |rng, size| {
+        let depth = 1 + rng.usize_below(3);
+        let n = 8 * (1 + size.min(8));
+        // build map(f_k, … map(f_1, x))
+        let mut body = ast::var("x");
+        for i in 0..depth {
+            let coef = (rng.normal_f32() * 2.0) as i64;
+            let expr = match i % 3 {
+                0 => format!("v * {coef} + 1"),
+                1 => format!("v - {coef}"),
+                _ => "v * v".to_string(),
+            };
+            body = ast::map(
+                ast::Lambda::new(&["v"], &expr).map_err(|e| e.to_string())?,
+                vec![body],
+            );
+        }
+        let p = ast::Program::new(
+            "chain",
+            vec![("x", ast::Kind::Array(DType::F32))],
+            body,
+        );
+        let mut shapes = Shapes::new();
+        shapes.insert("x".into(), vec![n]);
+        let fused = Copperhead::new(tk.clone())
+            .compile(&p, &shapes)
+            .map_err(|e| e.to_string())?;
+        let unfused = Copperhead::without_fusion(tk.clone())
+            .compile(&p, &shapes)
+            .map_err(|e| e.to_string())?;
+        let x = HostArray::f32(vec![n], rng.normal_vec(n));
+        let a = fused.call(&[&x]).map_err(|e| e.to_string())?;
+        let b = unfused.call(&[&x]).map_err(|e| e.to_string())?;
+        rtcg::util::proptest::all_close(
+            a[0].as_f32().map_err(|e| e.to_string())?,
+            b[0].as_f32().map_err(|e| e.to_string())?,
+            1e-4,
+            1e-4,
+        )
+    });
+}
+
+#[test]
+fn prop_fusion_never_increases_nodes() {
+    check("fusion-monotone", &cfg(64), |rng, size| {
+        let p = gen_program(rng, size.min(10));
+        let fused = fuse::fuse_program(&p);
+        if fused.node_count() > p.node_count() {
+            return Err(format!(
+                "fusion grew the AST: {} -> {}",
+                p.node_count(),
+                fused.node_count()
+            ));
+        }
+        Ok(())
+    });
+}
+
+fn gen_program(rng: &mut Rng, depth: usize) -> ast::Program {
+    fn gen_expr(rng: &mut Rng, depth: usize) -> ast::Expr {
+        if depth == 0 || rng.f32() < 0.3 {
+            return ast::var("x");
+        }
+        match rng.usize_below(3) {
+            0 => ast::map(
+                ast::Lambda::new(&["v"], "v + 1").unwrap(),
+                vec![gen_expr(rng, depth - 1)],
+            ),
+            1 => ast::map(
+                ast::Lambda::new(&["v", "w"], "v * w").unwrap(),
+                vec![gen_expr(rng, depth - 1), gen_expr(rng, depth - 1)],
+            ),
+            _ => ast::reduce(ast::ROp::Sum, gen_expr(rng, depth - 1)),
+        }
+    }
+    ast::Program::new(
+        "gen",
+        vec![("x", ast::Kind::Array(DType::F32))],
+        gen_expr(rng, depth),
+    )
+}
+
+#[test]
+fn prop_summary_bounds() {
+    check("summary-bounds", &cfg(64), |rng, size| {
+        let n = 1 + size;
+        let xs: Vec<f64> =
+            (0..n).map(|_| rng.normal_f32() as f64).collect();
+        let s = Summary::of(&xs);
+        if s.min > s.median || s.median > s.max || s.mean < s.min
+            || s.mean > s.max
+        {
+            return Err(format!("ordering violated: {s:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_generated_hlo_agrees_with_host_arithmetic() {
+    // RTCG'd axpy for random n/k agrees with host computation — the
+    // bottom-line invariant of the whole toolkit
+    let tk = Toolkit::init_ephemeral().unwrap();
+    check("rtcg-numerics", &cfg(6), |rng, size| {
+        let n = 4 * (1 + size);
+        let k = (rng.normal_f32() * 3.0) as i64;
+        let src = render(
+            "HloModule p\n\nENTRY main {\n  x = f32[{{ n }}] parameter(0)\n  c = f32[] constant({{ k }})\n  cb = f32[{{ n }}] broadcast(c), dimensions={}\n  ROOT r = f32[{{ n }}] multiply(x, cb)\n}\n",
+            &ctx(vec![("n", (n as i64).into()), ("k", k.into())]),
+        )
+        .map_err(|e| e.to_string())?;
+        let m = tk.source_module(&src).map_err(|e| e.to_string())?;
+        let xv = rng.normal_vec(n);
+        let want: Vec<f32> = xv.iter().map(|v| v * k as f32).collect();
+        let out = m
+            .call(&[&HostArray::f32(vec![n], xv)])
+            .map_err(|e| e.to_string())?;
+        rtcg::util::proptest::all_close(
+            out[0].as_f32().map_err(|e| e.to_string())?,
+            &want,
+            1e-5,
+            1e-5,
+        )
+    });
+}
