@@ -1,11 +1,27 @@
 //! Figure 2 — the compiler-cache workflow: compilation must be orders
 //! of magnitude slower than a cache hit, making generated-code
 //! compilation "a library service that is available cheaply".
+//!
+//! Extended for the unified concurrent cache:
+//!
+//! * **contended hit throughput** — T threads hammering the hot path,
+//!   sharded lock striping vs. a single-`Mutex<HashMap>` baseline
+//!   (the pre-unification design);
+//! * **fused vs. unfused elementwise chain** — one lazy-DAG kernel vs.
+//!   per-operator materialization (ops/sec and kernels launched).
+//!
+//! Results are printed and emitted as `BENCH_fig2_cache.json`.
 
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::{Barrier, Mutex};
 use std::time::Instant;
 
+use rtcg::array::ArrayContext;
 use rtcg::rtcg::template::{ctx, render};
+use rtcg::runtime::HostArray;
 use rtcg::util::bench::fmt_time;
+use rtcg::util::json::Json;
 use rtcg::Toolkit;
 
 const TPL: &str = r#"
@@ -20,10 +36,45 @@ ENTRY main {
 }
 "#;
 
+/// The pre-unification design: one global mutex around the whole map —
+/// every hit serializes.  Kept here as the contended baseline.
+struct SingleMutexCache {
+    map: Mutex<HashMap<String, rtcg::runtime::Executable>>,
+}
+
+impl SingleMutexCache {
+    fn get_or_compile(
+        &self,
+        tk: &Toolkit,
+        source: &str,
+    ) -> rtcg::util::error::Result<rtcg::runtime::Executable> {
+        let key = tk.cache().key_for(source);
+        if let Some(e) = self.map.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let exe = tk.client().compile_hlo_text(source)?;
+        self.map.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+}
+
+fn render_kernel(i: usize) -> String {
+    render(
+        TPL,
+        &ctx(vec![
+            ("tag", (i as i64).into()),
+            ("n", (256 * (i + 1)).into()),
+            ("k", 3.into()),
+        ]),
+    )
+    .expect("template renders")
+}
+
 fn main() -> rtcg::util::error::Result<()> {
     println!("=== Figure 2: compile-cache economics ===\n");
     let tk = Toolkit::init_ephemeral()?;
 
+    // ---- classic single-threaded economics -----------------------------
     let mut compile_total = 0.0;
     let mut hit_total = 0.0;
     let mut render_total = 0.0;
@@ -59,6 +110,172 @@ fn main() -> rtcg::util::error::Result<()> {
     let (hits, _, misses) = tk.cache().stats.snapshot();
     println!("  cache stats           : {hits} hits / {misses} misses");
     assert!(compile / hit > 100.0, "cache no longer pays for itself!");
+
+    // ---- contended hit throughput: sharded vs single mutex -------------
+    println!("\n--- contended hit throughput (single-flight sharded vs single-mutex baseline) ---");
+    let threads = 8usize;
+    let per_thread = 20_000usize;
+    let sources: Vec<String> = (0..16).map(render_kernel).collect();
+
+    // warm both caches so the measurement is pure hit-path
+    let tk_sharded = Toolkit::init_ephemeral()?;
+    for s in &sources {
+        tk_sharded.source_module(s)?;
+    }
+    let baseline = SingleMutexCache { map: Mutex::new(HashMap::new()) };
+    let tk_base = Toolkit::init_ephemeral()?;
+    for s in &sources {
+        baseline.get_or_compile(&tk_base, s)?;
+    }
+
+    let run_contended = |name: &str, lookup: &(dyn Fn(&str) + Sync)| -> f64 {
+        let barrier = Barrier::new(threads);
+        let barrier_ref = &barrier;
+        let sources_ref = &sources;
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                s.spawn(move || {
+                    barrier_ref.wait();
+                    for i in 0..per_thread {
+                        let src =
+                            &sources_ref[(t + i) % sources_ref.len()];
+                        lookup(src);
+                    }
+                });
+            }
+        });
+        let secs = t0.elapsed().as_secs_f64();
+        let ops = (threads * per_thread) as f64 / secs;
+        println!("  {name:<22} {ops:>12.0} hits/s  ({threads} threads)");
+        ops
+    };
+
+    let sharded_ops = run_contended("sharded+single-flight", &|s: &str| {
+        tk_sharded.cache().get_or_compile(s).unwrap();
+    });
+    let mutex_ops = run_contended("single-mutex baseline", &|s: &str| {
+        baseline.get_or_compile(&tk_base, s).unwrap();
+    });
+    let speedup = sharded_ops / mutex_ops;
+    println!("  sharded / baseline     {speedup:>11.2}×");
+
+    // ---- fused vs unfused elementwise chain ----------------------------
+    println!("\n--- fused lazy chain vs per-op materialization (§5.2 temporaries) ---");
+    let n = 65_536usize;
+    let actx = ArrayContext::new(tk_sharded.clone());
+    let x = actx.to_gpu(&HostArray::f32(vec![n], vec![1.5; n]))?;
+    let y = actx.to_gpu(&HostArray::f32(vec![n], vec![0.5; n]))?;
+    let execs = |tk: &Toolkit| {
+        tk.client().stats().executions.load(Ordering::Relaxed)
+    };
+
+    // warm both variants' kernels
+    x.scale(2.0)?.add(&y)?.sub_scalar(1.0)?.mul(&x)?.materialize()?;
+    {
+        let a = x.scale(2.0)?;
+        a.materialize()?;
+        let b = a.add(&y)?;
+        b.materialize()?;
+        let c = b.sub_scalar(1.0)?;
+        c.materialize()?;
+        c.mul(&x)?.materialize()?;
+    }
+
+    let iters = 200usize;
+    let e0 = execs(&tk_sharded);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        x.scale(2.0)?.add(&y)?.sub_scalar(1.0)?.mul(&x)?.materialize()?;
+    }
+    let fused_secs = t0.elapsed().as_secs_f64();
+    let fused_kernels = (execs(&tk_sharded) - e0) as f64 / iters as f64;
+
+    let e0 = execs(&tk_sharded);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let a = x.scale(2.0)?;
+        a.materialize()?;
+        let b = a.add(&y)?;
+        b.materialize()?;
+        let c = b.sub_scalar(1.0)?;
+        c.materialize()?;
+        c.mul(&x)?.materialize()?;
+    }
+    let unfused_secs = t0.elapsed().as_secs_f64();
+    let unfused_kernels = (execs(&tk_sharded) - e0) as f64 / iters as f64;
+
+    let fused_ops = iters as f64 / fused_secs;
+    let unfused_ops = iters as f64 / unfused_secs;
+    println!(
+        "  fused lazy DAG          {:>10.0} evals/s, {fused_kernels:.0} kernel launches/eval",
+        fused_ops
+    );
+    println!(
+        "  per-op materialization  {:>10.0} evals/s, {unfused_kernels:.0} kernel launches/eval",
+        unfused_ops
+    );
+    println!(
+        "  fusion advantage        {:>10.2}× fewer launches: {:.0} → {:.0}",
+        unfused_secs / fused_secs,
+        unfused_kernels,
+        fused_kernels
+    );
+
+    // ---- JSON artifact --------------------------------------------------
+    let cache_snapshot = tk_sharded.cache().snapshot_full();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("fig2_cache")),
+        (
+            "single_thread",
+            Json::obj(vec![
+                ("render_s", Json::num(rend)),
+                ("compile_s", Json::num(compile)),
+                ("hit_s", Json::num(hit)),
+                ("compile_over_hit", Json::num(compile / hit)),
+            ]),
+        ),
+        (
+            "contended",
+            Json::obj(vec![
+                ("threads", Json::num(threads as f64)),
+                ("keys", Json::num(sources.len() as f64)),
+                ("sharded_hits_per_s", Json::num(sharded_ops)),
+                ("single_mutex_hits_per_s", Json::num(mutex_ops)),
+                ("speedup", Json::num(speedup)),
+            ]),
+        ),
+        (
+            "fusion",
+            Json::obj(vec![
+                ("n", Json::num(n as f64)),
+                ("fused_evals_per_s", Json::num(fused_ops)),
+                ("unfused_evals_per_s", Json::num(unfused_ops)),
+                ("fused_kernels_per_eval", Json::num(fused_kernels)),
+                ("unfused_kernels_per_eval", Json::num(unfused_kernels)),
+                (
+                    "speedup",
+                    Json::num(unfused_secs / fused_secs),
+                ),
+            ]),
+        ),
+        (
+            "cache",
+            Json::obj(vec![
+                ("mem_hits", Json::num(cache_snapshot.mem_hits as f64)),
+                ("misses", Json::num(cache_snapshot.misses as f64)),
+                (
+                    "single_flight_waits",
+                    Json::num(cache_snapshot.single_flight_waits as f64),
+                ),
+                ("evictions", Json::num(cache_snapshot.evictions as f64)),
+                ("entries", Json::num(cache_snapshot.entries as f64)),
+                ("bytes", Json::num(cache_snapshot.bytes as f64)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_fig2_cache.json", doc.to_string_pretty())?;
+    println!("\nwrote BENCH_fig2_cache.json");
     println!("\npaper: \"compilation is usually several orders of magnitude more time-consuming than the actual timing run\" — reproduced.");
     Ok(())
 }

@@ -53,10 +53,33 @@ fn main() -> rtcg::util::error::Result<()> {
             .unwrap();
     });
 
-    // operator-overloading composition: 2 temporaries, 3 launches
-    x.scale(5.0)?.add(&y.scale(6.0)?)?; // warm
+    // operator-overloading composition, forced per-op (the §5.2
+    // "temporaries" pattern): 2 temporaries, 3 launches
+    {
+        let t1 = x.scale(5.0)?;
+        t1.materialize()?;
+        let t2 = y.scale(6.0)?;
+        t2.materialize()?;
+        t1.add(&t2)?.materialize()?; // warm
+    }
     let b_temps = bench("gpuarray-temporaries", &opts, || {
-        x.scale(5.0).unwrap().add(&y.scale(6.0).unwrap()).unwrap();
+        let t1 = x.scale(5.0).unwrap();
+        t1.materialize().unwrap();
+        let t2 = y.scale(6.0).unwrap();
+        t2.materialize().unwrap();
+        t1.add(&t2).unwrap().materialize().unwrap();
+    });
+
+    // the lazy array layer with fusion left on: the same expression is
+    // ONE generated kernel — the op DAG erases the temporaries
+    x.scale(5.0)?.add(&y.scale(6.0)?)?.materialize()?; // warm
+    let b_fused = bench("gpuarray-lazy-fused", &opts, || {
+        x.scale(5.0)
+            .unwrap()
+            .add(&y.scale(6.0).unwrap())
+            .unwrap()
+            .materialize()
+            .unwrap();
     });
 
     // AOT Pallas axpy artifact (same math, build-time variant pool);
@@ -67,15 +90,15 @@ fn main() -> rtcg::util::error::Result<()> {
     let client = tk.client();
     let a_d = client.to_device(&HostArray::f32(vec![1], vec![5.0]))?;
     let b_d = client.to_device(&HostArray::f32(vec![1], vec![6.0]))?;
-    let x_d = x.buffer().clone();
-    let y_d = y.buffer().clone();
+    let x_d = x.buffer()?;
+    let y_d = y.buffer()?;
     module.call_buffers(&[&a_d, &x_d, &b_d, &y_d])?; // warm
     let b_aot = bench("aot-pallas-axpy", &opts, || {
         module.call_buffers(&[&a_d, &x_d, &b_d, &y_d]).unwrap();
     });
 
     println!("{:<26} {:>12} {:>14}", "implementation", "per call", "vs kernel");
-    for b in [&b_kernel, &b_temps, &b_aot] {
+    for b in [&b_kernel, &b_temps, &b_fused, &b_aot] {
         println!(
             "{:<26} {:>12} {:>13.2}x",
             b.name,

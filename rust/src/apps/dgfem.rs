@@ -99,6 +99,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "aot-artifacts"),
+        ignore = "needs artifacts/ from `make artifacts` (aot-artifacts feature)"
+    )]
     fn padded_and_exact_variants_agree_with_reference() {
         let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
             .join("artifacts");

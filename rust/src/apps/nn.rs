@@ -91,6 +91,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "aot-artifacts"),
+        ignore = "needs artifacts/ from `make artifacts` (aot-artifacts feature)"
+    )]
     fn kernel_matches_baseline() {
         let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
             .join("artifacts");

@@ -1,18 +1,27 @@
-//! `GpuArray` — the §5.2.1 "numerical arrays on the compute device":
-//! a numpy-flavored device array whose every operation is a *generated*
-//! kernel compiled at run time behind the op cache.
+//! `GpuArray` — the §5.2.1 "numerical arrays on the compute device",
+//! now **lazy**: operators record a small per-element op DAG
+//! (load / literal / unary / binary / cast / broadcast, à la Descent's
+//! per-element kernels) instead of dispatching a kernel per operator.
+//! Materialization fuses the whole expression into **one** generated
+//! kernel, compiled behind the unified `rtcg::cache` and keyed by a
+//! canonical expression descriptor.
 //!
-//! "This array class … offers a complete set of features: elementwise
-//! algebraic operations, a full set of floating-point transcendental as
-//! well as utility functions, type promotion …, reductions such as
-//! sums, maxima, and inner products, and tight integration with numpy."
+//! This is the RTCG answer to §5.2's "proliferation of temporary
+//! variables plaguing abstract, operator-overloading array packages":
+//! `a.scale(2)?.add(&b)?.sub_scalar(1)?.mul(&a)?` lowers to a single
+//! fused kernel and a single launch — no intermediate arrays exist.
 //!
-//! Scalars fused into operations are *baked into the generated code* —
-//! the §4.2 point that hardcoding is free once RTCG is available.
+//! Scalars fused into operations are *baked into the generated code*
+//! (the §4.2 point that hardcoding is free once RTCG is available): the
+//! literal's bits are part of the cache key, so each constant gets its
+//! own specialized kernel.
+//!
+//! Reductions fuse their elementwise prefix: `x.mul(&y)?.sum()` (a dot
+//! product) is one generated kernel ending in a reduce — the producer
+//! map never materializes.
 
-pub mod opcache;
-
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use crate::rtcg::dtype::{promote, DType};
 use crate::rtcg::hlobuild;
@@ -20,34 +29,26 @@ use crate::rtcg::module::Toolkit;
 use crate::runtime::{DeviceBuffer, HostArray};
 use crate::util::error::{Error, Result};
 
-use opcache::OpCache;
-
-/// Shared array-layer context: toolkit + generated-op cache.
+/// Shared array-layer context (the unified compile cache lives in the
+/// toolkit; there is no separate per-layer op cache any more).
 #[derive(Clone)]
 pub struct ArrayContext {
     tk: Toolkit,
-    ops: Arc<OpCache>,
 }
 
 impl ArrayContext {
     pub fn new(tk: Toolkit) -> ArrayContext {
-        ArrayContext { tk, ops: Arc::new(OpCache::new()) }
+        ArrayContext { tk }
     }
 
     pub fn toolkit(&self) -> &Toolkit {
         &self.tk
     }
 
-    pub fn op_cache(&self) -> &OpCache {
-        &self.ops
-    }
-
     /// `pycuda.gpuarray.to_gpu` (Fig 3b).
     pub fn to_gpu(&self, host: &HostArray) -> Result<GpuArray> {
-        Ok(GpuArray {
-            ctx: self.clone(),
-            buf: self.tk.client().to_device(host)?,
-        })
+        let buf = self.tk.client().to_device(host)?;
+        Ok(GpuArray { ctx: self.clone(), node: LazyNode::leaf(buf) })
     }
 
     pub fn zeros(&self, dtype: DType, shape: &[usize]) -> Result<GpuArray> {
@@ -60,256 +61,623 @@ fn shape_sig(dtype: DType, shape: &[usize]) -> String {
     format!("{}[{}]", dtype.name(), dims.join(","))
 }
 
-/// Device-resident n-d array.
+// ---------------------------------------------------------------------------
+// The per-element op DAG
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum UnK {
+    Exp,
+    Log,
+    Sqrt,
+    Rsqrt,
+    Sin,
+    Cos,
+    Tanh,
+    Abs,
+    Neg,
+    Floor,
+    Ceil,
+}
+
+impl UnK {
+    fn name(self) -> &'static str {
+        match self {
+            UnK::Exp => "exp",
+            UnK::Log => "log",
+            UnK::Sqrt => "sqrt",
+            UnK::Rsqrt => "rsqrt",
+            UnK::Sin => "sin",
+            UnK::Cos => "cos",
+            UnK::Tanh => "tanh",
+            UnK::Abs => "abs",
+            UnK::Neg => "neg",
+            UnK::Floor => "floor",
+            UnK::Ceil => "ceil",
+        }
+    }
+
+    fn apply(self, x: &xla::XlaOp) -> Result<xla::XlaOp> {
+        match self {
+            UnK::Exp => x.exp(),
+            UnK::Log => x.log(),
+            UnK::Sqrt => x.sqrt(),
+            UnK::Rsqrt => x.rsqrt(),
+            UnK::Sin => x.sin(),
+            UnK::Cos => x.cos(),
+            UnK::Tanh => x.tanh(),
+            UnK::Abs => x.abs(),
+            UnK::Neg => x.neg(),
+            UnK::Floor => x.floor(),
+            UnK::Ceil => x.ceil(),
+        }
+        .map_err(Into::into)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BinK {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Min,
+    Pow,
+}
+
+impl BinK {
+    fn name(self) -> &'static str {
+        match self {
+            BinK::Add => "add",
+            BinK::Sub => "sub",
+            BinK::Mul => "mul",
+            BinK::Div => "div",
+            BinK::Max => "max",
+            BinK::Min => "min",
+            BinK::Pow => "pow",
+        }
+    }
+
+    fn apply(self, a: &xla::XlaOp, b: &xla::XlaOp) -> Result<xla::XlaOp> {
+        match self {
+            BinK::Add => a.add_(b),
+            BinK::Sub => a.sub_(b),
+            BinK::Mul => a.mul_(b),
+            BinK::Div => a.div_(b),
+            BinK::Max => a.max(b),
+            BinK::Min => a.min(b),
+            BinK::Pow => a.pow(b),
+        }
+        .map_err(Into::into)
+    }
+}
+
+/// One node of the lazy expression DAG (cf. Descent's
+/// `PerElementKernelOp::{Load, Literal, Unary, Binary}`).
+#[derive(Clone)]
+enum Expr {
+    /// scalar constant baked into the generated kernel
+    Lit(f64),
+    Un(UnK, Arc<LazyNode>),
+    Bin(BinK, Arc<LazyNode>, Arc<LazyNode>),
+    /// convert to `self.dtype`
+    Cast(Arc<LazyNode>),
+    /// broadcast a scalar operand to `self.shape`
+    Bcast(Arc<LazyNode>),
+}
+
+/// A node is either a pending expression or a device-resident buffer.
+/// Materialization *replaces* the expression with the buffer, dropping
+/// the child `Arc`s — iterative updates (e.g. CG's `x = x + α·p` per
+/// iteration) therefore release their ancestry instead of pinning an
+/// unbounded chain of intermediate device buffers.
+#[derive(Clone)]
+enum NodeState {
+    Lazy(Expr),
+    Ready(DeviceBuffer),
+}
+
+struct LazyNode {
+    dtype: DType,
+    shape: Vec<usize>,
+    state: Mutex<NodeState>,
+}
+
+impl LazyNode {
+    fn leaf(buf: DeviceBuffer) -> Arc<LazyNode> {
+        Arc::new(LazyNode {
+            dtype: buf.dtype,
+            shape: buf.shape.clone(),
+            state: Mutex::new(NodeState::Ready(buf)),
+        })
+    }
+
+    fn lazy(dtype: DType, shape: Vec<usize>, expr: Expr) -> Arc<LazyNode> {
+        Arc::new(LazyNode {
+            dtype,
+            shape,
+            state: Mutex::new(NodeState::Lazy(expr)),
+        })
+    }
+
+    fn cached(&self) -> Option<DeviceBuffer> {
+        match &*self.state.lock().unwrap() {
+            NodeState::Ready(b) => Some(b.clone()),
+            NodeState::Lazy(_) => None,
+        }
+    }
+
+    /// A consistent point-in-time view (cheap: `Arc`/buffer clones).
+    fn snapshot(&self) -> NodeState {
+        self.state.lock().unwrap().clone()
+    }
+
+    /// Memoize the materialization and release the expression.
+    fn complete(&self, buf: DeviceBuffer) {
+        *self.state.lock().unwrap() = NodeState::Ready(buf);
+    }
+}
+
+/// Coerce a node to (dtype, shape): insert Cast and/or Bcast wrappers.
+fn coerce(
+    node: Arc<LazyNode>,
+    dtype: DType,
+    shape: &[usize],
+) -> Arc<LazyNode> {
+    let node = if node.dtype != dtype {
+        let s = node.shape.clone();
+        LazyNode::lazy(dtype, s, Expr::Cast(node))
+    } else {
+        node
+    };
+    if node.shape != shape {
+        // only scalar → array broadcasts are constructed by callers
+        LazyNode::lazy(dtype, shape.to_vec(), Expr::Bcast(node))
+    } else {
+        node
+    }
+}
+
+/// A frozen fusion plan: canonical descriptor, the fusion leaves
+/// (device-resident inputs), and a point-in-time snapshot of every
+/// interior node's expression.  Snapshotting once makes planning and
+/// lowering immune to a concurrent thread materializing (and thereby
+/// dropping the expression of) a shared sub-DAG in between.
+#[derive(Clone)]
+struct FusionPlan {
+    desc: String,
+    leaves: Vec<Arc<LazyNode>>,
+    exprs: HashMap<usize, Expr>,
+}
+
+fn node_key(node: &Arc<LazyNode>) -> usize {
+    Arc::as_ptr(node) as usize
+}
+
+/// Build the plan for `root`.  A node counts as a leaf when it is
+/// device-resident already (input or previously materialized
+/// intermediate); identical structure + leaf signatures + baked
+/// literals ⇒ identical descriptor ⇒ one compiled kernel.
+fn plan(root: &Arc<LazyNode>) -> FusionPlan {
+    fn walk(node: &Arc<LazyNode>, p: &mut FusionPlan, out: &mut String) {
+        if let Some(i) =
+            p.leaves.iter().position(|l| Arc::ptr_eq(l, node))
+        {
+            out.push_str(&format!("p{i}"));
+            return;
+        }
+        let frozen = p.exprs.get(&node_key(node)).cloned();
+        let expr = match frozen {
+            Some(e) => e, // revisited interior node: frozen view
+            None => match node.snapshot() {
+                NodeState::Ready(_) => {
+                    p.leaves.push(node.clone());
+                    out.push_str(&format!("p{}", p.leaves.len() - 1));
+                    return;
+                }
+                NodeState::Lazy(e) => {
+                    p.exprs.insert(node_key(node), e.clone());
+                    e
+                }
+            },
+        };
+        match &expr {
+            Expr::Lit(v) => {
+                out.push_str(&format!(
+                    "l{}:{:016x}",
+                    node.dtype.name(),
+                    v.to_bits()
+                ));
+            }
+            Expr::Un(op, a) => {
+                out.push_str(op.name());
+                out.push('(');
+                walk(a, p, out);
+                out.push(')');
+            }
+            Expr::Bin(op, a, b) => {
+                out.push_str(op.name());
+                out.push('(');
+                walk(a, p, out);
+                out.push(',');
+                walk(b, p, out);
+                out.push(')');
+            }
+            Expr::Cast(a) => {
+                out.push_str(&format!("cast_{}(", node.dtype.name()));
+                walk(a, p, out);
+                out.push(')');
+            }
+            Expr::Bcast(a) => {
+                out.push_str("bc(");
+                walk(a, p, out);
+                out.push(')');
+            }
+        }
+    }
+    let mut p = FusionPlan {
+        desc: String::new(),
+        leaves: Vec::new(),
+        exprs: HashMap::new(),
+    };
+    let mut body = String::new();
+    walk(root, &mut p, &mut body);
+    let sig: Vec<String> = p
+        .leaves
+        .iter()
+        .map(|l| shape_sig(l.dtype, &l.shape))
+        .collect();
+    p.desc = format!(
+        "{}->{}|{}",
+        sig.join(";"),
+        shape_sig(root.dtype, &root.shape),
+        body
+    );
+    p
+}
+
+/// Reduction kind appended after the fused elementwise prefix.
+#[derive(Debug, Clone, Copy)]
+enum ReduceK {
+    Sum,
+    Max,
+    Min,
+}
+
+impl ReduceK {
+    fn name(self) -> &'static str {
+        match self {
+            ReduceK::Sum => "sum",
+            ReduceK::Max => "max",
+            ReduceK::Min => "min",
+        }
+    }
+}
+
+fn build_fused(
+    builder_name: &str,
+    root: &Arc<LazyNode>,
+    plan: &FusionPlan,
+    reduce: Option<ReduceK>,
+) -> Result<xla::XlaComputation> {
+    let b = xla::XlaBuilder::new(builder_name);
+    let mut params = Vec::with_capacity(plan.leaves.len());
+    for (i, l) in plan.leaves.iter().enumerate() {
+        params.push(hlobuild::param(
+            &b,
+            i as i64,
+            l.dtype,
+            &l.shape,
+            &format!("p{i}"),
+        )?);
+    }
+    let out = lower(&b, root, plan, &params)?;
+    let out = match reduce {
+        None => out,
+        Some(k) => {
+            let dims: Vec<i64> = (0..root.shape.len() as i64).collect();
+            match k {
+                ReduceK::Sum => out.reduce_sum(&dims, false)?,
+                ReduceK::Max => out.reduce_max(&dims, false)?,
+                ReduceK::Min => out.reduce_min(&dims, false)?,
+            }
+        }
+    };
+    out.build().map_err(Into::into)
+}
+
+/// Lower a planned DAG node onto the builder (strategy (c) of §5.3,
+/// driven by the recorded expression instead of user code).
+fn lower(
+    b: &xla::XlaBuilder,
+    node: &Arc<LazyNode>,
+    plan: &FusionPlan,
+    params: &[xla::XlaOp],
+) -> Result<xla::XlaOp> {
+    if let Some(i) = plan.leaves.iter().position(|l| Arc::ptr_eq(l, node)) {
+        return Ok(params[i].clone());
+    }
+    let expr = plan
+        .exprs
+        .get(&node_key(node))
+        .ok_or_else(|| Error::msg("node missing from fusion plan"))?;
+    match expr {
+        Expr::Lit(v) => hlobuild::constant(b, node.dtype, *v),
+        Expr::Un(op, a) => op.apply(&lower(b, a, plan, params)?),
+        Expr::Bin(op, x, y) => op.apply(
+            &lower(b, x, plan, params)?,
+            &lower(b, y, plan, params)?,
+        ),
+        Expr::Cast(a) => lower(b, a, plan, params)?
+            .convert(node.dtype.to_primitive_type())
+            .map_err(Into::into),
+        Expr::Bcast(a) => {
+            let x = lower(b, a, plan, params)?;
+            hlobuild::broadcast_scalar(&x, &node.shape)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GpuArray
+// ---------------------------------------------------------------------------
+
+/// Device-resident (or lazily defined) n-d array.
 #[derive(Clone)]
 pub struct GpuArray {
     ctx: ArrayContext,
-    buf: DeviceBuffer,
+    node: Arc<LazyNode>,
 }
 
 impl GpuArray {
     pub fn shape(&self) -> &[usize] {
-        &self.buf.shape
+        &self.node.shape
     }
 
     pub fn dtype(&self) -> DType {
-        self.buf.dtype
+        self.node.dtype
     }
 
     pub fn len(&self) -> usize {
-        self.buf.len()
+        self.node.shape.iter().product()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.buf.is_empty()
+        self.len() == 0
     }
 
     pub fn context(&self) -> &ArrayContext {
         &self.ctx
     }
 
-    pub fn buffer(&self) -> &DeviceBuffer {
-        &self.buf
-    }
-
     pub fn from_buffer(ctx: &ArrayContext, buf: DeviceBuffer) -> GpuArray {
-        GpuArray { ctx: ctx.clone(), buf }
+        GpuArray { ctx: ctx.clone(), node: LazyNode::leaf(buf) }
     }
 
-    /// `.get()` — fetch to host (Fig 3b).
+    /// Whether this array is device-resident (materialized) already.
+    pub fn is_materialized(&self) -> bool {
+        self.node.cached().is_some()
+    }
+
+    /// Shared materialization pipeline: plan the DAG, compile the fused
+    /// kernel behind the unified cache (keyed by canonical descriptor),
+    /// launch once over the leaf buffers.  `reduce: None` memoizes the
+    /// result on the node (and releases its expression).
+    fn run_fused(&self, reduce: Option<ReduceK>) -> Result<DeviceBuffer> {
+        if reduce.is_none() {
+            if let Some(b) = self.node.cached() {
+                return Ok(b);
+            }
+        }
+        let plan = plan(&self.node);
+        let key = match reduce {
+            None => format!("fuse|{}", plan.desc),
+            Some(k) => format!("fuse|{}|reduce-{}", plan.desc, k.name()),
+        };
+        let root = self.node.clone();
+        let plan_for_build = plan.clone();
+        let exe = self.ctx.tk.cache().get_or_build(&key, move || {
+            build_fused("fused", &root, &plan_for_build, reduce)
+        })?;
+        let bufs: Vec<DeviceBuffer> = plan
+            .leaves
+            .iter()
+            .map(|l| {
+                l.cached().ok_or_else(|| {
+                    Error::msg("fusion leaf lost its device buffer")
+                })
+            })
+            .collect::<Result<_>>()?;
+        let refs: Vec<&DeviceBuffer> = bufs.iter().collect();
+        let out = exe
+            .run_buffers(&refs)?
+            .into_iter()
+            .next()
+            .ok_or_else(|| Error::msg("fused kernel produced no output"))?;
+        if reduce.is_none() {
+            self.node.complete(out.clone());
+        }
+        Ok(out)
+    }
+
+    /// Materialize the expression: fuse the whole DAG into one
+    /// generated kernel (compiled behind the unified cache), launch it
+    /// once, and memoize the resulting device buffer.
+    pub fn buffer(&self) -> Result<DeviceBuffer> {
+        self.run_fused(None)
+    }
+
+    /// Force materialization, discarding the buffer handle.
+    pub fn materialize(&self) -> Result<()> {
+        self.buffer().map(|_| ())
+    }
+
+    /// `.get()` — materialize + fetch to host (Fig 3b).
     pub fn get(&self) -> Result<HostArray> {
-        self.buf.to_host()
+        self.buffer()?.to_host()
     }
 
-    // ---------------- elementwise binary -------------------------------
+    // ---------------- elementwise binary (lazy) ------------------------
 
-    fn binary(&self, name: &str, op_build: BinFn, rhs: &GpuArray) -> Result<GpuArray> {
+    fn binary(&self, op: BinK, rhs: &GpuArray) -> Result<GpuArray> {
         let (ls, rs) = (self.shape(), rhs.shape());
         let compatible = ls == rs || ls.is_empty() || rs.is_empty();
         if !compatible {
             return Err(Error::msg(format!(
-                "shape mismatch in {name}: {ls:?} vs {rs:?}"
+                "shape mismatch in {}: {ls:?} vs {rs:?}",
+                op.name()
             )));
         }
         let out_dtype = promote(self.dtype(), rhs.dtype());
         let out_shape: Vec<usize> =
             if ls.is_empty() { rs.to_vec() } else { ls.to_vec() };
-        let key = format!(
-            "{name}|{}|{}",
-            shape_sig(self.dtype(), ls),
-            shape_sig(rhs.dtype(), rs)
-        );
-        let (lsv, rsv) = (ls.to_vec(), rs.to_vec());
-        let (ld, rd) = (self.dtype(), rhs.dtype());
-        let osv = out_shape.clone();
-        let exe = self.ctx.ops.get_or_build(&self.ctx.tk, &key, move || {
-            let b = xla::XlaBuilder::new(name);
-            let mut p0 = hlobuild::param(&b, 0, ld, &lsv, "lhs")?;
-            let mut p1 = hlobuild::param(&b, 1, rd, &rsv, "rhs")?;
-            if ld != out_dtype {
-                p0 = p0.convert(out_dtype.to_primitive_type())?;
-            }
-            if rd != out_dtype {
-                p1 = p1.convert(out_dtype.to_primitive_type())?;
-            }
-            if lsv.is_empty() && !osv.is_empty() {
-                p0 = hlobuild::broadcast_scalar(&p0, &osv)?;
-            }
-            if rsv.is_empty() && !osv.is_empty() {
-                p1 = hlobuild::broadcast_scalar(&p1, &osv)?;
-            }
-            op_build(&p0, &p1)?.build().map_err(Into::into)
-        })?;
-        let outs = exe.run_buffers(&[&self.buf, &rhs.buf])?;
-        Ok(GpuArray { ctx: self.ctx.clone(), buf: outs.into_iter().next().unwrap() })
+        let l = coerce(self.node.clone(), out_dtype, &out_shape);
+        let r = coerce(rhs.node.clone(), out_dtype, &out_shape);
+        Ok(GpuArray {
+            ctx: self.ctx.clone(),
+            node: LazyNode::lazy(out_dtype, out_shape, Expr::Bin(op, l, r)),
+        })
     }
 
     pub fn add(&self, rhs: &GpuArray) -> Result<GpuArray> {
-        self.binary("add", |a, b| a.add_(b).map_err(Into::into), rhs)
+        self.binary(BinK::Add, rhs)
     }
     pub fn sub(&self, rhs: &GpuArray) -> Result<GpuArray> {
-        self.binary("sub", |a, b| a.sub_(b).map_err(Into::into), rhs)
+        self.binary(BinK::Sub, rhs)
     }
     pub fn mul(&self, rhs: &GpuArray) -> Result<GpuArray> {
-        self.binary("mul", |a, b| a.mul_(b).map_err(Into::into), rhs)
+        self.binary(BinK::Mul, rhs)
     }
     pub fn div(&self, rhs: &GpuArray) -> Result<GpuArray> {
-        self.binary("div", |a, b| a.div_(b).map_err(Into::into), rhs)
+        self.binary(BinK::Div, rhs)
     }
     pub fn maximum(&self, rhs: &GpuArray) -> Result<GpuArray> {
-        self.binary("max", |a, b| a.max(b).map_err(Into::into), rhs)
+        self.binary(BinK::Max, rhs)
     }
     pub fn minimum(&self, rhs: &GpuArray) -> Result<GpuArray> {
-        self.binary("min", |a, b| a.min(b).map_err(Into::into), rhs)
+        self.binary(BinK::Min, rhs)
     }
     pub fn pow(&self, rhs: &GpuArray) -> Result<GpuArray> {
-        self.binary("pow", |a, b| a.pow(b).map_err(Into::into), rhs)
+        self.binary(BinK::Pow, rhs)
     }
 
     // ---------------- fused scalar ops (constants baked in) ------------
 
-    fn scalar_op(&self, name: &str, v: f64, op_build: BinFn) -> Result<GpuArray> {
-        let key = format!(
-            "{name}#{v}|{}",
-            shape_sig(self.dtype(), self.shape())
-        );
-        let (sv, dt) = (self.shape().to_vec(), self.dtype());
-        let exe = self.ctx.ops.get_or_build(&self.ctx.tk, &key, move || {
-            let b = xla::XlaBuilder::new(name);
-            let p = hlobuild::param(&b, 0, dt, &sv, "x")?;
-            let cdt = if dt.is_float() { dt } else { DType::F64 };
-            let mut c = hlobuild::constant(&b, cdt, v)?;
-            let p = if cdt != dt {
-                p.convert(cdt.to_primitive_type())?
-            } else {
-                p
-            };
-            if !sv.is_empty() {
-                c = hlobuild::broadcast_scalar(&c, &sv)?;
-            }
-            op_build(&p, &c)?.build().map_err(Into::into)
-        })?;
-        let outs = exe.run_buffers(&[&self.buf])?;
-        Ok(GpuArray { ctx: self.ctx.clone(), buf: outs.into_iter().next().unwrap() })
+    fn scalar_op(&self, op: BinK, v: f64) -> Result<GpuArray> {
+        let dt = self.dtype();
+        // int arrays compute against float literals in f64 (old
+        // OpCache-era semantics, the §5.2.1 promotion example)
+        let cdt = if dt.is_float() { dt } else { DType::F64 };
+        let shape = self.shape().to_vec();
+        let lhs = coerce(self.node.clone(), cdt, &shape);
+        let lit = LazyNode::lazy(cdt, vec![], Expr::Lit(v));
+        let rhs = coerce(lit, cdt, &shape);
+        Ok(GpuArray {
+            ctx: self.ctx.clone(),
+            node: LazyNode::lazy(cdt, shape, Expr::Bin(op, lhs, rhs)),
+        })
     }
 
     /// `2 * a` from Fig 3b — the constant is compiled into the kernel.
     pub fn scale(&self, k: f64) -> Result<GpuArray> {
-        self.scalar_op("smul", k, |a, b| a.mul_(b).map_err(Into::into))
+        self.scalar_op(BinK::Mul, k)
     }
     pub fn add_scalar(&self, k: f64) -> Result<GpuArray> {
-        self.scalar_op("sadd", k, |a, b| a.add_(b).map_err(Into::into))
+        self.scalar_op(BinK::Add, k)
     }
     pub fn sub_scalar(&self, k: f64) -> Result<GpuArray> {
-        self.scalar_op("ssub", k, |a, b| a.sub_(b).map_err(Into::into))
+        self.scalar_op(BinK::Sub, k)
     }
     pub fn div_scalar(&self, k: f64) -> Result<GpuArray> {
-        self.scalar_op("sdiv", k, |a, b| a.div_(b).map_err(Into::into))
+        self.scalar_op(BinK::Div, k)
     }
 
-    // ---------------- unary math ----------------------------------------
+    // ---------------- unary math (lazy) --------------------------------
 
-    fn unary(&self, name: &str, op_build: UnFn) -> Result<GpuArray> {
-        let key =
-            format!("{name}|{}", shape_sig(self.dtype(), self.shape()));
-        let (sv, dt) = (self.shape().to_vec(), self.dtype());
-        let exe = self.ctx.ops.get_or_build(&self.ctx.tk, &key, move || {
-            let b = xla::XlaBuilder::new(name);
-            let p = hlobuild::param(&b, 0, dt, &sv, "x")?;
-            op_build(&p)?.build().map_err(Into::into)
-        })?;
-        let outs = exe.run_buffers(&[&self.buf])?;
-        Ok(GpuArray { ctx: self.ctx.clone(), buf: outs.into_iter().next().unwrap() })
+    fn unary(&self, op: UnK) -> Result<GpuArray> {
+        Ok(GpuArray {
+            ctx: self.ctx.clone(),
+            node: LazyNode::lazy(
+                self.dtype(),
+                self.shape().to_vec(),
+                Expr::Un(op, self.node.clone()),
+            ),
+        })
     }
 
     pub fn exp(&self) -> Result<GpuArray> {
-        self.unary("exp", |a| a.exp().map_err(Into::into))
+        self.unary(UnK::Exp)
     }
     pub fn log(&self) -> Result<GpuArray> {
-        self.unary("log", |a| a.log().map_err(Into::into))
+        self.unary(UnK::Log)
     }
     pub fn sqrt(&self) -> Result<GpuArray> {
-        self.unary("sqrt", |a| a.sqrt().map_err(Into::into))
+        self.unary(UnK::Sqrt)
     }
     pub fn rsqrt(&self) -> Result<GpuArray> {
-        self.unary("rsqrt", |a| a.rsqrt().map_err(Into::into))
+        self.unary(UnK::Rsqrt)
     }
     pub fn sin(&self) -> Result<GpuArray> {
-        self.unary("sin", |a| a.sin().map_err(Into::into))
+        self.unary(UnK::Sin)
     }
     pub fn cos(&self) -> Result<GpuArray> {
-        self.unary("cos", |a| a.cos().map_err(Into::into))
+        self.unary(UnK::Cos)
     }
     pub fn tanh(&self) -> Result<GpuArray> {
-        self.unary("tanh", |a| a.tanh().map_err(Into::into))
+        self.unary(UnK::Tanh)
     }
     pub fn abs(&self) -> Result<GpuArray> {
-        self.unary("abs", |a| a.abs().map_err(Into::into))
+        self.unary(UnK::Abs)
     }
     pub fn neg(&self) -> Result<GpuArray> {
-        self.unary("neg", |a| a.neg().map_err(Into::into))
+        self.unary(UnK::Neg)
     }
     pub fn floor(&self) -> Result<GpuArray> {
-        self.unary("floor", |a| a.floor().map_err(Into::into))
+        self.unary(UnK::Floor)
     }
     pub fn ceil(&self) -> Result<GpuArray> {
-        self.unary("ceil", |a| a.ceil().map_err(Into::into))
+        self.unary(UnK::Ceil)
     }
 
-    /// Type conversion (`astype`).
+    /// Type conversion (`astype`) — a lazy, fusable cast.
     pub fn astype(&self, dtype: DType) -> Result<GpuArray> {
         if dtype == self.dtype() {
             return Ok(self.clone());
         }
-        let key = format!(
-            "cast-{}|{}",
-            dtype.name(),
-            shape_sig(self.dtype(), self.shape())
-        );
-        let (sv, dt) = (self.shape().to_vec(), self.dtype());
-        let exe = self.ctx.ops.get_or_build(&self.ctx.tk, &key, move || {
-            let b = xla::XlaBuilder::new("cast");
-            let p = hlobuild::param(&b, 0, dt, &sv, "x")?;
-            p.convert(dtype.to_primitive_type())?
-                .build()
-                .map_err(Into::into)
-        })?;
-        let outs = exe.run_buffers(&[&self.buf])?;
-        Ok(GpuArray { ctx: self.ctx.clone(), buf: outs.into_iter().next().unwrap() })
+        Ok(GpuArray {
+            ctx: self.ctx.clone(),
+            node: LazyNode::lazy(
+                dtype,
+                self.shape().to_vec(),
+                Expr::Cast(self.node.clone()),
+            ),
+        })
     }
 
-    // ---------------- reductions ----------------------------------------
+    // ---------------- reductions (fuse the elementwise prefix) ---------
 
-    fn reduce_all(&self, name: &str, op_build: ReduceFn) -> Result<GpuArray> {
-        let key =
-            format!("{name}|{}", shape_sig(self.dtype(), self.shape()));
-        let (sv, dt) = (self.shape().to_vec(), self.dtype());
-        let rank = sv.len() as i64;
-        let exe = self.ctx.ops.get_or_build(&self.ctx.tk, &key, move || {
-            let b = xla::XlaBuilder::new(name);
-            let p = hlobuild::param(&b, 0, dt, &sv, "x")?;
-            let dims: Vec<i64> = (0..rank).collect();
-            op_build(&p, &dims)?.build().map_err(Into::into)
-        })?;
-        let outs = exe.run_buffers(&[&self.buf])?;
-        Ok(GpuArray { ctx: self.ctx.clone(), buf: outs.into_iter().next().unwrap() })
+    fn reduce_all(&self, kind: ReduceK) -> Result<GpuArray> {
+        let out = self.run_fused(Some(kind))?;
+        Ok(GpuArray::from_buffer(&self.ctx, out))
     }
 
     pub fn sum(&self) -> Result<GpuArray> {
-        self.reduce_all("sum", |a, d| a.reduce_sum(d, false).map_err(Into::into))
+        self.reduce_all(ReduceK::Sum)
     }
     pub fn max_reduce(&self) -> Result<GpuArray> {
-        self.reduce_all("rmax", |a, d| a.reduce_max(d, false).map_err(Into::into))
+        self.reduce_all(ReduceK::Max)
     }
     pub fn min_reduce(&self) -> Result<GpuArray> {
-        self.reduce_all("rmin", |a, d| a.reduce_min(d, false).map_err(Into::into))
+        self.reduce_all(ReduceK::Min)
     }
     pub fn mean(&self) -> Result<GpuArray> {
         let n = self.len() as f64;
         self.sum()?.div_scalar(n)
     }
 
-    /// Inner product (the §5.2.1 reduction family).
+    /// Inner product (§5.2.1 reduction family): the multiply fuses into
+    /// the reduction kernel — one launch, no temporary.
     pub fn dot(&self, rhs: &GpuArray) -> Result<GpuArray> {
         if self.shape() != rhs.shape() || self.shape().len() != 1 {
             return Err(Error::msg(format!(
@@ -318,30 +686,7 @@ impl GpuArray {
                 rhs.shape()
             )));
         }
-        let key = format!(
-            "dot|{}|{}",
-            shape_sig(self.dtype(), self.shape()),
-            shape_sig(rhs.dtype(), rhs.shape())
-        );
-        let (sv, ld, rd) = (self.shape().to_vec(), self.dtype(), rhs.dtype());
-        let out_dtype = promote(ld, rd);
-        let exe = self.ctx.ops.get_or_build(&self.ctx.tk, &key, move || {
-            let b = xla::XlaBuilder::new("dot");
-            let mut p0 = hlobuild::param(&b, 0, ld, &sv, "x")?;
-            let mut p1 = hlobuild::param(&b, 1, rd, &sv, "y")?;
-            if ld != out_dtype {
-                p0 = p0.convert(out_dtype.to_primitive_type())?;
-            }
-            if rd != out_dtype {
-                p1 = p1.convert(out_dtype.to_primitive_type())?;
-            }
-            p0.mul_(&p1)?
-                .reduce_sum(&[0], false)?
-                .build()
-                .map_err(Into::into)
-        })?;
-        let outs = exe.run_buffers(&[&self.buf, &rhs.buf])?;
-        Ok(GpuArray { ctx: self.ctx.clone(), buf: outs.into_iter().next().unwrap() })
+        self.binary(BinK::Mul, rhs)?.sum()
     }
 
     /// Squared L2 norm.
@@ -355,13 +700,10 @@ impl GpuArray {
     }
 }
 
-type BinFn = fn(&xla::XlaOp, &xla::XlaOp) -> Result<xla::XlaOp>;
-type UnFn = fn(&xla::XlaOp) -> Result<xla::XlaOp>;
-type ReduceFn = fn(&xla::XlaOp, &[i64]) -> Result<xla::XlaOp>;
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::Ordering;
 
     fn ctx() -> ArrayContext {
         ArrayContext::new(Toolkit::init_ephemeral().unwrap())
@@ -369,6 +711,14 @@ mod tests {
 
     fn arr(c: &ArrayContext, v: Vec<f32>) -> GpuArray {
         c.to_gpu(&HostArray::f32(vec![v.len()], v)).unwrap()
+    }
+
+    fn execs(c: &ArrayContext) -> u64 {
+        c.toolkit().client().stats().executions.load(Ordering::Relaxed)
+    }
+
+    fn compiles(c: &ArrayContext) -> u64 {
+        c.toolkit().client().stats().compiles.load(Ordering::Relaxed)
     }
 
     #[test]
@@ -400,6 +750,64 @@ mod tests {
             b.div(&a).unwrap().get().unwrap().as_f32().unwrap(),
             &[10., 10., 10.]
         );
+    }
+
+    #[test]
+    fn ops_are_lazy_until_materialized() {
+        let c = ctx();
+        let a = arr(&c, vec![1.0; 8]);
+        let b = arr(&c, vec![2.0; 8]);
+        let before = execs(&c);
+        let chain = a.add(&b).unwrap().scale(3.0).unwrap();
+        assert_eq!(execs(&c), before, "no kernel before materialization");
+        assert!(!chain.is_materialized());
+        chain.get().unwrap();
+        assert!(chain.is_materialized());
+        assert_eq!(execs(&c), before + 1);
+    }
+
+    #[test]
+    fn four_op_chain_fuses_into_one_kernel() {
+        // the §5.2 claim, measured: a 4-operator expression is ONE
+        // generated kernel and ONE launch (was 4 + temporaries)
+        let c = ctx();
+        let x = arr(&c, vec![1.0, 2.0, 3.0, 4.0]);
+        let y = arr(&c, vec![10.0, 20.0, 30.0, 40.0]);
+        let e0 = execs(&c);
+        let k0 = compiles(&c);
+        let out = x
+            .scale(2.0)
+            .unwrap()
+            .add(&y)
+            .unwrap()
+            .sub_scalar(1.0)
+            .unwrap()
+            .mul(&x)
+            .unwrap();
+        let host = out.get().unwrap();
+        assert_eq!(execs(&c) - e0, 1, "exactly one kernel launch");
+        assert_eq!(compiles(&c) - k0, 1, "exactly one generated kernel");
+        // (2x + y - 1) * x
+        let want: Vec<f32> = [1.0f32, 2.0, 3.0, 4.0]
+            .iter()
+            .zip([10.0f32, 20.0, 30.0, 40.0].iter())
+            .map(|(&x, &y)| (2.0 * x + y - 1.0) * x)
+            .collect();
+        assert_eq!(host.as_f32().unwrap(), want.as_slice());
+    }
+
+    #[test]
+    fn repeated_expressions_hit_the_unified_cache() {
+        let c = ctx();
+        let a = arr(&c, vec![1.0; 8]);
+        let b = arr(&c, vec![2.0; 8]);
+        let (h0, _, m0) = c.toolkit().cache().stats.snapshot();
+        a.add(&b).unwrap().get().unwrap();
+        a.add(&b).unwrap().get().unwrap();
+        a.add(&b).unwrap().get().unwrap();
+        let (h1, _, m1) = c.toolkit().cache().stats.snapshot();
+        assert_eq!(m1 - m0, 1, "one compile for the repeated expression");
+        assert_eq!(h1 - h0, 2, "later evaluations are cache hits");
     }
 
     #[test]
@@ -439,16 +847,13 @@ mod tests {
     }
 
     #[test]
-    fn op_cache_reuses_generated_kernels() {
+    fn dot_fuses_multiply_into_reduction() {
         let c = ctx();
-        let a = arr(&c, vec![1.0; 8]);
-        let b = arr(&c, vec![2.0; 8]);
-        a.add(&b).unwrap();
-        a.add(&b).unwrap();
-        a.add(&b).unwrap();
-        use std::sync::atomic::Ordering;
-        assert_eq!(c.op_cache().misses.load(Ordering::Relaxed), 1);
-        assert_eq!(c.op_cache().hits.load(Ordering::Relaxed), 2);
+        let a = arr(&c, vec![1.0, 2.0, 3.0]);
+        let b = arr(&c, vec![4.0, 5.0, 6.0]);
+        let e0 = execs(&c);
+        assert_eq!(a.dot(&b).unwrap().item().unwrap(), 32.0);
+        assert_eq!(execs(&c) - e0, 1, "dot = one fused map+reduce launch");
     }
 
     #[test]
@@ -499,5 +904,18 @@ mod tests {
             .to_gpu(&HostArray::f32(vec![2, 2], vec![1., 2., 3., 4.]))
             .unwrap();
         assert_eq!(a.mean().unwrap().item().unwrap(), 2.5);
+    }
+
+    #[test]
+    fn materialized_intermediates_become_fusion_leaves() {
+        let c = ctx();
+        let x = arr(&c, vec![1.0, 2.0]);
+        let mid = x.scale(3.0).unwrap();
+        mid.materialize().unwrap();
+        let e0 = execs(&c);
+        // consumer built after mid was forced: mid is a leaf, one launch
+        let out = mid.add_scalar(1.0).unwrap();
+        assert_eq!(out.get().unwrap().as_f32().unwrap(), &[4.0, 7.0]);
+        assert_eq!(execs(&c) - e0, 1);
     }
 }

@@ -1,8 +1,12 @@
 //! Coordinator metrics — the §5 run-time services (timing, counters)
-//! surfaced at system level.
+//! surfaced at system level, including the unified compile-cache
+//! counters (Fig 2 economics as a live observable: hit ratio,
+//! single-flight dedup, eviction pressure).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
+
+use crate::rtcg::cache::CacheSnapshot;
 
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -13,6 +17,15 @@ pub struct Metrics {
     pub errors: AtomicU64,
     pub busy_ns: AtomicU64,
     pub queue_wait_ns: AtomicU64,
+    // mirror of the unified compile cache (refreshed by the service
+    // loop; the cache itself lives on the service thread)
+    cache_mem_hits: AtomicU64,
+    cache_disk_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    cache_single_flight_waits: AtomicU64,
+    cache_evictions: AtomicU64,
+    cache_entries: AtomicU64,
+    cache_bytes: AtomicU64,
 }
 
 /// A point-in-time copy for reporting.
@@ -25,6 +38,8 @@ pub struct Snapshot {
     pub errors: u64,
     pub busy_ms: f64,
     pub queue_wait_ms: f64,
+    /// unified compile-cache counters (see `rtcg::cache`)
+    pub cache: CacheSnapshot,
 }
 
 impl Metrics {
@@ -40,6 +55,18 @@ impl Metrics {
         out
     }
 
+    /// Refresh the cache mirror from a fresh [`CacheSnapshot`].
+    pub fn update_cache(&self, s: &CacheSnapshot) {
+        self.cache_mem_hits.store(s.mem_hits, Ordering::Relaxed);
+        self.cache_disk_hits.store(s.disk_hits, Ordering::Relaxed);
+        self.cache_misses.store(s.misses, Ordering::Relaxed);
+        self.cache_single_flight_waits
+            .store(s.single_flight_waits, Ordering::Relaxed);
+        self.cache_evictions.store(s.evictions, Ordering::Relaxed);
+        self.cache_entries.store(s.entries, Ordering::Relaxed);
+        self.cache_bytes.store(s.bytes, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         Snapshot {
             requests: self.requests.load(Ordering::Relaxed),
@@ -51,6 +78,17 @@ impl Metrics {
             queue_wait_ms: self.queue_wait_ns.load(Ordering::Relaxed)
                 as f64
                 / 1e6,
+            cache: CacheSnapshot {
+                mem_hits: self.cache_mem_hits.load(Ordering::Relaxed),
+                disk_hits: self.cache_disk_hits.load(Ordering::Relaxed),
+                misses: self.cache_misses.load(Ordering::Relaxed),
+                single_flight_waits: self
+                    .cache_single_flight_waits
+                    .load(Ordering::Relaxed),
+                evictions: self.cache_evictions.load(Ordering::Relaxed),
+                entries: self.cache_entries.load(Ordering::Relaxed),
+                bytes: self.cache_bytes.load(Ordering::Relaxed),
+            },
         }
     }
 }
@@ -71,5 +109,21 @@ mod tests {
         assert_eq!(s.requests, 2);
         assert_eq!(s.errors, 1);
         assert!(s.busy_ms >= 0.0);
+    }
+
+    #[test]
+    fn cache_mirror_roundtrips() {
+        let m = Metrics::default();
+        let cs = CacheSnapshot {
+            mem_hits: 7,
+            disk_hits: 1,
+            misses: 2,
+            single_flight_waits: 3,
+            evictions: 1,
+            entries: 2,
+            bytes: 9000,
+        };
+        m.update_cache(&cs);
+        assert_eq!(m.snapshot().cache, cs);
     }
 }

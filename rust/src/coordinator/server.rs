@@ -154,7 +154,13 @@ fn handle(
 ) -> Response {
     match req {
         Request::Shutdown => Response::ShuttingDown,
-        Request::Stats => Response::Stats(metrics.snapshot()),
+        Request::Stats => {
+            // refresh the unified compile-cache mirror (rtcg::cache) on
+            // demand only — snapshot_full() walks every shard lock, too
+            // costly to pay on the Launch/Tune hot path
+            metrics.update_cache(&registry.toolkit().cache().snapshot_full());
+            Response::Stats(metrics.snapshot())
+        }
         Request::Launch { kernel, workload, variant, inputs } => {
             metrics.note(&metrics.launches);
             let r = (|| -> Result<Vec<crate::runtime::HostArray>> {
@@ -269,6 +275,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "aot-artifacts"),
+        ignore = "needs artifacts/ from `make artifacts` (aot-artifacts feature)"
+    )]
     fn launch_axpy_through_service() {
         let c = start();
         let n = 524288;
@@ -293,6 +303,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "aot-artifacts"),
+        ignore = "needs artifacts/ from `make artifacts` (aot-artifacts feature)"
+    )]
     fn run_source_service() {
         let c = start();
         let hlo = r#"
@@ -314,6 +328,10 @@ ENTRY main {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "aot-artifacts"),
+        ignore = "needs artifacts/ from `make artifacts` (aot-artifacts feature)"
+    )]
     fn errors_are_responses_not_crashes() {
         let c = start();
         let r = c.submit(Request::Launch {

@@ -1,13 +1,12 @@
 //! Copperhead backend: lower the (fused) data-parallel AST to HLO via
-//! `XlaBuilder`, compile through the op cache, and hand back a callable
-//! — "an embedded source-to-source compiler creates [device] code which
-//! implements the desired computation, which is then compiled and
-//! executed" (§6.3).
+//! `XlaBuilder`, compile through the **unified** `rtcg::cache`
+//! (descriptor-keyed, single-flighted, shared with every other
+//! generated-code surface), and hand back a callable — "an embedded
+//! source-to-source compiler creates [device] code which implements the
+//! desired computation, which is then compiled and executed" (§6.3).
 
 use std::collections::BTreeMap;
-use std::sync::Arc;
 
-use crate::array::opcache::OpCache;
 use crate::copperhead::ast::{Expr, Kind, Program, ROp};
 use crate::copperhead::fuse::fuse_program;
 use crate::copperhead::types::{infer_all, Shapes, Ty};
@@ -23,21 +22,21 @@ use crate::util::hash::digest_hex;
 #[derive(Clone)]
 pub struct Copperhead {
     tk: Toolkit,
-    cache: Arc<OpCache>,
     pub fusion: bool,
 }
 
 impl Copperhead {
     pub fn new(tk: Toolkit) -> Copperhead {
-        Copperhead { tk, cache: Arc::new(OpCache::new()), fusion: true }
+        Copperhead { tk, fusion: true }
     }
 
     pub fn without_fusion(tk: Toolkit) -> Copperhead {
-        Copperhead { tk, cache: Arc::new(OpCache::new()), fusion: false }
+        Copperhead { tk, fusion: false }
     }
 
-    pub fn cache(&self) -> &OpCache {
-        &self.cache
+    /// The unified compile cache this compiler feeds into.
+    pub fn cache(&self) -> &crate::rtcg::cache::CompileCache {
+        self.tk.cache()
     }
 
     /// Compile a program for concrete input shapes (specialization is
@@ -51,7 +50,7 @@ impl Copperhead {
             digest_hex(format!("{:?}|{shapes:?}|{}", p, self.fusion).as_bytes())
         );
         let (prog, shapes2) = (p.clone(), shapes.clone());
-        let exe = self.cache.get_or_build(&self.tk, &key, move || {
+        let exe = self.tk.cache().get_or_build(&key, move || {
             build(&prog, &shapes2)
         })?;
         Ok(Compiled {
@@ -436,12 +435,13 @@ mod tests {
             vec![("x", Kind::Array(DType::F32))],
             map(Lambda::new(&["v"], "v * v").unwrap(), vec![var("x")]),
         );
+        let (h0, _, m0) = c.cache().stats.snapshot();
         c.compile(&p, &shapes(&[("x", &[8])])).unwrap();
         c.compile(&p, &shapes(&[("x", &[8])])).unwrap();
         c.compile(&p, &shapes(&[("x", &[16])])).unwrap();
-        use std::sync::atomic::Ordering;
-        assert_eq!(c.cache().misses.load(Ordering::Relaxed), 2);
-        assert_eq!(c.cache().hits.load(Ordering::Relaxed), 1);
+        let (h1, _, m1) = c.cache().stats.snapshot();
+        assert_eq!(m1 - m0, 2, "two shapes ⇒ two compiles");
+        assert_eq!(h1 - h0, 1, "repeated shape ⇒ unified-cache hit");
     }
 
     #[test]

@@ -1,11 +1,15 @@
 //! `ElementwiseKernel` and `ReductionKernel` (§5.2, Fig 4): the user
 //! supplies short C-like snippets for the core computation; the toolkit
 //! generates the kernel, supplies loop slicing + driver code, compiles
-//! behind the cache, and hands back a callable.
+//! behind the **unified** `rtcg::cache` (shared with the lazy array
+//! layer and the Copperhead compiler — one sharded, single-flighted
+//! cache for every generated-code surface), and hands back a callable.
 //!
 //! This is the RTCG answer to "proliferation of temporary variables
 //! plaguing abstract, operator-overloading array packages": the whole
-//! user expression lowers into *one* generated kernel.
+//! user expression lowers into *one* generated kernel.  (The array
+//! layer now reaches the same end implicitly via lazy op-DAG fusion;
+//! this module remains the explicit, C-snippet surface.)
 
 use crate::array::{ArrayContext, GpuArray};
 use crate::elementwise::ast::{
@@ -15,6 +19,7 @@ use crate::rtcg::dtype::{promote, DType};
 use crate::rtcg::hlobuild;
 use crate::runtime::HostArray;
 use crate::util::error::{Error, Result};
+use crate::util::hash::digest_hex;
 
 /// Argument value at call time.
 pub enum EwValue<'a> {
@@ -179,8 +184,12 @@ impl ElementwiseKernel {
             .map(|(i, _)| i)
             .collect();
 
+        // the key digests the full kernel definition (declaration +
+        // statements), not just name/arity: the unified cache is
+        // process-global, and two differently-defined kernels sharing a
+        // name must never execute each other's code
         let key = format!(
-            "ew|{}|n{}|{}",
+            "ew|{}|n{}|{}|{}",
             self.name,
             n,
             self.args
@@ -191,16 +200,17 @@ impl ElementwiseKernel {
                     if a.vector { "v" } else { "s" }
                 ))
                 .collect::<Vec<_>>()
-                .join(",")
+                .join(","),
+            digest_hex(
+                format!("{:?}|{:?}", self.args, self.ops).as_bytes()
+            )
         );
         let args = self.args.clone();
         let ops = self.ops.clone();
         let read2 = read.clone();
-        let exe = self.ctx.op_cache().get_or_build(
-            self.ctx.toolkit(),
-            &key,
-            move || build_elementwise(&args, &ops, &read2, n),
-        )?;
+        let exe = self.ctx.toolkit().cache().get_or_build(&key, move || {
+            build_elementwise(&args, &ops, &read2, n)
+        })?;
 
         // stage inputs: device buffers for vectors, scalars each call
         let mut staged: Vec<crate::runtime::DeviceBuffer> = Vec::new();
@@ -224,7 +234,7 @@ impl ElementwiseKernel {
                     arg_bufs.push(staged.len() - 1);
                 }
                 (_, EwValue::V(arr)) => {
-                    staged.push(arr.buffer().clone());
+                    staged.push(arr.buffer()?);
                     arg_bufs.push(staged.len() - 1);
                 }
             }
@@ -302,18 +312,28 @@ impl ReductionKernel {
             }
         }
         let n = n.ok_or_else(|| Error::msg("no vector args"))?;
-        let key = format!("red|{}|n{}", self.name, n);
+        // digest the whole definition into the key (see ElementwiseKernel)
+        let key = format!(
+            "red|{}|n{}|{}",
+            self.name,
+            n,
+            digest_hex(
+                format!(
+                    "{:?}|{:?}|{:?}|{}",
+                    self.args, self.map_expr, self.reduce_expr, self.neutral
+                )
+                .as_bytes()
+            )
+        );
         let (args, map_expr, reduce_expr, neutral) = (
             self.args.clone(),
             self.map_expr.clone(),
             self.reduce_expr.clone(),
             self.neutral,
         );
-        let exe = self.ctx.op_cache().get_or_build(
-            self.ctx.toolkit(),
-            &key,
-            move || build_reduction(&args, &map_expr, &reduce_expr, neutral, n),
-        )?;
+        let exe = self.ctx.toolkit().cache().get_or_build(&key, move || {
+            build_reduction(&args, &map_expr, &reduce_expr, neutral, n)
+        })?;
         let mut staged = Vec::new();
         for (a, v) in self.args.iter().zip(values) {
             match v {
@@ -326,7 +346,7 @@ impl ReductionKernel {
                     };
                     staged.push(self.ctx.toolkit().client().to_device(&host)?);
                 }
-                EwValue::V(arr) => staged.push(arr.buffer().clone()),
+                EwValue::V(arr) => staged.push(arr.buffer()?),
             }
         }
         let refs: Vec<&crate::runtime::DeviceBuffer> = staged.iter().collect();
@@ -677,11 +697,13 @@ mod tests {
         )
         .unwrap();
         let x = arr(&c, vec![1.0; 16]);
+        let (h0, _, m0) = c.toolkit().cache().stats.snapshot();
         for _ in 0..3 {
             k.call(&[EwValue::V(&x), EwValue::V(&x)]).unwrap();
         }
-        use std::sync::atomic::Ordering;
-        assert_eq!(c.op_cache().misses.load(Ordering::Relaxed), 1);
+        let (h1, _, m1) = c.toolkit().cache().stats.snapshot();
+        assert_eq!(m1 - m0, 1, "one compile through the unified cache");
+        assert_eq!(h1 - h0, 2, "subsequent calls are memory hits");
     }
 
     #[test]

@@ -229,6 +229,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "aot-artifacts"),
+        ignore = "needs artifacts/ from `make artifacts` (aot-artifacts feature)"
+    )]
     fn loads_and_indexes() {
         let m = load();
         assert!(m.len() > 100, "expected a substantive pool, got {}", m.len());
@@ -237,6 +241,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "aot-artifacts"),
+        ignore = "needs artifacts/ from `make artifacts` (aot-artifacts feature)"
+    )]
     fn entries_have_artifacts_on_disk() {
         let m = load();
         for e in m.entries().iter().take(25) {
@@ -249,6 +257,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "aot-artifacts"),
+        ignore = "needs artifacts/ from `make artifacts` (aot-artifacts feature)"
+    )]
     fn params_accessors() {
         let m = load();
         let e = m.entry("filterbank", "conv0_k9", "th4_fb8_u0").unwrap();
@@ -259,6 +271,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "aot-artifacts"),
+        ignore = "needs artifacts/ from `make artifacts` (aot-artifacts feature)"
+    )]
     fn variant_lookup_errors() {
         let m = load();
         assert!(m.entry("filterbank", "conv0_k9", "nope").is_err());
@@ -266,6 +282,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "aot-artifacts"),
+        ignore = "needs artifacts/ from `make artifacts` (aot-artifacts feature)"
+    )]
     fn nn_workloads_cover_doubling_chain() {
         let m = load();
         let w = m.workloads("nn");
@@ -278,6 +298,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "aot-artifacts"),
+        ignore = "needs artifacts/ from `make artifacts` (aot-artifacts feature)"
+    )]
     fn spmv_cm_inputs_are_transposed() {
         let m = load();
         let rm = m.entry("spmv_ell", "ell_16k", "rb256_rm").unwrap();

@@ -202,6 +202,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "aot-artifacts"),
+        ignore = "needs artifacts/ from `make artifacts` (aot-artifacts feature)"
+    )]
     fn load_and_execute_axpy_artifact() {
         let r = registry();
         let e = r
@@ -223,6 +227,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "aot-artifacts"),
+        ignore = "needs artifacts/ from `make artifacts` (aot-artifacts feature)"
+    )]
     fn load_and_execute_filterbank_variant_pair() {
         // two structurally different variants agree numerically —
         // the §4.1 retained-pool correctness invariant, on-device
@@ -242,6 +250,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "aot-artifacts"),
+        ignore = "needs artifacts/ from `make artifacts` (aot-artifacts feature)"
+    )]
     fn descs_cover_all_families() {
         let r = registry();
         for e in r.manifest().entries() {
@@ -253,6 +265,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "aot-artifacts"),
+        ignore = "needs artifacts/ from `make artifacts` (aot-artifacts feature)"
+    )]
     fn filterbank_desc_matches_manifest_vmem_scale() {
         // the rust scratch plan stages a 32-wide patch, the python vmem
         // estimate a full-width band: rust must be ≤ python (and not
@@ -270,6 +286,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "aot-artifacts"),
+        ignore = "needs artifacts/ from `make artifacts` (aot-artifacts feature)"
+    )]
     fn synth_inputs_respect_specs() {
         let r = registry();
         let e = r.manifest().entry("spmv_ell", "ell_16k", "rb256_rm").unwrap();

@@ -10,6 +10,12 @@
 //!
 //! See DESIGN.md for the full system inventory and the per-experiment
 //! index, EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! Every generated-code surface — HLO text, the lazy fused array layer,
+//! the elementwise/reduction generators, the Copperhead compiler —
+//! compiles through the single unified [`rtcg::cache`] (sharded,
+//! single-flighted, LRU byte-budgeted; see that module's docs for the
+//! paper mapping).
 
 pub mod util;
 

@@ -1,41 +1,71 @@
-//! The compiler cache (Fig 2): "the result of the compilation process is
-//! stored in a semi-permanent cache and reused if possible.  The cache
-//! is sensitive to changes in the hardware and software environment and
-//! initiates recompilation when necessary.  As a result, compilation of
-//! source code … becomes nearly instantaneous and invisible to the
-//! user."
+//! The unified compiler cache (Fig 2): "the result of the compilation
+//! process is stored in a semi-permanent cache and reused if possible.
+//! The cache is sensitive to changes in the hardware and software
+//! environment and initiates recompilation when necessary.  As a result,
+//! compilation of source code … becomes nearly instantaneous and
+//! invisible to the user."
 //!
-//! Two levels:
+//! One subsystem now serves **every** generated-code surface — HLO text
+//! (`get_or_compile`), builder-built computations keyed by canonical
+//! descriptors (`get_or_build`; the array layer's fused expressions,
+//! the elementwise/reduction kernel generators, the Copperhead
+//! compiler).  Mechanisms, mapped to the paper:
 //!
-//! * **memory** — digest(source)‖platform → compiled [`Executable`]
-//!   (process lifetime; the Fig 2 hot path, sub-µs),
-//! * **disk**   — digest → rendered source + environment metadata.
-//!   The `xla` crate (0.1.6 / xla_extension 0.5.1) exposes no executable
-//!   serialization, so unlike PyCUDA's cubin cache the disk level cannot
-//!   hold device binaries; it persists the *generation* product and the
-//!   identifying hw/sw information the paper's §5 prescribes for
-//!   application-level caches (see DESIGN.md §Substitutions).  Compile
-//!   economics (backend-compile ≫ cache-hit, bench `fig2_cache`) are
-//!   unaffected.
+//! * **Sharded lock striping** — N `Mutex<HashMap>` shards selected by
+//!   key hash, so the read-mostly hit path (the Fig 2 steady state)
+//!   scales with concurrent callers instead of serializing on one lock.
+//! * **Single-flight deduplication** — M concurrent requests for the
+//!   same uncompiled source trigger exactly **one** backend compile;
+//!   the rest block on a per-key in-flight slot and wake to a memory
+//!   hit.  Under multi-user load (ROADMAP north star) this prevents
+//!   compile stampedes on cold keys.
+//! * **LRU byte-budget eviction** — "unused code variants can be
+//!   disposed of immediately" (§4.2): entries carry a byte estimate and
+//!   the least-recently-used are dropped once a shard exceeds its
+//!   budget slice.
+//! * **Two levels** — memory (process lifetime, sub-µs hits) and disk.
+//!   The `xla` crate exposes no executable serialization, so the disk
+//!   level persists the *generation product* (rendered source +
+//!   identifying hw/sw environment, §5) rather than device binaries; a
+//!   disk hit skips the redundant re-store but still pays one backend
+//!   compile per process.
+//!
+//! Unified [`CacheStats`] are exported system-wide through
+//! `coordinator::metrics`.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::runtime::{Client, Executable};
 use crate::util::error::Result;
-use crate::util::hash::digest_hex;
+use crate::util::hash::{digest_hex, fnv1a};
 use crate::util::json::Json;
 
+/// Nominal in-memory footprint of one compiled executable beyond its
+/// key material (the simulator gives us no real measurement; the real
+/// PJRT backend does not either).
+const EXE_NOMINAL_BYTES: u64 = 4096;
+
+fn entry_cost(key_material: &str) -> u64 {
+    key_material.len() as u64 + EXE_NOMINAL_BYTES
+}
+
+/// Monotonic counters for every cache outcome.
 #[derive(Debug, Default)]
 pub struct CacheStats {
     pub mem_hits: AtomicU64,
     pub disk_hits: AtomicU64,
     pub misses: AtomicU64,
+    /// times a caller blocked on another caller's in-flight compile
+    pub single_flight_waits: AtomicU64,
+    /// entries dropped by the LRU byte-budget policy
+    pub evictions: AtomicU64,
 }
 
 impl CacheStats {
+    /// The classic (mem_hits, disk_hits, misses) triple.
     pub fn snapshot(&self) -> (u64, u64, u64) {
         (
             self.mem_hits.load(Ordering::Relaxed),
@@ -45,29 +75,146 @@ impl CacheStats {
     }
 }
 
-/// Two-level compile cache bound to one PJRT client.
+/// Point-in-time copy of all cache counters plus occupancy gauges.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CacheSnapshot {
+    pub mem_hits: u64,
+    pub disk_hits: u64,
+    pub misses: u64,
+    pub single_flight_waits: u64,
+    pub evictions: u64,
+    pub entries: u64,
+    pub bytes: u64,
+}
+
+/// Cache construction knobs.
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    /// disk level root; `None` = memory-only (tests, benches)
+    pub disk_dir: Option<PathBuf>,
+    /// lock-striping width (keys hash onto shards)
+    pub shards: usize,
+    /// total in-memory byte budget across all shards
+    pub byte_budget: u64,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            disk_dir: None,
+            shards: 16,
+            byte_budget: 256 << 20,
+        }
+    }
+}
+
+/// Disk level rooted at `$RTCG_CACHE_DIR` or `.rtcg-cache/`.
+pub fn default_disk_dir() -> PathBuf {
+    PathBuf::from(
+        std::env::var("RTCG_CACHE_DIR")
+            .unwrap_or_else(|_| ".rtcg-cache".to_string()),
+    )
+}
+
+struct Entry {
+    exe: Executable,
+    bytes: u64,
+    last_used: u64,
+}
+
+/// Per-key in-flight compile slot (single-flight).
+struct Flight {
+    done: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Flight {
+    fn new() -> Flight {
+        Flight { done: Mutex::new(false), cv: Condvar::new() }
+    }
+
+    fn wait(&self) {
+        // tolerate poisoning: a poisoned flag still carries the bool
+        let mut g = match self.done.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        while !*g {
+            g = match self.cv.wait(g) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        }
+    }
+
+    fn finish(&self) {
+        let mut g = match self.done.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        *g = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Unwind-safe release of a single-flight slot: whatever happens in
+/// the leader's fill closure — `Err`, early return, or panic — the
+/// in-flight entry is removed and waiters are woken, so a key can
+/// never deadlock behind a dead leader.
+struct FlightGuard<'a> {
+    shards: &'a [Mutex<Shard>],
+    shard_ix: usize,
+    key: &'a str,
+    flight: Arc<Flight>,
+}
+
+impl Drop for FlightGuard<'_> {
+    fn drop(&mut self) {
+        let mut shard = match self.shards[self.shard_ix].lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        shard.inflight.remove(self.key);
+        drop(shard);
+        self.flight.finish();
+    }
+}
+
+#[derive(Default)]
+struct Shard {
+    map: HashMap<String, Entry>,
+    inflight: HashMap<String, Arc<Flight>>,
+    clock: u64,
+    bytes: u64,
+}
+
+/// The unified two-level compile cache bound to one PJRT client.
 pub struct CompileCache {
     client: Client,
-    mem: Mutex<HashMap<String, Executable>>,
+    shards: Vec<Mutex<Shard>>,
+    budget_per_shard: u64,
     disk_dir: Option<PathBuf>,
     pub stats: CacheStats,
 }
 
 impl CompileCache {
-    /// Disk level rooted at `$RTCG_CACHE_DIR` or `.rtcg-cache/`;
-    /// pass `disk=false` for a memory-only cache (tests, benches).
+    /// Compatibility constructor: `disk=true` roots the disk level at
+    /// [`default_disk_dir`]; `disk=false` is memory-only.
     pub fn new(client: Client, disk: bool) -> CompileCache {
-        let disk_dir = if disk {
-            let root = std::env::var("RTCG_CACHE_DIR")
-                .unwrap_or_else(|_| ".rtcg-cache".to_string());
-            Some(PathBuf::from(root))
-        } else {
-            None
-        };
+        let disk_dir = if disk { Some(default_disk_dir()) } else { None };
+        Self::with_config(
+            client,
+            CacheConfig { disk_dir, ..CacheConfig::default() },
+        )
+    }
+
+    pub fn with_config(client: Client, cfg: CacheConfig) -> CompileCache {
+        let shards = cfg.shards.max(1);
         CompileCache {
             client,
-            mem: Mutex::new(HashMap::new()),
-            disk_dir,
+            shards: (0..shards).map(|_| Mutex::new(Shard::default())).collect(),
+            budget_per_shard: (cfg.byte_budget / shards as u64).max(1),
+            disk_dir: cfg.disk_dir,
             stats: CacheStats::default(),
         }
     }
@@ -76,52 +223,192 @@ impl CompileCache {
         &self.client
     }
 
-    /// Cache key: source digest ‖ platform identity ‖ toolkit version.
-    /// Platform sensitivity is what lets one cache directory serve
-    /// several backends (§5).
-    pub fn key_for(&self, source: &str) -> String {
+    /// Cache key: digest(key material) ‖ platform identity ‖ toolkit
+    /// version.  Platform sensitivity is what lets one cache directory
+    /// serve several backends (§5).
+    pub fn key_for(&self, key_material: &str) -> String {
         let env = format!(
             "{}|{}|rtcg-{}",
-            digest_hex(source.as_bytes()),
+            digest_hex(key_material.as_bytes()),
             self.client.platform_id(),
             env!("CARGO_PKG_VERSION"),
         );
         digest_hex(env.as_bytes())
     }
 
-    /// The Fig 2 workflow: memory hit → disk note → compile + store.
+    /// The Fig 2 workflow over HLO **text**: memory hit → disk note →
+    /// compile (single-flighted) + store.
     pub fn get_or_compile(&self, source: &str) -> Result<Executable> {
         let key = self.key_for(source);
-        if let Some(exe) = self.mem.lock().unwrap().get(&key) {
-            self.stats.mem_hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(exe.clone());
-        }
-        // Disk level: count a hit when the generation product was
-        // already persisted (a prior process compiled this source).
-        if self.disk_lookup(&key) {
-            self.stats.disk_hits.fetch_add(1, Ordering::Relaxed);
-        } else {
+        self.get_or_insert(&key, entry_cost(source), || {
+            if self.disk_lookup(&key) {
+                // The generation product is already persisted (a prior
+                // process compiled this source): count a disk hit and
+                // skip the redundant disk_store.  The backend compile
+                // itself cannot be skipped — this substrate has no
+                // executable serialization (see module docs).
+                self.stats.disk_hits.fetch_add(1, Ordering::Relaxed);
+                self.client.compile_hlo_text(source)
+            } else {
+                self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                let exe = self.client.compile_hlo_text(source)?;
+                self.disk_store(&key, source);
+                Ok(exe)
+            }
+        })
+    }
+
+    /// Descriptor-keyed path for builder-built computations (the array
+    /// layer's fused expressions, elementwise kernels, Copperhead
+    /// programs): same shards, same single-flight, same stats.  No disk
+    /// level — there is no source text to persist, only the in-memory
+    /// builder graph.
+    pub fn get_or_build(
+        &self,
+        key_material: &str,
+        build: impl FnOnce() -> Result<xla::XlaComputation>,
+    ) -> Result<Executable> {
+        let key = self.key_for(key_material);
+        self.get_or_insert(&key, entry_cost(key_material), || {
             self.stats.misses.fetch_add(1, Ordering::Relaxed);
+            let comp = build()?;
+            self.client.compile_computation(&comp)
+        })
+    }
+
+    /// Core: sharded lookup with single-flight fill.
+    fn get_or_insert(
+        &self,
+        key: &str,
+        cost: u64,
+        fill: impl FnOnce() -> Result<Executable>,
+    ) -> Result<Executable> {
+        enum Plan {
+            Wait(Arc<Flight>),
+            Lead(Arc<Flight>),
         }
-        let exe = self.client.compile_hlo_text(source)?;
-        self.disk_store(&key, source);
-        self.mem.lock().unwrap().insert(key, exe.clone());
-        Ok(exe)
+        let shard_ix = fnv1a(key.as_bytes()) as usize % self.shards.len();
+        let mut fill = Some(fill);
+        loop {
+            let plan = {
+                let mut shard = self.shards[shard_ix].lock().unwrap();
+                shard.clock += 1;
+                let clock = shard.clock;
+                if let Some(e) = shard.map.get_mut(key) {
+                    e.last_used = clock;
+                    self.stats.mem_hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok(e.exe.clone());
+                }
+                if let Some(f) = shard.inflight.get(key) {
+                    Plan::Wait(f.clone())
+                } else {
+                    let f = Arc::new(Flight::new());
+                    shard.inflight.insert(key.to_string(), f.clone());
+                    Plan::Lead(f)
+                }
+            };
+            match plan {
+                Plan::Wait(f) => {
+                    self.stats
+                        .single_flight_waits
+                        .fetch_add(1, Ordering::Relaxed);
+                    f.wait();
+                    // leader finished (or failed): loop re-checks the map
+                }
+                Plan::Lead(f) => {
+                    // the guard releases the slot + wakes waiters even
+                    // if `fill` panics (user-supplied build closures)
+                    let guard = FlightGuard {
+                        shards: &self.shards,
+                        shard_ix,
+                        key,
+                        flight: f,
+                    };
+                    let fill = fill.take().expect("leader runs once");
+                    let result = fill();
+                    if let Ok(exe) = &result {
+                        let mut shard = self.shards[shard_ix].lock().unwrap();
+                        shard.clock += 1;
+                        let clock = shard.clock;
+                        shard.bytes += cost;
+                        shard.map.insert(
+                            key.to_string(),
+                            Entry {
+                                exe: exe.clone(),
+                                bytes: cost,
+                                last_used: clock,
+                            },
+                        );
+                        self.evict_locked(&mut shard, key);
+                    }
+                    drop(guard);
+                    return result;
+                }
+            }
+        }
+    }
+
+    /// LRU eviction down to the shard budget ("unused code variants can
+    /// be disposed of immediately", §4.2).  The freshly-inserted key is
+    /// never the victim, so one oversized entry still caches.
+    fn evict_locked(&self, shard: &mut Shard, fresh: &str) {
+        while shard.bytes > self.budget_per_shard && shard.map.len() > 1 {
+            let victim = shard
+                .map
+                .iter()
+                .filter(|(k, _)| k.as_str() != fresh)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    if let Some(e) = shard.map.remove(&k) {
+                        shard.bytes = shard.bytes.saturating_sub(e.bytes);
+                        self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                None => break,
+            }
+        }
     }
 
     /// Number of compiled modules held in memory.
     pub fn len(&self) -> usize {
-        self.mem.lock().unwrap().len()
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Bytes currently charged against the in-memory budget.
+    pub fn bytes_in_memory(&self) -> u64 {
+        self.shards.iter().map(|s| s.lock().unwrap().bytes).sum()
+    }
+
     /// Drop all in-memory executables ("unused code variants can be
     /// disposed of immediately", §4.2).
     pub fn clear_memory(&self) {
-        self.mem.lock().unwrap().clear();
+        for s in &self.shards {
+            let mut s = s.lock().unwrap();
+            s.map.clear();
+            s.bytes = 0;
+        }
+    }
+
+    /// All counters plus occupancy gauges, for metrics export.
+    pub fn snapshot_full(&self) -> CacheSnapshot {
+        CacheSnapshot {
+            mem_hits: self.stats.mem_hits.load(Ordering::Relaxed),
+            disk_hits: self.stats.disk_hits.load(Ordering::Relaxed),
+            misses: self.stats.misses.load(Ordering::Relaxed),
+            single_flight_waits: self
+                .stats
+                .single_flight_waits
+                .load(Ordering::Relaxed),
+            evictions: self.stats.evictions.load(Ordering::Relaxed),
+            entries: self.len() as u64,
+            bytes: self.bytes_in_memory(),
+        }
     }
 
     fn disk_path(&self, key: &str) -> Option<PathBuf> {
@@ -134,9 +421,6 @@ impl CompileCache {
 
     fn disk_store(&self, key: &str, source: &str) {
         let Some(path) = self.disk_path(key) else { return };
-        if path.exists() {
-            return;
-        }
         if let Some(dir) = path.parent() {
             let _ = std::fs::create_dir_all(dir);
         }
@@ -210,6 +494,7 @@ ENTRY main {
         c.get_or_compile(ADD_HLO).unwrap();
         c.clear_memory();
         assert!(c.is_empty());
+        assert_eq!(c.bytes_in_memory(), 0);
         c.get_or_compile(ADD_HLO).unwrap();
         let (_, _, misses) = c.stats.snapshot();
         assert_eq!(misses, 2);
@@ -221,5 +506,118 @@ ENTRY main {
         assert!(c.get_or_compile("HloModule broken\nENTRY {").is_err());
         // failed compiles must not poison the cache
         assert!(c.is_empty());
+        // and the in-flight slot is released: a retry fails cleanly too
+        assert!(c.get_or_compile("HloModule broken\nENTRY {").is_err());
+    }
+
+    #[test]
+    fn builder_path_shares_the_cache() {
+        let c = cache();
+        let build = || {
+            let b = xla::XlaBuilder::new("dbl");
+            let p = crate::rtcg::hlobuild::param(
+                &b,
+                0,
+                crate::rtcg::dtype::DType::F32,
+                &[4],
+                "p",
+            )?;
+            p.add_(&p)?.build().map_err(Into::into)
+        };
+        c.get_or_build("dbl|f32[4]", build).unwrap();
+        c.get_or_build("dbl|f32[4]", || unreachable!()).unwrap();
+        let (hits, _, misses) = c.stats.snapshot();
+        assert_eq!((hits, misses), (1, 1));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn failed_build_not_cached() {
+        let c = cache();
+        let r = c.get_or_build("bad", || {
+            Err(crate::util::error::Error::msg("boom"))
+        });
+        assert!(r.is_err());
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn lru_byte_budget_evicts_least_recently_used() {
+        let src_a = ADD_HLO.to_string();
+        let src_b = ADD_HLO.replace("constant(2)", "constant(3)");
+        let src_c = ADD_HLO.replace("constant(2)", "constant(4)");
+        assert_eq!(src_a.len(), src_b.len());
+        let cost = entry_cost(&src_a);
+        let c = CompileCache::with_config(
+            Client::cpu().unwrap(),
+            CacheConfig {
+                disk_dir: None,
+                shards: 1,
+                byte_budget: 2 * cost,
+            },
+        );
+        c.get_or_compile(&src_a).unwrap();
+        c.get_or_compile(&src_b).unwrap();
+        assert_eq!(c.len(), 2);
+        // touch A so B becomes the LRU victim
+        c.get_or_compile(&src_a).unwrap();
+        c.get_or_compile(&src_c).unwrap();
+        assert_eq!(c.len(), 2, "budget of 2 entries must hold");
+        assert!(c.bytes_in_memory() <= 2 * cost);
+        assert_eq!(c.stats.evictions.load(Ordering::Relaxed), 1);
+        // A survived (mem hit), B was evicted (recompile = new miss)
+        let (_, _, misses_before) = c.stats.snapshot();
+        c.get_or_compile(&src_a).unwrap();
+        let (_, _, misses_after_a) = c.stats.snapshot();
+        assert_eq!(misses_before, misses_after_a);
+        c.get_or_compile(&src_b).unwrap();
+        let (_, _, misses_after_b) = c.stats.snapshot();
+        assert_eq!(misses_after_b, misses_after_a + 1);
+    }
+
+    #[test]
+    fn disk_hit_skips_redundant_store() {
+        let dir = std::env::temp_dir().join(format!(
+            "rtcg-disk-hit-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = CacheConfig {
+            disk_dir: Some(dir.clone()),
+            ..CacheConfig::default()
+        };
+        let c1 = CompileCache::with_config(Client::cpu().unwrap(), cfg.clone());
+        c1.get_or_compile(ADD_HLO).unwrap();
+        let (_, d1, m1) = c1.stats.snapshot();
+        assert_eq!((d1, m1), (0, 1));
+        let path = c1.disk_path(&c1.key_for(ADD_HLO)).unwrap();
+        assert!(path.exists(), "miss must persist the generation product");
+        // plant a sentinel: a disk HIT must not rewrite the file
+        std::fs::write(&path, "SENTINEL").unwrap();
+
+        let c2 = CompileCache::with_config(Client::cpu().unwrap(), cfg);
+        c2.get_or_compile(ADD_HLO).unwrap();
+        let (h2, d2, m2) = c2.stats.snapshot();
+        assert_eq!(
+            (h2, d2, m2),
+            (0, 1, 0),
+            "second process: disk hit, not a miss"
+        );
+        assert_eq!(
+            std::fs::read_to_string(&path).unwrap(),
+            "SENTINEL",
+            "disk hit must skip the redundant disk_store"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn snapshot_full_reports_gauges() {
+        let c = cache();
+        c.get_or_compile(ADD_HLO).unwrap();
+        let s = c.snapshot_full();
+        assert_eq!(s.entries, 1);
+        assert_eq!(s.misses, 1);
+        assert!(s.bytes > 0);
     }
 }

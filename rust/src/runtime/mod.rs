@@ -1,7 +1,14 @@
-//! Runtime layer: wraps the `xla` crate's PJRT CPU client so the
+//! Runtime layer: wraps the `xla` crate's PJRT client so the
 //! coordinator can load AOT artifacts (`artifacts/*.hlo.txt`), compile
 //! run-time-generated HLO, and execute — Python never appears on this
 //! path (DESIGN.md §2).
+//!
+//! The default build links the vendored pure-Rust simulator
+//! (`rust/vendor/xla`), whose handles are `Send + Sync` — which is what
+//! lets the unified `rtcg::cache` single-flight compiles across threads
+//! and share executables between them.  Against the real PJRT crate
+//! (the `pjrt` feature seam), handles pin to the coordinator's service
+//! thread as before.
 
 pub mod client;
 pub mod host;

@@ -1,0 +1,151 @@
+//! Concurrency contract of the unified compile cache (Fig 2 at
+//! multi-user scale): single-flight dedup — N threads racing
+//! `get_or_compile` on the same source must observe exactly ONE backend
+//! compile and identical results — plus LRU byte-budget enforcement
+//! under the public API.
+
+use std::sync::atomic::Ordering;
+use std::sync::Barrier;
+
+use rtcg::rtcg::cache::{CacheConfig, CompileCache};
+use rtcg::runtime::{Client, HostArray};
+
+const ADD_HLO: &str = r#"
+HloModule add_two
+
+ENTRY main {
+  p = f32[4] parameter(0)
+  c = f32[] constant(2)
+  cb = f32[4] broadcast(c), dimensions={}
+  ROOT r = f32[4] add(p, cb)
+}
+"#;
+
+#[test]
+fn sixteen_threads_one_compile() {
+    const THREADS: usize = 16;
+    let client = Client::cpu().unwrap();
+    let cache = CompileCache::new(client, false);
+    let barrier = Barrier::new(THREADS);
+
+    let outputs: Vec<Vec<f32>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..THREADS)
+            .map(|_| {
+                s.spawn(|| {
+                    barrier.wait();
+                    let exe = cache.get_or_compile(ADD_HLO).unwrap();
+                    let x = HostArray::f32(
+                        vec![4],
+                        vec![1.0, 2.0, 3.0, 4.0],
+                    );
+                    exe.run(&[&x]).unwrap()[0].as_f32().unwrap().to_vec()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    // exactly one backend compile across all racers (single-flight)
+    let compiles =
+        cache.client().stats().compiles.load(Ordering::Relaxed);
+    assert_eq!(compiles, 1, "single-flight must dedup the compile");
+    let (mem_hits, _, misses) = cache.stats.snapshot();
+    assert_eq!(misses, 1);
+    assert_eq!(mem_hits as usize, THREADS - 1);
+    assert_eq!(cache.len(), 1);
+
+    // identical executables: every thread computed the same thing
+    for out in &outputs {
+        assert_eq!(out.as_slice(), &[3.0, 4.0, 5.0, 6.0]);
+    }
+}
+
+#[test]
+fn single_flight_applies_to_builder_path_too() {
+    const THREADS: usize = 8;
+    let cache = CompileCache::new(Client::cpu().unwrap(), false);
+    let barrier = Barrier::new(THREADS);
+    std::thread::scope(|s| {
+        for _ in 0..THREADS {
+            s.spawn(|| {
+                barrier.wait();
+                cache
+                    .get_or_build("desc|dbl|f32[8]", || {
+                        let b = xla::XlaBuilder::new("dbl");
+                        let p = b
+                            .parameter_s(
+                                0,
+                                &xla::Shape::array::<f32>(vec![8]),
+                                "p",
+                            )
+                            .map_err(rtcg::util::error::Error::from)?;
+                        p.add_(&p)?.build().map_err(Into::into)
+                    })
+                    .unwrap();
+            });
+        }
+    });
+    let compiles =
+        cache.client().stats().compiles.load(Ordering::Relaxed);
+    assert_eq!(compiles, 1);
+    let (mem_hits, _, misses) = cache.stats.snapshot();
+    assert_eq!(misses, 1);
+    assert_eq!(mem_hits as usize, THREADS - 1);
+}
+
+#[test]
+fn concurrent_distinct_keys_all_cache() {
+    const THREADS: usize = 8;
+    let cache = CompileCache::new(Client::cpu().unwrap(), false);
+    let sources: Vec<String> = (0..THREADS)
+        .map(|i| ADD_HLO.replace("constant(2)", &format!("constant({i})")))
+        .collect();
+    let barrier = Barrier::new(THREADS);
+    let cache_ref = &cache;
+    let barrier_ref = &barrier;
+    std::thread::scope(|s| {
+        for src in &sources {
+            s.spawn(move || {
+                barrier_ref.wait();
+                // two rounds: second must hit
+                cache_ref.get_or_compile(src).unwrap();
+                cache_ref.get_or_compile(src).unwrap();
+            });
+        }
+    });
+    assert_eq!(cache.len(), THREADS);
+    let (mem_hits, _, misses) = cache.stats.snapshot();
+    assert_eq!(misses as usize, THREADS);
+    assert_eq!(mem_hits as usize, THREADS);
+}
+
+#[test]
+fn lru_byte_budget_is_respected() {
+    // a budget sized for ~2 entries must never hold more than 2, and
+    // evictions must be the LRU entries
+    let tiny = CacheConfig {
+        disk_dir: None,
+        shards: 1,
+        // ADD_HLO-sized sources cost len + 4096 nominal bytes each
+        byte_budget: 2 * (ADD_HLO.len() as u64 + 4096),
+    };
+    let cache =
+        CompileCache::with_config(Client::cpu().unwrap(), tiny);
+    for i in 0..6 {
+        let src =
+            ADD_HLO.replace("constant(2)", &format!("constant({i})"));
+        cache.get_or_compile(&src).unwrap();
+        assert!(cache.len() <= 2, "byte budget exceeded at round {i}");
+    }
+    let full = cache.snapshot_full();
+    assert_eq!(full.entries, 2);
+    assert_eq!(full.evictions, 4);
+    assert!(full.bytes <= 2 * (ADD_HLO.len() as u64 + 4096));
+    // the two most recent entries survive, the older ones re-miss
+    let (_, _, misses_before) = cache.stats.snapshot();
+    cache
+        .get_or_compile(&ADD_HLO.replace("constant(2)", "constant(5)"))
+        .unwrap();
+    let (_, _, misses_after) = cache.stats.snapshot();
+    assert_eq!(misses_before, misses_after, "most-recent entry must hit");
+}

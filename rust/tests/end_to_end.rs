@@ -16,6 +16,10 @@ fn registry() -> Registry {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "aot-artifacts"),
+    ignore = "needs artifacts/ from `make artifacts` (aot-artifacts feature)"
+)]
 fn entropy_pipeline_doubling_chain() {
     // full §6.4 pipeline: images → patches → NN kernel → estimates,
     // with the doubling property: estimates drift smoothly with N
@@ -45,6 +49,10 @@ fn entropy_pipeline_doubling_chain() {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "aot-artifacts"),
+    ignore = "needs artifacts/ from `make artifacts` (aot-artifacts feature)"
+)]
 fn sar_pipeline_reconstructs_scene() {
     let reg = registry();
     let scene = sar::Scene::synthesize(
@@ -64,6 +72,10 @@ fn sar_pipeline_reconstructs_scene() {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "aot-artifacts"),
+    ignore = "needs artifacts/ from `make artifacts` (aot-artifacts feature)"
+)]
 fn nn_kernel_speedup_trend_holds() {
     // warm kernel wall-clock grows sublinearly vs the scalar baseline's
     // linear growth — the Table 4 speedup trend, sampled at two sizes

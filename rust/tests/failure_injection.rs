@@ -57,6 +57,10 @@ fn wrong_arity_and_shape_execution_errors() {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "aot-artifacts"),
+    ignore = "needs artifacts/ from `make artifacts` (aot-artifacts feature)"
+)]
 fn corrupted_artifact_file_reports_not_crashes() {
     // copy the manifest dir structure with one corrupted artifact
     let src = artifacts();
@@ -121,6 +125,10 @@ fn tuning_db_survives_corruption() {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "aot-artifacts"),
+    ignore = "needs artifacts/ from `make artifacts` (aot-artifacts feature)"
+)]
 fn coordinator_survives_a_burst_of_bad_requests() {
     let mut c = Coordinator::start(CoordinatorConfig {
         artifacts_dir: artifacts(),
@@ -181,6 +189,10 @@ fn template_engine_rejects_pathological_inputs() {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "aot-artifacts"),
+    ignore = "needs artifacts/ from `make artifacts` (aot-artifacts feature)"
+)]
 fn registry_synth_inputs_bound_zero_is_safe() {
     // a gather bound of 1 must yield only index 0 (always valid)
     let reg = Registry::open(Toolkit::init_ephemeral().unwrap(), &artifacts())

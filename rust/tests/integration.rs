@@ -41,6 +41,10 @@ fn template_to_execution_roundtrip() {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "aot-artifacts"),
+    ignore = "needs artifacts/ from `make artifacts` (aot-artifacts feature)"
+)]
 fn measured_tuning_end_to_end_spmv() {
     // tune the ELL spmv pool on the live backend; the winner must be a
     // real variant and rerunning it must work
@@ -102,6 +106,10 @@ fn gpuarray_pipeline_matches_elementwise_kernel() {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "aot-artifacts"),
+    ignore = "needs artifacts/ from `make artifacts` (aot-artifacts feature)"
+)]
 fn copperhead_spmv_agrees_with_aot_pallas_kernel() {
     // DSL-generated HLO vs the AOT Pallas kernel on the same matrix
     let reg = registry();
@@ -146,6 +154,10 @@ fn copperhead_spmv_agrees_with_aot_pallas_kernel() {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "aot-artifacts"),
+    ignore = "needs artifacts/ from `make artifacts` (aot-artifacts feature)"
+)]
 fn coordinator_serves_tuning_and_launches() {
     let mut c = Coordinator::start(CoordinatorConfig {
         artifacts_dir: artifacts(),
@@ -187,6 +199,10 @@ fn coordinator_serves_tuning_and_launches() {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "aot-artifacts"),
+    ignore = "needs artifacts/ from `make artifacts` (aot-artifacts feature)"
+)]
 fn fused_cg_beats_scalar_on_wallclock_typically() {
     // not a strict perf assertion (CI noise) — verifies both produce the
     // same solution on the shipped Poisson workload
@@ -202,6 +218,10 @@ fn fused_cg_beats_scalar_on_wallclock_typically() {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "aot-artifacts"),
+    ignore = "needs artifacts/ from `make artifacts` (aot-artifacts feature)"
+)]
 fn variant_pool_numerically_consistent_across_families() {
     // for every family with ≥2 variants on one workload, two variants
     // agree on synthesized inputs (spot check: first and last)

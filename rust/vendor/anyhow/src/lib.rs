@@ -1,0 +1,108 @@
+//! Vendored, dependency-free stand-in for the `anyhow` crate.
+//!
+//! This environment vendors its entire dependency closure (no registry
+//! access), so the subset of `anyhow`'s API the toolkit actually uses is
+//! reimplemented here: an opaque [`Error`] with a `msg` constructor, a
+//! blanket `From<E: std::error::Error>` conversion (so `?` works on
+//! `io::Error`, `xla::Error`, …), and the [`Result`] alias.
+//!
+//! Like the real crate, `Error` deliberately does *not* implement
+//! `std::error::Error` — that is what makes the blanket `From` coherent.
+
+use std::fmt;
+
+/// Opaque boxed error.
+pub struct Error {
+    inner: Box<dyn std::error::Error + Send + Sync + 'static>,
+}
+
+/// A plain-message error payload.
+struct Message(String);
+
+impl fmt::Display for Message {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Message {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Message {}
+
+impl Error {
+    /// Construct from anything printable (the constructor used
+    /// throughout the toolkit, mirroring `anyhow::Error::msg`).
+    pub fn msg<M>(message: M) -> Error
+    where
+        M: fmt::Display + Send + Sync + 'static,
+    {
+        Error { inner: Box::new(Message(message.to_string())) }
+    }
+
+    /// Construct from a concrete error value.
+    pub fn new<E>(error: E) -> Error
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        Error { inner: Box::new(error) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        let mut source = self.inner.source();
+        while let Some(s) = source {
+            write!(f, "\n\ncaused by: {s}")?;
+            source = s.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(error: E) -> Error {
+        Error { inner: Box::new(error) }
+    }
+}
+
+/// `anyhow::Result<T>` — the crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn msg_displays() {
+        let e = Error::msg(format!("broke at {}", 7));
+        assert_eq!(e.to_string(), "broke at 7");
+    }
+
+    #[test]
+    fn question_mark_on_io_error() {
+        fn read() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/here")?)
+        }
+        assert!(read().is_err());
+    }
+
+    #[test]
+    fn debug_shows_message() {
+        let e = Error::msg("boom");
+        assert!(format!("{e:?}").contains("boom"));
+    }
+}

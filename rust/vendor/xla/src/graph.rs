@@ -1,0 +1,765 @@
+//! Computation graph construction — the simulated `XlaBuilder`/`XlaOp`
+//! surface.  Ops are immutable `Arc` nodes carrying their inferred
+//! result type and shape; `build()` walks the graph to collect the
+//! parameter signature.  Everything is `Send + Sync` so compiled
+//! executables can be shared across threads.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::literal::{ElementType, NativeType, PrimitiveType, Shape};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub(crate) enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Min,
+    Pow,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub(crate) enum UnOp {
+    Exp,
+    Log,
+    Sqrt,
+    Rsqrt,
+    Sin,
+    Cos,
+    Tanh,
+    Abs,
+    Neg,
+    Floor,
+    Ceil,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub(crate) enum RKind {
+    Sum,
+    Max,
+    Min,
+}
+
+#[derive(Debug)]
+pub(crate) struct Node {
+    pub(crate) ty: ElementType,
+    pub(crate) dims: Vec<i64>,
+    pub(crate) kind: Kind,
+}
+
+#[derive(Debug)]
+pub(crate) enum Kind {
+    Parameter(i64, String),
+    ConstScalar(f64),
+    Unary(UnOp, Arc<Node>),
+    Binary(BinOp, Arc<Node>, Arc<Node>),
+    Convert(Arc<Node>),
+    /// Result dims are `self.dims`; the operand shape must be a suffix.
+    Broadcast(Arc<Node>),
+    Slice {
+        arg: Arc<Node>,
+        start: i64,
+        end: i64,
+        stride: i64,
+        dim: i64,
+    },
+    Concat(Vec<Arc<Node>>, i64),
+    ReduceBasic {
+        op: RKind,
+        arg: Arc<Node>,
+        dims: Vec<i64>,
+        keep: bool,
+    },
+    ReduceGeneric {
+        arg: Arc<Node>,
+        init: Arc<Node>,
+        comb: XlaComputation,
+        dims: Vec<i64>,
+        keep: bool,
+    },
+    Take {
+        data: Arc<Node>,
+        idx: Arc<Node>,
+        axis: i64,
+    },
+    DotGeneral {
+        lhs: Arc<Node>,
+        rhs: Arc<Node>,
+        c_lhs: i64,
+        c_rhs: i64,
+    },
+    Reshape(Arc<Node>),
+    Transpose(Arc<Node>, Vec<i64>),
+    Tuple(Vec<Arc<Node>>),
+}
+
+fn elem_count(dims: &[i64]) -> usize {
+    dims.iter().map(|&d| d as usize).product()
+}
+
+/// One operation handle (a reference into the immutable graph).
+#[derive(Debug, Clone)]
+pub struct XlaOp {
+    pub(crate) node: Arc<Node>,
+}
+
+/// Builder — in this simulator just a name holder; ops are self-typed.
+#[derive(Debug, Clone)]
+pub struct XlaBuilder {
+    name: String,
+}
+
+impl XlaBuilder {
+    pub fn new(name: &str) -> XlaBuilder {
+        XlaBuilder { name: name.to_string() }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Declare a typed parameter at `index`.
+    pub fn parameter_s(
+        &self,
+        index: i64,
+        shape: &Shape,
+        name: &str,
+    ) -> Result<XlaOp> {
+        let a = match shape {
+            Shape::Array(a) => a,
+            Shape::Tuple(_) => {
+                return Err(Error::msg("tuple parameters are unsupported"))
+            }
+        };
+        if index < 0 {
+            return Err(Error::msg("negative parameter index"));
+        }
+        Ok(XlaOp {
+            node: Arc::new(Node {
+                ty: a.element_type(),
+                dims: a.dims().to_vec(),
+                kind: Kind::Parameter(index, name.to_string()),
+            }),
+        })
+    }
+
+    /// Scalar constant.
+    pub fn c0<T: NativeType>(&self, v: T) -> Result<XlaOp>
+    where
+        T: Into<ConstValue>,
+    {
+        let cv: ConstValue = v.into();
+        Ok(XlaOp {
+            node: Arc::new(Node {
+                ty: cv.ty,
+                dims: vec![],
+                kind: Kind::ConstScalar(cv.value),
+            }),
+        })
+    }
+
+    /// Tuple of ops (root-level multi-output).
+    pub fn tuple(&self, elems: &[XlaOp]) -> Result<XlaOp> {
+        if elems.is_empty() {
+            return Err(Error::msg("empty tuple"));
+        }
+        Ok(XlaOp {
+            node: Arc::new(Node {
+                ty: elems[0].node.ty,
+                dims: vec![],
+                kind: Kind::Tuple(
+                    elems.iter().map(|e| e.node.clone()).collect(),
+                ),
+            }),
+        })
+    }
+}
+
+/// A scalar constant value + its element type (helper for `c0`).
+pub struct ConstValue {
+    pub(crate) ty: ElementType,
+    pub(crate) value: f64,
+}
+
+impl From<f32> for ConstValue {
+    fn from(v: f32) -> ConstValue {
+        ConstValue { ty: ElementType::F32, value: v as f64 }
+    }
+}
+impl From<f64> for ConstValue {
+    fn from(v: f64) -> ConstValue {
+        ConstValue { ty: ElementType::F64, value: v }
+    }
+}
+impl From<i32> for ConstValue {
+    fn from(v: i32) -> ConstValue {
+        ConstValue { ty: ElementType::S32, value: v as f64 }
+    }
+}
+impl From<i64> for ConstValue {
+    fn from(v: i64) -> ConstValue {
+        ConstValue { ty: ElementType::S64, value: v as f64 }
+    }
+}
+
+impl XlaOp {
+    pub(crate) fn from_node(node: Arc<Node>) -> XlaOp {
+        XlaOp { node }
+    }
+
+    fn binary(&self, op: BinOp, rhs: &XlaOp) -> Result<XlaOp> {
+        if self.node.ty != rhs.node.ty {
+            return Err(Error::msg(format!(
+                "binary {op:?}: element types differ ({:?} vs {:?})",
+                self.node.ty, rhs.node.ty
+            )));
+        }
+        if self.node.dims != rhs.node.dims {
+            return Err(Error::msg(format!(
+                "binary {op:?}: shapes differ ({:?} vs {:?})",
+                self.node.dims, rhs.node.dims
+            )));
+        }
+        Ok(XlaOp {
+            node: Arc::new(Node {
+                ty: self.node.ty,
+                dims: self.node.dims.clone(),
+                kind: Kind::Binary(op, self.node.clone(), rhs.node.clone()),
+            }),
+        })
+    }
+
+    fn unary(&self, op: UnOp) -> Result<XlaOp> {
+        let needs_float = !matches!(
+            op,
+            UnOp::Abs | UnOp::Neg | UnOp::Floor | UnOp::Ceil
+        );
+        if needs_float && !self.node.ty.is_float() {
+            return Err(Error::msg(format!(
+                "unary {op:?} requires a floating-point operand, got {:?}",
+                self.node.ty
+            )));
+        }
+        Ok(XlaOp {
+            node: Arc::new(Node {
+                ty: self.node.ty,
+                dims: self.node.dims.clone(),
+                kind: Kind::Unary(op, self.node.clone()),
+            }),
+        })
+    }
+
+    pub fn add_(&self, rhs: &XlaOp) -> Result<XlaOp> {
+        self.binary(BinOp::Add, rhs)
+    }
+    pub fn sub_(&self, rhs: &XlaOp) -> Result<XlaOp> {
+        self.binary(BinOp::Sub, rhs)
+    }
+    pub fn mul_(&self, rhs: &XlaOp) -> Result<XlaOp> {
+        self.binary(BinOp::Mul, rhs)
+    }
+    pub fn div_(&self, rhs: &XlaOp) -> Result<XlaOp> {
+        self.binary(BinOp::Div, rhs)
+    }
+    pub fn max(&self, rhs: &XlaOp) -> Result<XlaOp> {
+        self.binary(BinOp::Max, rhs)
+    }
+    pub fn min(&self, rhs: &XlaOp) -> Result<XlaOp> {
+        self.binary(BinOp::Min, rhs)
+    }
+    pub fn pow(&self, rhs: &XlaOp) -> Result<XlaOp> {
+        self.binary(BinOp::Pow, rhs)
+    }
+
+    pub fn exp(&self) -> Result<XlaOp> {
+        self.unary(UnOp::Exp)
+    }
+    pub fn log(&self) -> Result<XlaOp> {
+        self.unary(UnOp::Log)
+    }
+    pub fn sqrt(&self) -> Result<XlaOp> {
+        self.unary(UnOp::Sqrt)
+    }
+    pub fn rsqrt(&self) -> Result<XlaOp> {
+        self.unary(UnOp::Rsqrt)
+    }
+    pub fn sin(&self) -> Result<XlaOp> {
+        self.unary(UnOp::Sin)
+    }
+    pub fn cos(&self) -> Result<XlaOp> {
+        self.unary(UnOp::Cos)
+    }
+    pub fn tanh(&self) -> Result<XlaOp> {
+        self.unary(UnOp::Tanh)
+    }
+    pub fn abs(&self) -> Result<XlaOp> {
+        self.unary(UnOp::Abs)
+    }
+    pub fn neg(&self) -> Result<XlaOp> {
+        self.unary(UnOp::Neg)
+    }
+    pub fn floor(&self) -> Result<XlaOp> {
+        self.unary(UnOp::Floor)
+    }
+    pub fn ceil(&self) -> Result<XlaOp> {
+        self.unary(UnOp::Ceil)
+    }
+
+    /// Element type conversion.
+    pub fn convert(&self, ty: PrimitiveType) -> Result<XlaOp> {
+        Ok(XlaOp {
+            node: Arc::new(Node {
+                ty: ty.element_type(),
+                dims: self.node.dims.clone(),
+                kind: Kind::Convert(self.node.clone()),
+            }),
+        })
+    }
+
+    /// Broadcast by prepending `dims` to the operand shape (the common
+    /// scalar → array case is `dims ++ []`).
+    pub fn broadcast(&self, dims: &[i64]) -> Result<XlaOp> {
+        if dims.iter().any(|&d| d < 0) {
+            return Err(Error::msg("negative broadcast dimension"));
+        }
+        let mut out = dims.to_vec();
+        out.extend_from_slice(&self.node.dims);
+        Ok(XlaOp {
+            node: Arc::new(Node {
+                ty: self.node.ty,
+                dims: out,
+                kind: Kind::Broadcast(self.node.clone()),
+            }),
+        })
+    }
+
+    /// Broadcast an operand to an explicit result shape of which the
+    /// operand shape must be a suffix (used by the HLO-text path).
+    pub(crate) fn broadcast_to(&self, result: &[i64]) -> Result<XlaOp> {
+        let sd = &self.node.dims;
+        if result.len() < sd.len()
+            || &result[result.len() - sd.len()..] != sd.as_slice()
+        {
+            return Err(Error::msg(format!(
+                "broadcast: operand shape {sd:?} is not a suffix of {result:?}"
+            )));
+        }
+        Ok(XlaOp {
+            node: Arc::new(Node {
+                ty: self.node.ty,
+                dims: result.to_vec(),
+                kind: Kind::Broadcast(self.node.clone()),
+            }),
+        })
+    }
+
+    /// Strided slice along one dimension.
+    pub fn slice_in_dim(
+        &self,
+        start: i64,
+        end: i64,
+        stride: i64,
+        dim: i64,
+    ) -> Result<XlaOp> {
+        let rank = self.node.dims.len() as i64;
+        if dim < 0 || dim >= rank {
+            return Err(Error::msg(format!("slice dim {dim} out of rank {rank}")));
+        }
+        let size = self.node.dims[dim as usize];
+        if stride <= 0 || start < 0 || end < start || end > size {
+            return Err(Error::msg(format!(
+                "bad slice [{start}:{end}:{stride}] of dim size {size}"
+            )));
+        }
+        let n = (end - start + stride - 1) / stride;
+        let mut dims = self.node.dims.clone();
+        dims[dim as usize] = n;
+        Ok(XlaOp {
+            node: Arc::new(Node {
+                ty: self.node.ty,
+                dims,
+                kind: Kind::Slice {
+                    arg: self.node.clone(),
+                    start,
+                    end,
+                    stride,
+                    dim,
+                },
+            }),
+        })
+    }
+
+    /// Concatenate `self` with `others` along `dim`.
+    pub fn concat_in_dim(&self, others: &[XlaOp], dim: i64) -> Result<XlaOp> {
+        let rank = self.node.dims.len() as i64;
+        if dim < 0 || dim >= rank {
+            return Err(Error::msg("concat dim out of range"));
+        }
+        let mut parts = vec![self.node.clone()];
+        parts.extend(others.iter().map(|o| o.node.clone()));
+        let mut total = 0i64;
+        for p in &parts {
+            if p.ty != self.node.ty {
+                return Err(Error::msg("concat element types differ"));
+            }
+            if p.dims.len() != self.node.dims.len() {
+                return Err(Error::msg("concat ranks differ"));
+            }
+            for (i, (&a, &b)) in
+                p.dims.iter().zip(&self.node.dims).enumerate()
+            {
+                if i as i64 != dim && a != b {
+                    return Err(Error::msg("concat non-dim shapes differ"));
+                }
+            }
+            total += p.dims[dim as usize];
+        }
+        let mut dims = self.node.dims.clone();
+        dims[dim as usize] = total;
+        Ok(XlaOp {
+            node: Arc::new(Node {
+                ty: self.node.ty,
+                dims,
+                kind: Kind::Concat(parts, dim),
+            }),
+        })
+    }
+
+    fn reduced_dims(&self, dims: &[i64], keep: bool) -> Result<Vec<i64>> {
+        let rank = self.node.dims.len() as i64;
+        for &d in dims {
+            if d < 0 || d >= rank {
+                return Err(Error::msg(format!(
+                    "reduce dim {d} out of rank {rank}"
+                )));
+            }
+        }
+        let out = self
+            .node
+            .dims
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &d)| {
+                if dims.contains(&(i as i64)) {
+                    if keep {
+                        Some(1)
+                    } else {
+                        None
+                    }
+                } else {
+                    Some(d)
+                }
+            })
+            .collect();
+        Ok(out)
+    }
+
+    fn reduce_basic(
+        &self,
+        op: RKind,
+        dims: &[i64],
+        keep: bool,
+    ) -> Result<XlaOp> {
+        let out = self.reduced_dims(dims, keep)?;
+        Ok(XlaOp {
+            node: Arc::new(Node {
+                ty: self.node.ty,
+                dims: out,
+                kind: Kind::ReduceBasic {
+                    op,
+                    arg: self.node.clone(),
+                    dims: dims.to_vec(),
+                    keep,
+                },
+            }),
+        })
+    }
+
+    pub fn reduce_sum(&self, dims: &[i64], keep: bool) -> Result<XlaOp> {
+        self.reduce_basic(RKind::Sum, dims, keep)
+    }
+    pub fn reduce_max(&self, dims: &[i64], keep: bool) -> Result<XlaOp> {
+        self.reduce_basic(RKind::Max, dims, keep)
+    }
+    pub fn reduce_min(&self, dims: &[i64], keep: bool) -> Result<XlaOp> {
+        self.reduce_basic(RKind::Min, dims, keep)
+    }
+
+    /// Generic reduction with a scalar combiner computation.
+    pub fn reduce(
+        &self,
+        init: XlaOp,
+        comb: XlaComputation,
+        dims: &[i64],
+        keep: bool,
+    ) -> Result<XlaOp> {
+        if comb.params.len() != 2 {
+            return Err(Error::msg(format!(
+                "reduce combiner must take 2 scalars, takes {}",
+                comb.params.len()
+            )));
+        }
+        if !init.node.dims.is_empty() {
+            return Err(Error::msg("reduce init must be a scalar"));
+        }
+        let out = self.reduced_dims(dims, keep)?;
+        Ok(XlaOp {
+            node: Arc::new(Node {
+                ty: self.node.ty,
+                dims: out,
+                kind: Kind::ReduceGeneric {
+                    arg: self.node.clone(),
+                    init: init.node,
+                    comb,
+                    dims: dims.to_vec(),
+                    keep,
+                },
+            }),
+        })
+    }
+
+    /// Index-select along `axis` (torch `take`/`index_select`):
+    /// result shape = idx.dims ++ data.dims[axis+1..] (axis 0 only).
+    pub fn take(&self, idx: &XlaOp, axis: i64) -> Result<XlaOp> {
+        if axis != 0 {
+            return Err(Error::msg("take: only axis 0 is supported"));
+        }
+        if self.node.dims.is_empty() {
+            return Err(Error::msg("take: data must have rank ≥ 1"));
+        }
+        if !idx.node.ty.is_int() {
+            return Err(Error::msg("take: indices must be integers"));
+        }
+        let mut dims = idx.node.dims.clone();
+        dims.extend_from_slice(&self.node.dims[1..]);
+        Ok(XlaOp {
+            node: Arc::new(Node {
+                ty: self.node.ty,
+                dims,
+                kind: Kind::Take {
+                    data: self.node.clone(),
+                    idx: idx.node.clone(),
+                    axis,
+                },
+            }),
+        })
+    }
+
+    /// General dot with one contracting dimension per side and no batch
+    /// dimensions (the subset the toolkit generates).
+    pub fn dot_general(
+        &self,
+        rhs: &XlaOp,
+        contracting_lhs: &[i64],
+        contracting_rhs: &[i64],
+        batch_lhs: &[i64],
+        batch_rhs: &[i64],
+    ) -> Result<XlaOp> {
+        if !batch_lhs.is_empty() || !batch_rhs.is_empty() {
+            return Err(Error::msg("dot_general: batch dims unsupported"));
+        }
+        if contracting_lhs.len() != 1 || contracting_rhs.len() != 1 {
+            return Err(Error::msg(
+                "dot_general: exactly one contracting dim per side",
+            ));
+        }
+        if self.node.ty != rhs.node.ty {
+            return Err(Error::msg("dot_general: element types differ"));
+        }
+        let (cl, cr) = (contracting_lhs[0], contracting_rhs[0]);
+        let lrank = self.node.dims.len() as i64;
+        let rrank = rhs.node.dims.len() as i64;
+        if cl < 0 || cl >= lrank || cr < 0 || cr >= rrank {
+            return Err(Error::msg("dot_general: contracting dim out of range"));
+        }
+        if self.node.dims[cl as usize] != rhs.node.dims[cr as usize] {
+            return Err(Error::msg(format!(
+                "dot_general: contracted sizes differ ({} vs {})",
+                self.node.dims[cl as usize], rhs.node.dims[cr as usize]
+            )));
+        }
+        let mut dims: Vec<i64> = self
+            .node
+            .dims
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i as i64 != cl)
+            .map(|(_, &d)| d)
+            .collect();
+        dims.extend(
+            rhs.node
+                .dims
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| *i as i64 != cr)
+                .map(|(_, &d)| d),
+        );
+        Ok(XlaOp {
+            node: Arc::new(Node {
+                ty: self.node.ty,
+                dims,
+                kind: Kind::DotGeneral {
+                    lhs: self.node.clone(),
+                    rhs: rhs.node.clone(),
+                    c_lhs: cl,
+                    c_rhs: cr,
+                },
+            }),
+        })
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<XlaOp> {
+        if elem_count(dims) != elem_count(&self.node.dims) {
+            return Err(Error::msg(format!(
+                "reshape {:?} -> {:?}: element counts differ",
+                self.node.dims, dims
+            )));
+        }
+        Ok(XlaOp {
+            node: Arc::new(Node {
+                ty: self.node.ty,
+                dims: dims.to_vec(),
+                kind: Kind::Reshape(self.node.clone()),
+            }),
+        })
+    }
+
+    pub fn transpose(&self, perm: &[i64]) -> Result<XlaOp> {
+        let rank = self.node.dims.len();
+        if perm.len() != rank {
+            return Err(Error::msg("transpose: permutation rank mismatch"));
+        }
+        let mut seen = vec![false; rank];
+        for &p in perm {
+            if p < 0 || p as usize >= rank || seen[p as usize] {
+                return Err(Error::msg("transpose: invalid permutation"));
+            }
+            seen[p as usize] = true;
+        }
+        let dims: Vec<i64> =
+            perm.iter().map(|&p| self.node.dims[p as usize]).collect();
+        Ok(XlaOp {
+            node: Arc::new(Node {
+                ty: self.node.ty,
+                dims,
+                kind: Kind::Transpose(self.node.clone(), perm.to_vec()),
+            }),
+        })
+    }
+
+    /// Finalize the graph rooted at this op into a computation.
+    pub fn build(&self) -> Result<XlaComputation> {
+        XlaComputation::from_root("computation", self.node.clone())
+    }
+}
+
+/// A parameter signature entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub ty: ElementType,
+    pub dims: Vec<i64>,
+    pub name: String,
+}
+
+/// A finalized computation (root + parameter signature).
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    pub(crate) name: String,
+    pub(crate) root: Arc<Node>,
+    pub(crate) params: Vec<ParamSpec>,
+}
+
+impl XlaComputation {
+    pub(crate) fn from_root(
+        name: &str,
+        root: Arc<Node>,
+    ) -> Result<XlaComputation> {
+        let mut found: HashMap<i64, ParamSpec> = HashMap::new();
+        collect_params(&root, &mut found, &mut Vec::new())?;
+        let mut params = Vec::new();
+        for i in 0..found.len() as i64 {
+            match found.remove(&i) {
+                Some(p) => params.push(p),
+                None => {
+                    return Err(Error::msg(format!(
+                        "parameter indices not contiguous: missing {i}"
+                    )))
+                }
+            }
+        }
+        Ok(XlaComputation { name: name.to_string(), root, params })
+    }
+
+    /// Reconstruct from a parsed HLO module (text path).
+    pub fn from_proto(proto: &crate::hlotext::HloModuleProto) -> XlaComputation {
+        proto.computation().clone()
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn params(&self) -> &[ParamSpec] {
+        &self.params
+    }
+}
+
+fn collect_params(
+    node: &Arc<Node>,
+    found: &mut HashMap<i64, ParamSpec>,
+    visited: &mut Vec<*const Node>,
+) -> Result<()> {
+    let ptr = Arc::as_ptr(node);
+    if visited.contains(&ptr) {
+        return Ok(());
+    }
+    visited.push(ptr);
+    if let Kind::Parameter(i, name) = &node.kind {
+        let spec = ParamSpec {
+            ty: node.ty,
+            dims: node.dims.clone(),
+            name: name.clone(),
+        };
+        if let Some(prev) = found.get(i) {
+            if prev.ty != spec.ty || prev.dims != spec.dims {
+                return Err(Error::msg(format!(
+                    "parameter {i} declared with conflicting shapes"
+                )));
+            }
+        } else {
+            found.insert(*i, spec);
+        }
+    }
+    for child in node_children(node) {
+        collect_params(&child, found, visited)?;
+    }
+    Ok(())
+}
+
+pub(crate) fn node_children(node: &Node) -> Vec<Arc<Node>> {
+    match &node.kind {
+        Kind::Parameter(..) | Kind::ConstScalar(_) => vec![],
+        Kind::Unary(_, a)
+        | Kind::Convert(a)
+        | Kind::Broadcast(a)
+        | Kind::Reshape(a)
+        | Kind::Transpose(a, _) => vec![a.clone()],
+        Kind::Binary(_, a, b) => vec![a.clone(), b.clone()],
+        Kind::Slice { arg, .. } => vec![arg.clone()],
+        Kind::Concat(parts, _) => parts.clone(),
+        Kind::ReduceBasic { arg, .. } => vec![arg.clone()],
+        Kind::ReduceGeneric { arg, init, .. } => {
+            vec![arg.clone(), init.clone()]
+        }
+        Kind::Take { data, idx, .. } => vec![data.clone(), idx.clone()],
+        Kind::DotGeneral { lhs, rhs, .. } => vec![lhs.clone(), rhs.clone()],
+        Kind::Tuple(parts) => parts.clone(),
+    }
+}

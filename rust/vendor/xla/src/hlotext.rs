@@ -1,0 +1,283 @@
+//! HLO-text front end: parse the subset of HLO the toolkit's run-time
+//! code generators emit (parameter / constant / broadcast / convert /
+//! elementwise arithmetic) into an executable graph.  Strict by design:
+//! unknown ops, malformed shapes, duplicate ROOTs and result-shape
+//! mismatches are loud errors — generated-code debugging depends on it.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::graph::{Kind, Node, XlaComputation, XlaOp};
+use crate::literal::ElementType;
+
+/// A parsed HLO module (the analog of xla-rs's `HloModuleProto`).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    name: String,
+    comp: XlaComputation,
+}
+
+impl HloModuleProto {
+    /// Parse HLO text already in memory (run-time generated code).
+    pub fn parse_and_return_unverified_module(
+        data: &[u8],
+    ) -> Result<HloModuleProto> {
+        let text = std::str::from_utf8(data)
+            .map_err(|_| Error::msg("HLO text is not valid UTF-8"))?;
+        parse_module(text)
+    }
+
+    /// Parse an HLO text file (AOT artifact).
+    pub fn from_text_file(path: &std::path::Path) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::msg(format!("cannot read {}: {e}", path.display()))
+        })?;
+        parse_module(&text)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn computation(&self) -> &XlaComputation {
+        &self.comp
+    }
+}
+
+fn parse_module(text: &str) -> Result<HloModuleProto> {
+    let mut lines = text.lines().map(str::trim).filter(|l| !l.is_empty());
+    let header = lines
+        .next()
+        .ok_or_else(|| Error::msg("empty HLO module text"))?;
+    let module_name = header
+        .strip_prefix("HloModule")
+        .ok_or_else(|| {
+            Error::msg(format!("expected 'HloModule', found '{header}'"))
+        })?
+        .trim()
+        .split(|c: char| c == ',' || c.is_whitespace())
+        .next()
+        .unwrap_or("")
+        .to_string();
+    if module_name.is_empty() {
+        return Err(Error::msg("HloModule without a name"));
+    }
+
+    // find the ENTRY block
+    let entry = lines
+        .next()
+        .ok_or_else(|| Error::msg("missing ENTRY computation"))?;
+    if !entry.starts_with("ENTRY") || !entry.ends_with('{') {
+        return Err(Error::msg(format!(
+            "expected 'ENTRY <name> {{', found '{entry}'"
+        )));
+    }
+
+    let mut env: HashMap<String, Arc<Node>> = HashMap::new();
+    let mut root: Option<Arc<Node>> = None;
+    let mut closed = false;
+    for line in lines {
+        if line == "}" {
+            closed = true;
+            break;
+        }
+        let (is_root, rest) = match line.strip_prefix("ROOT ") {
+            Some(r) => (true, r),
+            None => (false, line),
+        };
+        let (name, node) = parse_instruction(rest, &env)?;
+        if env.contains_key(&name) {
+            return Err(Error::msg(format!(
+                "duplicate instruction name '{name}'"
+            )));
+        }
+        if is_root {
+            if root.is_some() {
+                return Err(Error::msg("multiple ROOT instructions"));
+            }
+            root = Some(node.clone());
+        }
+        env.insert(name, node);
+    }
+    if !closed {
+        return Err(Error::msg("unterminated ENTRY block (missing '}')"));
+    }
+    let root =
+        root.ok_or_else(|| Error::msg("ENTRY block has no ROOT"))?;
+    let comp = XlaComputation::from_root(&module_name, root)?;
+    Ok(HloModuleProto { name: module_name, comp })
+}
+
+/// Parse `name = ty[dims] op(args)[, attrs…]`.
+fn parse_instruction(
+    line: &str,
+    env: &HashMap<String, Arc<Node>>,
+) -> Result<(String, Arc<Node>)> {
+    let (lhs, rhs) = line
+        .split_once('=')
+        .ok_or_else(|| Error::msg(format!("missing '=' in '{line}'")))?;
+    let name = lhs.trim().to_string();
+    if name.is_empty()
+        || !name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.')
+    {
+        return Err(Error::msg(format!("bad instruction name '{name}'")));
+    }
+    let rhs = rhs.trim();
+
+    // shape token: ty[dims]
+    let bracket_open = rhs
+        .find('[')
+        .ok_or_else(|| Error::msg(format!("missing shape in '{line}'")))?;
+    let bracket_close = rhs
+        .find(']')
+        .ok_or_else(|| Error::msg(format!("missing ']' in '{line}'")))?;
+    if bracket_close < bracket_open {
+        return Err(Error::msg(format!("malformed shape in '{line}'")));
+    }
+    let ty = parse_ty(rhs[..bracket_open].trim())?;
+    let dims = parse_dims(&rhs[bracket_open + 1..bracket_close])?;
+
+    // op name + argument list
+    let after = rhs[bracket_close + 1..].trim();
+    let paren_open = after
+        .find('(')
+        .ok_or_else(|| Error::msg(format!("missing op args in '{line}'")))?;
+    let op = after[..paren_open].trim();
+    let paren_close = after
+        .find(')')
+        .ok_or_else(|| Error::msg(format!("missing ')' in '{line}'")))?;
+    if paren_close < paren_open {
+        return Err(Error::msg(format!("malformed args in '{line}'")));
+    }
+    let args_str = &after[paren_open + 1..paren_close];
+    let trailer = after[paren_close + 1..].trim();
+    if !trailer.is_empty() && !trailer.starts_with(',') {
+        return Err(Error::msg(format!("trailing junk in '{line}'")));
+    }
+    let args: Vec<&str> = if args_str.trim().is_empty() {
+        vec![]
+    } else {
+        args_str.split(',').map(str::trim).collect()
+    };
+
+    let lookup = |a: &str| -> Result<XlaOp> {
+        env.get(a)
+            .cloned()
+            .map(XlaOp::from_node)
+            .ok_or_else(|| Error::msg(format!("unknown operand '{a}'")))
+    };
+    let want = |k: usize| -> Result<()> {
+        if args.len() != k {
+            Err(Error::msg(format!(
+                "'{op}' expects {k} operands, got {}",
+                args.len()
+            )))
+        } else {
+            Ok(())
+        }
+    };
+
+    let out: XlaOp = match op {
+        "parameter" => {
+            want(1)?;
+            let idx: i64 = args[0].parse().map_err(|_| {
+                Error::msg(format!("bad parameter index '{}'", args[0]))
+            })?;
+            XlaOp::from_node(Arc::new(Node {
+                ty,
+                dims: dims.clone(),
+                kind: Kind::Parameter(idx, name.clone()),
+            }))
+        }
+        "constant" => {
+            want(1)?;
+            let v: f64 = args[0].parse().map_err(|_| {
+                Error::msg(format!("bad constant '{}'", args[0]))
+            })?;
+            if !dims.is_empty() {
+                return Err(Error::msg(
+                    "only scalar constants are supported",
+                ));
+            }
+            XlaOp::from_node(Arc::new(Node {
+                ty,
+                dims: vec![],
+                kind: Kind::ConstScalar(v),
+            }))
+        }
+        "broadcast" => {
+            want(1)?;
+            let a = lookup(args[0])?;
+            if a.node.ty != ty {
+                return Err(Error::msg(format!(
+                    "broadcast changes element type in '{line}'"
+                )));
+            }
+            a.broadcast_to(&dims)?
+        }
+        "convert" => {
+            want(1)?;
+            lookup(args[0])?.convert(ty.primitive_type())?
+        }
+        "add" => { want(2)?; lookup(args[0])?.add_(&lookup(args[1])?)? }
+        "subtract" => { want(2)?; lookup(args[0])?.sub_(&lookup(args[1])?)? }
+        "multiply" => { want(2)?; lookup(args[0])?.mul_(&lookup(args[1])?)? }
+        "divide" => { want(2)?; lookup(args[0])?.div_(&lookup(args[1])?)? }
+        "maximum" => { want(2)?; lookup(args[0])?.max(&lookup(args[1])?)? }
+        "minimum" => { want(2)?; lookup(args[0])?.min(&lookup(args[1])?)? }
+        "power" => { want(2)?; lookup(args[0])?.pow(&lookup(args[1])?)? }
+        "negate" => { want(1)?; lookup(args[0])?.neg()? }
+        "abs" => { want(1)?; lookup(args[0])?.abs()? }
+        "exponential" => { want(1)?; lookup(args[0])?.exp()? }
+        "log" => { want(1)?; lookup(args[0])?.log()? }
+        "sqrt" => { want(1)?; lookup(args[0])?.sqrt()? }
+        "rsqrt" => { want(1)?; lookup(args[0])?.rsqrt()? }
+        "sine" => { want(1)?; lookup(args[0])?.sin()? }
+        "cosine" => { want(1)?; lookup(args[0])?.cos()? }
+        "tanh" => { want(1)?; lookup(args[0])?.tanh()? }
+        "floor" => { want(1)?; lookup(args[0])?.floor()? }
+        "ceil" => { want(1)?; lookup(args[0])?.ceil()? }
+        "reshape" => { want(1)?; lookup(args[0])?.reshape(&dims)? }
+        other => {
+            return Err(Error::msg(format!(
+                "unsupported HLO op '{other}' in '{line}'"
+            )))
+        }
+    };
+
+    // declared result shape must match the computed one
+    if out.node.ty != ty || out.node.dims != dims {
+        return Err(Error::msg(format!(
+            "declared shape {:?}{:?} does not match computed {:?}{:?} in '{line}'",
+            ty, dims, out.node.ty, out.node.dims
+        )));
+    }
+    Ok((name, out.node))
+}
+
+fn parse_ty(s: &str) -> Result<ElementType> {
+    match s {
+        "f32" => Ok(ElementType::F32),
+        "f64" => Ok(ElementType::F64),
+        "s32" => Ok(ElementType::S32),
+        "s64" => Ok(ElementType::S64),
+        other => Err(Error::msg(format!("unsupported element type '{other}'"))),
+    }
+}
+
+fn parse_dims(s: &str) -> Result<Vec<i64>> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Ok(vec![]);
+    }
+    s.split(',')
+        .map(|d| {
+            d.trim().parse::<i64>().map_err(|_| {
+                Error::msg(format!("bad dimension '{d}'"))
+            })
+        })
+        .collect()
+}

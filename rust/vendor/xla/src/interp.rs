@@ -1,0 +1,569 @@
+//! Graph evaluation — the simulated device executes computations by
+//! interpreting the op graph over dense host buffers.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::graph::{BinOp, Kind, Node, RKind, UnOp, XlaComputation};
+use crate::literal::{Data, ElementType};
+
+/// An evaluated dense value.
+#[derive(Debug, Clone)]
+pub(crate) struct Value {
+    pub(crate) dims: Vec<i64>,
+    pub(crate) data: Data,
+}
+
+impl Value {
+    pub(crate) fn ty(&self) -> ElementType {
+        self.data.element_type()
+    }
+
+    pub(crate) fn elems(&self) -> usize {
+        self.data.len()
+    }
+}
+
+pub(crate) fn elem_count(dims: &[i64]) -> usize {
+    dims.iter().map(|&d| d as usize).product()
+}
+
+/// Row-major strides.
+fn strides(dims: &[i64]) -> Vec<usize> {
+    let mut s = vec![1usize; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1] as usize;
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// scalar kernels
+// ---------------------------------------------------------------------------
+
+fn bin_f64(op: BinOp, a: f64, b: f64) -> f64 {
+    match op {
+        BinOp::Add => a + b,
+        BinOp::Sub => a - b,
+        BinOp::Mul => a * b,
+        BinOp::Div => a / b,
+        BinOp::Max => a.max(b),
+        BinOp::Min => a.min(b),
+        BinOp::Pow => a.powf(b),
+    }
+}
+
+fn bin_f32(op: BinOp, a: f32, b: f32) -> f32 {
+    match op {
+        BinOp::Add => a + b,
+        BinOp::Sub => a - b,
+        BinOp::Mul => a * b,
+        BinOp::Div => a / b,
+        BinOp::Max => a.max(b),
+        BinOp::Min => a.min(b),
+        BinOp::Pow => a.powf(b),
+    }
+}
+
+fn bin_i64(op: BinOp, a: i64, b: i64) -> Result<i64> {
+    Ok(match op {
+        BinOp::Add => a.wrapping_add(b),
+        BinOp::Sub => a.wrapping_sub(b),
+        BinOp::Mul => a.wrapping_mul(b),
+        BinOp::Div => {
+            if b == 0 {
+                return Err(Error::msg("integer division by zero"));
+            }
+            a.wrapping_div(b)
+        }
+        BinOp::Max => a.max(b),
+        BinOp::Min => a.min(b),
+        BinOp::Pow => {
+            if b < 0 {
+                return Err(Error::msg("negative integer exponent"));
+            }
+            a.wrapping_pow(b.min(u32::MAX as i64) as u32)
+        }
+    })
+}
+
+fn un_f64(op: UnOp, a: f64) -> f64 {
+    match op {
+        UnOp::Exp => a.exp(),
+        UnOp::Log => a.ln(),
+        UnOp::Sqrt => a.sqrt(),
+        UnOp::Rsqrt => 1.0 / a.sqrt(),
+        UnOp::Sin => a.sin(),
+        UnOp::Cos => a.cos(),
+        UnOp::Tanh => a.tanh(),
+        UnOp::Abs => a.abs(),
+        UnOp::Neg => -a,
+        UnOp::Floor => a.floor(),
+        UnOp::Ceil => a.ceil(),
+    }
+}
+
+fn un_f32(op: UnOp, a: f32) -> f32 {
+    match op {
+        UnOp::Exp => a.exp(),
+        UnOp::Log => a.ln(),
+        UnOp::Sqrt => a.sqrt(),
+        UnOp::Rsqrt => 1.0 / a.sqrt(),
+        UnOp::Sin => a.sin(),
+        UnOp::Cos => a.cos(),
+        UnOp::Tanh => a.tanh(),
+        UnOp::Abs => a.abs(),
+        UnOp::Neg => -a,
+        UnOp::Floor => a.floor(),
+        UnOp::Ceil => a.ceil(),
+    }
+}
+
+fn un_i64(op: UnOp, a: i64) -> i64 {
+    match op {
+        UnOp::Abs => a.wrapping_abs(),
+        UnOp::Neg => a.wrapping_neg(),
+        _ => a, // floor/ceil are identity on integers
+    }
+}
+
+fn apply_binary(op: BinOp, a: &Data, b: &Data) -> Result<Data> {
+    Ok(match (a, b) {
+        (Data::F32(x), Data::F32(y)) => Data::F32(
+            x.iter().zip(y).map(|(&p, &q)| bin_f32(op, p, q)).collect(),
+        ),
+        (Data::F64(x), Data::F64(y)) => Data::F64(
+            x.iter().zip(y).map(|(&p, &q)| bin_f64(op, p, q)).collect(),
+        ),
+        (Data::I32(x), Data::I32(y)) => Data::I32(
+            x.iter()
+                .zip(y)
+                .map(|(&p, &q)| bin_i64(op, p as i64, q as i64).map(|v| v as i32))
+                .collect::<Result<_>>()?,
+        ),
+        (Data::I64(x), Data::I64(y)) => Data::I64(
+            x.iter()
+                .zip(y)
+                .map(|(&p, &q)| bin_i64(op, p, q))
+                .collect::<Result<_>>()?,
+        ),
+        _ => return Err(Error::msg("binary op element type mismatch")),
+    })
+}
+
+fn apply_unary(op: UnOp, a: &Data) -> Data {
+    match a {
+        Data::F32(x) => Data::F32(x.iter().map(|&v| un_f32(op, v)).collect()),
+        Data::F64(x) => Data::F64(x.iter().map(|&v| un_f64(op, v)).collect()),
+        Data::I32(x) => Data::I32(
+            x.iter().map(|&v| un_i64(op, v as i64) as i32).collect(),
+        ),
+        Data::I64(x) => Data::I64(x.iter().map(|&v| un_i64(op, v)).collect()),
+    }
+}
+
+fn convert(a: &Data, to: ElementType) -> Data {
+    if a.element_type() == to {
+        return a.clone();
+    }
+    let n = a.len();
+    match to {
+        ElementType::F32 => {
+            Data::F32((0..n).map(|i| a.get_f64(i) as f32).collect())
+        }
+        ElementType::F64 => Data::F64((0..n).map(|i| a.get_f64(i)).collect()),
+        ElementType::S32 => match a {
+            // float → int truncates toward zero (XLA convert semantics)
+            Data::F32(v) => Data::I32(v.iter().map(|&x| x as i32).collect()),
+            Data::F64(v) => Data::I32(v.iter().map(|&x| x as i32).collect()),
+            Data::I64(v) => Data::I32(v.iter().map(|&x| x as i32).collect()),
+            Data::I32(v) => Data::I32(v.clone()),
+        },
+        ElementType::S64 => match a {
+            Data::F32(v) => Data::I64(v.iter().map(|&x| x as i64).collect()),
+            Data::F64(v) => Data::I64(v.iter().map(|&x| x as i64).collect()),
+            Data::I32(v) => Data::I64(v.iter().map(|&x| x as i64).collect()),
+            Data::I64(v) => Data::I64(v.clone()),
+        },
+    }
+}
+
+fn const_scalar(ty: ElementType, v: f64) -> Data {
+    match ty {
+        ElementType::F32 => Data::F32(vec![v as f32]),
+        ElementType::F64 => Data::F64(vec![v]),
+        ElementType::S32 => Data::I32(vec![v as i32]),
+        ElementType::S64 => Data::I64(vec![v as i64]),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the machine
+// ---------------------------------------------------------------------------
+
+pub(crate) struct Machine<'a> {
+    params: &'a [Value],
+    memo: HashMap<*const Node, Value>,
+}
+
+impl<'a> Machine<'a> {
+    pub(crate) fn new(params: &'a [Value]) -> Machine<'a> {
+        Machine { params, memo: HashMap::new() }
+    }
+
+    /// Evaluate an array-valued node (tuples are handled by the caller).
+    pub(crate) fn eval(&mut self, node: &Arc<Node>) -> Result<Value> {
+        let key = Arc::as_ptr(node);
+        if let Some(v) = self.memo.get(&key) {
+            return Ok(v.clone());
+        }
+        let v = self.eval_inner(node)?;
+        self.memo.insert(key, v.clone());
+        Ok(v)
+    }
+
+    fn eval_inner(&mut self, node: &Arc<Node>) -> Result<Value> {
+        match &node.kind {
+            Kind::Parameter(i, name) => {
+                let i = *i as usize;
+                self.params.get(i).cloned().ok_or_else(|| {
+                    Error::msg(format!("parameter {i} ('{name}') unbound"))
+                })
+            }
+            Kind::ConstScalar(v) => Ok(Value {
+                dims: vec![],
+                data: const_scalar(node.ty, *v),
+            }),
+            Kind::Unary(op, a) => {
+                let av = self.eval(a)?;
+                Ok(Value { dims: node.dims.clone(), data: apply_unary(*op, &av.data) })
+            }
+            Kind::Binary(op, a, b) => {
+                let av = self.eval(a)?;
+                let bv = self.eval(b)?;
+                if av.elems() != bv.elems() {
+                    return Err(Error::msg("binary operand sizes differ"));
+                }
+                Ok(Value {
+                    dims: node.dims.clone(),
+                    data: apply_binary(*op, &av.data, &bv.data)?,
+                })
+            }
+            Kind::Convert(a) => {
+                let av = self.eval(a)?;
+                Ok(Value {
+                    dims: node.dims.clone(),
+                    data: convert(&av.data, node.ty),
+                })
+            }
+            Kind::Broadcast(a) => {
+                let av = self.eval(a)?;
+                let out_n = elem_count(&node.dims);
+                let in_n = av.elems().max(1);
+                let mut out = Data::zeros(node.ty, out_n);
+                for j in 0..out_n {
+                    out.copy_elem(j, &av.data, j % in_n)?;
+                }
+                Ok(Value { dims: node.dims.clone(), data: out })
+            }
+            Kind::Slice { arg, start, stride, dim, .. } => {
+                let av = self.eval(arg)?;
+                let in_dims = &av.dims;
+                let out_dims = node.dims.clone();
+                let in_str = strides(in_dims);
+                let out_str = strides(&out_dims);
+                let out_n = elem_count(&out_dims);
+                let mut out = Data::zeros(node.ty, out_n);
+                for j in 0..out_n {
+                    // unravel j in out_dims, map slice dim, ravel in in_dims
+                    let mut rem = j;
+                    let mut src = 0usize;
+                    for (k, s) in out_str.iter().enumerate() {
+                        let c = rem / s;
+                        rem %= s;
+                        let cc = if k as i64 == *dim {
+                            *start as usize + c * *stride as usize
+                        } else {
+                            c
+                        };
+                        src += cc * in_str[k];
+                    }
+                    out.copy_elem(j, &av.data, src)?;
+                }
+                Ok(Value { dims: out_dims, data: out })
+            }
+            Kind::Concat(parts, dim) => {
+                let vals = parts
+                    .iter()
+                    .map(|p| self.eval(p))
+                    .collect::<Result<Vec<_>>>()?;
+                let out_dims = node.dims.clone();
+                let out_str = strides(&out_dims);
+                let out_n = elem_count(&out_dims);
+                let mut out = Data::zeros(node.ty, out_n);
+                let mut offset = 0i64; // running offset along `dim`
+                for v in &vals {
+                    let in_str = strides(&v.dims);
+                    let in_n = v.elems();
+                    for i in 0..in_n {
+                        let mut rem = i;
+                        let mut dst = 0usize;
+                        for (k, s) in in_str.iter().enumerate() {
+                            let c = rem / s;
+                            rem %= s;
+                            let cc = if k as i64 == *dim {
+                                c + offset as usize
+                            } else {
+                                c
+                            };
+                            dst += cc * out_str[k];
+                        }
+                        out.copy_elem(dst, &v.data, i)?;
+                    }
+                    offset += v.dims[*dim as usize];
+                }
+                Ok(Value { dims: out_dims, data: out })
+            }
+            Kind::ReduceBasic { op, arg, dims, .. } => {
+                let av = self.eval(arg)?;
+                self.reduce_with(node, &av, dims, |ty, acc, x, first| {
+                    Ok(basic_step(*op, ty, acc, x, first))
+                })
+            }
+            Kind::ReduceGeneric { arg, init, comb, dims, .. } => {
+                let av = self.eval(arg)?;
+                let iv = self.eval(init)?;
+                let init_val = iv.data.get_f64(0);
+                let comb = comb.clone();
+                self.reduce_with(node, &av, dims, move |ty, acc, x, first| {
+                    let acc = if first { combine(&comb, ty, init_val, x)? } else { combine(&comb, ty, acc, x)? };
+                    Ok(acc)
+                })
+            }
+            Kind::Take { data, idx, .. } => {
+                let dv = self.eval(data)?;
+                let iv = self.eval(idx)?;
+                let rows = dv.dims[0].max(1);
+                let row_elems: usize =
+                    dv.dims[1..].iter().map(|&d| d as usize).product();
+                let n_idx = iv.elems();
+                let mut out = Data::zeros(node.ty, n_idx * row_elems);
+                for j in 0..n_idx {
+                    // XLA clamps out-of-bounds gather indices
+                    let r = iv.data.get_i64(j).clamp(0, rows - 1) as usize;
+                    for e in 0..row_elems {
+                        out.copy_elem(
+                            j * row_elems + e,
+                            &dv.data,
+                            r * row_elems + e,
+                        )?;
+                    }
+                }
+                Ok(Value { dims: node.dims.clone(), data: out })
+            }
+            Kind::DotGeneral { lhs, rhs, c_lhs, c_rhs } => {
+                let a = self.eval(lhs)?;
+                let b = self.eval(rhs)?;
+                dot_general(node, &a, &b, *c_lhs, *c_rhs)
+            }
+            Kind::Reshape(a) => {
+                let av = self.eval(a)?;
+                Ok(Value { dims: node.dims.clone(), data: av.data })
+            }
+            Kind::Transpose(a, perm) => {
+                let av = self.eval(a)?;
+                let in_str = strides(&av.dims);
+                let out_dims = node.dims.clone();
+                let out_str = strides(&out_dims);
+                let n = av.elems();
+                let mut out = Data::zeros(node.ty, n);
+                for j in 0..n {
+                    let mut rem = j;
+                    let mut src = 0usize;
+                    for (k, s) in out_str.iter().enumerate() {
+                        let c = rem / s;
+                        rem %= s;
+                        src += c * in_str[perm[k] as usize];
+                    }
+                    out.copy_elem(j, &av.data, src)?;
+                }
+                Ok(Value { dims: out_dims, data: out })
+            }
+            Kind::Tuple(_) => {
+                Err(Error::msg("tuples are only supported at the root"))
+            }
+        }
+    }
+
+    /// Shared reduction driver: `step(ty, acc, x, first)` folds element
+    /// x (as f64) into the running accumulator.
+    fn reduce_with(
+        &mut self,
+        node: &Arc<Node>,
+        av: &Value,
+        rdims: &[i64],
+        step: impl Fn(ElementType, f64, f64, bool) -> Result<f64>,
+    ) -> Result<Value> {
+        let in_dims = &av.dims;
+        let out_dims = node.dims.clone();
+        let out_n = elem_count(&out_dims).max(1);
+        let in_str = strides(in_dims);
+        // map an input linear index to an output linear index by
+        // dropping (or collapsing) the reduced dims
+        let kept: Vec<usize> = (0..in_dims.len())
+            .filter(|i| !rdims.contains(&(*i as i64)))
+            .collect();
+        let keep_all = node.dims.len() == in_dims.len(); // keep=true path
+        let out_str = strides(&out_dims);
+        let mut acc = vec![0.0f64; out_n];
+        let mut seen = vec![false; out_n];
+        let n = av.elems();
+        for i in 0..n {
+            let mut rem = i;
+            let mut out_idx = 0usize;
+            let mut kk = 0usize;
+            for (k, s) in in_str.iter().enumerate() {
+                let c = rem / s;
+                rem %= s;
+                if keep_all {
+                    let cc = if rdims.contains(&(k as i64)) { 0 } else { c };
+                    out_idx += cc * out_str[k];
+                } else if kept.get(kk) == Some(&k) {
+                    out_idx += c * out_str[kk];
+                    kk += 1;
+                }
+            }
+            let x = av.data.get_f64(i);
+            acc[out_idx] = step(av.ty(), acc[out_idx], x, !seen[out_idx])?;
+            seen[out_idx] = true;
+        }
+        // empty reduction (no elements): zero/identity-filled
+        let data = match av.ty() {
+            ElementType::F32 => {
+                Data::F32(acc.iter().map(|&v| v as f32).collect())
+            }
+            ElementType::F64 => Data::F64(acc),
+            ElementType::S32 => {
+                Data::I32(acc.iter().map(|&v| v as i32).collect())
+            }
+            ElementType::S64 => {
+                Data::I64(acc.iter().map(|&v| v as i64).collect())
+            }
+        };
+        Ok(Value { dims: out_dims, data })
+    }
+}
+
+fn basic_step(op: RKind, _ty: ElementType, acc: f64, x: f64, first: bool) -> f64 {
+    if first {
+        return x;
+    }
+    match op {
+        RKind::Sum => acc + x,
+        RKind::Max => acc.max(x),
+        RKind::Min => acc.min(x),
+    }
+}
+
+/// Apply a two-scalar combiner computation.
+fn combine(
+    comb: &XlaComputation,
+    ty: ElementType,
+    a: f64,
+    b: f64,
+) -> Result<f64> {
+    let pa = Value { dims: vec![], data: const_scalar(ty, a) };
+    let pb = Value { dims: vec![], data: const_scalar(ty, b) };
+    let params = [pa, pb];
+    let mut m = Machine::new(&params);
+    let out = m.eval(&comb.root)?;
+    Ok(out.data.get_f64(0))
+}
+
+fn dot_general(
+    node: &Arc<Node>,
+    a: &Value,
+    b: &Value,
+    cl: i64,
+    cr: i64,
+) -> Result<Value> {
+    let k = a.dims[cl as usize] as usize;
+    // free-dim index spaces (row-major over remaining dims)
+    let a_free: Vec<usize> = (0..a.dims.len())
+        .filter(|&i| i as i64 != cl)
+        .collect();
+    let b_free: Vec<usize> = (0..b.dims.len())
+        .filter(|&i| i as i64 != cr)
+        .collect();
+    let a_str = strides(&a.dims);
+    let b_str = strides(&b.dims);
+    let a_free_dims: Vec<usize> =
+        a_free.iter().map(|&i| a.dims[i] as usize).collect();
+    let b_free_dims: Vec<usize> =
+        b_free.iter().map(|&i| b.dims[i] as usize).collect();
+    let an: usize = a_free_dims.iter().product();
+    let bn: usize = b_free_dims.iter().product();
+    let out_n = an * bn;
+    let base_index = |free: &[usize],
+                      free_dims: &[usize],
+                      strv: &[usize],
+                      mut lin: usize| {
+        let mut idx = 0usize;
+        // unravel lin over free_dims (row-major), add stride contribution
+        let mut coords = vec![0usize; free_dims.len()];
+        for i in (0..free_dims.len()).rev() {
+            coords[i] = lin % free_dims[i];
+            lin /= free_dims[i];
+        }
+        for (c, &fi) in coords.iter().zip(free) {
+            idx += c * strv[fi];
+        }
+        idx
+    };
+    let compute = |ai: usize, bi: usize| -> f64 {
+        let a0 = base_index(&a_free, &a_free_dims, &a_str, ai);
+        let b0 = base_index(&b_free, &b_free_dims, &b_str, bi);
+        let astep = a_str[cl as usize];
+        let bstep = b_str[cr as usize];
+        let mut acc = 0.0f64;
+        match (&a.data, &b.data) {
+            (Data::F32(x), Data::F32(y)) => {
+                let mut s = 0.0f32;
+                for t in 0..k {
+                    s += x[a0 + t * astep] * y[b0 + t * bstep];
+                }
+                acc = s as f64;
+            }
+            _ => {
+                for t in 0..k {
+                    acc += a.data.get_f64(a0 + t * astep)
+                        * b.data.get_f64(b0 + t * bstep);
+                }
+            }
+        }
+        acc
+    };
+    let data = match a.ty() {
+        ElementType::F32 => {
+            let mut out = vec![0.0f32; out_n];
+            for ai in 0..an {
+                for bi in 0..bn {
+                    out[ai * bn + bi] = compute(ai, bi) as f32;
+                }
+            }
+            Data::F32(out)
+        }
+        ElementType::F64 => {
+            let mut out = vec![0.0f64; out_n];
+            for ai in 0..an {
+                for bi in 0..bn {
+                    out[ai * bn + bi] = compute(ai, bi);
+                }
+            }
+            Data::F64(out)
+        }
+        _ => return Err(Error::msg("dot_general on integer operands")),
+    };
+    Ok(Value { dims: node.dims.clone(), data })
+}

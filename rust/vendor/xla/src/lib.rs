@@ -1,0 +1,353 @@
+//! # xla (vendored simulator)
+//!
+//! A pure-Rust, dependency-free stand-in for the `xla` crate (0.1.6 /
+//! xla_extension 0.5.1) exposing exactly the API subset this repository
+//! uses: `XlaBuilder` graph construction, HLO-text parsing, and a PJRT
+//! client/executable/buffer surface.  Computations are *interpreted* on
+//! the host CPU with strict shape/dtype checking, so the entire RTCG
+//! toolkit — caching, templating, fusion, tuning — is exercised
+//! end-to-end without network access or a native toolchain.
+//!
+//! Two deliberate simulation choices:
+//!
+//! * **Compile latency is modeled.**  `PjRtClient::compile` sleeps for
+//!   `RTCG_SIM_COMPILE_US` microseconds (default 2000).  The Fig 2
+//!   economics of the paper — backend compilation orders of magnitude
+//!   slower than a cache hit — are what the compile cache exists to
+//!   exploit; a zero-cost compile would make cache benchmarks (and
+//!   single-flight contention tests) meaningless.
+//! * **Strictness over permissiveness.**  Unknown HLO ops, shape
+//!   mismatches, and bad parameter bindings are errors, matching the
+//!   paper's §5 "errors are detected and reported automatically".
+//!
+//! Swapping in the real PJRT-backed crate is a manifest change (replace
+//! the `xla` path dependency), not a code change — the `pjrt` feature
+//! hook in the main crate documents the seam.
+
+mod error;
+mod graph;
+mod hlotext;
+mod interp;
+mod literal;
+
+pub use error::{Error, Result};
+pub use graph::{ParamSpec, XlaBuilder, XlaComputation, XlaOp};
+pub use hlotext::HloModuleProto;
+pub use literal::{
+    ArrayShape, Data, ElementType, Literal, NativeType, PrimitiveType, Shape,
+};
+
+use std::borrow::Borrow;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use interp::{Machine, Value};
+use literal::Payload;
+
+/// Modeled backend-compile latency (µs).  Overridable for tests and
+/// benches via `RTCG_SIM_COMPILE_US`.
+fn sim_compile_us() -> u64 {
+    static CACHED: AtomicU64 = AtomicU64::new(u64::MAX);
+    let v = CACHED.load(Ordering::Relaxed);
+    if v != u64::MAX {
+        return v;
+    }
+    let parsed = std::env::var("RTCG_SIM_COMPILE_US")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2000);
+    CACHED.store(parsed, Ordering::Relaxed);
+    parsed
+}
+
+/// Simulated PJRT client (one host-CPU "device").
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "sim-cpu".to_string()
+    }
+
+    pub fn platform_version(&self) -> String {
+        "0.1.6-interp".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    /// "Compile" a computation: validate its parameter signature and pay
+    /// the modeled backend-compile latency.
+    pub fn compile(
+        &self,
+        comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable> {
+        let us = sim_compile_us();
+        if us > 0 {
+            std::thread::sleep(Duration::from_micros(us));
+        }
+        Ok(PjRtLoadedExecutable { comp: Arc::new(comp.clone()) })
+    }
+
+    /// Stage a typed host buffer onto the (simulated) device.
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let count: usize = dims.iter().product();
+        if count != data.len() {
+            return Err(Error::msg(format!(
+                "host buffer has {} elements, shape {:?} wants {count}",
+                data.len(),
+                dims
+            )));
+        }
+        Ok(PjRtBuffer {
+            lit: Literal::from_array(
+                dims.iter().map(|&d| d as i64).collect(),
+                T::into_data(data.to_vec()),
+            ),
+        })
+    }
+}
+
+/// A device-resident buffer (simulated: a literal).
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    pub(crate) lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.lit.clone())
+    }
+
+    pub fn on_device_shape(&self) -> Result<Shape> {
+        self.lit.shape()
+    }
+}
+
+/// A loaded executable.
+#[derive(Debug, Clone)]
+pub struct PjRtLoadedExecutable {
+    comp: Arc<XlaComputation>,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with literal inputs; one "replica" of outputs.
+    pub fn execute<L: Borrow<Literal>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let lits: Vec<&Literal> = args.iter().map(|a| a.borrow()).collect();
+        let out = self.run(&lits)?;
+        Ok(vec![vec![PjRtBuffer { lit: out }]])
+    }
+
+    /// Execute device-to-device.
+    pub fn execute_b<B: Borrow<PjRtBuffer>>(
+        &self,
+        args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let lits: Vec<&Literal> =
+            args.iter().map(|a| &a.borrow().lit).collect();
+        let out = self.run(&lits)?;
+        Ok(vec![vec![PjRtBuffer { lit: out }]])
+    }
+
+    fn run(&self, args: &[&Literal]) -> Result<Literal> {
+        let params = self.comp.params();
+        if args.len() != params.len() {
+            return Err(Error::msg(format!(
+                "executable takes {} parameters, got {}",
+                params.len(),
+                args.len()
+            )));
+        }
+        let mut values = Vec::with_capacity(args.len());
+        for (i, (arg, spec)) in args.iter().zip(params).enumerate() {
+            let (dims, data) = match &arg.payload {
+                Payload::Array { dims, data } => (dims, data),
+                Payload::Tuple(_) => {
+                    return Err(Error::msg("tuple arguments are unsupported"))
+                }
+            };
+            if data.element_type() != spec.ty {
+                return Err(Error::msg(format!(
+                    "argument {i} ('{}'): element type {:?} != expected {:?}",
+                    spec.name,
+                    data.element_type(),
+                    spec.ty
+                )));
+            }
+            if dims != &spec.dims {
+                return Err(Error::msg(format!(
+                    "argument {i} ('{}'): shape {:?} != expected {:?}",
+                    spec.name, dims, spec.dims
+                )));
+            }
+            values.push(Value { dims: dims.clone(), data: data.clone() });
+        }
+        let mut m = Machine::new(&values);
+        // tuple roots become a tuple literal the caller decomposes
+        if let graph::Kind::Tuple(parts) = graph_root_kind(&self.comp) {
+            let mut outs = Vec::with_capacity(parts.len());
+            for p in parts.iter() {
+                let v = m.eval(p)?;
+                outs.push(Literal::from_array(v.dims.clone(), v.data));
+            }
+            return Ok(Literal::from_tuple(outs));
+        }
+        let v = m.eval(root_node(&self.comp))?;
+        Ok(Literal::from_array(v.dims.clone(), v.data))
+    }
+}
+
+fn root_node(comp: &XlaComputation) -> &Arc<graph::Node> {
+    &comp.root
+}
+
+fn graph_root_kind(comp: &XlaComputation) -> &graph::Kind {
+    &comp.root.kind
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f32_lit(dims: Vec<i64>, v: Vec<f32>) -> Literal {
+        Literal::from_array(dims, Data::F32(v))
+    }
+
+    #[test]
+    fn builder_add_executes() {
+        let b = XlaBuilder::new("t");
+        let shape = Shape::array::<f32>(vec![3]);
+        let p = b.parameter_s(0, &shape, "p").unwrap();
+        let comp = p.add_(&p).unwrap().build().unwrap();
+        let client = PjRtClient::cpu().unwrap();
+        let exe = client.compile(&comp).unwrap();
+        let out = exe
+            .execute::<Literal>(&[f32_lit(vec![3], vec![1., 2., 3.])])
+            .unwrap();
+        let lit = out[0][0].to_literal_sync().unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![2., 4., 6.]);
+    }
+
+    #[test]
+    fn hlo_text_roundtrip() {
+        let src = "HloModule m\n\nENTRY main {\n  p = f32[2] parameter(0)\n  c = f32[] constant(3)\n  cb = f32[2] broadcast(c), dimensions={}\n  ROOT r = f32[2] multiply(p, cb)\n}\n";
+        let proto =
+            HloModuleProto::parse_and_return_unverified_module(src.as_bytes())
+                .unwrap();
+        let comp = XlaComputation::from_proto(&proto);
+        let client = PjRtClient::cpu().unwrap();
+        let exe = client.compile(&comp).unwrap();
+        let out = exe
+            .execute::<Literal>(&[f32_lit(vec![2], vec![2.0, 5.0])])
+            .unwrap();
+        let lit = out[0][0].to_literal_sync().unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![6.0, 15.0]);
+    }
+
+    #[test]
+    fn hlo_text_rejects_garbage() {
+        for bad in ["", "garbage", "HloModule x\nENTRY main {"] {
+            assert!(HloModuleProto::parse_and_return_unverified_module(
+                bad.as_bytes()
+            )
+            .is_err());
+        }
+    }
+
+    #[test]
+    fn execute_checks_shapes_and_types() {
+        let b = XlaBuilder::new("t");
+        let shape = Shape::array::<f32>(vec![4]);
+        let p = b.parameter_s(0, &shape, "p").unwrap();
+        let comp = p.add_(&p).unwrap().build().unwrap();
+        let exe = PjRtClient::cpu().unwrap().compile(&comp).unwrap();
+        // wrong arity
+        assert!(exe.execute::<Literal>(&[]).is_err());
+        // wrong shape
+        assert!(exe
+            .execute::<Literal>(&[f32_lit(vec![3], vec![0.0; 3])])
+            .is_err());
+        // wrong dtype
+        let bad = Literal::from_array(vec![4], Data::F64(vec![0.0; 4]));
+        assert!(exe.execute::<Literal>(&[bad]).is_err());
+    }
+
+    #[test]
+    fn reduce_and_dot() {
+        let b = XlaBuilder::new("t");
+        let m = b
+            .parameter_s(0, &Shape::array::<f32>(vec![2, 3]), "m")
+            .unwrap();
+        let v = b
+            .parameter_s(1, &Shape::array::<f32>(vec![3]), "v")
+            .unwrap();
+        let mv = m.dot_general(&v, &[1], &[0], &[], &[]).unwrap();
+        let comp = mv.build().unwrap();
+        let exe = PjRtClient::cpu().unwrap().compile(&comp).unwrap();
+        let out = exe
+            .execute::<Literal>(&[
+                f32_lit(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]),
+                f32_lit(vec![3], vec![1., 1., 1.]),
+            ])
+            .unwrap();
+        let lit = out[0][0].to_literal_sync().unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![6.0, 15.0]);
+    }
+
+    #[test]
+    fn tuple_root_decomposes() {
+        let b = XlaBuilder::new("t");
+        let p = b
+            .parameter_s(0, &Shape::array::<f32>(vec![2]), "p")
+            .unwrap();
+        let q = p.add_(&p).unwrap();
+        let root = b.tuple(&[p, q]).unwrap();
+        let comp = root.build().unwrap();
+        let exe = PjRtClient::cpu().unwrap().compile(&comp).unwrap();
+        let out = exe
+            .execute::<Literal>(&[f32_lit(vec![2], vec![1.0, 2.0])])
+            .unwrap();
+        let mut lit = out[0][0].to_literal_sync().unwrap();
+        assert!(lit.shape().unwrap().is_tuple());
+        let parts = lit.decompose_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[1].to_vec::<f32>().unwrap(), vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn take_gathers_rows() {
+        let b = XlaBuilder::new("t");
+        let d = b
+            .parameter_s(0, &Shape::array::<f32>(vec![4]), "d")
+            .unwrap();
+        let i = b
+            .parameter_s(1, &Shape::array::<i32>(vec![3]), "i")
+            .unwrap();
+        let comp = d.take(&i, 0).unwrap().build().unwrap();
+        let exe = PjRtClient::cpu().unwrap().compile(&comp).unwrap();
+        let out = exe
+            .execute::<Literal>(&[
+                f32_lit(vec![4], vec![10., 20., 30., 40.]),
+                Literal::from_array(vec![3], Data::I32(vec![3, 0, 2])),
+            ])
+            .unwrap();
+        let lit = out[0][0].to_literal_sync().unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![40., 10., 30.]);
+    }
+}

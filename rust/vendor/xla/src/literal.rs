@@ -1,0 +1,407 @@
+//! Element types, shapes and literals — the data-plane types of the
+//! simulated PJRT substrate.
+
+use crate::error::{Error, Result};
+
+/// Storage element type (mirrors xla-rs `ElementType`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ElementType {
+    S32,
+    S64,
+    F32,
+    F64,
+}
+
+impl ElementType {
+    pub fn size_bytes(self) -> usize {
+        match self {
+            ElementType::S32 | ElementType::F32 => 4,
+            ElementType::S64 | ElementType::F64 => 8,
+        }
+    }
+
+    pub fn is_float(self) -> bool {
+        matches!(self, ElementType::F32 | ElementType::F64)
+    }
+
+    pub fn is_int(self) -> bool {
+        !self.is_float()
+    }
+
+    pub fn primitive_type(self) -> PrimitiveType {
+        match self {
+            ElementType::S32 => PrimitiveType::S32,
+            ElementType::S64 => PrimitiveType::S64,
+            ElementType::F32 => PrimitiveType::F32,
+            ElementType::F64 => PrimitiveType::F64,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ElementType::S32 => "s32",
+            ElementType::S64 => "s64",
+            ElementType::F32 => "f32",
+            ElementType::F64 => "f64",
+        }
+    }
+}
+
+/// HLO primitive type discriminant (mirrors xla-rs `PrimitiveType`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PrimitiveType {
+    S32,
+    S64,
+    F32,
+    F64,
+}
+
+impl PrimitiveType {
+    pub fn element_type(self) -> ElementType {
+        match self {
+            PrimitiveType::S32 => ElementType::S32,
+            PrimitiveType::S64 => ElementType::S64,
+            PrimitiveType::F32 => ElementType::F32,
+            PrimitiveType::F64 => ElementType::F64,
+        }
+    }
+}
+
+/// Typed dense storage.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+}
+
+impl Data {
+    pub fn element_type(&self) -> ElementType {
+        match self {
+            Data::F32(_) => ElementType::F32,
+            Data::F64(_) => ElementType::F64,
+            Data::I32(_) => ElementType::S32,
+            Data::I64(_) => ElementType::S64,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::F64(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::I64(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Element `i` widened to f64 (for index reads and constants).
+    pub fn get_f64(&self, i: usize) -> f64 {
+        match self {
+            Data::F32(v) => v[i] as f64,
+            Data::F64(v) => v[i],
+            Data::I32(v) => v[i] as f64,
+            Data::I64(v) => v[i] as f64,
+        }
+    }
+
+    /// Element `i` as i64 (for gather indices).
+    pub fn get_i64(&self, i: usize) -> i64 {
+        match self {
+            Data::F32(v) => v[i] as i64,
+            Data::F64(v) => v[i] as i64,
+            Data::I32(v) => v[i] as i64,
+            Data::I64(v) => v[i],
+        }
+    }
+
+    /// Zero-filled storage of a given type and length.
+    pub fn zeros(ty: ElementType, n: usize) -> Data {
+        match ty {
+            ElementType::F32 => Data::F32(vec![0.0; n]),
+            ElementType::F64 => Data::F64(vec![0.0; n]),
+            ElementType::S32 => Data::I32(vec![0; n]),
+            ElementType::S64 => Data::I64(vec![0; n]),
+        }
+    }
+
+    /// Copy element `src[i]` into `self[j]` (same element type).
+    pub fn copy_elem(&mut self, j: usize, src: &Data, i: usize) -> Result<()> {
+        match (self, src) {
+            (Data::F32(d), Data::F32(s)) => d[j] = s[i],
+            (Data::F64(d), Data::F64(s)) => d[j] = s[i],
+            (Data::I32(d), Data::I32(s)) => d[j] = s[i],
+            (Data::I64(d), Data::I64(s)) => d[j] = s[i],
+            _ => return Err(Error::msg("copy_elem: element type mismatch")),
+        }
+        Ok(())
+    }
+
+    pub fn from_bytes(ty: ElementType, bytes: &[u8]) -> Result<Data> {
+        let sz = ty.size_bytes();
+        if bytes.len() % sz != 0 {
+            return Err(Error::msg(format!(
+                "byte length {} not a multiple of element size {sz}",
+                bytes.len()
+            )));
+        }
+        let n = bytes.len() / sz;
+        Ok(match ty {
+            ElementType::F32 => Data::F32(
+                (0..n)
+                    .map(|i| {
+                        f32::from_ne_bytes(
+                            bytes[i * 4..i * 4 + 4].try_into().unwrap(),
+                        )
+                    })
+                    .collect(),
+            ),
+            ElementType::F64 => Data::F64(
+                (0..n)
+                    .map(|i| {
+                        f64::from_ne_bytes(
+                            bytes[i * 8..i * 8 + 8].try_into().unwrap(),
+                        )
+                    })
+                    .collect(),
+            ),
+            ElementType::S32 => Data::I32(
+                (0..n)
+                    .map(|i| {
+                        i32::from_ne_bytes(
+                            bytes[i * 4..i * 4 + 4].try_into().unwrap(),
+                        )
+                    })
+                    .collect(),
+            ),
+            ElementType::S64 => Data::I64(
+                (0..n)
+                    .map(|i| {
+                        i64::from_ne_bytes(
+                            bytes[i * 8..i * 8 + 8].try_into().unwrap(),
+                        )
+                    })
+                    .collect(),
+            ),
+        })
+    }
+}
+
+/// Rust scalar types that map onto [`ElementType`]s.
+pub trait NativeType: Copy + Send + Sync + 'static {
+    const ELEMENT: ElementType;
+    fn into_data(v: Vec<Self>) -> Data;
+    fn slice_of(data: &Data) -> Option<&[Self]>;
+}
+
+impl NativeType for f32 {
+    const ELEMENT: ElementType = ElementType::F32;
+    fn into_data(v: Vec<Self>) -> Data {
+        Data::F32(v)
+    }
+    fn slice_of(data: &Data) -> Option<&[Self]> {
+        match data {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for f64 {
+    const ELEMENT: ElementType = ElementType::F64;
+    fn into_data(v: Vec<Self>) -> Data {
+        Data::F64(v)
+    }
+    fn slice_of(data: &Data) -> Option<&[Self]> {
+        match data {
+            Data::F64(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const ELEMENT: ElementType = ElementType::S32;
+    fn into_data(v: Vec<Self>) -> Data {
+        Data::I32(v)
+    }
+    fn slice_of(data: &Data) -> Option<&[Self]> {
+        match data {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i64 {
+    const ELEMENT: ElementType = ElementType::S64;
+    fn into_data(v: Vec<Self>) -> Data {
+        Data::I64(v)
+    }
+    fn slice_of(data: &Data) -> Option<&[Self]> {
+        match data {
+            Data::I64(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Array shape: element type + dimensions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn new(ty: ElementType, dims: Vec<i64>) -> ArrayShape {
+        ArrayShape { ty, dims }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn primitive_type(&self) -> PrimitiveType {
+        self.ty.primitive_type()
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().map(|&d| d as usize).product()
+    }
+}
+
+/// A (possibly tuple) shape.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
+
+impl Shape {
+    pub fn array<T: NativeType>(dims: Vec<i64>) -> Shape {
+        Shape::Array(ArrayShape::new(T::ELEMENT, dims))
+    }
+
+    pub fn array_with_type(ty: ElementType, dims: Vec<i64>) -> Shape {
+        Shape::Array(ArrayShape::new(ty, dims))
+    }
+
+    pub fn is_tuple(&self) -> bool {
+        matches!(self, Shape::Tuple(_))
+    }
+}
+
+/// A host-side value: dense array or tuple of arrays.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    pub(crate) payload: Payload,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum Payload {
+    Array { dims: Vec<i64>, data: Data },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    pub(crate) fn from_array(dims: Vec<i64>, data: Data) -> Literal {
+        Literal { payload: Payload::Array { dims, data } }
+    }
+
+    pub(crate) fn from_tuple(parts: Vec<Literal>) -> Literal {
+        Literal { payload: Payload::Tuple(parts) }
+    }
+
+    /// Build from raw host bytes (the H2D staging entry point).
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        bytes: &[u8],
+    ) -> Result<Literal> {
+        let data = Data::from_bytes(ty, bytes)?;
+        let count: usize = dims.iter().product();
+        if data.len() != count {
+            return Err(Error::msg(format!(
+                "literal data has {} elements, shape {:?} wants {count}",
+                data.len(),
+                dims
+            )));
+        }
+        Ok(Literal::from_array(
+            dims.iter().map(|&d| d as i64).collect(),
+            data,
+        ))
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        Ok(match &self.payload {
+            Payload::Array { dims, data } => Shape::Array(ArrayShape::new(
+                data.element_type(),
+                dims.clone(),
+            )),
+            Payload::Tuple(parts) => Shape::Tuple(
+                parts
+                    .iter()
+                    .map(|p| p.shape())
+                    .collect::<Result<Vec<_>>>()?,
+            ),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match &self.payload {
+            Payload::Array { dims, data } => {
+                Ok(ArrayShape::new(data.element_type(), dims.clone()))
+            }
+            Payload::Tuple(_) => {
+                Err(Error::msg("array_shape() on a tuple literal"))
+            }
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.payload {
+            Payload::Array { data, .. } => data.len(),
+            Payload::Tuple(parts) => parts.len(),
+        }
+    }
+
+    /// Typed read-out; the element type must match exactly.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match &self.payload {
+            Payload::Array { data, .. } => T::slice_of(data)
+                .map(|s| s.to_vec())
+                .ok_or_else(|| {
+                    Error::msg(format!(
+                        "to_vec: literal holds {:?}, not {:?}",
+                        data.element_type(),
+                        T::ELEMENT
+                    ))
+                }),
+            Payload::Tuple(_) => Err(Error::msg("to_vec on a tuple literal")),
+        }
+    }
+
+    /// Split a tuple literal into its parts (consumes the contents).
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        match std::mem::replace(
+            &mut self.payload,
+            Payload::Tuple(Vec::new()),
+        ) {
+            Payload::Tuple(parts) => Ok(parts),
+            p => {
+                self.payload = p;
+                Err(Error::msg("decompose_tuple on a non-tuple literal"))
+            }
+        }
+    }
+}
