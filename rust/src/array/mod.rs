@@ -465,6 +465,19 @@ impl GpuArray {
     /// launch once over the leaf buffers.  `reduce: None` memoizes the
     /// result on the node (and releases its expression).
     fn run_fused(&self, reduce: Option<ReduceK>) -> Result<DeviceBuffer> {
+        self.run_fused_on(reduce, 0)
+    }
+
+    /// Device-targeted variant of [`Self::run_fused`] — the exec
+    /// subsystem's workers pass their own device ordinal so independent
+    /// DAGs spread over the pool.  (Simulated buffers are literals, so
+    /// leaves staged on another device remain readable; real PJRT would
+    /// insert a D2D copy here.)
+    fn run_fused_on(
+        &self,
+        reduce: Option<ReduceK>,
+        device: usize,
+    ) -> Result<DeviceBuffer> {
         if reduce.is_none() {
             if let Some(b) = self.node.cached() {
                 return Ok(b);
@@ -491,7 +504,7 @@ impl GpuArray {
             .collect::<Result<_>>()?;
         let refs: Vec<&DeviceBuffer> = bufs.iter().collect();
         let out = exe
-            .run_buffers(&refs)?
+            .run_buffers_on(device, &refs)?
             .into_iter()
             .next()
             .ok_or_else(|| Error::msg("fused kernel produced no output"))?;
@@ -508,6 +521,14 @@ impl GpuArray {
         self.run_fused(None)
     }
 
+    /// Device-targeted [`Self::buffer`]: any fused materialization this
+    /// forces launches on `device` (exec workers pass their own
+    /// ordinal).  An already-materialized node returns its memoized
+    /// buffer wherever it resides.
+    pub fn buffer_on(&self, device: usize) -> Result<DeviceBuffer> {
+        self.run_fused_on(None, device)
+    }
+
     /// Force materialization, discarding the buffer handle.
     pub fn materialize(&self) -> Result<()> {
         self.buffer().map(|_| ())
@@ -516,6 +537,35 @@ impl GpuArray {
     /// `.get()` — materialize + fetch to host (Fig 3b).
     pub fn get(&self) -> Result<HostArray> {
         self.buffer()?.to_host()
+    }
+
+    /// Materialize asynchronously on the shared exec subsystem:
+    /// submits the fused launch to a device worker and returns at
+    /// once, so independent lazy DAGs (the CG solver's per-iteration
+    /// updates, batched elementwise requests) execute concurrently.
+    /// The result is memoized on the node exactly as [`Self::materialize`]
+    /// would.
+    ///
+    /// Racing a concurrent materialization of the *same* node (e.g.
+    /// `materialize_async` immediately followed by a blocking `get`)
+    /// is safe — memoization is idempotent and last-write-wins on
+    /// identical results — but may launch the fused kernel twice;
+    /// await the returned future before forcing the node to avoid the
+    /// duplicate work.
+    pub fn materialize_async(&self) -> crate::exec::ExecFuture<()> {
+        let this = self.clone();
+        self.ctx.toolkit().executor().submit(move |device| {
+            this.run_fused_on(None, device).map(|_| ())
+        })
+    }
+
+    /// Async `.get()`: materialize + fetch on a device worker,
+    /// returning a future for the host array.
+    pub fn get_async(&self) -> crate::exec::ExecFuture<HostArray> {
+        let this = self.clone();
+        self.ctx.toolkit().executor().submit(move |device| {
+            this.run_fused_on(None, device)?.to_host()
+        })
     }
 
     // ---------------- elementwise binary (lazy) ------------------------
@@ -904,6 +954,34 @@ mod tests {
             .to_gpu(&HostArray::f32(vec![2, 2], vec![1., 2., 3., 4.]))
             .unwrap();
         assert_eq!(a.mean().unwrap().item().unwrap(), 2.5);
+    }
+
+    #[test]
+    fn async_materialize_memoizes_like_sync() {
+        let c = ctx();
+        let a = arr(&c, vec![1.0, 2.0, 3.0]);
+        let chain = a.scale(2.0).unwrap().add_scalar(1.0).unwrap();
+        assert!(!chain.is_materialized());
+        chain.materialize_async().wait().unwrap();
+        assert!(chain.is_materialized());
+        assert_eq!(
+            chain.get().unwrap().as_f32().unwrap(),
+            &[3.0, 5.0, 7.0]
+        );
+    }
+
+    #[test]
+    fn independent_dags_run_concurrently_through_the_executor() {
+        // two independent expressions submitted back-to-back; both
+        // futures resolve with correct values (placement may or may
+        // not overlap them — correctness is what this pins down)
+        let c = ctx();
+        let a = arr(&c, vec![1.0, 2.0]);
+        let b = arr(&c, vec![10.0, 20.0]);
+        let fa = a.scale(3.0).unwrap().get_async();
+        let fb = b.add_scalar(5.0).unwrap().get_async();
+        assert_eq!(fa.wait().unwrap().as_f32().unwrap(), &[3.0, 6.0]);
+        assert_eq!(fb.wait().unwrap().as_f32().unwrap(), &[15.0, 25.0]);
     }
 
     #[test]

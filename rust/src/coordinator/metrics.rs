@@ -1,12 +1,52 @@
 //! Coordinator metrics — the §5 run-time services (timing, counters)
-//! surfaced at system level, including the unified compile-cache
-//! counters (Fig 2 economics as a live observable: hit ratio,
-//! single-flight dedup, eviction pressure).
+//! surfaced at system level: the unified compile-cache counters (Fig 2
+//! economics as a live observable), the §6.3 staging-pool stats, and
+//! queue saturation signals (wait-time histogram + full-queue
+//! rejections) for the bounded request channel.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::mempool::PoolStats;
 use crate::rtcg::cache::CacheSnapshot;
+
+/// Upper bounds (µs) of the queue-wait histogram buckets; a seventh
+/// implicit bucket catches everything larger.
+pub const QUEUE_WAIT_BUCKETS_US: [u64; 6] =
+    [10, 100, 1_000, 10_000, 100_000, 1_000_000];
+
+/// Number of histogram buckets (bounds + overflow).
+pub const QUEUE_WAIT_BUCKET_COUNT: usize = QUEUE_WAIT_BUCKETS_US.len() + 1;
+
+/// Lock-free fixed-bucket histogram of queue-wait times.
+#[derive(Debug)]
+pub struct QueueWaitHisto {
+    buckets: [AtomicU64; QUEUE_WAIT_BUCKET_COUNT],
+}
+
+impl Default for QueueWaitHisto {
+    fn default() -> Self {
+        QueueWaitHisto {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+impl QueueWaitHisto {
+    pub fn observe_ns(&self, ns: u64) {
+        let us = ns / 1_000;
+        let i = QUEUE_WAIT_BUCKETS_US
+            .iter()
+            .position(|&bound| us <= bound)
+            .unwrap_or(QUEUE_WAIT_BUCKETS_US.len());
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> [u64; QUEUE_WAIT_BUCKET_COUNT] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+}
 
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -15,10 +55,22 @@ pub struct Metrics {
     pub source_runs: AtomicU64,
     pub tunes: AtomicU64,
     pub errors: AtomicU64,
+    /// shed requests: bounced off a full bounded intake queue
+    /// (`try_submit`) or rejected at dispatch because the device
+    /// pool's outstanding backlog exceeded `pool_backlog_cap`
+    pub queue_rejections: AtomicU64,
     pub busy_ns: AtomicU64,
+    /// summed intake-queue wait (enqueue → service-thread pickup)
     pub queue_wait_ns: AtomicU64,
+    /// end-to-end admission wait (enqueue → execution start, i.e.
+    /// intake queue + per-device scheduler queue for dispatched jobs)
+    pub queue_wait_hist: QueueWaitHisto,
+    /// outstanding jobs per device worker at the last Stats refresh —
+    /// the scheduler's (unbounded) queues are where saturation
+    /// actually accrues once intake admits a job
+    exec_queue_depths: Mutex<Vec<u64>>,
     // mirror of the unified compile cache (refreshed by the service
-    // loop; the cache itself lives on the service thread)
+    // loop; the cache itself lives behind the toolkit)
     cache_mem_hits: AtomicU64,
     cache_disk_hits: AtomicU64,
     cache_misses: AtomicU64,
@@ -26,6 +78,9 @@ pub struct Metrics {
     cache_evictions: AtomicU64,
     cache_entries: AtomicU64,
     cache_bytes: AtomicU64,
+    // mirror of the §6.3 staging pool (same refresh discipline as
+    // the exec queue depths: whole-struct swap on the Stats path)
+    pool: Mutex<PoolStats>,
 }
 
 /// A point-in-time copy for reporting.
@@ -36,10 +91,21 @@ pub struct Snapshot {
     pub source_runs: u64,
     pub tunes: u64,
     pub errors: u64,
+    pub queue_rejections: u64,
+    /// summed work time across service thread + device workers; may
+    /// exceed wall clock under parallel dispatch
     pub busy_ms: f64,
     pub queue_wait_ms: f64,
+    /// end-to-end admission-wait counts (enqueue → execution start)
+    /// per bucket; bounds in [`QUEUE_WAIT_BUCKETS_US`] plus one
+    /// overflow bucket
+    pub queue_wait_hist: [u64; QUEUE_WAIT_BUCKET_COUNT],
+    /// outstanding jobs per device worker at the last Stats refresh
+    pub exec_queue_depths: Vec<u64>,
     /// unified compile-cache counters (see `rtcg::cache`)
     pub cache: CacheSnapshot,
+    /// H2D staging-pool counters (see `mempool`)
+    pub pool: PoolStats,
 }
 
 impl Metrics {
@@ -47,6 +113,10 @@ impl Metrics {
         counter.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Time `f` into `busy_ns`.  Called concurrently from device
+    /// workers, so busy time is *summed work time* (CPU-seconds
+    /// style): under parallel dispatch it legitimately exceeds wall
+    /// clock.
     pub fn time<T>(&self, f: impl FnOnce() -> T) -> T {
         let t = Instant::now();
         let out = f();
@@ -67,6 +137,16 @@ impl Metrics {
         self.cache_bytes.store(s.bytes, Ordering::Relaxed);
     }
 
+    /// Refresh the per-device scheduler queue-depth mirror.
+    pub fn update_exec_depths(&self, depths: Vec<u64>) {
+        *self.exec_queue_depths.lock().unwrap() = depths;
+    }
+
+    /// Refresh the staging-pool mirror from fresh [`PoolStats`].
+    pub fn update_pool(&self, s: &PoolStats) {
+        *self.pool.lock().unwrap() = s.clone();
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         Snapshot {
             requests: self.requests.load(Ordering::Relaxed),
@@ -74,10 +154,19 @@ impl Metrics {
             source_runs: self.source_runs.load(Ordering::Relaxed),
             tunes: self.tunes.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            queue_rejections: self
+                .queue_rejections
+                .load(Ordering::Relaxed),
             busy_ms: self.busy_ns.load(Ordering::Relaxed) as f64 / 1e6,
             queue_wait_ms: self.queue_wait_ns.load(Ordering::Relaxed)
                 as f64
                 / 1e6,
+            queue_wait_hist: self.queue_wait_hist.snapshot(),
+            exec_queue_depths: self
+                .exec_queue_depths
+                .lock()
+                .unwrap()
+                .clone(),
             cache: CacheSnapshot {
                 mem_hits: self.cache_mem_hits.load(Ordering::Relaxed),
                 disk_hits: self.cache_disk_hits.load(Ordering::Relaxed),
@@ -89,6 +178,7 @@ impl Metrics {
                 entries: self.cache_entries.load(Ordering::Relaxed),
                 bytes: self.cache_bytes.load(Ordering::Relaxed),
             },
+            pool: self.pool.lock().unwrap().clone(),
         }
     }
 }
@@ -109,6 +199,7 @@ mod tests {
         assert_eq!(s.requests, 2);
         assert_eq!(s.errors, 1);
         assert!(s.busy_ms >= 0.0);
+        assert_eq!(s.queue_rejections, 0);
     }
 
     #[test]
@@ -125,5 +216,41 @@ mod tests {
         };
         m.update_cache(&cs);
         assert_eq!(m.snapshot().cache, cs);
+    }
+
+    #[test]
+    fn pool_mirror_roundtrips() {
+        let m = Metrics::default();
+        let ps = PoolStats {
+            allocs: 10,
+            pool_hits: 6,
+            fresh_allocs: 4,
+            frees: 9,
+            bytes_held: 2048,
+            bytes_active: 512,
+        };
+        m.update_pool(&ps);
+        assert_eq!(m.snapshot().pool, ps);
+    }
+
+    #[test]
+    fn exec_depth_mirror_roundtrips() {
+        let m = Metrics::default();
+        assert!(m.snapshot().exec_queue_depths.is_empty());
+        m.update_exec_depths(vec![3, 0, 7]);
+        assert_eq!(m.snapshot().exec_queue_depths, vec![3, 0, 7]);
+    }
+
+    #[test]
+    fn queue_wait_histogram_buckets() {
+        let m = Metrics::default();
+        m.queue_wait_hist.observe_ns(5_000); // 5µs → bucket 0 (≤10µs)
+        m.queue_wait_hist.observe_ns(50_000); // 50µs → bucket 1
+        m.queue_wait_hist.observe_ns(2_000_000_000); // 2s → overflow
+        let h = m.snapshot().queue_wait_hist;
+        assert_eq!(h[0], 1);
+        assert_eq!(h[1], 1);
+        assert_eq!(h[QUEUE_WAIT_BUCKET_COUNT - 1], 1);
+        assert_eq!(h.iter().sum::<u64>(), 3);
     }
 }

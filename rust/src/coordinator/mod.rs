@@ -3,6 +3,12 @@
 //! metrics.  The paper's two-tier thesis at system scale: the high-level
 //! tier orchestrates ("control input is needed by the GPU about once
 //! every millisecond"), generated device code computes.
+//!
+//! Since the exec subsystem landed, the service thread is an admission
+//! queue, not an executor: launches and source runs dispatch to
+//! `exec::Scheduler`'s per-device workers and reply from there, while
+//! the bounded intake channel exposes saturation (queue-wait histogram,
+//! full-queue rejection counter) through `metrics::Snapshot`.
 
 pub mod api;
 pub mod metrics;

@@ -1,10 +1,23 @@
 //! The coordinator event loop.
 //!
-//! PJRT handles wrap raw pointers (!Send), so the device, registry,
-//! compile cache and tuning database all live on a dedicated service
-//! thread; clients talk to it over a bounded channel (backpressure =
-//! channel depth).  This is the L3 topology: Rust owns the event loop
-//! and process lifecycle, generated code owns the flops.
+//! The service thread owns request intake, the tuning database, and
+//! metrics, but no longer executes launches inline: `Launch` and
+//! `RunSource` jobs are resolved (variant choice, manifest lookup) on
+//! the service thread and then **dispatched to the exec scheduler**,
+//! whose per-device workers compile (behind the unified cache) and
+//! execute them concurrently — the coordinator is an admission queue in
+//! front of the multi-device pool, not a serial executor.  Replies flow
+//! back on each job's own channel from whichever worker ran it; the
+//! service thread quiesces the scheduler (barrier) before exiting, so
+//! shutdown never drops an accepted request.
+//!
+//! Backpressure is observable: the bounded intake channel counts
+//! full-queue rejections (`try_submit`); every accepted job's
+//! *end-to-end* admission wait — intake queue plus per-device
+//! scheduler queue, measured enqueue → execution start — feeds a
+//! fixed-bucket histogram (`metrics::QueueWaitHisto`); and Stats
+//! exports the per-device scheduler queue depths, where saturation
+//! accrues once intake admits a job.
 
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -13,16 +26,23 @@ use std::time::Instant;
 
 use crate::coordinator::api::{Request, Response};
 use crate::coordinator::metrics::{Metrics, Snapshot};
+use crate::exec::Executor;
 use crate::kernels::Registry;
 use crate::rtcg::module::Toolkit;
+use crate::runtime::HostArray;
 use crate::tuner::{tune_measured, TuneOpts, TuningDb};
 use crate::util::error::{Error, Result};
 
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
     pub artifacts_dir: PathBuf,
-    /// bounded queue depth (backpressure)
+    /// bounded intake-queue depth (backpressure on admission)
     pub queue_depth: usize,
+    /// shed Launch/RunSource dispatches once this many jobs are
+    /// outstanding across the device pool's (unbounded) worker queues
+    /// — the load-shedding bound the intake channel alone cannot
+    /// provide now that execution is asynchronous
+    pub pool_backlog_cap: usize,
     /// persist tuning outcomes
     pub tuning_db: Option<PathBuf>,
 }
@@ -32,6 +52,7 @@ impl Default for CoordinatorConfig {
         CoordinatorConfig {
             artifacts_dir: PathBuf::from("artifacts"),
             queue_depth: 64,
+            pool_backlog_cap: 256,
             tuning_db: None,
         }
     }
@@ -68,23 +89,53 @@ impl Coordinator {
         Ok(Coordinator { tx, metrics, handle: Some(handle) })
     }
 
-    /// Submit a request and wait for its response.
-    pub fn submit(&self, req: Request) -> Response {
+    fn job_for(req: Request) -> (Job, mpsc::Receiver<Response>) {
         let (reply_tx, reply_rx) = mpsc::channel();
         let job = Job { req, reply: reply_tx, enqueued: Instant::now() };
-        if self.tx.send(job).is_err() {
-            return Response::Error("coordinator is down".into());
-        }
+        (job, reply_rx)
+    }
+
+    fn await_reply(reply_rx: mpsc::Receiver<Response>) -> Response {
         reply_rx
             .recv()
             .unwrap_or(Response::Error("coordinator dropped reply".into()))
+    }
+
+    /// Submit a request and wait for its response (blocks while the
+    /// bounded queue is full — backpressure).
+    pub fn submit(&self, req: Request) -> Response {
+        let (job, reply_rx) = Self::job_for(req);
+        if self.tx.send(job).is_err() {
+            return Response::Error("coordinator is down".into());
+        }
+        Self::await_reply(reply_rx)
+    }
+
+    /// Submit without blocking on a full queue: saturation turns into
+    /// an immediate, *counted* rejection (`Snapshot.queue_rejections`)
+    /// instead of caller backpressure — the load-shedding mode of the
+    /// ROADMAP's heavy-traffic north star.
+    pub fn try_submit(&self, req: Request) -> Response {
+        let (job, reply_rx) = Self::job_for(req);
+        match self.tx.try_send(job) {
+            Ok(()) => Self::await_reply(reply_rx),
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.metrics.note(&self.metrics.queue_rejections);
+                Response::Error("coordinator queue is full".into())
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                Response::Error("coordinator is down".into())
+            }
+        }
     }
 
     pub fn metrics(&self) -> Snapshot {
         self.metrics.snapshot()
     }
 
-    /// Orderly shutdown (also triggered by drop).
+    /// Orderly shutdown (also triggered by drop): the service thread
+    /// quiesces the exec scheduler before exiting, so every accepted
+    /// request's reply is delivered first.
     pub fn shutdown(&mut self) {
         let _ = self.submit(Request::Shutdown);
         if let Some(h) = self.handle.take() {
@@ -105,7 +156,6 @@ fn service_loop(
     metrics: Arc<Metrics>,
     ready: mpsc::Sender<Result<()>>,
 ) {
-    // all !Send state lives here
     let init = (|| -> Result<(Registry, Option<TuningDb>)> {
         let tk = Toolkit::init()?;
         let registry = Registry::open(tk, &cfg.artifacts_dir)?;
@@ -125,49 +175,96 @@ fn service_loop(
             return;
         }
     };
+    // the toolkit's shared per-device pool: one scheduler serves the
+    // coordinator AND in-process async users (GpuArray, elementwise),
+    // so least-loaded placement sees every queue
+    let exec = registry.toolkit().executor();
 
     while let Ok(job) = rx.recv() {
         metrics.note(&metrics.requests);
+        // intake wait (the histogram observes the *end-to-end*
+        // admission wait per request inside dispatch, at execution
+        // start — for dispatched jobs that includes scheduler-queue
+        // time, where saturation actually accrues)
         metrics.queue_wait_ns.fetch_add(
             job.enqueued.elapsed().as_nanos() as u64,
             std::sync::atomic::Ordering::Relaxed,
         );
-        let resp = metrics.time(|| {
-            handle(&registry, &mut db, &metrics, job.req)
-        });
-        let stop = matches!(resp, Response::ShuttingDown);
-        let _ = job.reply.send(resp);
-        if stop {
+        if dispatch(
+            &registry,
+            &mut db,
+            &metrics,
+            &exec,
+            cfg.pool_backlog_cap as u64,
+            job,
+        ) {
             break;
         }
     }
+    // requests accepted into the intake queue behind the Shutdown job
+    // still get a reply — never a silently dropped channel
+    while let Ok(job) = rx.try_recv() {
+        let _ = job
+            .reply
+            .send(Response::Error("coordinator is shutting down".into()));
+    }
+    // quiesce: every dispatched job completes and replies before exit
+    // (the pool itself belongs to the toolkit and keeps running)
+    exec.barrier();
     if let Some(db) = &db {
         let _ = db.save();
     }
 }
 
-fn handle(
+/// Handle one job: cheap/stateful requests run inline, launches and
+/// source runs go to the scheduler.  Returns `true` on shutdown.
+fn dispatch(
     registry: &Registry,
     db: &mut Option<TuningDb>,
-    metrics: &Metrics,
-    req: Request,
-) -> Response {
-    match req {
-        Request::Shutdown => Response::ShuttingDown,
+    metrics: &Arc<Metrics>,
+    exec: &Executor,
+    backlog_cap: u64,
+    job: Job,
+) -> bool {
+    let reply = job.reply;
+    let enqueued = job.enqueued;
+    // the admission-wait histogram observes at execution start: here
+    // for inline requests, at worker pickup for dispatched ones
+    let observe_wait = |m: &Metrics| {
+        m.queue_wait_hist
+            .observe_ns(enqueued.elapsed().as_nanos() as u64)
+    };
+    match job.req {
+        Request::Shutdown => {
+            observe_wait(metrics);
+            let _ = reply.send(Response::ShuttingDown);
+            return true;
+        }
         Request::Stats => {
-            // refresh the unified compile-cache mirror (rtcg::cache) on
-            // demand only — snapshot_full() walks every shard lock, too
-            // costly to pay on the Launch/Tune hot path
+            observe_wait(metrics);
+            // refresh the unified compile-cache, staging-pool, and
+            // scheduler-depth mirrors on demand only — snapshot_full()
+            // walks every shard lock, too costly to pay on the Launch
+            // hot path
             metrics.update_cache(&registry.toolkit().cache().snapshot_full());
-            Response::Stats(metrics.snapshot())
+            metrics.update_pool(&registry.toolkit().staging_pool().stats());
+            metrics
+                .update_exec_depths(exec.scheduler().queue_depths());
+            let _ = reply.send(Response::Stats(metrics.snapshot()));
         }
         Request::Launch { kernel, workload, variant, inputs } => {
+            // shed before counting: `launches` tracks dispatched work,
+            // not rejected intents
+            if pool_saturated(exec, backlog_cap, metrics, &reply) {
+                return false;
+            }
             metrics.note(&metrics.launches);
-            let r = (|| -> Result<Vec<crate::runtime::HostArray>> {
+            // variant resolution needs the tuning db → inline; the
+            // compile + execute goes to a device worker
+            let resolved = (|| -> Result<crate::kernels::manifest::ManifestEntry> {
                 let name = match &variant {
                     Some(v) => v.clone(),
                     None => {
-                        // tuned choice, if the db knows one
                         let platform =
                             registry.toolkit().client().platform_name();
                         db.as_ref()
@@ -189,53 +286,79 @@ fn handle(
                             })?
                     }
                 };
-                let entry =
-                    registry.manifest().entry(&kernel, &workload, &name)?;
-                let module = registry.load(entry)?;
-                let refs: Vec<&crate::runtime::HostArray> =
-                    inputs.iter().collect();
-                module.call(&refs)
+                Ok(registry
+                    .manifest()
+                    .entry(&kernel, &workload, &name)?
+                    .clone())
             })();
-            match r {
-                Ok(outputs) => Response::Outputs(outputs),
+            match resolved {
                 Err(e) => {
+                    observe_wait(metrics);
                     metrics.note(&metrics.errors);
-                    Response::Error(e.to_string())
+                    let _ = reply.send(Response::Error(e.to_string()));
+                }
+                Ok(entry) => {
+                    let registry = registry.clone();
+                    let metrics = metrics.clone();
+                    let _ = exec.submit(move |device| {
+                        metrics.queue_wait_hist.observe_ns(
+                            enqueued.elapsed().as_nanos() as u64,
+                        );
+                        let resp = metrics.time(|| {
+                            run_entry(&registry, &entry, &inputs, device)
+                        });
+                        if matches!(resp, Response::Error(_)) {
+                            metrics.note(&metrics.errors);
+                        }
+                        let _ = reply.send(resp);
+                        Ok(())
+                    });
                 }
             }
         }
         Request::RunSource { hlo_text, inputs } => {
-            metrics.note(&metrics.source_runs);
-            let r = (|| -> Result<Vec<crate::runtime::HostArray>> {
-                let module =
-                    registry.toolkit().source_module(&hlo_text)?;
-                let refs: Vec<&crate::runtime::HostArray> =
-                    inputs.iter().collect();
-                module.call(&refs)
-            })();
-            match r {
-                Ok(outputs) => Response::Outputs(outputs),
-                Err(e) => {
-                    metrics.note(&metrics.errors);
-                    Response::Error(e.to_string())
-                }
+            if pool_saturated(exec, backlog_cap, metrics, &reply) {
+                return false;
             }
+            metrics.note(&metrics.source_runs);
+            let registry = registry.clone();
+            let metrics = metrics.clone();
+            let _ = exec.submit(move |device| {
+                metrics.queue_wait_hist.observe_ns(
+                    enqueued.elapsed().as_nanos() as u64,
+                );
+                let resp = metrics.time(|| {
+                    run_source(&registry, &hlo_text, &inputs, device)
+                });
+                if matches!(resp, Response::Error(_)) {
+                    metrics.note(&metrics.errors);
+                }
+                let _ = reply.send(resp);
+                Ok(())
+            });
         }
         Request::Tune { kernel, workload, seed } => {
+            observe_wait(metrics);
             metrics.note(&metrics.tunes);
+            // tuning measures wall time per variant — quiesce the
+            // device pool first, then run inline and serial, so
+            // previously dispatched launches can't skew the numbers
+            exec.barrier();
             let entries = registry.manifest().variants(&kernel, &workload);
             let index_bound = entries
                 .first()
                 .and_then(|e| e.inputs.last())
                 .map(|t| t.shape[0])
                 .unwrap_or(1);
-            let r = tune_measured(
-                registry,
-                &entries,
-                &|e| Ok(registry.synth_inputs(e, seed, index_bound)),
-                &TuneOpts::default(),
-            );
-            match r {
+            let r = metrics.time(|| {
+                tune_measured(
+                    registry,
+                    &entries,
+                    &|e| Ok(registry.synth_inputs(e, seed, index_bound)),
+                    &TuneOpts::default(),
+                )
+            });
+            let resp = match r {
                 Ok(result) => {
                     if let Some(d) = db {
                         d.record(&result);
@@ -253,8 +376,66 @@ fn handle(
                     metrics.note(&metrics.errors);
                     Response::Error(e.to_string())
                 }
-            }
+            };
+            let _ = reply.send(resp);
         }
+    }
+    false
+}
+
+/// Load shedding at dispatch: the intake channel drains in
+/// microseconds now that execution is asynchronous, so saturation is
+/// judged against the device pool's outstanding backlog instead.  A
+/// shed request gets an immediate error reply and counts as a queue
+/// rejection.
+fn pool_saturated(
+    exec: &Executor,
+    backlog_cap: u64,
+    metrics: &Metrics,
+    reply: &mpsc::Sender<Response>,
+) -> bool {
+    let backlog: u64 = exec.scheduler().queue_depths().iter().sum();
+    if backlog < backlog_cap {
+        return false;
+    }
+    metrics.note(&metrics.queue_rejections);
+    let _ = reply.send(Response::Error(format!(
+        "execution pool saturated ({backlog} jobs outstanding)"
+    )));
+    true
+}
+
+fn run_entry(
+    registry: &Registry,
+    entry: &crate::kernels::manifest::ManifestEntry,
+    inputs: &[HostArray],
+    device: usize,
+) -> Response {
+    let r = (|| -> Result<Vec<HostArray>> {
+        let module = registry.load(entry)?;
+        let refs: Vec<&HostArray> = inputs.iter().collect();
+        module.call_on(device, &refs)
+    })();
+    match r {
+        Ok(outputs) => Response::Outputs(outputs),
+        Err(e) => Response::Error(e.to_string()),
+    }
+}
+
+fn run_source(
+    registry: &Registry,
+    hlo_text: &str,
+    inputs: &[HostArray],
+    device: usize,
+) -> Response {
+    let r = (|| -> Result<Vec<HostArray>> {
+        let module = registry.toolkit().source_module(hlo_text)?;
+        let refs: Vec<&HostArray> = inputs.iter().collect();
+        module.call_on(device, &refs)
+    })();
+    match r {
+        Ok(outputs) => Response::Outputs(outputs),
+        Err(e) => Response::Error(e.to_string()),
     }
 }
 
@@ -269,6 +450,7 @@ mod tests {
         Coordinator::start(CoordinatorConfig {
             artifacts_dir: dir,
             queue_depth: 8,
+            pool_backlog_cap: 256,
             tuning_db: None,
         })
         .unwrap()
@@ -347,10 +529,36 @@ ENTRY main {
     }
 
     #[test]
+    fn full_queue_rejections_are_counted() {
+        // a Coordinator with no service thread: the bounded queue is
+        // filled directly, so try_submit's Full branch is deterministic
+        let (tx, rx) = mpsc::sync_channel::<Job>(1);
+        let metrics = Arc::new(Metrics::default());
+        let c = Coordinator { tx, metrics, handle: None };
+        let (plug_tx, _plug_rx) = mpsc::channel();
+        c.tx.send(Job {
+            req: Request::Stats,
+            reply: plug_tx,
+            enqueued: Instant::now(),
+        })
+        .unwrap();
+        let r = c.try_submit(Request::Stats);
+        assert!(matches!(r, Response::Error(_)));
+        assert_eq!(c.metrics().queue_rejections, 1);
+        let r2 = c.try_submit(Request::Stats);
+        assert!(matches!(r2, Response::Error(_)));
+        assert_eq!(c.metrics().queue_rejections, 2);
+        // disconnect so the drop-path Shutdown submit fails fast
+        // instead of blocking on the still-full queue
+        drop(rx);
+    }
+
+    #[test]
     fn startup_failure_reports() {
         let r = Coordinator::start(CoordinatorConfig {
             artifacts_dir: PathBuf::from("/nonexistent-artifacts"),
             queue_depth: 2,
+            pool_backlog_cap: 256,
             tuning_db: None,
         });
         assert!(r.is_err());

@@ -27,7 +27,16 @@ pub enum EwValue<'a> {
     V(&'a GpuArray),
 }
 
+/// Owned argument value for asynchronously submitted requests (the
+/// closure shipped to an exec worker cannot borrow the caller's
+/// arrays; `GpuArray` is a cheap `Arc`-backed handle).
+pub enum EwValueOwned {
+    S(f64),
+    V(GpuArray),
+}
+
 /// Generated elementwise kernel over same-length vectors.
+#[derive(Clone)]
 pub struct ElementwiseKernel {
     ctx: ArrayContext,
     name: String,
@@ -119,6 +128,19 @@ impl ElementwiseKernel {
     /// Invoke: values must match the declaration order and kinds.
     /// Returns one array per assignment statement, in statement order.
     pub fn call(&self, values: &[EwValue]) -> Result<Vec<GpuArray>> {
+        self.call_on(0, values)
+    }
+
+    /// Device-targeted invoke — exec workers pass their own ordinal so
+    /// batched requests spread over the pool's compute engines.
+    /// (Vector args materialized earlier on another device stay
+    /// readable: simulated buffers are literals; real PJRT would need a
+    /// D2D copy here.)
+    pub fn call_on(
+        &self,
+        device: usize,
+        values: &[EwValue],
+    ) -> Result<Vec<GpuArray>> {
         if values.len() != self.args.len() {
             return Err(Error::msg(format!(
                 "kernel '{}' expects {} args, got {}",
@@ -230,22 +252,60 @@ impl ElementwiseKernel {
                             HostArray::i64(vec![], vec![*s as i64])
                         }
                     };
-                    staged.push(self.ctx.toolkit().client().to_device(&host)?);
+                    staged.push(
+                        self.ctx
+                            .toolkit()
+                            .client()
+                            .to_device_on(&host, device)?,
+                    );
                     arg_bufs.push(staged.len() - 1);
                 }
                 (_, EwValue::V(arr)) => {
-                    staged.push(arr.buffer()?);
+                    // device-targeted materialization: a lazy arg's
+                    // fused kernel launches on this worker's device,
+                    // not always device 0
+                    staged.push(arr.buffer_on(device)?);
                     arg_bufs.push(staged.len() - 1);
                 }
             }
         }
         let refs: Vec<&crate::runtime::DeviceBuffer> =
             arg_bufs.iter().map(|&i| &staged[i]).collect();
-        let outs = exe.run_buffers(&refs)?;
+        let outs = exe.run_buffers_on(device, &refs)?;
         Ok(outs
             .into_iter()
             .map(|b| GpuArray::from_buffer(&self.ctx, b))
             .collect())
+    }
+
+    /// Submit one invocation to the shared exec subsystem; the returned
+    /// future resolves to the same outputs [`Self::call`] would produce,
+    /// computed on whichever device worker the placement policy picks.
+    pub fn call_async(
+        &self,
+        values: Vec<EwValueOwned>,
+    ) -> crate::exec::ExecFuture<Vec<GpuArray>> {
+        let this = self.clone();
+        self.ctx.toolkit().executor().submit(move |device| {
+            let refs: Vec<EwValue> = values
+                .iter()
+                .map(|v| match v {
+                    EwValueOwned::S(s) => EwValue::S(*s),
+                    EwValueOwned::V(a) => EwValue::V(a),
+                })
+                .collect();
+            this.call_on(device, &refs)
+        })
+    }
+
+    /// Batched requests: submit every invocation at once so independent
+    /// requests overlap across the executor's device workers — the
+    /// serving-path analog of issuing kernels on independent streams.
+    pub fn call_batch_async(
+        &self,
+        batch: Vec<Vec<EwValueOwned>>,
+    ) -> Vec<crate::exec::ExecFuture<Vec<GpuArray>>> {
+        batch.into_iter().map(|values| self.call_async(values)).collect()
     }
 }
 
@@ -618,6 +678,36 @@ mod tests {
             out[0].get().unwrap().as_f32().unwrap(),
             &[65.0, 70.0, 75.0]
         );
+    }
+
+    #[test]
+    fn batched_async_requests_match_sync_results() {
+        let c = ctx();
+        let scale = ElementwiseKernel::new(
+            &c,
+            "float a, float *x, float *z",
+            "z[i] = a*x[i]",
+            "scale_batch",
+        )
+        .unwrap();
+        let batch: Vec<Vec<EwValueOwned>> = (1..=4)
+            .map(|k| {
+                vec![
+                    EwValueOwned::S(k as f64),
+                    EwValueOwned::V(arr(&c, vec![1.0, 2.0])),
+                    EwValueOwned::V(arr(&c, vec![0.0, 0.0])),
+                ]
+            })
+            .collect();
+        let futures = scale.call_batch_async(batch);
+        for (k, f) in (1..=4).zip(futures) {
+            let out = f.wait().unwrap();
+            let host = out[0].get().unwrap();
+            assert_eq!(
+                host.as_f32().unwrap(),
+                &[k as f32, 2.0 * k as f32]
+            );
+        }
     }
 
     #[test]

@@ -5,4 +5,4 @@ pub mod ast;
 pub mod kernel;
 
 pub use ast::Arg;
-pub use kernel::{ElementwiseKernel, EwValue, ReductionKernel};
+pub use kernel::{ElementwiseKernel, EwValue, EwValueOwned, ReductionKernel};

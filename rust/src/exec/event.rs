@@ -1,0 +1,131 @@
+//! Events — recordable synchronization points (the paper's §5 run-time
+//! services: PyCUDA exposes CUDA events so scripting code can order and
+//! time asynchronous work without spinning the host).
+//!
+//! An [`Event`] starts unrecorded.  `record()` marks it (either
+//! directly from host code, or — the common case — from a stream via
+//! [`super::Stream::record_event`], which marks it when the stream's
+//! FIFO reaches that point).  `wait()` blocks until recorded;
+//! `query()` never blocks.  A stream can enqueue
+//! [`super::Stream::wait_event`] on an event recorded by *another*
+//! stream — the cross-stream happens-before edge that lets independent
+//! FIFOs express DAG dependencies, exactly CUDA's
+//! `cudaStreamWaitEvent`.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// A recordable sync point, cheaply cloneable; all clones observe the
+/// same record.
+#[derive(Clone)]
+pub struct Event {
+    inner: Arc<Inner>,
+}
+
+struct Inner {
+    recorded: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Default for Event {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Event {
+    /// A fresh, unrecorded event.
+    pub fn new() -> Event {
+        Event {
+            inner: Arc::new(Inner {
+                recorded: Mutex::new(false),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Mark the event and wake every waiter.  Recording twice is a
+    /// no-op (events are one-shot; create a new event per sync point).
+    pub fn record(&self) {
+        let mut g = match self.inner.recorded.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        *g = true;
+        drop(g);
+        self.inner.cv.notify_all();
+    }
+
+    /// `cudaEventQuery`: has the event been recorded?  Never blocks.
+    pub fn query(&self) -> bool {
+        match self.inner.recorded.lock() {
+            Ok(g) => *g,
+            Err(p) => *p.into_inner(),
+        }
+    }
+
+    /// `cudaEventSynchronize`: block until recorded.
+    pub fn wait(&self) {
+        let mut g = self.inner.recorded.lock().unwrap();
+        while !*g {
+            g = self.inner.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Block until recorded or `timeout` elapses; `true` = recorded.
+    pub fn wait_timeout(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.recorded.lock().unwrap();
+        while !*g {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, res) =
+                self.inner.cv.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+            if res.timed_out() && !*g {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn query_then_record_then_query() {
+        let e = Event::new();
+        assert!(!e.query());
+        e.record();
+        assert!(e.query());
+        e.record(); // idempotent
+        assert!(e.query());
+        e.wait(); // already recorded: returns immediately
+    }
+
+    #[test]
+    fn wait_blocks_until_recorded() {
+        let e = Event::new();
+        let e2 = e.clone();
+        let t0 = Instant::now();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            e2.record();
+        });
+        e.wait();
+        assert!(t0.elapsed() >= Duration::from_millis(30));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn wait_timeout_expires_on_unrecorded() {
+        let e = Event::new();
+        assert!(!e.wait_timeout(Duration::from_millis(10)));
+        e.record();
+        assert!(e.wait_timeout(Duration::from_millis(10)));
+    }
+}

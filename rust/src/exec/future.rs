@@ -1,0 +1,172 @@
+//! Completion futures for asynchronously submitted device work.
+//!
+//! Every stream op and scheduler job resolves to an [`ExecFuture`]: the
+//! host-side handle the paper's asynchronous services hand back so
+//! "transfers and kernel launches can overlap host computation".  The
+//! fulfilling side holds the matching [`Promise`]; dropping a promise
+//! without completing it resolves the future to an error instead of
+//! hanging its waiter — the invariant the scheduler's drain-on-shutdown
+//! test pins down ("no dropped futures").
+//!
+//! Plain `Mutex` + `Condvar`, no async runtime: the exec subsystem is
+//! thread-per-stream/worker, matching the repo's zero-dependency rule.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::error::{Error, Result};
+
+enum State<T> {
+    Pending,
+    Done(Result<T>),
+    Taken,
+}
+
+struct Shared<T> {
+    slot: Mutex<State<T>>,
+    cv: Condvar,
+}
+
+/// Fulfilling side of a future.  Completing consumes the promise; a
+/// promise dropped unfulfilled completes its future with an error.
+pub struct Promise<T> {
+    shared: Arc<Shared<T>>,
+    fulfilled: bool,
+}
+
+/// Waitable handle to the result of asynchronously submitted work.
+pub struct ExecFuture<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Create a connected promise/future pair.
+pub fn promise<T>() -> (Promise<T>, ExecFuture<T>) {
+    let shared = Arc::new(Shared {
+        slot: Mutex::new(State::Pending),
+        cv: Condvar::new(),
+    });
+    (
+        Promise { shared: shared.clone(), fulfilled: false },
+        ExecFuture { shared },
+    )
+}
+
+impl<T> Promise<T> {
+    /// Resolve the future (value or error) and wake all waiters.
+    pub fn complete(mut self, value: Result<T>) {
+        self.fulfil(value);
+    }
+
+    fn fulfil(&mut self, value: Result<T>) {
+        if self.fulfilled {
+            return;
+        }
+        self.fulfilled = true;
+        let mut g = match self.shared.slot.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        *g = State::Done(value);
+        drop(g);
+        self.shared.cv.notify_all();
+    }
+}
+
+impl<T> Drop for Promise<T> {
+    fn drop(&mut self) {
+        self.fulfil(Err(Error::msg(
+            "exec promise dropped without completion",
+        )));
+    }
+}
+
+impl<T> ExecFuture<T> {
+    /// Whether the result is available (CUDA `cudaEventQuery` flavor —
+    /// never blocks).
+    pub fn is_ready(&self) -> bool {
+        !matches!(*self.shared.slot.lock().unwrap(), State::Pending)
+    }
+
+    /// Block until the result is available and take it.
+    pub fn wait(self) -> Result<T> {
+        let mut g = self.shared.slot.lock().unwrap();
+        while matches!(*g, State::Pending) {
+            g = self.shared.cv.wait(g).unwrap();
+        }
+        match std::mem::replace(&mut *g, State::Taken) {
+            State::Done(v) => v,
+            _ => Err(Error::msg("exec future already consumed")),
+        }
+    }
+
+    /// Block until the result is available or `timeout` elapses.
+    /// Returns `true` when the future is ready.
+    pub fn wait_timeout(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.shared.slot.lock().unwrap();
+        while matches!(*g, State::Pending) {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, res) = self
+                .shared
+                .cv
+                .wait_timeout(g, deadline - now)
+                .unwrap();
+            g = guard;
+            if res.timed_out() && matches!(*g, State::Pending) {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complete_then_wait() {
+        let (p, f) = promise::<u32>();
+        p.complete(Ok(7));
+        assert!(f.is_ready());
+        assert_eq!(f.wait().unwrap(), 7);
+    }
+
+    #[test]
+    fn wait_blocks_until_complete() {
+        let (p, f) = promise::<&'static str>();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            p.complete(Ok("late"));
+        });
+        assert_eq!(f.wait().unwrap(), "late");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn dropped_promise_is_an_error_not_a_hang() {
+        let (p, f) = promise::<u32>();
+        drop(p);
+        assert!(f.is_ready());
+        assert!(f.wait().is_err());
+    }
+
+    #[test]
+    fn wait_timeout_reports_pending() {
+        let (p, f) = promise::<u32>();
+        assert!(!f.wait_timeout(Duration::from_millis(10)));
+        p.complete(Ok(1));
+        assert!(f.wait_timeout(Duration::from_millis(10)));
+        assert_eq!(f.wait().unwrap(), 1);
+    }
+
+    #[test]
+    fn errors_propagate() {
+        let (p, f) = promise::<u32>();
+        p.complete(Err(Error::msg("boom")));
+        assert!(f.wait().unwrap_err().to_string().contains("boom"));
+    }
+}

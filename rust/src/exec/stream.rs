@@ -1,0 +1,213 @@
+//! Streams — per-stream FIFO queues of asynchronous device ops.
+//!
+//! The paper's run-time services expose CUDA's streams so that
+//! scripting-level code can overlap transfers, kernel launches, and
+//! host work (§5).  A [`Stream`] reproduces those semantics on this
+//! substrate: ops enqueue without blocking the caller and execute in
+//! exact FIFO order on a dedicated worker thread bound to one device.
+//! Ops on *different* streams are unordered unless related through an
+//! [`Event`] edge (`record_event` → `wait_event`), and streams bound to
+//! different devices (or mixing copy-engine and compute-engine work on
+//! one device) genuinely overlap — the simulator models per-device
+//! compute and copy engines independently.
+//!
+//! Every data-producing op returns an [`ExecFuture`]; `sync()` is
+//! `cudaStreamSynchronize` (drain to a marker).  Dropping a stream
+//! drains its queue before the worker exits, so enqueued work is never
+//! silently discarded.
+//!
+//! CUDA-faithful caveat: a [`Stream::wait_event`] on an event that is
+//! never recorded blocks the stream — and therefore `sync()` and the
+//! draining drop — indefinitely, exactly as `cudaStreamWaitEvent`
+//! followed by `cudaStreamSynchronize` would.  Guard error paths by
+//! recording the event (recording is idempotent) before abandoning a
+//! dependent stream.
+
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use crate::exec::event::Event;
+use crate::exec::future::{promise, ExecFuture, Promise};
+use crate::mempool::MemoryPool;
+use crate::runtime::{Client, DeviceBuffer, Executable, HostArray};
+use crate::util::error::{Error, Result};
+
+enum Op {
+    Launch {
+        exe: Executable,
+        args: Vec<DeviceBuffer>,
+        promise: Promise<Vec<DeviceBuffer>>,
+    },
+    H2D {
+        host: HostArray,
+        promise: Promise<DeviceBuffer>,
+    },
+    D2H {
+        buf: DeviceBuffer,
+        promise: Promise<HostArray>,
+    },
+    HostFn(Box<dyn FnOnce() + Send + 'static>),
+    Record(Event),
+    WaitEvent(Event),
+    Marker(Promise<()>),
+}
+
+/// An asynchronous FIFO execution queue bound to one device.
+pub struct Stream {
+    device: usize,
+    tx: Mutex<Option<mpsc::Sender<Op>>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Stream {
+    /// Spawn a stream worker bound to `device`.  H2D transfers stage
+    /// through `pool` (the paper's §6.3 memory pool, playing the role
+    /// of pinned staging buffers for async copies).
+    pub(crate) fn spawn(
+        client: Client,
+        pool: MemoryPool,
+        device: usize,
+    ) -> Stream {
+        let (tx, rx) = mpsc::channel::<Op>();
+        let worker = std::thread::Builder::new()
+            .name(format!("rtcg-stream-d{device}"))
+            .spawn(move || {
+                // the sender side closing ends the loop *after* every
+                // already-enqueued op has run (drain-on-drop).  A
+                // panicking op (e.g. a host_fn) must not kill the
+                // stream: the unwind is caught (the op's promise
+                // drops, erroring its future) and the FIFO continues.
+                while let Ok(op) = rx.recv() {
+                    let _ = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| {
+                            run_op(&client, &pool, device, op)
+                        }),
+                    );
+                }
+            })
+            .expect("spawn stream worker");
+        Stream { device, tx: Mutex::new(Some(tx)), worker: Some(worker) }
+    }
+
+    /// Ordinal of the device this stream is bound to.
+    pub fn device(&self) -> usize {
+        self.device
+    }
+
+    fn enqueue(&self, op: Op) -> Result<()> {
+        let g = self.tx.lock().unwrap();
+        match g.as_ref() {
+            // a failed send drops the op (and any promise inside it),
+            // resolving its future to an error rather than hanging
+            Some(tx) => tx
+                .send(op)
+                .map_err(|_| Error::msg("stream worker is gone")),
+            None => Err(Error::msg("stream is shut down")),
+        }
+    }
+
+    /// Enqueue an async kernel launch over device-resident buffers.
+    pub fn launch(
+        &self,
+        exe: &Executable,
+        args: &[&DeviceBuffer],
+    ) -> ExecFuture<Vec<DeviceBuffer>> {
+        let (p, fut) = promise();
+        let op = Op::Launch {
+            exe: exe.clone(),
+            args: args.iter().map(|b| (*b).clone()).collect(),
+            promise: p,
+        };
+        let _ = self.enqueue(op);
+        fut
+    }
+
+    /// Enqueue an async H2D transfer (staged through the memory pool).
+    /// Takes the array by value so enqueue is a pointer move, not a
+    /// payload copy — clone at the call site to keep a host copy.
+    pub fn h2d(&self, host: HostArray) -> ExecFuture<DeviceBuffer> {
+        let (p, fut) = promise();
+        let _ = self.enqueue(Op::H2D { host, promise: p });
+        fut
+    }
+
+    /// Enqueue an async D2H fetch.
+    pub fn d2h(&self, buf: &DeviceBuffer) -> ExecFuture<HostArray> {
+        let (p, fut) = promise();
+        let _ = self.enqueue(Op::D2H { buf: buf.clone(), promise: p });
+        fut
+    }
+
+    /// Enqueue a host callback (CUDA `cudaLaunchHostFunc`): runs on the
+    /// stream worker in FIFO position.
+    pub fn host_fn(
+        &self,
+        f: impl FnOnce() + Send + 'static,
+    ) -> Result<()> {
+        self.enqueue(Op::HostFn(Box::new(f)))
+    }
+
+    /// Record `event` when the stream reaches this point in its FIFO.
+    pub fn record_event(&self, event: &Event) -> Result<()> {
+        self.enqueue(Op::Record(event.clone()))
+    }
+
+    /// Make all later ops on this stream wait until `event` is
+    /// recorded (cross-stream dependency, `cudaStreamWaitEvent`).
+    pub fn wait_event(&self, event: &Event) -> Result<()> {
+        self.enqueue(Op::WaitEvent(event.clone()))
+    }
+
+    /// `cudaStreamSynchronize`: block until every op enqueued before
+    /// this call has executed.
+    pub fn sync(&self) -> Result<()> {
+        let (p, fut) = promise();
+        self.enqueue(Op::Marker(p))?;
+        fut.wait()
+    }
+}
+
+impl Drop for Stream {
+    fn drop(&mut self) {
+        // closing the channel lets the worker drain what is already
+        // queued, then exit; join so enqueued work outlives no one.
+        // If the drop runs on the worker itself (an op closure owned
+        // the stream), skip the self-join — the closed channel ends
+        // the loop and the thread exits detached.
+        *self.tx.lock().unwrap() = None;
+        if let Some(h) = self.worker.take() {
+            if h.thread().id() != std::thread::current().id() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn run_op(client: &Client, pool: &MemoryPool, device: usize, op: Op) {
+    match op {
+        Op::Launch { exe, args, promise } => {
+            let refs: Vec<&DeviceBuffer> = args.iter().collect();
+            promise.complete(exe.run_buffers_on(device, &refs));
+        }
+        Op::H2D { host, promise } => {
+            // Stage through the pool first: async H2D from pageable
+            // memory pays one host-side copy into a pinned staging
+            // block before the DMA — this models that cost (and feeds
+            // PoolStats).  The simulator's typed transfer entry point
+            // then reads the host array directly; a real backend would
+            // DMA from `block`.
+            let mut block = pool.alloc(host.size_bytes());
+            block
+                .as_mut_slice()
+                .copy_from_slice(host.data.as_bytes());
+            promise.complete(client.to_device_on(&host, device));
+        }
+        Op::D2H { buf, promise } => {
+            promise.complete(buf.to_host());
+        }
+        Op::HostFn(f) => f(),
+        Op::Record(e) => e.record(),
+        Op::WaitEvent(e) => e.wait(),
+        Op::Marker(p) => p.complete(Ok(())),
+    }
+}

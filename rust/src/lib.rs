@@ -16,6 +16,12 @@
 //! compiles through the single unified [`rtcg::cache`] (sharded,
 //! single-flighted, LRU byte-budgeted; see that module's docs for the
 //! paper mapping).
+//!
+//! Execution is asynchronous: the [`exec`] subsystem reproduces the
+//! paper's streams/events services (per-stream FIFOs, recordable sync
+//! points, cross-stream dependencies) and schedules work across a pool
+//! of per-device workers — the coordinator and the lazy array layer
+//! both dispatch through it.
 
 pub mod util;
 
@@ -24,6 +30,8 @@ pub mod runtime;
 pub mod rtcg;
 
 pub mod array;
+
+pub mod exec;
 
 pub mod elementwise;
 

@@ -213,6 +213,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut c = Coordinator::start(CoordinatorConfig {
         artifacts_dir: artifacts_dir(args),
         queue_depth: 64,
+        pool_backlog_cap: 256,
         tuning_db: None,
     })?;
     println!("coordinator up; driving {n} synthetic requests…");
@@ -220,8 +221,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let nn = 524288;
     let mut errors = 0;
     for i in 0..n {
+        // load-shedding intake: a full queue is a counted rejection
+        // (Snapshot.queue_rejections), not caller backpressure.  This
+        // sequential driver blocks on each reply, so it never actually
+        // fills the queue — concurrent clients are what the mode is
+        // for; the Full branch itself is pinned by a coordinator test.
         let resp = match i % 3 {
-            0 => c.submit(Request::Launch {
+            0 => c.try_submit(Request::Launch {
                 kernel: "axpy".into(),
                 workload: format!("axpy_{nn}"),
                 variant: None,
@@ -232,7 +238,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     HostArray::f32(vec![nn], rng.uniform_vec(nn)),
                 ],
             }),
-            1 => c.submit(Request::Launch {
+            1 => c.try_submit(Request::Launch {
                 kernel: "spmv_ell".into(),
                 workload: "ell_poisson".into(),
                 variant: Some("rb256_rm".into()),
@@ -251,7 +257,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     ]
                 },
             }),
-            _ => c.submit(Request::RunSource {
+            _ => c.try_submit(Request::RunSource {
                 hlo_text: format!(
                     "HloModule sq_{i}\n\nENTRY main {{\n  p = f32[256] parameter(0)\n  ROOT r = f32[256] multiply(p, p)\n}}\n"
                 ),
@@ -266,15 +272,40 @@ fn cmd_serve(args: &Args) -> Result<()> {
             eprintln!("request {i}: {e}");
         }
     }
-    let m = c.metrics();
+    // Stats refreshes the cache + staging-pool mirrors
+    let m = match c.submit(Request::Stats) {
+        rtcg::coordinator::Response::Stats(s) => s,
+        _ => c.metrics(),
+    };
     println!(
-        "done: {} requests ({} launches, {} source runs), {} errors",
-        m.requests, m.launches, m.source_runs, errors
+        "done: {} requests incl. final stats poll ({} launches, {} source runs), {} errors, {} queue rejections",
+        m.requests, m.launches, m.source_runs, errors, m.queue_rejections
     );
     println!(
-        "busy {:.1} ms, mean queue wait {:.3} ms",
+        "busy {:.1} ms (summed across workers), mean queue wait {:.3} ms",
         m.busy_ms,
         m.queue_wait_ms / m.requests.max(1) as f64
+    );
+    let bounds = rtcg::coordinator::metrics::QUEUE_WAIT_BUCKETS_US;
+    let labels: Vec<String> = bounds
+        .iter()
+        .map(|b| format!("≤{b}µs"))
+        .chain(std::iter::once(">1s".to_string()))
+        .collect();
+    let cells: Vec<String> = m
+        .queue_wait_hist
+        .iter()
+        .zip(&labels)
+        .map(|(n, l)| format!("{l}:{n}"))
+        .collect();
+    println!("admission wait histogram: {}", cells.join(" "));
+    println!(
+        "exec queue depths at final stats: {:?}",
+        m.exec_queue_depths
+    );
+    println!(
+        "staging pool: {} allocs ({} pool hits), {} B held / {} B active",
+        m.pool.allocs, m.pool.pool_hits, m.pool.bytes_held, m.pool.bytes_active
     );
     c.shutdown();
     Ok(())

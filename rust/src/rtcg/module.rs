@@ -3,33 +3,59 @@
 //! makes no assumptions about the origins of the code it processes"),
 //! get back a callable, with caching and compilation invisible.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
+use crate::exec::{ExecConfig, Executor};
+use crate::mempool::MemoryPool;
 use crate::rtcg::cache::CompileCache;
 use crate::rtcg::template::{Context, Template};
 use crate::runtime::{Client, DeviceBuffer, Executable, HostArray};
 use crate::util::error::Result;
 
-/// Shared toolkit environment: one PJRT client + one compile cache.
-/// The analog of `import pycuda.autoinit`.
+/// Lazily-initialized executor slot shared by all clones of a toolkit.
+type ExecSlot = Arc<Mutex<Option<Arc<Executor>>>>;
+
+/// Shared toolkit environment: one PJRT client, one compile cache, one
+/// H2D staging pool, and (created on first use) one exec subsystem
+/// over the client's devices.  The analog of `import pycuda.autoinit`.
 #[derive(Clone)]
 pub struct Toolkit {
     cache: Arc<CompileCache>,
+    pool: MemoryPool,
+    exec: ExecSlot,
 }
 
 impl Toolkit {
+    fn from_cache(cache: CompileCache) -> Toolkit {
+        Toolkit {
+            cache: Arc::new(cache),
+            pool: MemoryPool::new(),
+            exec: Arc::new(Mutex::new(None)),
+        }
+    }
+
     /// CPU PJRT client with the on-disk cache level enabled.
     pub fn init() -> Result<Toolkit> {
-        Ok(Toolkit {
-            cache: Arc::new(CompileCache::new(Client::cpu()?, true)),
-        })
+        Ok(Toolkit::from_cache(CompileCache::new(Client::cpu()?, true)))
     }
 
     /// Memory-only cache (tests/benches that must not touch disk).
     pub fn init_ephemeral() -> Result<Toolkit> {
-        Ok(Toolkit {
-            cache: Arc::new(CompileCache::new(Client::cpu()?, false)),
-        })
+        Ok(Toolkit::from_cache(CompileCache::new(Client::cpu()?, false)))
+    }
+
+    /// Simulator-only: `devices` simulated devices with modeled
+    /// execute/transfer latencies (µs), memory-only cache.  The exec
+    /// benches and tests measure overlap against this.
+    pub fn init_sim(
+        devices: usize,
+        exec_us: u64,
+        transfer_us: u64,
+    ) -> Result<Toolkit> {
+        Ok(Toolkit::from_cache(CompileCache::new(
+            Client::sim(devices, exec_us, transfer_us)?,
+            false,
+        )))
     }
 
     pub fn client(&self) -> &Client {
@@ -38,6 +64,28 @@ impl Toolkit {
 
     pub fn cache(&self) -> &CompileCache {
         &self.cache
+    }
+
+    /// The shared H2D staging pool (§6.3); exec streams stage async
+    /// transfers through it, and the coordinator exports its stats.
+    pub fn staging_pool(&self) -> &MemoryPool {
+        &self.pool
+    }
+
+    /// The shared exec subsystem (streams/events/scheduler), created
+    /// lazily over every device the client exposes.
+    pub fn executor(&self) -> Arc<Executor> {
+        let mut g = self.exec.lock().unwrap();
+        if let Some(e) = g.as_ref() {
+            return e.clone();
+        }
+        let e = Arc::new(Executor::new(
+            self.client().clone(),
+            self.pool.clone(),
+            ExecConfig::default(),
+        ));
+        *g = Some(e.clone());
+        e
     }
 
     /// Compile HLO text through the cache (Fig 2 workflow).
@@ -88,12 +136,30 @@ impl SourceModule {
         self.exe.run(args)
     }
 
+    /// Host-array call on a specific device (exec-scheduler path).
+    pub fn call_on(
+        &self,
+        device: usize,
+        args: &[&HostArray],
+    ) -> Result<Vec<HostArray>> {
+        self.exe.run_on(device, args)
+    }
+
     /// Device-resident call — the coordinator hot path.
     pub fn call_buffers(
         &self,
         args: &[&DeviceBuffer],
     ) -> Result<Vec<DeviceBuffer>> {
         self.exe.run_buffers(args)
+    }
+
+    /// Device-resident call on a specific device.
+    pub fn call_buffers_on(
+        &self,
+        device: usize,
+        args: &[&DeviceBuffer],
+    ) -> Result<Vec<DeviceBuffer>> {
+        self.exe.run_buffers_on(device, args)
     }
 
     pub fn executable(&self) -> &Executable {

@@ -40,6 +40,24 @@ impl Client {
         })
     }
 
+    /// Simulator-only constructor: `devices` simulated devices with
+    /// modeled execute/transfer latencies (µs).  The exec subsystem's
+    /// overlap and multi-device scaling are measured against this;
+    /// behind the real PJRT backend (`pjrt` feature) the topology comes
+    /// from the platform instead.
+    pub fn sim(
+        devices: usize,
+        exec_us: u64,
+        transfer_us: u64,
+    ) -> Result<Client> {
+        Ok(Client {
+            inner: Arc::new(xla::PjRtClient::with_options(
+                xla::SimOptions { device_count: devices, exec_us, transfer_us },
+            )?),
+            stats: Arc::new(ClientStats::default()),
+        })
+    }
+
     /// Identity string folded into compile-cache keys — the cache "is
     /// sensitive to changes in the hardware and software environment and
     /// initiates recompilation when necessary" (§5).
@@ -102,33 +120,45 @@ impl Client {
             .fetch_add(started.elapsed().as_nanos() as u64, Ordering::Relaxed);
     }
 
-    /// Stage a host array onto the device (H2D).
+    /// Stage a host array onto device 0 (H2D).
+    pub fn to_device(&self, a: &HostArray) -> Result<DeviceBuffer> {
+        self.to_device_on(a, 0)
+    }
+
+    /// Stage a host array onto a specific device (H2D), occupying that
+    /// device's copy engine.
     ///
     /// Uses the typed `buffer_from_host_buffer` entry point: the raw-
     /// bytes variant in xla 0.1.6 passes an `ElementType` discriminant
     /// where PJRT expects a `PrimitiveType` (F32 → F16), corrupting the
     /// buffer element type.
-    pub fn to_device(&self, a: &HostArray) -> Result<DeviceBuffer> {
+    pub fn to_device_on(
+        &self,
+        a: &HostArray,
+        device: usize,
+    ) -> Result<DeviceBuffer> {
         use crate::runtime::host::HostData;
         self.stats.h2d_transfers.fetch_add(1, Ordering::Relaxed);
+        let d = Some(device);
         let buf = match &a.data {
             HostData::F32(v) => {
-                self.inner.buffer_from_host_buffer(v, &a.shape, None)?
+                self.inner.buffer_from_host_buffer(v, &a.shape, d)?
             }
             HostData::F64(v) => {
-                self.inner.buffer_from_host_buffer(v, &a.shape, None)?
+                self.inner.buffer_from_host_buffer(v, &a.shape, d)?
             }
             HostData::I32(v) => {
-                self.inner.buffer_from_host_buffer(v, &a.shape, None)?
+                self.inner.buffer_from_host_buffer(v, &a.shape, d)?
             }
             HostData::I64(v) => {
-                self.inner.buffer_from_host_buffer(v, &a.shape, None)?
+                self.inner.buffer_from_host_buffer(v, &a.shape, d)?
             }
         };
         Ok(DeviceBuffer {
             buf: Arc::new(buf),
             shape: a.shape.clone(),
             dtype: a.dtype(),
+            device,
         })
     }
 }
@@ -139,6 +169,8 @@ pub struct DeviceBuffer {
     pub(crate) buf: Arc<xla::PjRtBuffer>,
     pub shape: Vec<usize>,
     pub dtype: crate::rtcg::dtype::DType,
+    /// ordinal of the device this buffer resides on
+    pub device: usize,
 }
 
 impl DeviceBuffer {
@@ -172,22 +204,42 @@ pub struct Executable {
 impl Executable {
     /// Execute with host arrays in and out (stages H2D per call).
     pub fn run(&self, args: &[&HostArray]) -> Result<Vec<HostArray>> {
+        self.run_on(0, args)
+    }
+
+    /// Execute with host arrays on a specific device.
+    pub fn run_on(
+        &self,
+        device: usize,
+        args: &[&HostArray],
+    ) -> Result<Vec<HostArray>> {
         let lits: Vec<xla::Literal> =
             args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
         let t = Instant::now();
-        let outs = self.exe.execute::<xla::Literal>(&lits)?;
+        let outs = self.exe.execute_on::<xla::Literal>(device, &lits)?;
         let result = self.collect_outputs(outs);
         self.note_execute(t);
         result
     }
 
-    /// Execute device-to-device: inputs stay resident, outputs stay
-    /// resident.  This is the coordinator's hot path (no host copies).
+    /// Execute device-to-device on device 0.
     pub fn run_buffers(&self, args: &[&DeviceBuffer]) -> Result<Vec<DeviceBuffer>> {
+        self.run_buffers_on(0, args)
+    }
+
+    /// Execute device-to-device on a specific device: inputs stay
+    /// resident, outputs stay resident.  This is the coordinator's and
+    /// the exec subsystem's hot path (no host copies).
+    pub fn run_buffers_on(
+        &self,
+        device: usize,
+        args: &[&DeviceBuffer],
+    ) -> Result<Vec<DeviceBuffer>> {
         let bufs: Vec<&xla::PjRtBuffer> =
             args.iter().map(|b| b.buf.as_ref()).collect();
         let t = Instant::now();
-        let outs = self.exe.execute_b::<&xla::PjRtBuffer>(&bufs)?;
+        let outs =
+            self.exe.execute_b_on::<&xla::PjRtBuffer>(device, &bufs)?;
         self.note_execute(t);
         let mut result = Vec::new();
         for replica in outs {
@@ -204,6 +256,7 @@ impl Executable {
                                 crate::rtcg::dtype::DType::from_primitive_type(
                                     a.primitive_type(),
                                 )?,
+                            device,
                         });
                     }
                     // Tuple-rooted executables come back as one buffer;
@@ -213,7 +266,8 @@ impl Executable {
                         let mut l = lit;
                         for part in l.decompose_tuple()? {
                             let host = HostArray::from_literal(&part)?;
-                            result.push(self.client.to_device(&host)?);
+                            result
+                                .push(self.client.to_device_on(&host, device)?);
                         }
                     }
                 }

@@ -64,6 +64,11 @@ pub fn solve_scalar(
 /// of the ~10 the eager op-per-kernel layer needed.  State vectors are
 /// materialized at the end of each iteration to keep expression graphs
 /// (and cache keys) bounded and iteration-invariant.
+///
+/// The `x` update is independent of the `r`/`p` chain within an
+/// iteration, so it materializes **asynchronously** on the exec
+/// subsystem (`materialize_async`) and is awaited at iteration end —
+/// on a multi-device toolkit the two update kernels overlap.
 pub fn solve_gpuarray(
     ctx: &ArrayContext,
     a: &Csr,
@@ -105,12 +110,14 @@ pub fn solve_gpuarray(
             GpuArray::from_buffer(ctx, ap_buf.into_iter().next().unwrap());
         let alpha = rz.div(&p.dot(&ap)?)?;
         x = x.add(&p.mul(&alpha)?)?;
-        x.materialize()?;
+        // x is independent of the r/p chain: overlap its launch
+        let x_done = x.materialize_async();
         r = r.sub(&ap.mul(&alpha)?)?;
         r.materialize()?;
         let rz2 = r.norm2()?;
         p = r.add(&p.mul(&rz2.div(&rz)?)?)?;
         p.materialize()?;
+        x_done.wait()?;
         rz = rz2;
         it += 1;
         if it % check_every == 0 || it == max_iter {

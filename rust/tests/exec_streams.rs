@@ -1,0 +1,232 @@
+//! Stream/event/scheduler semantics (the paper's §5 asynchronous
+//! services, pinned as executable contracts):
+//!
+//! * per-stream FIFO order survives 16-thread enqueue contention;
+//! * `Event::wait` blocks until the recording stream *reaches* the
+//!   record op (not until it is enqueued);
+//! * a `wait_event` edge across two streams is a happens-before edge;
+//! * a blocked stream never blocks an independent stream;
+//! * scheduler drain-on-shutdown completes every submitted future.
+//!
+//! All ordering assertions are gated on events, not timing, so they
+//! are deterministic under arbitrary CI scheduling noise.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use rtcg::exec::{Event, Placement, Scheduler};
+use rtcg::runtime::HostArray;
+use rtcg::Toolkit;
+
+fn toolkit() -> Toolkit {
+    // two zero-latency simulated devices; overlap *magnitude* is the
+    // bench's business (BENCH_fig5_streams), semantics are ours
+    Toolkit::init_sim(2, 0, 0).unwrap()
+}
+
+#[test]
+fn per_stream_fifo_order_under_16_thread_contention() {
+    let tk = toolkit();
+    let exec = tk.executor();
+    let stream = exec.stream();
+    let order = Arc::new(Mutex::new(Vec::new()));
+    let next = Arc::new(Mutex::new(0usize));
+    let threads = 16;
+    let per_thread = 64;
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let stream = &stream;
+            let order = order.clone();
+            let next = next.clone();
+            s.spawn(move || {
+                for _ in 0..per_thread {
+                    // hold the sequence lock across the enqueue so
+                    // "enqueue order" is well-defined under contention
+                    let mut g = next.lock().unwrap();
+                    let seq = *g;
+                    *g += 1;
+                    let order = order.clone();
+                    stream
+                        .host_fn(move || order.lock().unwrap().push(seq))
+                        .unwrap();
+                }
+            });
+        }
+    });
+    stream.sync().unwrap();
+    let got = order.lock().unwrap().clone();
+    let want: Vec<usize> = (0..threads * per_thread).collect();
+    assert_eq!(got, want, "per-stream FIFO order violated");
+}
+
+#[test]
+fn event_wait_blocks_until_stream_reaches_record() {
+    let tk = toolkit();
+    let exec = tk.executor();
+    let s = exec.stream();
+    let e = Event::new();
+    let gate = Event::new();
+    let g2 = gate.clone();
+    s.host_fn(move || g2.wait()).unwrap();
+    s.record_event(&e).unwrap();
+    // the record op sits behind the gated host fn: not recorded yet
+    std::thread::sleep(Duration::from_millis(10));
+    assert!(!e.query(), "event recorded before its FIFO position");
+    let t0 = Instant::now();
+    let waiter = {
+        let e2 = e.clone();
+        std::thread::spawn(move || {
+            e2.wait();
+            Instant::now()
+        })
+    };
+    std::thread::sleep(Duration::from_millis(30));
+    gate.record();
+    let woke_at = waiter.join().unwrap();
+    assert!(
+        woke_at.duration_since(t0) >= Duration::from_millis(30),
+        "wait returned before record"
+    );
+    assert!(e.query());
+    s.sync().unwrap();
+}
+
+#[test]
+fn cross_stream_event_dependency_is_happens_before() {
+    let tk = toolkit();
+    let exec = tk.executor();
+    let a = exec.stream_on(0);
+    let b = exec.stream_on(1);
+    let log: Arc<Mutex<Vec<&'static str>>> =
+        Arc::new(Mutex::new(Vec::new()));
+    let e = Event::new();
+    let gate = Event::new();
+    // B's op is enqueued FIRST but depends on A through the event
+    b.wait_event(&e).unwrap();
+    {
+        let log = log.clone();
+        b.host_fn(move || log.lock().unwrap().push("b")).unwrap();
+    }
+    {
+        let g = gate.clone();
+        a.host_fn(move || g.wait()).unwrap();
+    }
+    {
+        let log = log.clone();
+        a.host_fn(move || log.lock().unwrap().push("a")).unwrap();
+    }
+    a.record_event(&e).unwrap();
+    gate.record();
+    a.sync().unwrap();
+    b.sync().unwrap();
+    assert_eq!(*log.lock().unwrap(), vec!["a", "b"]);
+}
+
+#[test]
+fn blocked_stream_does_not_block_independent_stream() {
+    let tk = toolkit();
+    let exec = tk.executor();
+    // same device on purpose: independence is a stream property, not
+    // a device property
+    let blocked = exec.stream_on(0);
+    let free = exec.stream_on(0);
+    let e = Event::new();
+    blocked.wait_event(&e).unwrap();
+    let count = Arc::new(Mutex::new(0u32));
+    for _ in 0..8 {
+        let c = count.clone();
+        free.host_fn(move || *c.lock().unwrap() += 1).unwrap();
+    }
+    // would deadlock here if streams shared the blocked FIFO
+    free.sync().unwrap();
+    assert_eq!(*count.lock().unwrap(), 8);
+    e.record();
+    blocked.sync().unwrap();
+}
+
+#[test]
+fn stream_pipeline_h2d_launch_d2h() {
+    let tk = toolkit();
+    let m = tk
+        .source_module(
+            "HloModule dbl\n\nENTRY main {\n  p = f32[4] parameter(0)\n  ROOT r = f32[4] add(p, p)\n}\n",
+        )
+        .unwrap();
+    let exec = tk.executor();
+    let s = exec.stream();
+    let dev = s
+        .h2d(HostArray::f32(vec![4], vec![1., 2., 3., 4.]))
+        .wait()
+        .unwrap();
+    assert_eq!(dev.device, s.device());
+    let outs = s.launch(m.executable(), &[&dev]).wait().unwrap();
+    let host = s.d2h(&outs[0]).wait().unwrap();
+    assert_eq!(host.as_f32().unwrap(), &[2., 4., 6., 8.]);
+    // async H2D staged through the §6.3 pool
+    assert!(tk.staging_pool().stats().allocs >= 1);
+}
+
+#[test]
+fn scheduler_drain_on_shutdown_completes_every_future() {
+    let mut s = Scheduler::new(4, Placement::LeastLoaded);
+    let counter = Arc::new(Mutex::new(0u32));
+    let futures: Vec<_> = (0..64usize)
+        .map(|i| {
+            let c = counter.clone();
+            s.submit(move |_| {
+                std::thread::sleep(Duration::from_millis(1));
+                *c.lock().unwrap() += 1;
+                Ok(i)
+            })
+        })
+        .collect();
+    s.drain();
+    assert_eq!(*counter.lock().unwrap(), 64, "drain dropped jobs");
+    for (i, f) in futures.into_iter().enumerate() {
+        assert!(f.is_ready(), "future {i} left unresolved by drain");
+        assert_eq!(f.wait().unwrap(), i);
+    }
+    // post-drain submissions error loudly instead of hanging
+    assert!(s.submit(|_| Ok(0usize)).wait().is_err());
+}
+
+#[test]
+fn last_toolkit_handle_dropped_inside_a_job_does_not_hang() {
+    // the job closure carries the final Toolkit clone, so the shared
+    // executor's Scheduler drops *on its own worker thread* — drain
+    // must skip the self-join (a deadlock before the guard) and the
+    // future must still resolve
+    let gate = Event::new();
+    let fut = {
+        let tk = toolkit();
+        let exec = tk.executor();
+        let tk2 = tk.clone();
+        let g = gate.clone();
+        exec.submit(move |_| {
+            g.wait(); // outer tk/exec handles are gone once this opens
+            let _hold = tk2;
+            Ok(42u32)
+        })
+    };
+    gate.record();
+    assert!(
+        fut.wait_timeout(Duration::from_secs(30)),
+        "scheduler self-drop deadlocked"
+    );
+    assert_eq!(fut.wait().unwrap(), 42);
+}
+
+#[test]
+fn scheduler_spreads_work_across_devices() {
+    let s = Scheduler::new(4, Placement::RoundRobin);
+    let devices: Vec<usize> = (0..8)
+        .map(|_| s.submit(Ok).wait().unwrap())
+        .collect();
+    for d in 0..4 {
+        assert_eq!(
+            devices.iter().filter(|&&x| x == d).count(),
+            2,
+            "round-robin placement skewed: {devices:?}"
+        );
+    }
+}

@@ -133,6 +133,7 @@ fn coordinator_survives_a_burst_of_bad_requests() {
     let mut c = Coordinator::start(CoordinatorConfig {
         artifacts_dir: artifacts(),
         queue_depth: 4,
+        pool_backlog_cap: 256,
         tuning_db: None,
     })
     .unwrap();

@@ -162,6 +162,7 @@ fn coordinator_serves_tuning_and_launches() {
     let mut c = Coordinator::start(CoordinatorConfig {
         artifacts_dir: artifacts(),
         queue_depth: 4,
+        pool_backlog_cap: 256,
         tuning_db: None,
     })
     .unwrap();

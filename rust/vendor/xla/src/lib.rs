@@ -8,7 +8,7 @@
 //! toolkit — caching, templating, fusion, tuning — is exercised
 //! end-to-end without network access or a native toolchain.
 //!
-//! Two deliberate simulation choices:
+//! Three deliberate simulation choices:
 //!
 //! * **Compile latency is modeled.**  `PjRtClient::compile` sleeps for
 //!   `RTCG_SIM_COMPILE_US` microseconds (default 2000).  The Fig 2
@@ -16,6 +16,15 @@
 //!   slower than a cache hit — are what the compile cache exists to
 //!   exploit; a zero-cost compile would make cache benchmarks (and
 //!   single-flight contention tests) meaningless.
+//! * **Devices are engines.**  A client hosts `SimOptions::device_count`
+//!   simulated devices.  Each device has one *compute engine* (kernel
+//!   executions serialize on it for the modeled `exec_us`) and one
+//!   *copy engine* (H2D staging serializes on it for the modeled
+//!   `transfer_us`), and the two engines are independent — exactly the
+//!   property that makes CUDA streams worth having: transfers overlap
+//!   compute, and devices overlap each other.  With both latencies at
+//!   their zero defaults the engines are free and existing
+//!   single-device behavior is unchanged.
 //! * **Strictness over permissiveness.**  Unknown HLO ops, shape
 //!   mismatches, and bad parameter bindings are errors, matching the
 //!   paper's §5 "errors are detected and reported automatically".
@@ -39,37 +48,126 @@ pub use literal::{
 
 use std::borrow::Borrow;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use interp::{Machine, Value};
 use literal::Payload;
 
 /// Modeled backend-compile latency (µs).  Overridable for tests and
-/// benches via `RTCG_SIM_COMPILE_US`.
+/// benches via `RTCG_SIM_COMPILE_US`.  Cached in a static (unlike the
+/// per-client `SimOptions` knobs, which are read at client
+/// construction): compile sits on a hot path and the latency must not
+/// drift mid-benchmark.
 fn sim_compile_us() -> u64 {
     static CACHED: AtomicU64 = AtomicU64::new(u64::MAX);
     let v = CACHED.load(Ordering::Relaxed);
     if v != u64::MAX {
         return v;
     }
-    let parsed = std::env::var("RTCG_SIM_COMPILE_US")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(2000);
+    let parsed = env_us("RTCG_SIM_COMPILE_US", 2000);
     CACHED.store(parsed, Ordering::Relaxed);
     parsed
 }
 
-/// Simulated PJRT client (one host-CPU "device").
+fn env_us(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Simulation knobs: device topology + modeled per-op latencies.
+///
+/// The zero-latency defaults keep the simulator behaviorally identical
+/// to its historical single-device form; benches and exec tests pass
+/// explicit values so overlap is measurable without env-var races.
+#[derive(Debug, Clone)]
+pub struct SimOptions {
+    /// number of simulated devices (≥ 1); env `RTCG_SIM_DEVICES` sets
+    /// the default, so `rtcg serve` can run a multi-device pool
+    /// without code changes
+    pub device_count: usize,
+    /// modeled per-execution device latency (µs); env `RTCG_SIM_EXEC_US`
+    pub exec_us: u64,
+    /// modeled H2D staging latency (µs); env `RTCG_SIM_XFER_US`
+    pub transfer_us: u64,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions {
+            device_count: env_us("RTCG_SIM_DEVICES", 1).max(1) as usize,
+            exec_us: env_us("RTCG_SIM_EXEC_US", 0),
+            transfer_us: env_us("RTCG_SIM_XFER_US", 0),
+        }
+    }
+}
+
+/// Per-device engine pair shared by the client and its executables.
+#[derive(Debug)]
+struct Engines {
+    opts: SimOptions,
+    /// kernel executions serialize per device on these
+    compute: Vec<Mutex<()>>,
+    /// H2D staging serializes per device on these, independently of
+    /// compute — the overlap CUDA streams exist to exploit
+    copy: Vec<Mutex<()>>,
+}
+
+impl Engines {
+    fn occupy_compute(&self, device: usize) {
+        let _slot = self.compute[device].lock().unwrap();
+        if self.opts.exec_us > 0 {
+            std::thread::sleep(Duration::from_micros(self.opts.exec_us));
+        }
+    }
+
+    fn occupy_copy(&self, device: usize) {
+        let _slot = self.copy[device].lock().unwrap();
+        if self.opts.transfer_us > 0 {
+            std::thread::sleep(Duration::from_micros(
+                self.opts.transfer_us,
+            ));
+        }
+    }
+
+    fn check_device(&self, device: usize) -> Result<()> {
+        if device >= self.opts.device_count {
+            return Err(Error::msg(format!(
+                "device ordinal {device} out of range (client has {})",
+                self.opts.device_count
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Simulated PJRT client (`SimOptions::device_count` host-CPU
+/// "devices").
 #[derive(Debug)]
 pub struct PjRtClient {
-    _private: (),
+    engines: Arc<Engines>,
 }
 
 impl PjRtClient {
     pub fn cpu() -> Result<PjRtClient> {
-        Ok(PjRtClient { _private: () })
+        Self::with_options(SimOptions::default())
+    }
+
+    /// Multi-device / modeled-latency constructor (simulator-only).
+    pub fn with_options(opts: SimOptions) -> Result<PjRtClient> {
+        if opts.device_count == 0 {
+            return Err(Error::msg("device_count must be at least 1"));
+        }
+        let n = opts.device_count;
+        Ok(PjRtClient {
+            engines: Arc::new(Engines {
+                opts,
+                compute: (0..n).map(|_| Mutex::new(())).collect(),
+                copy: (0..n).map(|_| Mutex::new(())).collect(),
+            }),
+        })
     }
 
     pub fn platform_name(&self) -> String {
@@ -81,7 +179,7 @@ impl PjRtClient {
     }
 
     pub fn device_count(&self) -> usize {
-        1
+        self.engines.opts.device_count
     }
 
     /// "Compile" a computation: validate its parameter signature and pay
@@ -94,16 +192,22 @@ impl PjRtClient {
         if us > 0 {
             std::thread::sleep(Duration::from_micros(us));
         }
-        Ok(PjRtLoadedExecutable { comp: Arc::new(comp.clone()) })
+        Ok(PjRtLoadedExecutable {
+            comp: Arc::new(comp.clone()),
+            engines: self.engines.clone(),
+        })
     }
 
-    /// Stage a typed host buffer onto the (simulated) device.
+    /// Stage a typed host buffer onto one simulated device, occupying
+    /// that device's copy engine for the modeled transfer latency.
     pub fn buffer_from_host_buffer<T: NativeType>(
         &self,
         data: &[T],
         dims: &[usize],
-        _device: Option<usize>,
+        device: Option<usize>,
     ) -> Result<PjRtBuffer> {
+        let device = device.unwrap_or(0);
+        self.engines.check_device(device)?;
         let count: usize = dims.iter().product();
         if count != data.len() {
             return Err(Error::msg(format!(
@@ -112,19 +216,22 @@ impl PjRtClient {
                 dims
             )));
         }
+        self.engines.occupy_copy(device);
         Ok(PjRtBuffer {
             lit: Literal::from_array(
                 dims.iter().map(|&d| d as i64).collect(),
                 T::into_data(data.to_vec()),
             ),
+            device,
         })
     }
 }
 
-/// A device-resident buffer (simulated: a literal).
+/// A device-resident buffer (simulated: a literal + device ordinal).
 #[derive(Debug, Clone)]
 pub struct PjRtBuffer {
     pub(crate) lit: Literal,
+    pub(crate) device: usize,
 }
 
 impl PjRtBuffer {
@@ -135,34 +242,64 @@ impl PjRtBuffer {
     pub fn on_device_shape(&self) -> Result<Shape> {
         self.lit.shape()
     }
+
+    /// Ordinal of the device this buffer resides on.
+    pub fn device_ordinal(&self) -> usize {
+        self.device
+    }
 }
 
 /// A loaded executable.
 #[derive(Debug, Clone)]
 pub struct PjRtLoadedExecutable {
     comp: Arc<XlaComputation>,
+    engines: Arc<Engines>,
 }
 
 impl PjRtLoadedExecutable {
-    /// Execute with literal inputs; one "replica" of outputs.
+    /// Execute with literal inputs on device 0; one "replica" of
+    /// outputs.
     pub fn execute<L: Borrow<Literal>>(
         &self,
         args: &[L],
     ) -> Result<Vec<Vec<PjRtBuffer>>> {
-        let lits: Vec<&Literal> = args.iter().map(|a| a.borrow()).collect();
-        let out = self.run(&lits)?;
-        Ok(vec![vec![PjRtBuffer { lit: out }]])
+        self.execute_on(0, args)
     }
 
-    /// Execute device-to-device.
+    /// Execute with literal inputs on a specific device.
+    pub fn execute_on<L: Borrow<Literal>>(
+        &self,
+        device: usize,
+        args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        self.engines.check_device(device)?;
+        let lits: Vec<&Literal> = args.iter().map(|a| a.borrow()).collect();
+        self.engines.occupy_compute(device);
+        let out = self.run(&lits)?;
+        Ok(vec![vec![PjRtBuffer { lit: out, device }]])
+    }
+
+    /// Execute device-to-device on device 0.
     pub fn execute_b<B: Borrow<PjRtBuffer>>(
         &self,
         args: &[B],
     ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        self.execute_b_on(0, args)
+    }
+
+    /// Execute device-to-device on a specific device, occupying its
+    /// compute engine for the modeled execute latency.
+    pub fn execute_b_on<B: Borrow<PjRtBuffer>>(
+        &self,
+        device: usize,
+        args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        self.engines.check_device(device)?;
         let lits: Vec<&Literal> =
             args.iter().map(|a| &a.borrow().lit).collect();
+        self.engines.occupy_compute(device);
         let out = self.run(&lits)?;
-        Ok(vec![vec![PjRtBuffer { lit: out }]])
+        Ok(vec![vec![PjRtBuffer { lit: out, device }]])
     }
 
     fn run(&self, args: &[&Literal]) -> Result<Literal> {
@@ -328,6 +465,80 @@ mod tests {
         let parts = lit.decompose_tuple().unwrap();
         assert_eq!(parts.len(), 2);
         assert_eq!(parts[1].to_vec::<f32>().unwrap(), vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn multi_device_execute_and_ordinals() {
+        let client = PjRtClient::with_options(SimOptions {
+            device_count: 3,
+            exec_us: 0,
+            transfer_us: 0,
+        })
+        .unwrap();
+        assert_eq!(client.device_count(), 3);
+        let b = XlaBuilder::new("t");
+        let shape = Shape::array::<f32>(vec![2]);
+        let p = b.parameter_s(0, &shape, "p").unwrap();
+        let comp = p.add_(&p).unwrap().build().unwrap();
+        let exe = client.compile(&comp).unwrap();
+        for d in 0..3 {
+            let staged = client
+                .buffer_from_host_buffer(&[1.0f32, 2.0], &[2], Some(d))
+                .unwrap();
+            assert_eq!(staged.device_ordinal(), d);
+            let out = exe.execute_b_on(d, &[&staged]).unwrap();
+            assert_eq!(out[0][0].device_ordinal(), d);
+            let lit = out[0][0].to_literal_sync().unwrap();
+            assert_eq!(lit.to_vec::<f32>().unwrap(), vec![2.0, 4.0]);
+        }
+        // out-of-range ordinals are loud, not silent
+        assert!(exe
+            .execute::<Literal>(&[f32_lit(vec![2], vec![0.0; 2])])
+            .is_ok());
+        assert!(exe
+            .execute_on(3, &[f32_lit(vec![2], vec![0.0; 2])])
+            .is_err());
+        assert!(client
+            .buffer_from_host_buffer(&[0.0f32], &[1], Some(9))
+            .is_err());
+    }
+
+    #[test]
+    fn zero_devices_rejected() {
+        assert!(PjRtClient::with_options(SimOptions {
+            device_count: 0,
+            exec_us: 0,
+            transfer_us: 0,
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn modeled_exec_latency_serializes_per_device() {
+        use std::time::Instant;
+        let client = PjRtClient::with_options(SimOptions {
+            device_count: 2,
+            exec_us: 2_000,
+            transfer_us: 0,
+        })
+        .unwrap();
+        let b = XlaBuilder::new("t");
+        let shape = Shape::array::<f32>(vec![1]);
+        let p = b.parameter_s(0, &shape, "p").unwrap();
+        let comp = p.add_(&p).unwrap().build().unwrap();
+        let exe = client.compile(&comp).unwrap();
+        let arg = || f32_lit(vec![1], vec![1.0]);
+        // two ops on one device serialize: ≥ 2 × exec_us
+        let t = Instant::now();
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                let exe = exe.clone();
+                s.spawn(move || {
+                    exe.execute_on(0, &[arg()]).unwrap();
+                });
+            }
+        });
+        assert!(t.elapsed() >= Duration::from_micros(4_000));
     }
 
     #[test]
