@@ -1,7 +1,9 @@
 //! Exact nearest-neighbor search (§6.4, Table 4): kernel driver plus the
 //! paper's scalar CPU baseline ("a compiler optimized C version",
-//! single-threaded, straightforward loops — deliberately unblocked).
+//! single-threaded, straightforward loops — deliberately unblocked), and
+//! a `GpuArray` expand-form forward pass lowered by the graph planner.
 
+use crate::array::ArrayContext;
 use crate::kernels::Registry;
 use crate::runtime::HostArray;
 use crate::util::error::{Error, Result};
@@ -59,6 +61,35 @@ pub fn run_kernel(
     Ok((out[0].as_f32()?.to_vec(), out[1].as_i32()?.to_vec()))
 }
 
+/// Expand-form NN forward pass over `GpuArray` ops: ‖x−y‖² =
+/// ‖x‖² + ‖y‖² − 2·x·yᵀ, then a min over the neighbor axis.  The whole
+/// pass is one lazy DAG handed to the graph planner at `get()` — no
+/// hand-placed intermediate `materialize` calls.  The planner clusters
+/// it into 4 launches (the two squared-norm reductions — which run
+/// concurrently on a multi-device toolkit — the matmul with the
+/// distance assembly fused as its epilogue, and the axis-min), where
+/// per-expression lowering needs 7.
+pub fn forward_gpuarray(
+    ctx: &ArrayContext,
+    targets: &[f32],
+    neighbors: &[f32],
+    t: usize,
+    n: usize,
+    d: usize,
+) -> Result<Vec<f32>> {
+    if targets.len() != t * d || neighbors.len() != n * d {
+        return Err(Error::msg("forward_gpuarray: shape mismatch"));
+    }
+    let ta = ctx.to_gpu(&HostArray::f32(vec![t, d], targets.to_vec()))?;
+    let na = ctx.to_gpu(&HostArray::f32(vec![n, d], neighbors.to_vec()))?;
+    let t2 = ta.mul(&ta)?.sum_axis(1, true)?; // [t,1]
+    let n2 = na.mul(&na)?.sum_axis(1, false)?; // [n]
+    let cross = ta.matmul_t(&na)?; // [t,n]
+    let dist = t2.add(&n2)?.sub(&cross.scale(2.0)?)?;
+    let best = dist.min_axis(1, false)?; // [t]
+    Ok(best.get()?.as_f32()?.to_vec())
+}
+
 /// Variants available for a given (t, n) workload.
 pub fn variants(registry: &Registry, t: usize, n: usize) -> Vec<String> {
     registry
@@ -88,6 +119,44 @@ mod tests {
         let (d, i) = scalar_baseline(&tg, &nb, 16, 128, 8);
         assert!(d.iter().all(|&x| x < 1e-9));
         assert_eq!(i, (0..16).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn gpuarray_forward_matches_baseline_in_few_launches() {
+        let (t, n, d) = (16usize, 64usize, 8usize);
+        let mut rng = Rng::new(7);
+        let tg = rng.normal_vec(t * d);
+        let nb = rng.normal_vec(n * d);
+        let (want, _) = scalar_baseline(&tg, &nb, t, n, d);
+        let ctx = crate::array::ArrayContext::new(
+            Toolkit::init_ephemeral().unwrap(),
+        );
+        let e0 = ctx
+            .toolkit()
+            .client()
+            .stats()
+            .executions
+            .load(std::sync::atomic::Ordering::Relaxed);
+        let got = forward_gpuarray(&ctx, &tg, &nb, t, n, d).unwrap();
+        let launches = ctx
+            .toolkit()
+            .client()
+            .stats()
+            .executions
+            .load(std::sync::atomic::Ordering::Relaxed)
+            - e0;
+        assert!(
+            launches <= 4,
+            "planned NN forward should be ≤4 launches, got {launches}"
+        );
+        assert_eq!(got.len(), t);
+        for (a, b) in got.iter().zip(&want) {
+            // expand-form vs direct-form float error
+            assert!(
+                (a - b).abs() < 1e-3 + 1e-3 * b.abs(),
+                "{a} vs {b}"
+            );
+        }
     }
 
     #[test]

@@ -1,30 +1,40 @@
 //! `GpuArray` — the §5.2.1 "numerical arrays on the compute device",
 //! now **lazy**: operators record a small per-element op DAG
-//! (load / literal / unary / binary / cast / broadcast, à la Descent's
-//! per-element kernels) instead of dispatching a kernel per operator.
-//! Materialization fuses the whole expression into **one** generated
-//! kernel, compiled behind the unified `rtcg::cache` and keyed by a
-//! canonical expression descriptor.
+//! (load / literal / unary / binary / cast / broadcast / reduce /
+//! matmul, à la Descent's kernel ops) instead of dispatching a kernel
+//! per operator.  Materialization hands the DAG — *all* requested
+//! roots at once — to the whole-program planner in [`plan`], which
+//! clusters the graph into the minimal set of generated kernels,
+//! deduplicates shared subgraphs (graph-level CSE), and compiles each
+//! cluster behind the unified `rtcg::cache` keyed by a canonical
+//! cluster descriptor.
 //!
 //! This is the RTCG answer to §5.2's "proliferation of temporary
 //! variables plaguing abstract, operator-overloading array packages":
 //! `a.scale(2)?.add(&b)?.sub_scalar(1)?.mul(&a)?` lowers to a single
-//! fused kernel and a single launch — no intermediate arrays exist.
+//! fused kernel and a single launch — no intermediate arrays exist —
+//! and a whole CG update or softmax lowers to one or two launches.
 //!
 //! Scalars fused into operations are *baked into the generated code*
 //! (the §4.2 point that hardcoding is free once RTCG is available): the
 //! literal's bits are part of the cache key, so each constant gets its
 //! own specialized kernel.
 //!
-//! Reductions fuse their elementwise prefix: `x.mul(&y)?.sum()` (a dot
-//! product) is one generated kernel ending in a reduce — the producer
-//! map never materializes.
+//! Reductions — full and per-axis (`sum_axis` with keep-dims) — fuse
+//! their elementwise prefix, and elementwise consumers of a reduction
+//! fuse as its epilogue: `x.mul(&y)?.sum()` (a dot product) is one
+//! kernel, `softmax` is two.
+//!
+//! Materialization is **single-flight**: a node being lowered by one
+//! thread is marked in-flight, and a racing `get`/`materialize_async`
+//! on the same node waits for that launch instead of issuing a
+//! duplicate.
 
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+pub mod plan;
+
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::rtcg::dtype::{promote, DType};
-use crate::rtcg::hlobuild;
 use crate::rtcg::module::Toolkit;
 use crate::runtime::{DeviceBuffer, HostArray};
 use crate::util::error::{Error, Result};
@@ -54,19 +64,55 @@ impl ArrayContext {
     pub fn zeros(&self, dtype: DType, shape: &[usize]) -> Result<GpuArray> {
         self.to_gpu(&HostArray::zeros(dtype, shape.to_vec()))
     }
+
+    /// Materialize several lazy arrays as **one planned program**: the
+    /// planner sees the union DAG, so subgraphs shared between the
+    /// roots execute once and independent clusters overlap on the exec
+    /// scheduler.  This is the planner-chosen replacement for manual
+    /// per-expression `materialize` call sequences (CG iterations, NN
+    /// forward passes).
+    pub fn materialize_many(&self, arrays: &[&GpuArray]) -> Result<()> {
+        let roots: Vec<Arc<LazyNode>> =
+            arrays.iter().map(|a| a.node.clone()).collect();
+        plan::execute(&self.tk, &roots, 0)
+    }
 }
 
-fn shape_sig(dtype: DType, shape: &[usize]) -> String {
+pub(crate) fn shape_sig(dtype: DType, shape: &[usize]) -> String {
     let dims: Vec<String> = shape.iter().map(|d| d.to_string()).collect();
     format!("{}[{}]", dtype.name(), dims.join(","))
 }
 
+/// NumPy-style broadcast of two shapes (align trailing axes; a size-1
+/// axis stretches).  `None` when incompatible.
+pub(crate) fn broadcast_shapes(
+    a: &[usize],
+    b: &[usize],
+) -> Option<Vec<usize>> {
+    let rank = a.len().max(b.len());
+    let mut out = vec![0usize; rank];
+    for i in 0..rank {
+        let ad = if i < rank - a.len() { 1 } else { a[i - (rank - a.len())] };
+        let bd = if i < rank - b.len() { 1 } else { b[i - (rank - b.len())] };
+        out[i] = if ad == bd {
+            ad
+        } else if ad == 1 {
+            bd
+        } else if bd == 1 {
+            ad
+        } else {
+            return None;
+        };
+    }
+    Some(out)
+}
+
 // ---------------------------------------------------------------------------
-// The per-element op DAG
+// The op DAG
 // ---------------------------------------------------------------------------
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum UnK {
+pub(crate) enum UnK {
     Exp,
     Log,
     Sqrt,
@@ -81,7 +127,7 @@ enum UnK {
 }
 
 impl UnK {
-    fn name(self) -> &'static str {
+    pub(crate) fn name(self) -> &'static str {
         match self {
             UnK::Exp => "exp",
             UnK::Log => "log",
@@ -97,7 +143,7 @@ impl UnK {
         }
     }
 
-    fn apply(self, x: &xla::XlaOp) -> Result<xla::XlaOp> {
+    pub(crate) fn apply(self, x: &xla::XlaOp) -> Result<xla::XlaOp> {
         match self {
             UnK::Exp => x.exp(),
             UnK::Log => x.log(),
@@ -116,7 +162,7 @@ impl UnK {
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum BinK {
+pub(crate) enum BinK {
     Add,
     Sub,
     Mul,
@@ -127,7 +173,7 @@ enum BinK {
 }
 
 impl BinK {
-    fn name(self) -> &'static str {
+    pub(crate) fn name(self) -> &'static str {
         match self {
             BinK::Add => "add",
             BinK::Sub => "sub",
@@ -139,7 +185,11 @@ impl BinK {
         }
     }
 
-    fn apply(self, a: &xla::XlaOp, b: &xla::XlaOp) -> Result<xla::XlaOp> {
+    pub(crate) fn apply(
+        self,
+        a: &xla::XlaOp,
+        b: &xla::XlaOp,
+    ) -> Result<xla::XlaOp> {
         match self {
             BinK::Add => a.add_(b),
             BinK::Sub => a.sub_(b),
@@ -153,74 +203,169 @@ impl BinK {
     }
 }
 
+/// Reduction kind (full or per-axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum ReduceK {
+    Sum,
+    Max,
+    Min,
+}
+
+impl ReduceK {
+    pub(crate) fn name(self) -> &'static str {
+        match self {
+            ReduceK::Sum => "sum",
+            ReduceK::Max => "max",
+            ReduceK::Min => "min",
+        }
+    }
+}
+
 /// One node of the lazy expression DAG (cf. Descent's
-/// `PerElementKernelOp::{Load, Literal, Unary, Binary}`).
+/// `PerElementKernelOp::{Load, Literal, Unary, Binary}` plus its
+/// `Kernel::{Reduce, MatMul}` heavy ops).
 #[derive(Clone)]
-enum Expr {
+pub(crate) enum Expr {
     /// scalar constant baked into the generated kernel
     Lit(f64),
     Un(UnK, Arc<LazyNode>),
     Bin(BinK, Arc<LazyNode>, Arc<LazyNode>),
     /// convert to `self.dtype`
     Cast(Arc<LazyNode>),
-    /// broadcast a scalar operand to `self.shape`
+    /// broadcast the operand to `self.shape` (NumPy trailing-axis rules)
     Bcast(Arc<LazyNode>),
+    /// reduce `child` over `dims` (keep-dims optional)
+    Reduce {
+        kind: ReduceK,
+        dims: Vec<usize>,
+        keep: bool,
+        child: Arc<LazyNode>,
+    },
+    /// generalized matrix product: contract axis `ca` of `a` against
+    /// axis `cb` of `b`
+    MatMul {
+        a: Arc<LazyNode>,
+        b: Arc<LazyNode>,
+        ca: usize,
+        cb: usize,
+    },
 }
 
-/// A node is either a pending expression or a device-resident buffer.
-/// Materialization *replaces* the expression with the buffer, dropping
-/// the child `Arc`s — iterative updates (e.g. CG's `x = x + α·p` per
-/// iteration) therefore release their ancestry instead of pinning an
-/// unbounded chain of intermediate device buffers.
+/// A node is a pending expression, an expression currently being
+/// launched by some thread (**in-flight**: the single-flight guard), or
+/// a device-resident buffer.  Materialization *replaces* the expression
+/// with the buffer, dropping the child `Arc`s — iterative updates (e.g.
+/// CG's `x = x + α·p` per iteration) therefore release their ancestry
+/// instead of pinning an unbounded chain of intermediate buffers.
 #[derive(Clone)]
-enum NodeState {
+pub(crate) enum NodeState {
     Lazy(Expr),
+    InFlight(Expr),
     Ready(DeviceBuffer),
 }
 
-struct LazyNode {
-    dtype: DType,
-    shape: Vec<usize>,
+/// Outcome of trying to claim a node for execution.
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Claim {
+    /// already materialized — nothing to do
+    Ready,
+    /// we own the flight: execute and `complete` (or `unclaim`)
+    Claimed,
+    /// another thread owns the flight: `await_flight` it
+    Flying,
+}
+
+pub(crate) struct LazyNode {
+    pub(crate) dtype: DType,
+    pub(crate) shape: Vec<usize>,
     state: Mutex<NodeState>,
+    cv: Condvar,
 }
 
 impl LazyNode {
-    fn leaf(buf: DeviceBuffer) -> Arc<LazyNode> {
+    pub(crate) fn leaf(buf: DeviceBuffer) -> Arc<LazyNode> {
         Arc::new(LazyNode {
             dtype: buf.dtype,
             shape: buf.shape.clone(),
             state: Mutex::new(NodeState::Ready(buf)),
+            cv: Condvar::new(),
         })
     }
 
-    fn lazy(dtype: DType, shape: Vec<usize>, expr: Expr) -> Arc<LazyNode> {
+    pub(crate) fn lazy(
+        dtype: DType,
+        shape: Vec<usize>,
+        expr: Expr,
+    ) -> Arc<LazyNode> {
         Arc::new(LazyNode {
             dtype,
             shape,
             state: Mutex::new(NodeState::Lazy(expr)),
+            cv: Condvar::new(),
         })
     }
 
-    fn cached(&self) -> Option<DeviceBuffer> {
+    pub(crate) fn cached(&self) -> Option<DeviceBuffer> {
         match &*self.state.lock().unwrap() {
             NodeState::Ready(b) => Some(b.clone()),
-            NodeState::Lazy(_) => None,
+            _ => None,
         }
     }
 
-    /// A consistent point-in-time view (cheap: `Arc`/buffer clones).
-    fn snapshot(&self) -> NodeState {
-        self.state.lock().unwrap().clone()
+    /// A consistent point-in-time view of the expression (`None` once
+    /// materialized).  An in-flight node still exposes its expression —
+    /// planning over it is safe; execution coordinates via `claim`.
+    pub(crate) fn expr_view(&self) -> Option<Expr> {
+        match &*self.state.lock().unwrap() {
+            NodeState::Ready(_) => None,
+            NodeState::Lazy(e) | NodeState::InFlight(e) => Some(e.clone()),
+        }
+    }
+
+    /// Single-flight claim: atomically move Lazy → InFlight.
+    pub(crate) fn claim(&self) -> Claim {
+        let mut st = self.state.lock().unwrap();
+        match &*st {
+            NodeState::Ready(_) => Claim::Ready,
+            NodeState::InFlight(_) => Claim::Flying,
+            NodeState::Lazy(e) => {
+                let e = e.clone();
+                *st = NodeState::InFlight(e);
+                Claim::Claimed
+            }
+        }
+    }
+
+    /// Block until a concurrent flight lands (Ready) or aborts (Lazy).
+    pub(crate) fn await_flight(&self) {
+        let mut st = self.state.lock().unwrap();
+        while matches!(&*st, NodeState::InFlight(_)) {
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Abort a claim: restore the expression so another thread can
+    /// retry (used when the owning launch fails or unwinds).
+    pub(crate) fn unclaim(&self) {
+        {
+            let mut st = self.state.lock().unwrap();
+            if let NodeState::InFlight(e) = &*st {
+                let e = e.clone();
+                *st = NodeState::Lazy(e);
+            }
+        }
+        self.cv.notify_all();
     }
 
     /// Memoize the materialization and release the expression.
-    fn complete(&self, buf: DeviceBuffer) {
+    pub(crate) fn complete(&self, buf: DeviceBuffer) {
         *self.state.lock().unwrap() = NodeState::Ready(buf);
+        self.cv.notify_all();
     }
 }
 
 /// Coerce a node to (dtype, shape): insert Cast and/or Bcast wrappers.
-fn coerce(
+pub(crate) fn coerce(
     node: Arc<LazyNode>,
     dtype: DType,
     shape: &[usize],
@@ -232,190 +377,9 @@ fn coerce(
         node
     };
     if node.shape != shape {
-        // only scalar → array broadcasts are constructed by callers
         LazyNode::lazy(dtype, shape.to_vec(), Expr::Bcast(node))
     } else {
         node
-    }
-}
-
-/// A frozen fusion plan: canonical descriptor, the fusion leaves
-/// (device-resident inputs), and a point-in-time snapshot of every
-/// interior node's expression.  Snapshotting once makes planning and
-/// lowering immune to a concurrent thread materializing (and thereby
-/// dropping the expression of) a shared sub-DAG in between.
-#[derive(Clone)]
-struct FusionPlan {
-    desc: String,
-    leaves: Vec<Arc<LazyNode>>,
-    exprs: HashMap<usize, Expr>,
-}
-
-fn node_key(node: &Arc<LazyNode>) -> usize {
-    Arc::as_ptr(node) as usize
-}
-
-/// Build the plan for `root`.  A node counts as a leaf when it is
-/// device-resident already (input or previously materialized
-/// intermediate); identical structure + leaf signatures + baked
-/// literals ⇒ identical descriptor ⇒ one compiled kernel.
-fn plan(root: &Arc<LazyNode>) -> FusionPlan {
-    fn walk(node: &Arc<LazyNode>, p: &mut FusionPlan, out: &mut String) {
-        if let Some(i) =
-            p.leaves.iter().position(|l| Arc::ptr_eq(l, node))
-        {
-            out.push_str(&format!("p{i}"));
-            return;
-        }
-        let frozen = p.exprs.get(&node_key(node)).cloned();
-        let expr = match frozen {
-            Some(e) => e, // revisited interior node: frozen view
-            None => match node.snapshot() {
-                NodeState::Ready(_) => {
-                    p.leaves.push(node.clone());
-                    out.push_str(&format!("p{}", p.leaves.len() - 1));
-                    return;
-                }
-                NodeState::Lazy(e) => {
-                    p.exprs.insert(node_key(node), e.clone());
-                    e
-                }
-            },
-        };
-        match &expr {
-            Expr::Lit(v) => {
-                out.push_str(&format!(
-                    "l{}:{:016x}",
-                    node.dtype.name(),
-                    v.to_bits()
-                ));
-            }
-            Expr::Un(op, a) => {
-                out.push_str(op.name());
-                out.push('(');
-                walk(a, p, out);
-                out.push(')');
-            }
-            Expr::Bin(op, a, b) => {
-                out.push_str(op.name());
-                out.push('(');
-                walk(a, p, out);
-                out.push(',');
-                walk(b, p, out);
-                out.push(')');
-            }
-            Expr::Cast(a) => {
-                out.push_str(&format!("cast_{}(", node.dtype.name()));
-                walk(a, p, out);
-                out.push(')');
-            }
-            Expr::Bcast(a) => {
-                out.push_str("bc(");
-                walk(a, p, out);
-                out.push(')');
-            }
-        }
-    }
-    let mut p = FusionPlan {
-        desc: String::new(),
-        leaves: Vec::new(),
-        exprs: HashMap::new(),
-    };
-    let mut body = String::new();
-    walk(root, &mut p, &mut body);
-    let sig: Vec<String> = p
-        .leaves
-        .iter()
-        .map(|l| shape_sig(l.dtype, &l.shape))
-        .collect();
-    p.desc = format!(
-        "{}->{}|{}",
-        sig.join(";"),
-        shape_sig(root.dtype, &root.shape),
-        body
-    );
-    p
-}
-
-/// Reduction kind appended after the fused elementwise prefix.
-#[derive(Debug, Clone, Copy)]
-enum ReduceK {
-    Sum,
-    Max,
-    Min,
-}
-
-impl ReduceK {
-    fn name(self) -> &'static str {
-        match self {
-            ReduceK::Sum => "sum",
-            ReduceK::Max => "max",
-            ReduceK::Min => "min",
-        }
-    }
-}
-
-fn build_fused(
-    builder_name: &str,
-    root: &Arc<LazyNode>,
-    plan: &FusionPlan,
-    reduce: Option<ReduceK>,
-) -> Result<xla::XlaComputation> {
-    let b = xla::XlaBuilder::new(builder_name);
-    let mut params = Vec::with_capacity(plan.leaves.len());
-    for (i, l) in plan.leaves.iter().enumerate() {
-        params.push(hlobuild::param(
-            &b,
-            i as i64,
-            l.dtype,
-            &l.shape,
-            &format!("p{i}"),
-        )?);
-    }
-    let out = lower(&b, root, plan, &params)?;
-    let out = match reduce {
-        None => out,
-        Some(k) => {
-            let dims: Vec<i64> = (0..root.shape.len() as i64).collect();
-            match k {
-                ReduceK::Sum => out.reduce_sum(&dims, false)?,
-                ReduceK::Max => out.reduce_max(&dims, false)?,
-                ReduceK::Min => out.reduce_min(&dims, false)?,
-            }
-        }
-    };
-    out.build().map_err(Into::into)
-}
-
-/// Lower a planned DAG node onto the builder (strategy (c) of §5.3,
-/// driven by the recorded expression instead of user code).
-fn lower(
-    b: &xla::XlaBuilder,
-    node: &Arc<LazyNode>,
-    plan: &FusionPlan,
-    params: &[xla::XlaOp],
-) -> Result<xla::XlaOp> {
-    if let Some(i) = plan.leaves.iter().position(|l| Arc::ptr_eq(l, node)) {
-        return Ok(params[i].clone());
-    }
-    let expr = plan
-        .exprs
-        .get(&node_key(node))
-        .ok_or_else(|| Error::msg("node missing from fusion plan"))?;
-    match expr {
-        Expr::Lit(v) => hlobuild::constant(b, node.dtype, *v),
-        Expr::Un(op, a) => op.apply(&lower(b, a, plan, params)?),
-        Expr::Bin(op, x, y) => op.apply(
-            &lower(b, x, plan, params)?,
-            &lower(b, y, plan, params)?,
-        ),
-        Expr::Cast(a) => lower(b, a, plan, params)?
-            .convert(node.dtype.to_primitive_type())
-            .map_err(Into::into),
-        Expr::Bcast(a) => {
-            let x = lower(b, a, plan, params)?;
-            hlobuild::broadcast_scalar(&x, &node.shape)
-        }
     }
 }
 
@@ -427,7 +391,7 @@ fn lower(
 #[derive(Clone)]
 pub struct GpuArray {
     ctx: ArrayContext,
-    node: Arc<LazyNode>,
+    pub(crate) node: Arc<LazyNode>,
 }
 
 impl GpuArray {
@@ -460,73 +424,29 @@ impl GpuArray {
         self.node.cached().is_some()
     }
 
-    /// Shared materialization pipeline: plan the DAG, compile the fused
-    /// kernel behind the unified cache (keyed by canonical descriptor),
-    /// launch once over the leaf buffers.  `reduce: None` memoizes the
-    /// result on the node (and releases its expression).
-    fn run_fused(&self, reduce: Option<ReduceK>) -> Result<DeviceBuffer> {
-        self.run_fused_on(reduce, 0)
-    }
-
-    /// Device-targeted variant of [`Self::run_fused`] — the exec
-    /// subsystem's workers pass their own device ordinal so independent
-    /// DAGs spread over the pool.  (Simulated buffers are literals, so
-    /// leaves staged on another device remain readable; real PJRT would
-    /// insert a D2D copy here.)
-    fn run_fused_on(
-        &self,
-        reduce: Option<ReduceK>,
-        device: usize,
-    ) -> Result<DeviceBuffer> {
-        if reduce.is_none() {
-            if let Some(b) = self.node.cached() {
-                return Ok(b);
-            }
-        }
-        let plan = plan(&self.node);
-        let key = match reduce {
-            None => format!("fuse|{}", plan.desc),
-            Some(k) => format!("fuse|{}|reduce-{}", plan.desc, k.name()),
-        };
-        let root = self.node.clone();
-        let plan_for_build = plan.clone();
-        let exe = self.ctx.tk.cache().get_or_build(&key, move || {
-            build_fused("fused", &root, &plan_for_build, reduce)
-        })?;
-        let bufs: Vec<DeviceBuffer> = plan
-            .leaves
-            .iter()
-            .map(|l| {
-                l.cached().ok_or_else(|| {
-                    Error::msg("fusion leaf lost its device buffer")
-                })
-            })
-            .collect::<Result<_>>()?;
-        let refs: Vec<&DeviceBuffer> = bufs.iter().collect();
-        let out = exe
-            .run_buffers_on(device, &refs)?
-            .into_iter()
-            .next()
-            .ok_or_else(|| Error::msg("fused kernel produced no output"))?;
-        if reduce.is_none() {
-            self.node.complete(out.clone());
-        }
-        Ok(out)
-    }
-
-    /// Materialize the expression: fuse the whole DAG into one
-    /// generated kernel (compiled behind the unified cache), launch it
-    /// once, and memoize the resulting device buffer.
+    /// Materialize the expression through the whole-program planner:
+    /// the DAG is clustered into the minimal set of generated kernels
+    /// (compiled behind the unified cache), launched, and the
+    /// resulting device buffer memoized on the node.
     pub fn buffer(&self) -> Result<DeviceBuffer> {
-        self.run_fused(None)
+        self.buffer_on(0)
     }
 
-    /// Device-targeted [`Self::buffer`]: any fused materialization this
-    /// forces launches on `device` (exec workers pass their own
-    /// ordinal).  An already-materialized node returns its memoized
-    /// buffer wherever it resides.
+    /// Device-targeted [`Self::buffer`]: any launches this forces run
+    /// on `device` (exec workers pass their own ordinal).  An
+    /// already-materialized node returns its memoized buffer wherever
+    /// it resides.  (Simulated buffers are literals, so leaves staged
+    /// on another device remain readable; real PJRT would insert a D2D
+    /// copy here.)
     pub fn buffer_on(&self, device: usize) -> Result<DeviceBuffer> {
-        self.run_fused_on(None, device)
+        plan::execute(
+            self.ctx.toolkit(),
+            std::slice::from_ref(&self.node),
+            device,
+        )?;
+        self.node
+            .cached()
+            .ok_or_else(|| Error::msg("planned execution left node lazy"))
     }
 
     /// Force materialization, discarding the buffer handle.
@@ -540,22 +460,20 @@ impl GpuArray {
     }
 
     /// Materialize asynchronously on the shared exec subsystem:
-    /// submits the fused launch to a device worker and returns at
-    /// once, so independent lazy DAGs (the CG solver's per-iteration
-    /// updates, batched elementwise requests) execute concurrently.
-    /// The result is memoized on the node exactly as [`Self::materialize`]
-    /// would.
+    /// submits the planned launches to a device worker and returns at
+    /// once, so independent lazy DAGs (batched elementwise requests)
+    /// execute concurrently.  The result is memoized on the node
+    /// exactly as [`Self::materialize`] would.
     ///
-    /// Racing a concurrent materialization of the *same* node (e.g.
-    /// `materialize_async` immediately followed by a blocking `get`)
-    /// is safe — memoization is idempotent and last-write-wins on
-    /// identical results — but may launch the fused kernel twice;
-    /// await the returned future before forcing the node to avoid the
-    /// duplicate work.
+    /// Materialization is single-flight: racing a concurrent
+    /// materialization of the *same* node (e.g. `materialize_async`
+    /// immediately followed by a blocking `get`) launches the fused
+    /// kernel **once** — the loser waits on the winner's in-flight
+    /// launch instead of duplicating it.
     pub fn materialize_async(&self) -> crate::exec::ExecFuture<()> {
         let this = self.clone();
         self.ctx.toolkit().executor().submit(move |device| {
-            this.run_fused_on(None, device).map(|_| ())
+            this.buffer_on(device).map(|_| ())
         })
     }
 
@@ -564,7 +482,7 @@ impl GpuArray {
     pub fn get_async(&self) -> crate::exec::ExecFuture<HostArray> {
         let this = self.clone();
         self.ctx.toolkit().executor().submit(move |device| {
-            this.run_fused_on(None, device)?.to_host()
+            this.buffer_on(device)?.to_host()
         })
     }
 
@@ -572,16 +490,13 @@ impl GpuArray {
 
     fn binary(&self, op: BinK, rhs: &GpuArray) -> Result<GpuArray> {
         let (ls, rs) = (self.shape(), rhs.shape());
-        let compatible = ls == rs || ls.is_empty() || rs.is_empty();
-        if !compatible {
-            return Err(Error::msg(format!(
+        let out_shape = broadcast_shapes(ls, rs).ok_or_else(|| {
+            Error::msg(format!(
                 "shape mismatch in {}: {ls:?} vs {rs:?}",
                 op.name()
-            )));
-        }
+            ))
+        })?;
         let out_dtype = promote(self.dtype(), rhs.dtype());
-        let out_shape: Vec<usize> =
-            if ls.is_empty() { rs.to_vec() } else { ls.to_vec() };
         let l = coerce(self.node.clone(), out_dtype, &out_shape);
         let r = coerce(rhs.node.clone(), out_dtype, &out_shape);
         Ok(GpuArray {
@@ -705,11 +620,18 @@ impl GpuArray {
         })
     }
 
-    // ---------------- reductions (fuse the elementwise prefix) ---------
+    // ---------------- reductions (lazy, planner-fused) ------------------
 
     fn reduce_all(&self, kind: ReduceK) -> Result<GpuArray> {
-        let out = self.run_fused(Some(kind))?;
-        Ok(GpuArray::from_buffer(&self.ctx, out))
+        let dims: Vec<usize> = (0..self.shape().len()).collect();
+        Ok(GpuArray {
+            ctx: self.ctx.clone(),
+            node: LazyNode::lazy(
+                self.dtype(),
+                vec![],
+                Expr::Reduce { kind, dims, keep: false, child: self.node.clone() },
+            ),
+        })
     }
 
     pub fn sum(&self) -> Result<GpuArray> {
@@ -724,6 +646,51 @@ impl GpuArray {
     pub fn mean(&self) -> Result<GpuArray> {
         let n = self.len() as f64;
         self.sum()?.div_scalar(n)
+    }
+
+    fn axis_reduce(
+        &self,
+        kind: ReduceK,
+        axis: usize,
+        keep: bool,
+    ) -> Result<GpuArray> {
+        let rank = self.shape().len();
+        if axis >= rank {
+            return Err(Error::msg(format!(
+                "axis {axis} out of range for rank {rank}"
+            )));
+        }
+        let mut shape = self.shape().to_vec();
+        if keep {
+            shape[axis] = 1;
+        } else {
+            shape.remove(axis);
+        }
+        Ok(GpuArray {
+            ctx: self.ctx.clone(),
+            node: LazyNode::lazy(
+                self.dtype(),
+                shape,
+                Expr::Reduce {
+                    kind,
+                    dims: vec![axis],
+                    keep,
+                    child: self.node.clone(),
+                },
+            ),
+        })
+    }
+
+    /// Per-axis sum with optional keep-dims (`x.sum_axis(1, true)` on
+    /// `[r,c]` yields `[r,1]`, ready to broadcast against `x`).
+    pub fn sum_axis(&self, axis: usize, keep: bool) -> Result<GpuArray> {
+        self.axis_reduce(ReduceK::Sum, axis, keep)
+    }
+    pub fn max_axis(&self, axis: usize, keep: bool) -> Result<GpuArray> {
+        self.axis_reduce(ReduceK::Max, axis, keep)
+    }
+    pub fn min_axis(&self, axis: usize, keep: bool) -> Result<GpuArray> {
+        self.axis_reduce(ReduceK::Min, axis, keep)
     }
 
     /// Inner product (§5.2.1 reduction family): the multiply fuses into
@@ -742,6 +709,51 @@ impl GpuArray {
     /// Squared L2 norm.
     pub fn norm2(&self) -> Result<GpuArray> {
         self.dot(self)
+    }
+
+    // ---------------- matrix products (lazy heavy ops) ------------------
+
+    fn mm(&self, rhs: &GpuArray, ca: usize, cb: usize) -> Result<GpuArray> {
+        let (ls, rs) = (self.shape(), rhs.shape());
+        if ls.len() != 2 || rs.len() != 2 || ls[ca] != rs[cb] {
+            return Err(Error::msg(format!(
+                "matmul contraction mismatch: {ls:?}@{ca} vs {rs:?}@{cb}"
+            )));
+        }
+        let dt = promote(self.dtype(), rhs.dtype());
+        let a = coerce(self.node.clone(), dt, ls);
+        let b = coerce(rhs.node.clone(), dt, rs);
+        let out_shape = vec![ls[1 - ca], rs[1 - cb]];
+        Ok(GpuArray {
+            ctx: self.ctx.clone(),
+            node: LazyNode::lazy(
+                dt,
+                out_shape,
+                Expr::MatMul { a, b, ca, cb },
+            ),
+        })
+    }
+
+    /// `[m,k] @ [k,n] -> [m,n]`, lazy — the planner gives it its own
+    /// cluster and fuses elementwise consumers as its epilogue.
+    pub fn matmul(&self, rhs: &GpuArray) -> Result<GpuArray> {
+        self.mm(rhs, 1, 0)
+    }
+
+    /// `[m,k] @ [n,k]ᵀ -> [m,n]` (contract both trailing axes) — the
+    /// cross-term of a pairwise-distance computation in one heavy op.
+    pub fn matmul_t(&self, rhs: &GpuArray) -> Result<GpuArray> {
+        self.mm(rhs, 1, 1)
+    }
+
+    /// Numerically-stable softmax along `axis` — the canonical
+    /// reduce-then-elementwise chain; the planner lowers it to **two**
+    /// launches (max+sub+exp, then sum+div).
+    pub fn softmax(&self, axis: usize) -> Result<GpuArray> {
+        let m = self.max_axis(axis, true)?;
+        let e = self.sub(&m)?.exp()?;
+        let s = e.sum_axis(axis, true)?;
+        e.div(&s)
     }
 
     /// Read a scalar result back as f64.
@@ -923,6 +935,152 @@ mod tests {
         assert_eq!(
             a.mul(&s).unwrap().get().unwrap().as_f32().unwrap(),
             &[10.0, 20.0]
+        );
+    }
+
+    #[test]
+    fn row_and_col_broadcast_binary() {
+        // NumPy trailing-axis broadcasting: [2,3] + [3] and [2,3] + [2,1]
+        let c = ctx();
+        let m = c
+            .to_gpu(&HostArray::f32(
+                vec![2, 3],
+                vec![1., 2., 3., 4., 5., 6.],
+            ))
+            .unwrap();
+        let row = arr(&c, vec![10.0, 20.0, 30.0]);
+        let got = m.add(&row).unwrap().get().unwrap();
+        assert_eq!(
+            got.as_f32().unwrap(),
+            &[11., 22., 33., 14., 25., 36.]
+        );
+        let col = c
+            .to_gpu(&HostArray::f32(vec![2, 1], vec![100.0, 200.0]))
+            .unwrap();
+        let got = m.add(&col).unwrap().get().unwrap();
+        assert_eq!(
+            got.as_f32().unwrap(),
+            &[101., 102., 103., 204., 205., 206.]
+        );
+    }
+
+    #[test]
+    fn axis_reductions() {
+        let c = ctx();
+        let m = c
+            .to_gpu(&HostArray::f32(
+                vec![2, 3],
+                vec![1., 2., 3., 4., 5., 6.],
+            ))
+            .unwrap();
+        let rows = m.sum_axis(1, false).unwrap();
+        assert_eq!(rows.shape(), &[2]);
+        assert_eq!(rows.get().unwrap().as_f32().unwrap(), &[6.0, 15.0]);
+        let keep = m.sum_axis(1, true).unwrap();
+        assert_eq!(keep.shape(), &[2, 1]);
+        assert_eq!(keep.get().unwrap().as_f32().unwrap(), &[6.0, 15.0]);
+        let cols = m.sum_axis(0, false).unwrap();
+        assert_eq!(cols.get().unwrap().as_f32().unwrap(), &[5.0, 7.0, 9.0]);
+        let mx = m.max_axis(1, false).unwrap();
+        assert_eq!(mx.get().unwrap().as_f32().unwrap(), &[3.0, 6.0]);
+        let mn = m.min_axis(0, false).unwrap();
+        assert_eq!(mn.get().unwrap().as_f32().unwrap(), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn matmul_and_transposed_matmul() {
+        let c = ctx();
+        let a = c
+            .to_gpu(&HostArray::f32(
+                vec![2, 3],
+                vec![1., 2., 3., 4., 5., 6.],
+            ))
+            .unwrap();
+        let b = c
+            .to_gpu(&HostArray::f32(
+                vec![3, 2],
+                vec![7., 8., 9., 10., 11., 12.],
+            ))
+            .unwrap();
+        let ab = a.matmul(&b).unwrap();
+        assert_eq!(ab.shape(), &[2, 2]);
+        assert_eq!(
+            ab.get().unwrap().as_f32().unwrap(),
+            &[58., 64., 139., 154.]
+        );
+        // a @ aᵀ via matmul_t: [2,3] x [2,3] -> [2,2] gram matrix
+        let gram = a.matmul_t(&a).unwrap();
+        assert_eq!(
+            gram.get().unwrap().as_f32().unwrap(),
+            &[14., 32., 32., 77.]
+        );
+    }
+
+    #[test]
+    fn softmax_is_two_planned_launches() {
+        let c = ctx();
+        let m = c
+            .to_gpu(&HostArray::f32(
+                vec![2, 3],
+                vec![1., 2., 3., 1., 1., 1.],
+            ))
+            .unwrap();
+        let e0 = execs(&c);
+        let s = m.softmax(1).unwrap();
+        let host = s.get().unwrap();
+        assert_eq!(
+            execs(&c) - e0,
+            2,
+            "softmax = max+sub+exp cluster, then sum+div cluster"
+        );
+        let got = host.as_f32().unwrap();
+        for row in 0..2 {
+            let sum: f32 = got[row * 3..row * 3 + 3].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "row {row} sums to {sum}");
+        }
+        assert!((got[3] - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn shared_subgraph_executes_once_per_program() {
+        // graph-level CSE + clustering: two roots sharing a subgraph,
+        // materialized together, become ONE launch
+        let c = ctx();
+        let a = arr(&c, vec![1.0, 2.0, 3.0]);
+        let b = arr(&c, vec![4.0, 5.0, 6.0]);
+        let shared = a.add(&b).unwrap();
+        let r1 = shared.exp().unwrap();
+        let r2 = shared.scale(2.0).unwrap();
+        let e0 = execs(&c);
+        c.materialize_many(&[&r1, &r2]).unwrap();
+        assert_eq!(
+            execs(&c) - e0,
+            1,
+            "both roots + shared subgraph = one cluster"
+        );
+        assert_eq!(
+            r2.get().unwrap().as_f32().unwrap(),
+            &[10.0, 14.0, 18.0]
+        );
+    }
+
+    #[test]
+    fn structural_duplicates_are_cse_deduped() {
+        // two *structurally identical* (but distinct-node) expressions
+        // over the same leaves collapse to one computation
+        let c = ctx();
+        let a = arr(&c, vec![1.0, 2.0]);
+        let b = arr(&c, vec![3.0, 4.0]);
+        let r1 = a.mul(&b).unwrap().add_scalar(1.0).unwrap();
+        let r2 = a.mul(&b).unwrap().add_scalar(1.0).unwrap();
+        let before = plan::stats::snapshot().cse_hits;
+        let e0 = execs(&c);
+        c.materialize_many(&[&r1, &r2]).unwrap();
+        assert_eq!(execs(&c) - e0, 1, "duplicate subgraph executes once");
+        assert!(plan::stats::snapshot().cse_hits > before);
+        assert_eq!(
+            r1.get().unwrap().as_f32().unwrap(),
+            r2.get().unwrap().as_f32().unwrap()
         );
     }
 

@@ -1,0 +1,141 @@
+//! Cluster lowering: an owned, index-based program (`LowerPlan`) for
+//! one kernel cluster, its canonical descriptor (the compile-cache
+//! key), and the builder that turns it into an `XlaComputation`.
+//!
+//! The plan is deliberately self-contained — plain data, no `Arc`s
+//! into the live DAG — so the compile-cache fill closure can rebuild
+//! the computation on a miss without touching node state.
+
+use crate::array::{BinK, ReduceK, UnK};
+use crate::rtcg::dtype::DType;
+use crate::rtcg::hlobuild;
+use crate::util::error::{Error, Result};
+
+/// One lowering step; operands are indices of earlier steps.
+#[derive(Debug, Clone)]
+pub(crate) enum Step {
+    /// kernel parameter `params[i]` (a device-resident input)
+    Param(usize),
+    /// scalar constant baked into the kernel
+    Lit(DType, f64),
+    Un(UnK, usize),
+    Bin(BinK, usize, usize),
+    Cast(DType, usize),
+    Bcast { child: usize, from: Vec<usize>, to: Vec<usize> },
+    Reduce { kind: ReduceK, dims: Vec<usize>, keep: bool, child: usize },
+    MatMul { a: usize, b: usize, ca: usize, cb: usize },
+}
+
+/// A frozen, owned lowering of one cluster: parameter signatures, a
+/// topologically-ordered step list, and which steps are kernel outputs
+/// (multi-output clusters root in a tuple).
+#[derive(Debug, Clone)]
+pub(crate) struct LowerPlan {
+    pub params: Vec<(DType, Vec<usize>)>,
+    pub steps: Vec<Step>,
+    pub outputs: Vec<usize>,
+}
+
+impl LowerPlan {
+    /// Canonical descriptor: identical structure + shapes + baked
+    /// literals ⇒ identical descriptor ⇒ one compiled kernel in the
+    /// unified cache (§4.2 "hardcoding is free under RTCG").
+    pub fn descriptor(&self) -> String {
+        let sig: Vec<String> = self
+            .params
+            .iter()
+            .map(|(dt, sh)| crate::array::shape_sig(*dt, sh))
+            .collect();
+        let mut body = String::new();
+        for (i, s) in self.steps.iter().enumerate() {
+            if i > 0 {
+                body.push(';');
+            }
+            match s {
+                Step::Param(p) => body.push_str(&format!("P{p}")),
+                Step::Lit(dt, v) => body.push_str(&format!(
+                    "L{}:{:016x}",
+                    dt.name(),
+                    v.to_bits()
+                )),
+                Step::Un(op, a) => {
+                    body.push_str(&format!("{}(s{a})", op.name()))
+                }
+                Step::Bin(op, a, b) => {
+                    body.push_str(&format!("{}(s{a},s{b})", op.name()))
+                }
+                Step::Cast(dt, a) => {
+                    body.push_str(&format!("cast{}(s{a})", dt.name()))
+                }
+                Step::Bcast { child, from, to } => body.push_str(&format!(
+                    "bc{from:?}->{to:?}(s{child})"
+                )),
+                Step::Reduce { kind, dims, keep, child } => body.push_str(
+                    &format!("r{}{dims:?}k{keep}(s{child})", kind.name()),
+                ),
+                Step::MatMul { a, b, ca, cb } => body.push_str(&format!(
+                    "mm{ca}{cb}(s{a},s{b})"
+                )),
+            }
+        }
+        let outs: Vec<String> =
+            self.outputs.iter().map(|o| format!("s{o}")).collect();
+        format!("cluster|{}|{}|out={}", sig.join(";"), body, outs.join(","))
+    }
+
+    /// Build the cluster's computation on a fresh builder (the
+    /// compile-cache fill path).
+    pub fn build(&self) -> Result<xla::XlaComputation> {
+        let b = xla::XlaBuilder::new("cluster");
+        let mut param_ops = Vec::with_capacity(self.params.len());
+        for (i, (dt, shape)) in self.params.iter().enumerate() {
+            param_ops.push(hlobuild::param(
+                &b,
+                i as i64,
+                *dt,
+                shape,
+                &format!("p{i}"),
+            )?);
+        }
+        let mut ops: Vec<xla::XlaOp> = Vec::with_capacity(self.steps.len());
+        for step in &self.steps {
+            let op = match step {
+                Step::Param(p) => param_ops[*p].clone(),
+                Step::Lit(dt, v) => hlobuild::constant(&b, *dt, *v)?,
+                Step::Un(k, a) => k.apply(&ops[*a])?,
+                Step::Bin(k, x, y) => k.apply(&ops[*x], &ops[*y])?,
+                Step::Cast(dt, a) => ops[*a]
+                    .convert(dt.to_primitive_type())
+                    .map_err(Error::from)?,
+                Step::Bcast { child, from, to } => {
+                    hlobuild::broadcast_in_dim(&ops[*child], from, to)?
+                }
+                Step::Reduce { kind, dims, keep, child } => {
+                    let d: Vec<i64> =
+                        dims.iter().map(|&x| x as i64).collect();
+                    match kind {
+                        ReduceK::Sum => ops[*child].reduce_sum(&d, *keep)?,
+                        ReduceK::Max => ops[*child].reduce_max(&d, *keep)?,
+                        ReduceK::Min => ops[*child].reduce_min(&d, *keep)?,
+                    }
+                }
+                Step::MatMul { a, b: rhs, ca, cb } => ops[*a].dot_general(
+                    &ops[*rhs],
+                    &[*ca as i64],
+                    &[*cb as i64],
+                    &[],
+                    &[],
+                )?,
+            };
+            ops.push(op);
+        }
+        let root = if self.outputs.len() == 1 {
+            ops[self.outputs[0]].clone()
+        } else {
+            let outs: Vec<xla::XlaOp> =
+                self.outputs.iter().map(|&o| ops[o].clone()).collect();
+            b.tuple(&outs)?
+        };
+        root.build().map_err(Into::into)
+    }
+}

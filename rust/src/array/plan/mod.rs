@@ -1,0 +1,670 @@
+//! Whole-program graph planner for the lazy array layer.
+//!
+//! Where the previous layer lowered **one root at a time** (one fused
+//! kernel per `materialize`, shared subgraphs re-lowered per consumer),
+//! this module plans the *program*: every materialization request —
+//! single root or a `materialize_many` batch — is extracted into an
+//! explicit op graph and lowered as a unit.
+//!
+//! The pipeline, and its paper lineage:
+//!
+//! 1. **Extraction + graph-level CSE** — the DAG of [`Expr`] nodes is
+//!    walked once into an indexed graph; structurally identical
+//!    subgraphs (same ops, shapes, baked literals, same leaves) are
+//!    folded to one representative, so a subexpression shared by
+//!    several consumers is lowered *and executed* once.  This is the
+//!    §5.2 temporaries argument applied at program scope: RTCG means
+//!    the generated code is specialized to the whole expression set,
+//!    not to each operator call.
+//! 2. **Kernel clustering** — nodes are grouped into launch clusters
+//!    following the descent exemplar's `Kernel::{PerElement, Reduce,
+//!    MatMul}` split (see SNIPPETS.md): elementwise ops join their
+//!    latest producer's cluster; a reduction absorbs its (reduce-free)
+//!    elementwise prefix; elementwise consumers of a reduction or
+//!    matmul fuse as its **epilogue** (softmax = 2 launches, a CG
+//!    update = 2); a matmul always anchors its own cluster.  Clusters
+//!    are capped at [`MAX_CLUSTER_OPS`] ops — an oversized or
+//!    diamond-heavy DAG is automatically *cut* there, materializing
+//!    the intermediate exactly where the planner chose to (the
+//!    auto-materialize answer to hand-placed `materialize` calls).
+//!    This is the program-level kernel IR idea of Loo.py
+//!    (arXiv:1405.7470) in miniature: scheduling decisions operate on
+//!    a kernel-granularity graph, not on user syntax.
+//! 3. **Lowering + compile** — each cluster becomes an owned
+//!    [`lower::LowerPlan`] whose canonical descriptor keys the sharded
+//!    `rtcg::cache::CompileCache`: identical cluster structure across
+//!    iterations (CG) or programs hits the same compiled kernel
+//!    (§4.2 — the generated-code cache makes specialization free).
+//! 4. **Execution** — clusters run wave-by-wave in dependency order;
+//!    independent clusters in a wave are submitted concurrently to the
+//!    `exec` scheduler's device workers (§5 streams/overlap).  Node
+//!    completion is **single-flight**: an output being launched by one
+//!    thread is marked in-flight and racing materializers wait on it
+//!    instead of re-launching.
+//!
+//! Planner decisions (programs, clusters, CSE hits, launches saved,
+//! epilogue fusions, auto-cuts) are counted in [`stats`] and mirrored
+//! into `coordinator::metrics::Snapshot`.
+
+pub(crate) mod lower;
+pub mod reference;
+pub mod stats;
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::array::{Claim, Expr, LazyNode};
+use crate::rtcg::module::Toolkit;
+use crate::runtime::DeviceBuffer;
+use crate::util::error::{Error, Result};
+
+use lower::{LowerPlan, Step};
+
+/// Cluster size cap: a DAG bigger than this is cut here and the
+/// boundary value materialized (planner-chosen cut point).
+pub(crate) const MAX_CLUSTER_OPS: usize = 64;
+
+// ---------------------------------------------------------------------------
+// Graph extraction + CSE
+// ---------------------------------------------------------------------------
+
+pub(crate) struct GNode {
+    pub node: Arc<LazyNode>,
+    /// frozen expression snapshot; `None` for device-resident leaves
+    pub expr: Option<Expr>,
+    pub children: Vec<usize>,
+    /// literal, or elementwise over only literals: inlined into every
+    /// consumer cluster instead of occupying one
+    pub const_like: bool,
+    /// structurally-identical nodes folded into this one by CSE; they
+    /// are completed alongside the representative
+    pub aliases: Vec<Arc<LazyNode>>,
+}
+
+pub(crate) struct Graph {
+    pub nodes: Vec<GNode>,
+    pub roots: Vec<usize>,
+}
+
+fn children_of(e: &Expr) -> Vec<Arc<LazyNode>> {
+    match e {
+        Expr::Lit(_) => vec![],
+        Expr::Un(_, a) | Expr::Cast(a) | Expr::Bcast(a) => vec![a.clone()],
+        Expr::Bin(_, a, b) => vec![a.clone(), b.clone()],
+        Expr::Reduce { child, .. } => vec![child.clone()],
+        Expr::MatMul { a, b, .. } => vec![a.clone(), b.clone()],
+    }
+}
+
+fn expr_sig(e: &Expr, node: &LazyNode, kids: &[usize]) -> String {
+    let head = match e {
+        Expr::Lit(v) => format!("lit{:016x}", v.to_bits()),
+        Expr::Un(op, _) => op.name().to_string(),
+        Expr::Bin(op, ..) => op.name().to_string(),
+        Expr::Cast(_) => "cast".to_string(),
+        Expr::Bcast(_) => "bcast".to_string(),
+        Expr::Reduce { kind, dims, keep, .. } => {
+            format!("red{}{dims:?}k{keep}", kind.name())
+        }
+        Expr::MatMul { ca, cb, .. } => format!("mm{ca}{cb}"),
+    };
+    let ks: Vec<String> = kids.iter().map(|k| format!("n{k}")).collect();
+    format!(
+        "{head}|{}|{}",
+        crate::array::shape_sig(node.dtype, &node.shape),
+        ks.join(",")
+    )
+}
+
+struct Extractor {
+    nodes: Vec<GNode>,
+    by_ptr: HashMap<usize, usize>,
+    canon: HashMap<String, usize>,
+    cse_hits: u64,
+}
+
+impl Extractor {
+    fn walk(&mut self, node: &Arc<LazyNode>) -> usize {
+        let ptr = Arc::as_ptr(node) as usize;
+        if let Some(&i) = self.by_ptr.get(&ptr) {
+            return i;
+        }
+        match node.expr_view() {
+            None => {
+                // device-resident leaf: identity-keyed (never CSE'd —
+                // distinct buffers are distinct inputs)
+                let i = self.nodes.len();
+                self.nodes.push(GNode {
+                    node: node.clone(),
+                    expr: None,
+                    children: Vec::new(),
+                    const_like: false,
+                    aliases: Vec::new(),
+                });
+                self.by_ptr.insert(ptr, i);
+                i
+            }
+            Some(e) => {
+                let kid_arcs = children_of(&e);
+                let kids: Vec<usize> =
+                    kid_arcs.iter().map(|k| self.walk(k)).collect();
+                let sig = expr_sig(&e, node, &kids);
+                if let Some(&j) = self.canon.get(&sig) {
+                    // graph-level CSE: fold to the representative
+                    self.cse_hits += 1;
+                    self.by_ptr.insert(ptr, j);
+                    self.nodes[j].aliases.push(node.clone());
+                    return j;
+                }
+                let const_like = match &e {
+                    Expr::Lit(_) => true,
+                    Expr::Un(..)
+                    | Expr::Bin(..)
+                    | Expr::Cast(_)
+                    | Expr::Bcast(_) => {
+                        kids.iter().all(|&k| self.nodes[k].const_like)
+                    }
+                    _ => false,
+                };
+                let i = self.nodes.len();
+                self.nodes.push(GNode {
+                    node: node.clone(),
+                    expr: Some(e),
+                    children: kids,
+                    const_like,
+                    aliases: Vec::new(),
+                });
+                self.by_ptr.insert(ptr, i);
+                self.canon.insert(sig, i);
+                i
+            }
+        }
+    }
+}
+
+/// Extract the union DAG of `roots` (post-order, so `nodes` is
+/// topologically sorted) and fold structural duplicates.
+pub(crate) fn extract(roots: &[Arc<LazyNode>]) -> (Graph, u64) {
+    let mut ex = Extractor {
+        nodes: Vec::new(),
+        by_ptr: HashMap::new(),
+        canon: HashMap::new(),
+        cse_hits: 0,
+    };
+    let root_ix: Vec<usize> = roots.iter().map(|r| ex.walk(r)).collect();
+    // a root needs a buffer no matter how trivial its expression is
+    for &r in &root_ix {
+        ex.nodes[r].const_like = false;
+    }
+    (Graph { nodes: ex.nodes, roots: root_ix }, ex.cse_hits)
+}
+
+// ---------------------------------------------------------------------------
+// Kernel clustering (descent-style PerElement / Reduce / MatMul groups)
+// ---------------------------------------------------------------------------
+
+pub(crate) struct Cluster {
+    pub members: Vec<usize>,
+    /// number of reduce/matmul ops in the cluster
+    pub heavy: usize,
+    /// earlier clusters whose outputs this one consumes
+    pub deps: Vec<usize>,
+}
+
+/// Greedy topological clustering.  Joining the *latest* producer
+/// cluster is provably acyclic: dependency edges always point from a
+/// later-created cluster to an earlier one.
+pub(crate) fn cluster_graph(
+    g: &Graph,
+) -> (Vec<Cluster>, Vec<Option<usize>>, u64, u64) {
+    let mut of: Vec<Option<usize>> = vec![None; g.nodes.len()];
+    let mut cs: Vec<Cluster> = Vec::new();
+    let mut epilogue_fusions = 0u64;
+    let mut auto_cuts = 0u64;
+    for i in 0..g.nodes.len() {
+        let n = &g.nodes[i];
+        let Some(e) = &n.expr else { continue };
+        if n.const_like {
+            continue; // inlined as constants into consumer clusters
+        }
+        let heavy = matches!(e, Expr::Reduce { .. } | Expr::MatMul { .. });
+        let is_matmul = matches!(e, Expr::MatMul { .. });
+        let mut producers: Vec<usize> =
+            n.children.iter().filter_map(|&ch| of[ch]).collect();
+        producers.sort_unstable();
+        producers.dedup();
+        let mut target = None;
+        if !is_matmul {
+            // a matmul always anchors its own cluster; everything else
+            // tries to join its latest producer
+            if let Some(&last) = producers.last() {
+                if cs[last].members.len() >= MAX_CLUSTER_OPS {
+                    auto_cuts += 1; // planner-chosen materialize point
+                } else if heavy && cs[last].heavy > 0 {
+                    // a reduction absorbs a reduce-free prefix only;
+                    // stacked reductions get separate kernels
+                } else {
+                    target = Some(last);
+                }
+            }
+        }
+        match target {
+            Some(c) => {
+                if !heavy && cs[c].heavy > 0 {
+                    epilogue_fusions += 1;
+                }
+                cs[c].members.push(i);
+                if heavy {
+                    cs[c].heavy += 1;
+                }
+                for &p in &producers {
+                    if p != c && !cs[c].deps.contains(&p) {
+                        cs[c].deps.push(p);
+                    }
+                }
+                of[i] = Some(c);
+            }
+            None => {
+                cs.push(Cluster {
+                    members: vec![i],
+                    heavy: heavy as usize,
+                    deps: producers,
+                });
+                of[i] = Some(cs.len() - 1);
+            }
+        }
+    }
+    (cs, of, epilogue_fusions, auto_cuts)
+}
+
+// ---------------------------------------------------------------------------
+// Per-cluster lowering
+// ---------------------------------------------------------------------------
+
+/// Everything needed to launch one cluster, detached from the graph.
+struct ClusterJob {
+    key: String,
+    plan: LowerPlan,
+    inputs: Vec<Arc<LazyNode>>,
+    outputs: Vec<Arc<LazyNode>>,
+    out_aliases: Vec<Vec<Arc<LazyNode>>>,
+}
+
+struct Emitter<'a> {
+    g: &'a Graph,
+    of: &'a [Option<usize>],
+    c: usize,
+    steps: Vec<Step>,
+    params: Vec<(crate::rtcg::dtype::DType, Vec<usize>)>,
+    inputs: Vec<Arc<LazyNode>>,
+    step_of: HashMap<usize, usize>,
+}
+
+impl Emitter<'_> {
+    fn emit(&mut self, i: usize) -> usize {
+        if let Some(&s) = self.step_of.get(&i) {
+            return s;
+        }
+        let g = self.g;
+        let n = &g.nodes[i];
+        let internal = n.const_like || self.of[i] == Some(self.c);
+        let s = if n.expr.is_none() || !internal {
+            // external input: a leaf buffer or another cluster's output
+            let p = self.params.len();
+            self.params.push((n.node.dtype, n.node.shape.clone()));
+            self.inputs.push(n.node.clone());
+            self.steps.push(Step::Param(p));
+            self.steps.len() - 1
+        } else {
+            let e = n.expr.as_ref().unwrap();
+            let kids = n.children.clone();
+            let step = match e {
+                Expr::Lit(v) => Step::Lit(n.node.dtype, *v),
+                Expr::Un(op, _) => {
+                    let a = self.emit(kids[0]);
+                    Step::Un(*op, a)
+                }
+                Expr::Bin(op, ..) => {
+                    let a = self.emit(kids[0]);
+                    let b = self.emit(kids[1]);
+                    Step::Bin(*op, a, b)
+                }
+                Expr::Cast(_) => {
+                    let a = self.emit(kids[0]);
+                    Step::Cast(n.node.dtype, a)
+                }
+                Expr::Bcast(_) => {
+                    let from = g.nodes[kids[0]].node.shape.clone();
+                    let a = self.emit(kids[0]);
+                    Step::Bcast { child: a, from, to: n.node.shape.clone() }
+                }
+                Expr::Reduce { kind, dims, keep, .. } => {
+                    let a = self.emit(kids[0]);
+                    Step::Reduce {
+                        kind: *kind,
+                        dims: dims.clone(),
+                        keep: *keep,
+                        child: a,
+                    }
+                }
+                Expr::MatMul { ca, cb, .. } => {
+                    let a = self.emit(kids[0]);
+                    let b = self.emit(kids[1]);
+                    Step::MatMul { a, b, ca: *ca, cb: *cb }
+                }
+            };
+            self.steps.push(step);
+            self.steps.len() - 1
+        };
+        self.step_of.insert(i, s);
+        s
+    }
+}
+
+fn build_job(
+    g: &Graph,
+    of: &[Option<usize>],
+    c: usize,
+    members: &[usize],
+    needed: &[bool],
+) -> Result<ClusterJob> {
+    let mut em = Emitter {
+        g,
+        of,
+        c,
+        steps: Vec::new(),
+        params: Vec::new(),
+        inputs: Vec::new(),
+        step_of: HashMap::new(),
+    };
+    let mut out_steps = Vec::new();
+    let mut outputs = Vec::new();
+    let mut out_aliases = Vec::new();
+    for &m in members {
+        if needed[m] {
+            out_steps.push(em.emit(m));
+            outputs.push(g.nodes[m].node.clone());
+            out_aliases.push(g.nodes[m].aliases.clone());
+        }
+    }
+    if outputs.is_empty() {
+        return Err(Error::msg("planner formed a cluster with no outputs"));
+    }
+    let plan = LowerPlan {
+        params: em.params,
+        steps: em.steps,
+        outputs: out_steps,
+    };
+    let key = plan.descriptor();
+    Ok(ClusterJob { key, plan, inputs: em.inputs, outputs, out_aliases })
+}
+
+// ---------------------------------------------------------------------------
+// Execution: single-flight claims + wave dispatch through `exec`
+// ---------------------------------------------------------------------------
+
+/// Restores `Lazy` state for still-in-flight claims if the launch
+/// fails or unwinds, so waiters wake and retry instead of deadlocking.
+struct ClaimGuard {
+    nodes: Vec<Arc<LazyNode>>,
+    armed: bool,
+}
+
+impl ClaimGuard {
+    fn new(nodes: Vec<Arc<LazyNode>>) -> ClaimGuard {
+        ClaimGuard { nodes, armed: true }
+    }
+
+    fn disarm(mut self) {
+        self.armed = false;
+    }
+}
+
+impl Drop for ClaimGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            for n in &self.nodes {
+                n.unclaim();
+            }
+        }
+    }
+}
+
+fn run_cluster(tk: &Toolkit, job: &ClusterJob, device: usize) -> Result<()> {
+    loop {
+        let mut claimed: Vec<Arc<LazyNode>> = Vec::new();
+        let mut flying: Vec<Arc<LazyNode>> = Vec::new();
+        for n in &job.outputs {
+            match n.claim() {
+                Claim::Ready => {}
+                Claim::Claimed => claimed.push(n.clone()),
+                Claim::Flying => flying.push(n.clone()),
+            }
+        }
+        if claimed.is_empty() {
+            if flying.is_empty() {
+                return Ok(()); // every output already materialized
+            }
+            // another thread owns the launch — wait, then re-examine
+            // (a failed owner reverts its claims and we retry)
+            for n in &flying {
+                n.await_flight();
+            }
+            continue;
+        }
+        let guard = ClaimGuard::new(claimed);
+        let exe = tk.cache().get_or_build(&job.key, || job.plan.build())?;
+        let ins: Vec<DeviceBuffer> = job
+            .inputs
+            .iter()
+            .map(|n| {
+                n.cached().ok_or_else(|| {
+                    Error::msg("cluster input lost its device buffer")
+                })
+            })
+            .collect::<Result<_>>()?;
+        let refs: Vec<&DeviceBuffer> = ins.iter().collect();
+        let outs = exe.run_buffers_on(device, &refs)?;
+        if outs.len() != job.outputs.len() {
+            return Err(Error::msg(format!(
+                "cluster produced {} outputs, planned {}",
+                outs.len(),
+                job.outputs.len()
+            )));
+        }
+        for (n, b) in job.outputs.iter().zip(&outs) {
+            n.complete(b.clone());
+        }
+        for (als, b) in job.out_aliases.iter().zip(&outs) {
+            for a in als {
+                a.complete(b.clone());
+            }
+        }
+        guard.disarm();
+        return Ok(());
+    }
+}
+
+/// Plan and execute the program rooted at `roots`: extract + CSE,
+/// cluster, lower each cluster behind the unified compile cache, and
+/// launch wave-by-wave — independent clusters of a wave go through the
+/// exec scheduler's device workers concurrently; a single-cluster wave
+/// runs inline on `device`.
+pub(crate) fn execute(
+    tk: &Toolkit,
+    roots: &[Arc<LazyNode>],
+    device: usize,
+) -> Result<()> {
+    if roots.iter().all(|r| r.cached().is_some()) {
+        return Ok(());
+    }
+    let (g, cse_hits) = extract(roots);
+    let (clusters, of, epilogues, cuts) = cluster_graph(&g);
+    if clusters.is_empty() {
+        return Ok(()); // raced: everything became ready during extract
+    }
+
+    // which nodes must surface as cluster outputs: roots, plus values
+    // consumed across a cluster boundary
+    let mut needed = vec![false; g.nodes.len()];
+    for &r in &g.roots {
+        if of[r].is_some() {
+            needed[r] = true;
+        }
+    }
+    for i in 0..g.nodes.len() {
+        if let Some(ci) = of[i] {
+            for &ch in &g.nodes[i].children {
+                if let Some(cc) = of[ch] {
+                    if cc != ci {
+                        needed[ch] = true;
+                    }
+                }
+            }
+        }
+    }
+
+    let ops: u64 = clusters.iter().map(|c| c.members.len() as u64).sum();
+    stats::note_program(
+        clusters.len() as u64,
+        ops,
+        cse_hits,
+        epilogues,
+        cuts,
+    );
+
+    let mut jobs: Vec<Option<ClusterJob>> = Vec::with_capacity(clusters.len());
+    for (c, cl) in clusters.iter().enumerate() {
+        jobs.push(Some(build_job(&g, &of, c, &cl.members, &needed)?));
+    }
+
+    // wave = all clusters at the same dependency depth
+    let mut depth = vec![0usize; clusters.len()];
+    for c in 0..clusters.len() {
+        depth[c] = clusters[c]
+            .deps
+            .iter()
+            .map(|&p| depth[p] + 1)
+            .max()
+            .unwrap_or(0);
+    }
+    let max_depth = depth.iter().copied().max().unwrap_or(0);
+    for d in 0..=max_depth {
+        let wave: Vec<usize> =
+            (0..clusters.len()).filter(|&c| depth[c] == d).collect();
+        if wave.len() == 1 {
+            let job = jobs[wave[0]].take().unwrap();
+            run_cluster(tk, &job, device)?;
+        } else {
+            // independent clusters: overlap on the exec scheduler
+            let ex = tk.executor();
+            let futures: Vec<crate::exec::ExecFuture<()>> = wave
+                .iter()
+                .map(|&c| {
+                    let job = jobs[c].take().unwrap();
+                    let tk2 = tk.clone();
+                    ex.submit(move |dev| run_cluster(&tk2, &job, dev))
+                })
+                .collect();
+            let mut first_err: Option<Error> = None;
+            for f in futures {
+                if let Err(e) = f.wait() {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+            if let Some(e) = first_err {
+                return Err(e);
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::array::ArrayContext;
+    use crate::rtcg::module::Toolkit;
+    use crate::runtime::HostArray;
+    use std::sync::atomic::Ordering;
+
+    fn execs(c: &ArrayContext) -> u64 {
+        c.toolkit().client().stats().executions.load(Ordering::Relaxed)
+    }
+
+    #[test]
+    fn cg_update_program_is_two_launches() {
+        // one whole CG iteration update (α, x', r', ‖r'‖², β, p') as a
+        // single planned program: 2 clusters — the dot-anchored update
+        // cluster and the ‖r'‖²-anchored p' cluster
+        let c = ArrayContext::new(Toolkit::init_ephemeral().unwrap());
+        let n = 32;
+        let f = |seed: f32| {
+            c.to_gpu(&HostArray::f32(
+                vec![n],
+                (0..n).map(|i| seed + i as f32 * 0.25).collect(),
+            ))
+            .unwrap()
+        };
+        let (x, r, p, ap) = (f(0.0), f(1.0), f(2.0), f(3.0));
+        let rz = r.norm2().unwrap();
+        rz.materialize().unwrap();
+        let e0 = execs(&c);
+        let alpha = rz.div(&p.dot(&ap).unwrap()).unwrap();
+        let x2 = x.add(&p.mul(&alpha).unwrap()).unwrap();
+        let r2 = r.sub(&ap.mul(&alpha).unwrap()).unwrap();
+        let rz2 = r2.norm2().unwrap();
+        let beta = rz2.div(&rz).unwrap();
+        let p2 = r2.add(&p.mul(&beta).unwrap()).unwrap();
+        c.materialize_many(&[&x2, &r2, &p2, &rz2]).unwrap();
+        assert_eq!(
+            execs(&c) - e0,
+            2,
+            "whole CG update = 2 planned launches"
+        );
+        assert!(x2.is_materialized() && p2.is_materialized());
+    }
+
+    #[test]
+    fn planner_counters_advance() {
+        let before = super::stats::snapshot();
+        let c = ArrayContext::new(Toolkit::init_ephemeral().unwrap());
+        let a = c
+            .to_gpu(&HostArray::f32(vec![4], vec![1., 2., 3., 4.]))
+            .unwrap();
+        a.scale(2.0).unwrap().add_scalar(1.0).unwrap().get().unwrap();
+        let after = super::stats::snapshot();
+        assert!(after.programs > before.programs);
+        assert!(after.clusters > before.clusters);
+        assert!(after.launches_saved >= before.launches_saved);
+    }
+
+    #[test]
+    fn oversized_dag_is_auto_cut() {
+        // a chain longer than MAX_CLUSTER_OPS splits into >1 cluster
+        // at a planner-chosen point instead of growing without bound
+        let c = ArrayContext::new(Toolkit::init_ephemeral().unwrap());
+        let a = c
+            .to_gpu(&HostArray::f32(vec![8], vec![1.0; 8]))
+            .unwrap();
+        let mut x = a.clone();
+        // each add_scalar contributes one cluster member (the literal
+        // and its broadcast are const-like, inlined), so going past the
+        // cap forces a cut
+        let chain = super::MAX_CLUSTER_OPS + 8;
+        for i in 0..chain {
+            x = x.add_scalar(1.0 + (i % 3) as f64).unwrap();
+        }
+        let cuts_before = super::stats::snapshot().auto_cuts;
+        let e0 = execs(&c);
+        let host = x.get().unwrap();
+        let launches = execs(&c) - e0;
+        assert!(launches >= 2, "cap must split the chain, got {launches}");
+        assert!(super::stats::snapshot().auto_cuts > cuts_before);
+        // value still correct: 8 elements, 1 + sum of the constants
+        let want: f32 = 1.0
+            + (0..chain).map(|i| 1.0 + (i % 3) as f32).sum::<f32>();
+        assert_eq!(host.as_f32().unwrap()[0], want);
+    }
+}

@@ -1,0 +1,387 @@
+//! Reference executors for the planner: the *unplanned* lowering
+//! strategies the planner is measured against (proptests compare
+//! values bitwise; `benches/fig6_graph.rs` compares launch counts and
+//! wall time).
+//!
+//! * [`run_per_node`] — maximal unfusion: one launch per op node (the
+//!   eager op-per-kernel layer the paper's §5.2 argues against).
+//!   Results are bitwise identical to planned execution because the
+//!   simulated device rounds to the element type after every op, so
+//!   fusion never changes values.
+//! * [`run_per_expression`] — the previous array layer's strategy: one
+//!   fused elementwise kernel per materialized expression, full
+//!   reductions fusing their prefix, but axis reductions and matmuls
+//!   materializing their operands first, shared subgraphs re-lowered
+//!   per consumer, and no cross-root planning.
+//!
+//! Neither executor mutates node state (no memoization on the DAG), so
+//! a planned run over the same roots afterwards starts from scratch.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::array::{Expr, GpuArray, LazyNode, ReduceK};
+use crate::rtcg::module::Toolkit;
+use crate::runtime::{DeviceBuffer, HostArray};
+use crate::util::error::{Error, Result};
+
+use super::children_of;
+use super::lower::{LowerPlan, Step};
+
+fn is_heavy(e: &Expr) -> bool {
+    matches!(e, Expr::Reduce { .. } | Expr::MatMul { .. })
+}
+
+fn launch(
+    tk: &Toolkit,
+    plan: &LowerPlan,
+    ins: &[DeviceBuffer],
+) -> Result<DeviceBuffer> {
+    let exe = tk.cache().get_or_build(&plan.descriptor(), || plan.build())?;
+    let refs: Vec<&DeviceBuffer> = ins.iter().collect();
+    exe.run_buffers_on(0, &refs)?.into_iter().next().ok_or_else(|| {
+        Error::msg("reference launch produced no output")
+    })
+}
+
+// ---------------------------------------------------------------------------
+// per-node lowering (op-per-kernel)
+// ---------------------------------------------------------------------------
+
+struct PerNode {
+    tk: Toolkit,
+    memo: HashMap<usize, DeviceBuffer>,
+}
+
+impl PerNode {
+    fn operand(
+        &mut self,
+        child: &Arc<LazyNode>,
+        steps: &mut Vec<Step>,
+        params: &mut Vec<(crate::rtcg::dtype::DType, Vec<usize>)>,
+        ins: &mut Vec<DeviceBuffer>,
+    ) -> Result<usize> {
+        if let Some(Expr::Lit(v)) = child.expr_view() {
+            steps.push(Step::Lit(child.dtype, v));
+            return Ok(steps.len() - 1);
+        }
+        let b = self.eval(child)?;
+        let p = params.len();
+        params.push((b.dtype, b.shape.clone()));
+        ins.push(b);
+        steps.push(Step::Param(p));
+        Ok(steps.len() - 1)
+    }
+
+    fn eval(&mut self, node: &Arc<LazyNode>) -> Result<DeviceBuffer> {
+        if let Some(b) = node.cached() {
+            return Ok(b);
+        }
+        let ptr = Arc::as_ptr(node) as usize;
+        if let Some(b) = self.memo.get(&ptr) {
+            return Ok(b.clone());
+        }
+        let e = match node.expr_view() {
+            Some(e) => e,
+            None => return node.cached().ok_or_else(|| {
+                Error::msg("node lost both expression and buffer")
+            }),
+        };
+        let mut steps: Vec<Step> = Vec::new();
+        let mut params = Vec::new();
+        let mut ins: Vec<DeviceBuffer> = Vec::new();
+        let step = match &e {
+            Expr::Lit(v) => Step::Lit(node.dtype, *v),
+            Expr::Un(op, a) => {
+                let s = self.operand(a, &mut steps, &mut params, &mut ins)?;
+                Step::Un(*op, s)
+            }
+            Expr::Bin(op, a, b) => {
+                let sa = self.operand(a, &mut steps, &mut params, &mut ins)?;
+                let sb = self.operand(b, &mut steps, &mut params, &mut ins)?;
+                Step::Bin(*op, sa, sb)
+            }
+            Expr::Cast(a) => {
+                let s = self.operand(a, &mut steps, &mut params, &mut ins)?;
+                Step::Cast(node.dtype, s)
+            }
+            Expr::Bcast(a) => {
+                let from = a.shape.clone();
+                let s = self.operand(a, &mut steps, &mut params, &mut ins)?;
+                Step::Bcast { child: s, from, to: node.shape.clone() }
+            }
+            Expr::Reduce { kind, dims, keep, child } => {
+                let s =
+                    self.operand(child, &mut steps, &mut params, &mut ins)?;
+                Step::Reduce {
+                    kind: *kind,
+                    dims: dims.clone(),
+                    keep: *keep,
+                    child: s,
+                }
+            }
+            Expr::MatMul { a, b, ca, cb } => {
+                let sa = self.operand(a, &mut steps, &mut params, &mut ins)?;
+                let sb = self.operand(b, &mut steps, &mut params, &mut ins)?;
+                Step::MatMul { a: sa, b: sb, ca: *ca, cb: *cb }
+            }
+        };
+        steps.push(step);
+        let outputs = vec![steps.len() - 1];
+        let plan = LowerPlan { params, steps, outputs };
+        let b = launch(&self.tk, &plan, &ins)?;
+        self.memo.insert(ptr, b.clone());
+        Ok(b)
+    }
+}
+
+/// Execute `roots` with one launch per op node (shared nodes execute
+/// once by identity; no structural CSE, no clustering) and fetch the
+/// results.  Node state is not mutated.
+pub fn run_per_node(roots: &[&GpuArray]) -> Result<Vec<HostArray>> {
+    if roots.is_empty() {
+        return Ok(Vec::new());
+    }
+    let mut pn = PerNode {
+        tk: roots[0].context().toolkit().clone(),
+        memo: HashMap::new(),
+    };
+    roots
+        .iter()
+        .map(|r| pn.eval(&r.node)?.to_host())
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// per-expression lowering (the pre-planner array layer)
+// ---------------------------------------------------------------------------
+
+struct PerExpr {
+    tk: Toolkit,
+    memo: HashMap<usize, DeviceBuffer>,
+}
+
+impl PerExpr {
+    fn materialize_sub(
+        &mut self,
+        node: &Arc<LazyNode>,
+    ) -> Result<DeviceBuffer> {
+        if let Some(b) = node.cached() {
+            return Ok(b);
+        }
+        let ptr = Arc::as_ptr(node) as usize;
+        if let Some(b) = self.memo.get(&ptr) {
+            return Ok(b.clone());
+        }
+        let e = match node.expr_view() {
+            Some(e) => e,
+            None => return node.cached().ok_or_else(|| {
+                Error::msg("node lost both expression and buffer")
+            }),
+        };
+        let b = if is_heavy(&e) {
+            self.eval_heavy(node, &e)?
+        } else {
+            self.prepare(node)?;
+            let (plan, ins) = self.build_region(node, None)?;
+            launch(&self.tk, &plan, &ins)?
+        };
+        self.memo.insert(ptr, b.clone());
+        Ok(b)
+    }
+
+    /// Eagerly evaluate every reduce/matmul reachable through the
+    /// elementwise region under `node` (the old layer evaluated heavy
+    /// ops at operator-call time).
+    fn prepare(&mut self, node: &Arc<LazyNode>) -> Result<()> {
+        if node.cached().is_some()
+            || self.memo.contains_key(&(Arc::as_ptr(node) as usize))
+        {
+            return Ok(());
+        }
+        match node.expr_view() {
+            None => Ok(()),
+            Some(e) if is_heavy(&e) => {
+                self.materialize_sub(node).map(|_| ())
+            }
+            Some(e) => {
+                for ch in children_of(&e) {
+                    self.prepare(&ch)?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn eval_heavy(
+        &mut self,
+        node: &Arc<LazyNode>,
+        e: &Expr,
+    ) -> Result<DeviceBuffer> {
+        match e {
+            Expr::Reduce { kind, dims, keep, child } => {
+                let full = !keep && dims.len() == child.shape.len();
+                if full {
+                    // the old layer fused the elementwise prefix into a
+                    // full reduction's launch
+                    self.prepare(child)?;
+                    let (plan, ins) = self
+                        .build_region(child, Some((*kind, dims, *keep)))?;
+                    launch(&self.tk, &plan, &ins)
+                } else {
+                    // axis reductions (new in the planner) get the
+                    // conservative baseline: operand materializes first
+                    let cb = self.materialize_sub(child)?;
+                    let plan = LowerPlan {
+                        params: vec![(cb.dtype, cb.shape.clone())],
+                        steps: vec![
+                            Step::Param(0),
+                            Step::Reduce {
+                                kind: *kind,
+                                dims: dims.clone(),
+                                keep: *keep,
+                                child: 0,
+                            },
+                        ],
+                        outputs: vec![1],
+                    };
+                    launch(&self.tk, &plan, &[cb])
+                }
+            }
+            Expr::MatMul { a, b, ca, cb } => {
+                let ma = self.materialize_sub(a)?;
+                let mb = self.materialize_sub(b)?;
+                let plan = LowerPlan {
+                    params: vec![
+                        (ma.dtype, ma.shape.clone()),
+                        (mb.dtype, mb.shape.clone()),
+                    ],
+                    steps: vec![
+                        Step::Param(0),
+                        Step::Param(1),
+                        Step::MatMul { a: 0, b: 1, ca: *ca, cb: *cb },
+                    ],
+                    outputs: vec![2],
+                };
+                launch(&self.tk, &plan, &[ma, mb])
+            }
+            _ => Err(Error::msg("eval_heavy on elementwise node")),
+        }
+    }
+
+    /// Fused elementwise plan over the region under `root`, stopping at
+    /// device-resident or already-evaluated nodes; optionally append a
+    /// trailing full reduction.
+    fn build_region(
+        &self,
+        root: &Arc<LazyNode>,
+        tail: Option<(ReduceK, &[usize], bool)>,
+    ) -> Result<(LowerPlan, Vec<DeviceBuffer>)> {
+        struct R<'a> {
+            memo: &'a HashMap<usize, DeviceBuffer>,
+            steps: Vec<Step>,
+            params: Vec<(crate::rtcg::dtype::DType, Vec<usize>)>,
+            ins: Vec<DeviceBuffer>,
+            seen: HashMap<usize, usize>,
+        }
+        impl R<'_> {
+            fn param(&mut self, b: DeviceBuffer) -> usize {
+                let p = self.params.len();
+                self.params.push((b.dtype, b.shape.clone()));
+                self.ins.push(b);
+                self.steps.push(Step::Param(p));
+                self.steps.len() - 1
+            }
+
+            fn emit(&mut self, node: &Arc<LazyNode>) -> Result<usize> {
+                let ptr = Arc::as_ptr(node) as usize;
+                if let Some(&s) = self.seen.get(&ptr) {
+                    return Ok(s);
+                }
+                let s = if let Some(b) = node.cached() {
+                    self.param(b)
+                } else if let Some(b) = self.memo.get(&ptr) {
+                    let b = b.clone();
+                    self.param(b)
+                } else {
+                    let e = node.expr_view().ok_or_else(|| {
+                        Error::msg("node lost both expression and buffer")
+                    })?;
+                    if is_heavy(&e) {
+                        return Err(Error::msg(
+                            "heavy node not prepared before lowering",
+                        ));
+                    }
+                    let step = match &e {
+                        Expr::Lit(v) => Step::Lit(node.dtype, *v),
+                        Expr::Un(op, a) => {
+                            let s = self.emit(a)?;
+                            Step::Un(*op, s)
+                        }
+                        Expr::Bin(op, a, b) => {
+                            let sa = self.emit(a)?;
+                            let sb = self.emit(b)?;
+                            Step::Bin(*op, sa, sb)
+                        }
+                        Expr::Cast(a) => {
+                            let s = self.emit(a)?;
+                            Step::Cast(node.dtype, s)
+                        }
+                        Expr::Bcast(a) => {
+                            let from = a.shape.clone();
+                            let s = self.emit(a)?;
+                            Step::Bcast {
+                                child: s,
+                                from,
+                                to: node.shape.clone(),
+                            }
+                        }
+                        _ => unreachable!("heavy handled above"),
+                    };
+                    self.steps.push(step);
+                    self.steps.len() - 1
+                };
+                self.seen.insert(ptr, s);
+                Ok(s)
+            }
+        }
+        let mut r = R {
+            memo: &self.memo,
+            steps: Vec::new(),
+            params: Vec::new(),
+            ins: Vec::new(),
+            seen: HashMap::new(),
+        };
+        let mut top = r.emit(root)?;
+        if let Some((kind, dims, keep)) = tail {
+            r.steps.push(Step::Reduce {
+                kind,
+                dims: dims.to_vec(),
+                keep,
+                child: top,
+            });
+            top = r.steps.len() - 1;
+        }
+        Ok((
+            LowerPlan { params: r.params, steps: r.steps, outputs: vec![top] },
+            r.ins,
+        ))
+    }
+}
+
+/// Execute `roots` the way the pre-planner array layer would: one
+/// fused elementwise launch per materialized expression, full
+/// reductions fusing their prefix, axis reductions and matmuls
+/// materializing operands first, no cross-root planning.  Returns the
+/// device buffers (no D2H, for fair wall-time comparison).  Node state
+/// is not mutated.
+pub fn run_per_expression(roots: &[&GpuArray]) -> Result<Vec<DeviceBuffer>> {
+    if roots.is_empty() {
+        return Ok(Vec::new());
+    }
+    let mut px = PerExpr {
+        tk: roots[0].context().toolkit().clone(),
+        memo: HashMap::new(),
+    };
+    roots.iter().map(|r| px.materialize_sub(&r.node)).collect()
+}

@@ -1,0 +1,74 @@
+//! Planner decision counters, exported process-wide (the planner is a
+//! pure function of the DAG, so one global set of counters serves every
+//! toolkit) and surfaced through `coordinator::metrics::Snapshot`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct PlannerStats {
+    /// whole programs planned (one per materialization request)
+    pub programs: AtomicU64,
+    /// kernel clusters formed (= launches issued by planned programs)
+    pub clusters: AtomicU64,
+    /// structurally-duplicate subgraph nodes folded by graph-level CSE
+    pub cse_hits: AtomicU64,
+    /// op nodes minus clusters: launches avoided vs. op-per-kernel
+    pub launches_saved: AtomicU64,
+    /// elementwise ops fused *after* a reduce/matmul in its cluster
+    pub epilogue_fusions: AtomicU64,
+    /// clusters cut because they hit the size cap (auto-materialize)
+    pub auto_cuts: AtomicU64,
+}
+
+static STATS: PlannerStats = PlannerStats {
+    programs: AtomicU64::new(0),
+    clusters: AtomicU64::new(0),
+    cse_hits: AtomicU64::new(0),
+    launches_saved: AtomicU64::new(0),
+    epilogue_fusions: AtomicU64::new(0),
+    auto_cuts: AtomicU64::new(0),
+};
+
+pub fn global() -> &'static PlannerStats {
+    &STATS
+}
+
+pub(crate) fn note_program(
+    clusters: u64,
+    ops: u64,
+    cse_hits: u64,
+    epilogue_fusions: u64,
+    auto_cuts: u64,
+) {
+    let s = global();
+    s.programs.fetch_add(1, Ordering::Relaxed);
+    s.clusters.fetch_add(clusters, Ordering::Relaxed);
+    s.cse_hits.fetch_add(cse_hits, Ordering::Relaxed);
+    s.launches_saved
+        .fetch_add(ops.saturating_sub(clusters), Ordering::Relaxed);
+    s.epilogue_fusions.fetch_add(epilogue_fusions, Ordering::Relaxed);
+    s.auto_cuts.fetch_add(auto_cuts, Ordering::Relaxed);
+}
+
+/// Point-in-time planner counters (mirrored into
+/// `coordinator::metrics::Snapshot.planner`).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PlannerSnapshot {
+    pub programs: u64,
+    pub clusters: u64,
+    pub cse_hits: u64,
+    pub launches_saved: u64,
+    pub epilogue_fusions: u64,
+    pub auto_cuts: u64,
+}
+
+pub fn snapshot() -> PlannerSnapshot {
+    let s = global();
+    PlannerSnapshot {
+        programs: s.programs.load(Ordering::Relaxed),
+        clusters: s.clusters.load(Ordering::Relaxed),
+        cse_hits: s.cse_hits.load(Ordering::Relaxed),
+        launches_saved: s.launches_saved.load(Ordering::Relaxed),
+        epilogue_fusions: s.epilogue_fusions.load(Ordering::Relaxed),
+        auto_cuts: s.auto_cuts.load(Ordering::Relaxed),
+    }
+}

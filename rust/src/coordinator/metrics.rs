@@ -8,6 +8,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::array::plan::stats::PlannerSnapshot;
 use crate::mempool::PoolStats;
 use crate::rtcg::cache::CacheSnapshot;
 
@@ -81,6 +82,10 @@ pub struct Metrics {
     // mirror of the §6.3 staging pool (same refresh discipline as
     // the exec queue depths: whole-struct swap on the Stats path)
     pool: Mutex<PoolStats>,
+    // mirror of the graph-planner decision counters (same refresh
+    // discipline; the live counters are process-global in
+    // `array::plan::stats`)
+    planner: Mutex<PlannerSnapshot>,
 }
 
 /// A point-in-time copy for reporting.
@@ -106,6 +111,8 @@ pub struct Snapshot {
     pub cache: CacheSnapshot,
     /// H2D staging-pool counters (see `mempool`)
     pub pool: PoolStats,
+    /// graph-planner decision counters (see `array::plan::stats`)
+    pub planner: PlannerSnapshot,
 }
 
 impl Metrics {
@@ -147,6 +154,11 @@ impl Metrics {
         *self.pool.lock().unwrap() = s.clone();
     }
 
+    /// Refresh the planner mirror from a fresh [`PlannerSnapshot`].
+    pub fn update_planner(&self, s: &PlannerSnapshot) {
+        *self.planner.lock().unwrap() = s.clone();
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         Snapshot {
             requests: self.requests.load(Ordering::Relaxed),
@@ -179,6 +191,7 @@ impl Metrics {
                 bytes: self.cache_bytes.load(Ordering::Relaxed),
             },
             pool: self.pool.lock().unwrap().clone(),
+            planner: self.planner.lock().unwrap().clone(),
         }
     }
 }
@@ -231,6 +244,22 @@ mod tests {
         };
         m.update_pool(&ps);
         assert_eq!(m.snapshot().pool, ps);
+    }
+
+    #[test]
+    fn planner_mirror_roundtrips() {
+        let m = Metrics::default();
+        assert_eq!(m.snapshot().planner, PlannerSnapshot::default());
+        let ps = PlannerSnapshot {
+            programs: 4,
+            clusters: 9,
+            cse_hits: 2,
+            launches_saved: 11,
+            epilogue_fusions: 3,
+            auto_cuts: 1,
+        };
+        m.update_planner(&ps);
+        assert_eq!(m.snapshot().planner, ps);
     }
 
     #[test]

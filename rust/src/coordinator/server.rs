@@ -250,6 +250,8 @@ fn dispatch(
             metrics.update_pool(&registry.toolkit().staging_pool().stats());
             metrics
                 .update_exec_depths(exec.scheduler().queue_depths());
+            metrics
+                .update_planner(&crate::array::plan::stats::snapshot());
             let _ = reply.send(Response::Stats(metrics.snapshot()));
         }
         Request::Launch { kernel, workload, variant, inputs } => {

@@ -28,11 +28,16 @@
 //! Everything here is plain threads + channels + condvars: no async
 //! runtime, no added dependencies, `Send + Sync` against the vendored
 //! simulator (real-PJRT thread pinning stays behind the `pjrt` seam).
+//! Streams and scheduler workers share one queue lifecycle —
+//! `worker::WorkerLoop`: FIFO order, per-item panic isolation,
+//! drain-on-drop, and the self-join guard — so the two subsystems
+//! cannot drift in shutdown semantics.
 
 pub mod event;
 pub mod future;
 pub mod scheduler;
 pub mod stream;
+pub(crate) mod worker;
 
 pub use event::Event;
 pub use future::{promise, ExecFuture, Promise};

@@ -14,10 +14,10 @@
 //! [`ExecFuture`] — is ever dropped unresolved.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::exec::future::{promise, ExecFuture};
+use crate::exec::worker::WorkerLoop;
 use crate::util::error::Result;
 
 /// How the scheduler places a job onto a device queue.
@@ -47,10 +47,20 @@ thread_local! {
         std::cell::Cell::new(None);
 }
 
+/// Decrements the device's depth gauge when the job finishes — by
+/// drop, so a panicking job (caught by the [`WorkerLoop`]) still
+/// releases its slot.
+struct DepthGuard(Arc<AtomicU64>);
+
+impl Drop for DepthGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
 struct Worker {
-    tx: Mutex<Option<mpsc::Sender<Job>>>,
+    queue: WorkerLoop<Job>,
     queued: Arc<AtomicU64>,
-    handle: Option<std::thread::JoinHandle<()>>,
 }
 
 /// Per-device work queues + placement.
@@ -67,34 +77,24 @@ impl Scheduler {
         let id = SCHED_IDS.fetch_add(1, Ordering::Relaxed);
         let workers = (0..devices.max(1))
             .map(|device| {
-                let (tx, rx) = mpsc::channel::<Job>();
                 let queued = Arc::new(AtomicU64::new(0));
                 let q2 = queued.clone();
-                let handle = std::thread::Builder::new()
-                    .name(format!("rtcg-exec-d{device}"))
-                    .spawn(move || {
+                // drain-on-close and per-job panic isolation come from
+                // the shared WorkerLoop; the init hook marks the thread
+                // as this scheduler's worker (re-entrance guard) before
+                // the first job, and the DepthGuard keeps the gauge
+                // honest even when a job unwinds.
+                let queue = WorkerLoop::spawn(
+                    format!("rtcg-exec-d{device}"),
+                    move || {
                         WORKER_CTX.with(|w| w.set(Some((id, device))));
-                        // channel closure ends the loop only after the
-                        // backlog is drained.  A panicking job must not
-                        // kill the worker or leak the depth gauge: the
-                        // unwind is caught (the job's promise drops,
-                        // resolving its future to an error) and the
-                        // worker moves on.
-                        while let Ok(job) = rx.recv() {
-                            let _ = std::panic::catch_unwind(
-                                std::panic::AssertUnwindSafe(|| {
-                                    job(device)
-                                }),
-                            );
-                            q2.fetch_sub(1, Ordering::Relaxed);
+                        move |job: Job| {
+                            let _slot = DepthGuard(q2.clone());
+                            job(device);
                         }
-                    })
-                    .expect("spawn exec worker");
-                Worker {
-                    tx: Mutex::new(Some(tx)),
-                    queued,
-                    handle: Some(handle),
-                }
+                    },
+                );
+                Worker { queue, queued }
             })
             .collect();
         Scheduler { id, workers, rr: AtomicUsize::new(0), placement }
@@ -170,14 +170,9 @@ impl Scheduler {
         let w = &self.workers[device % self.workers.len()];
         let job: Job = Box::new(move |d| p.complete(f(d)));
         w.queued.fetch_add(1, Ordering::Relaxed);
-        let g = w.tx.lock().unwrap();
-        let sent = match g.as_ref() {
-            Some(tx) => tx.send(job).is_ok(),
-            // drained: dropping the job drops its promise, resolving
-            // the future to an error instead of hanging
-            None => false,
-        };
-        if !sent {
+        // drained: dropping the job drops its promise, resolving the
+        // future to an error instead of hanging
+        if !w.queue.send(job) {
             w.queued.fetch_sub(1, Ordering::Relaxed);
         }
         fut
@@ -207,16 +202,13 @@ impl Scheduler {
     /// joined: it would deadlock joining itself.  Its closed channel
     /// ends its loop and the thread exits detached.
     pub fn drain(&mut self) {
+        // close every intake first so all workers drain concurrently,
+        // then join (the WorkerLoop skips a self-join)
         for w in &self.workers {
-            *w.tx.lock().unwrap() = None;
+            w.queue.close();
         }
-        let me = std::thread::current().id();
         for w in &mut self.workers {
-            if let Some(h) = w.handle.take() {
-                if h.thread().id() != me {
-                    let _ = h.join();
-                }
-            }
+            w.queue.shutdown();
         }
     }
 }

@@ -23,11 +23,9 @@
 //! recording the event (recording is idempotent) before abandoning a
 //! dependent stream.
 
-use std::sync::mpsc;
-use std::sync::Mutex;
-
 use crate::exec::event::Event;
 use crate::exec::future::{promise, ExecFuture, Promise};
+use crate::exec::worker::WorkerLoop;
 use crate::mempool::MemoryPool;
 use crate::runtime::{Client, DeviceBuffer, Executable, HostArray};
 use crate::util::error::{Error, Result};
@@ -55,38 +53,25 @@ enum Op {
 /// An asynchronous FIFO execution queue bound to one device.
 pub struct Stream {
     device: usize,
-    tx: Mutex<Option<mpsc::Sender<Op>>>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    worker: WorkerLoop<Op>,
 }
 
 impl Stream {
     /// Spawn a stream worker bound to `device`.  H2D transfers stage
     /// through `pool` (the paper's §6.3 memory pool, playing the role
-    /// of pinned staging buffers for async copies).
+    /// of pinned staging buffers for async copies).  Lifecycle —
+    /// drain-on-drop, per-op panic isolation, self-join guard — comes
+    /// from the shared [`WorkerLoop`].
     pub(crate) fn spawn(
         client: Client,
         pool: MemoryPool,
         device: usize,
     ) -> Stream {
-        let (tx, rx) = mpsc::channel::<Op>();
-        let worker = std::thread::Builder::new()
-            .name(format!("rtcg-stream-d{device}"))
-            .spawn(move || {
-                // the sender side closing ends the loop *after* every
-                // already-enqueued op has run (drain-on-drop).  A
-                // panicking op (e.g. a host_fn) must not kill the
-                // stream: the unwind is caught (the op's promise
-                // drops, erroring its future) and the FIFO continues.
-                while let Ok(op) = rx.recv() {
-                    let _ = std::panic::catch_unwind(
-                        std::panic::AssertUnwindSafe(|| {
-                            run_op(&client, &pool, device, op)
-                        }),
-                    );
-                }
-            })
-            .expect("spawn stream worker");
-        Stream { device, tx: Mutex::new(Some(tx)), worker: Some(worker) }
+        let worker = WorkerLoop::spawn(
+            format!("rtcg-stream-d{device}"),
+            move || move |op: Op| run_op(&client, &pool, device, op),
+        );
+        Stream { device, worker }
     }
 
     /// Ordinal of the device this stream is bound to.
@@ -95,14 +80,12 @@ impl Stream {
     }
 
     fn enqueue(&self, op: Op) -> Result<()> {
-        let g = self.tx.lock().unwrap();
-        match g.as_ref() {
-            // a failed send drops the op (and any promise inside it),
-            // resolving its future to an error rather than hanging
-            Some(tx) => tx
-                .send(op)
-                .map_err(|_| Error::msg("stream worker is gone")),
-            None => Err(Error::msg("stream is shut down")),
+        // a failed send drops the op (and any promise inside it),
+        // resolving its future to an error rather than hanging
+        if self.worker.send(op) {
+            Ok(())
+        } else {
+            Err(Error::msg("stream worker is gone"))
         }
     }
 
@@ -164,22 +147,6 @@ impl Stream {
         let (p, fut) = promise();
         self.enqueue(Op::Marker(p))?;
         fut.wait()
-    }
-}
-
-impl Drop for Stream {
-    fn drop(&mut self) {
-        // closing the channel lets the worker drain what is already
-        // queued, then exit; join so enqueued work outlives no one.
-        // If the drop runs on the worker itself (an op closure owned
-        // the stream), skip the self-join — the closed channel ends
-        // the loop and the thread exits detached.
-        *self.tx.lock().unwrap() = None;
-        if let Some(h) = self.worker.take() {
-            if h.thread().id() != std::thread::current().id() {
-                let _ = h.join();
-            }
-        }
     }
 }
 

@@ -1,0 +1,131 @@
+//! The one worker-thread lifecycle shared by every exec queue.
+//!
+//! [`Stream`](crate::exec::Stream) and
+//! [`Scheduler`](crate::exec::Scheduler) used to each carry their own
+//! copy of the same loop: an mpsc FIFO drained by a named thread,
+//! per-item panic isolation, drain-on-close (channel closure ends the
+//! loop only after the backlog ran), and a self-join guard for the case
+//! where the queue's last handle drops *on its own worker*.  That
+//! lifecycle now lives here once, and the two call sites differ only in
+//! their item type and handler.
+
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+/// A FIFO work queue drained by one dedicated worker thread.
+///
+/// * `send` never blocks; items run in exact send order.
+/// * A panicking item is caught and the loop continues (whatever
+///   promise the item carried drops, erroring its future).
+/// * `close` stops intake; the worker finishes the backlog and exits —
+///   submitted work is never silently discarded.
+/// * `shutdown` (and `Drop`) additionally joins the worker, skipping
+///   the join when running on the worker itself (an item's closure
+///   owned the last handle): the closed channel ends the loop and the
+///   thread exits detached.
+pub(crate) struct WorkerLoop<T> {
+    tx: Mutex<Option<mpsc::Sender<T>>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl<T: Send + 'static> WorkerLoop<T> {
+    /// Spawn a worker named `name`.  `init` runs first *on the worker
+    /// thread* and returns the per-item handler — so handlers can set
+    /// up thread-local state (the scheduler's re-entrance marker)
+    /// before the first item arrives.
+    pub fn spawn<H, I>(name: String, init: I) -> WorkerLoop<T>
+    where
+        I: FnOnce() -> H + Send + 'static,
+        H: FnMut(T),
+    {
+        let (tx, rx) = mpsc::channel::<T>();
+        let handle = std::thread::Builder::new()
+            .name(name)
+            .spawn(move || {
+                let mut handler = init();
+                while let Ok(item) = rx.recv() {
+                    let _ = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| handler(item)),
+                    );
+                }
+            })
+            .expect("spawn exec worker");
+        WorkerLoop { tx: Mutex::new(Some(tx)), handle: Some(handle) }
+    }
+
+    /// Enqueue an item.  Returns `false` (dropping the item, which
+    /// resolves any promise it carries to an error) if the queue is
+    /// closed or the worker is gone.
+    pub fn send(&self, item: T) -> bool {
+        match self.tx.lock().unwrap().as_ref() {
+            Some(tx) => tx.send(item).is_ok(),
+            None => false,
+        }
+    }
+
+    /// Stop intake without joining: the worker drains its backlog and
+    /// exits on its own.
+    pub fn close(&self) {
+        *self.tx.lock().unwrap() = None;
+    }
+
+    /// Drain and join (with the self-join guard described above).
+    pub fn shutdown(&mut self) {
+        self.close();
+        if let Some(h) = self.handle.take() {
+            if h.thread().id() != std::thread::current().id() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl<T> Drop for WorkerLoop<T> {
+    fn drop(&mut self) {
+        self.close();
+        if let Some(h) = self.handle.take() {
+            if h.thread().id() != std::thread::current().id() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU32, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn drains_backlog_on_drop_and_survives_panics() {
+        let ran = Arc::new(AtomicU32::new(0));
+        {
+            let r = ran.clone();
+            let w: WorkerLoop<Box<dyn FnOnce() + Send>> =
+                WorkerLoop::spawn("test-worker".into(), || {
+                    |f: Box<dyn FnOnce() + Send>| f()
+                });
+            for i in 0..8 {
+                let r = r.clone();
+                assert!(w.send(Box::new(move || {
+                    if i == 3 {
+                        panic!("item panic must not kill the worker");
+                    }
+                    r.fetch_add(1, Ordering::Relaxed);
+                })));
+            }
+            // drop drains: all 8 items ran (one panicked)
+        }
+        assert_eq!(ran.load(Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn send_after_close_reports_failure() {
+        let w: WorkerLoop<u32> =
+            WorkerLoop::spawn("test-closed".into(), || |_item: u32| {});
+        assert!(w.send(1));
+        w.close();
+        assert!(!w.send(2));
+    }
+}

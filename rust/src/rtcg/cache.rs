@@ -22,7 +22,11 @@
 //! * **LRU byte-budget eviction** — "unused code variants can be
 //!   disposed of immediately" (§4.2): entries carry a byte estimate and
 //!   the least-recently-used are dropped once a shard exceeds its
-//!   budget slice.
+//!   budget slice.  Opting into [`CacheConfig::cost_aware`] weighs the
+//!   victim choice by *modeled recompile latency* (each entry remembers
+//!   how long its fill took): under byte pressure the cache prefers to
+//!   drop a kernel that is cheap to regenerate over one that took a
+//!   long compile, even if the cheap one was used more recently.
 //! * **Two levels** — memory (process lifetime, sub-µs hits) and disk.
 //!   The `xla` crate exposes no executable serialization, so the disk
 //!   level persists the *generation product* (rendered source +
@@ -96,6 +100,9 @@ pub struct CacheConfig {
     pub shards: usize,
     /// total in-memory byte budget across all shards
     pub byte_budget: u64,
+    /// weigh eviction victims by modeled recompile latency (fill time)
+    /// before recency, instead of pure LRU
+    pub cost_aware: bool,
 }
 
 impl Default for CacheConfig {
@@ -104,6 +111,7 @@ impl Default for CacheConfig {
             disk_dir: None,
             shards: 16,
             byte_budget: 256 << 20,
+            cost_aware: false,
         }
     }
 }
@@ -120,6 +128,9 @@ struct Entry {
     exe: Executable,
     bytes: u64,
     last_used: u64,
+    /// how long this entry's fill (codegen + backend compile) took —
+    /// the modeled cost of ever having to recompile it
+    fill_ns: u64,
 }
 
 /// Per-key in-flight compile slot (single-flight).
@@ -193,6 +204,7 @@ pub struct CompileCache {
     client: Client,
     shards: Vec<Mutex<Shard>>,
     budget_per_shard: u64,
+    cost_aware: bool,
     disk_dir: Option<PathBuf>,
     pub stats: CacheStats,
 }
@@ -214,6 +226,7 @@ impl CompileCache {
             client,
             shards: (0..shards).map(|_| Mutex::new(Shard::default())).collect(),
             budget_per_shard: (cfg.byte_budget / shards as u64).max(1),
+            cost_aware: cfg.cost_aware,
             disk_dir: cfg.disk_dir,
             stats: CacheStats::default(),
         }
@@ -325,7 +338,9 @@ impl CompileCache {
                         flight: f,
                     };
                     let fill = fill.take().expect("leader runs once");
+                    let t0 = std::time::Instant::now();
                     let result = fill();
+                    let fill_ns = t0.elapsed().as_nanos() as u64;
                     if let Ok(exe) = &result {
                         let mut shard = self.shards[shard_ix].lock().unwrap();
                         shard.clock += 1;
@@ -337,6 +352,7 @@ impl CompileCache {
                                 exe: exe.clone(),
                                 bytes: cost,
                                 last_used: clock,
+                                fill_ns,
                             },
                         );
                         self.evict_locked(&mut shard, key);
@@ -348,16 +364,22 @@ impl CompileCache {
         }
     }
 
-    /// LRU eviction down to the shard budget ("unused code variants can
-    /// be disposed of immediately", §4.2).  The freshly-inserted key is
-    /// never the victim, so one oversized entry still caches.
+    /// Eviction down to the shard budget ("unused code variants can be
+    /// disposed of immediately", §4.2).  The freshly-inserted key is
+    /// never the victim, so one oversized entry still caches.  Pure LRU
+    /// by default; with [`CacheConfig::cost_aware`] the victim is the
+    /// cheapest-to-recompile entry (fill time, recency as tie-break) —
+    /// losing it costs the least future compile latency.
     fn evict_locked(&self, shard: &mut Shard, fresh: &str) {
+        let cost_aware = self.cost_aware;
         while shard.bytes > self.budget_per_shard && shard.map.len() > 1 {
             let victim = shard
                 .map
                 .iter()
                 .filter(|(k, _)| k.as_str() != fresh)
-                .min_by_key(|(_, e)| e.last_used)
+                .min_by_key(|(_, e)| {
+                    (if cost_aware { e.fill_ns } else { 0 }, e.last_used)
+                })
                 .map(|(k, _)| k.clone());
             match victim {
                 Some(k) => {
@@ -554,6 +576,7 @@ ENTRY main {
                 disk_dir: None,
                 shards: 1,
                 byte_budget: 2 * cost,
+                cost_aware: false,
             },
         );
         c.get_or_compile(&src_a).unwrap();
@@ -573,6 +596,62 @@ ENTRY main {
         c.get_or_compile(&src_b).unwrap();
         let (_, _, misses_after_b) = c.stats.snapshot();
         assert_eq!(misses_after_b, misses_after_a + 1);
+    }
+
+    #[test]
+    fn cost_aware_eviction_prefers_cheap_to_recompile_victims() {
+        // same-length key material so every entry costs the same bytes
+        let k_exp = "key-exp-000";
+        let k_chp = "key-chp-000";
+        let k_new = "key-new-000";
+        assert_eq!(k_exp.len(), k_chp.len());
+        assert_eq!(k_exp.len(), k_new.len());
+        let cost = entry_cost(k_exp);
+        let build = || {
+            let b = xla::XlaBuilder::new("dbl");
+            let p = crate::rtcg::hlobuild::param(
+                &b,
+                0,
+                crate::rtcg::dtype::DType::F32,
+                &[4],
+                "p",
+            )?;
+            p.add_(&p)?.build().map_err(Into::into)
+        };
+        let c = CompileCache::with_config(
+            Client::cpu().unwrap(),
+            CacheConfig {
+                disk_dir: None,
+                shards: 1,
+                byte_budget: 2 * cost,
+                cost_aware: true,
+            },
+        );
+        // an expensive fill (modeled long compile), then a cheap one
+        c.get_or_build(k_exp, || {
+            std::thread::sleep(std::time::Duration::from_millis(25));
+            build()
+        })
+        .unwrap();
+        c.get_or_build(k_chp, build).unwrap();
+        // touch the cheap entry so that under pure LRU the *expensive*
+        // entry would be the next victim
+        c.get_or_build(k_chp, || unreachable!("must be a mem hit"))
+            .unwrap();
+        c.get_or_build(k_new, build).unwrap();
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats.evictions.load(Ordering::Relaxed), 1);
+        // the cheap entry was the victim despite being more recently
+        // used: the expensive one still mem-hits …
+        let (_, _, misses_before) = c.stats.snapshot();
+        c.get_or_build(k_exp, || unreachable!("expensive entry evicted"))
+            .unwrap();
+        let (_, _, misses_mid) = c.stats.snapshot();
+        assert_eq!(misses_before, misses_mid);
+        // … and the cheap one re-fills (a fresh miss)
+        c.get_or_build(k_chp, build).unwrap();
+        let (_, _, misses_after) = c.stats.snapshot();
+        assert_eq!(misses_after, misses_mid + 1);
     }
 
     #[test]

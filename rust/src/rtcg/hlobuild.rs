@@ -40,6 +40,64 @@ pub fn broadcast_scalar(op: &xla::XlaOp, dims: &[usize]) -> Result<xla::XlaOp> {
     op.broadcast(&dims).map_err(Error::from)
 }
 
+/// General NumPy-style broadcast of `op` from shape `from` to shape
+/// `to` (align trailing axes; size-1 axes replicate).  The substrate
+/// only offers scalar broadcast and dimension-*prepending* broadcast,
+/// so this lowers as squeeze-reshape → prepend-broadcast → transpose
+/// back into target axis order.
+pub fn broadcast_in_dim(
+    op: &xla::XlaOp,
+    from: &[usize],
+    to: &[usize],
+) -> Result<xla::XlaOp> {
+    if from == to {
+        return Ok(op.clone());
+    }
+    if from.is_empty() {
+        return broadcast_scalar(op, to);
+    }
+    let rank = to.len();
+    if from.len() > rank {
+        return Err(Error::msg(format!(
+            "cannot broadcast {from:?} to lower-rank {to:?}"
+        )));
+    }
+    let pad = rank - from.len();
+    let padded: Vec<usize> =
+        (0..rank).map(|i| if i < pad { 1 } else { from[i - pad] }).collect();
+    // target axes kept from the operand vs. created by the broadcast
+    let mut kept: Vec<usize> = Vec::new();
+    let mut fresh: Vec<usize> = Vec::new();
+    for i in 0..rank {
+        if padded[i] == to[i] {
+            kept.push(i);
+        } else if padded[i] == 1 {
+            fresh.push(i);
+        } else {
+            return Err(Error::msg(format!(
+                "cannot broadcast {from:?} to {to:?}"
+            )));
+        }
+    }
+    // squeeze away the size-1 axes being replicated
+    let kept_dims: Vec<i64> = kept.iter().map(|&i| to[i] as i64).collect();
+    let squeezed = op.reshape(&kept_dims)?;
+    // prepend the fresh axes, then permute into target order: after
+    // `broadcast`, axis order is fresh ++ kept
+    let fresh_dims: Vec<i64> = fresh.iter().map(|&i| to[i] as i64).collect();
+    let bc = squeezed.broadcast(&fresh_dims)?;
+    let order: Vec<usize> =
+        fresh.iter().chain(kept.iter()).copied().collect();
+    let mut perm: Vec<i64> = vec![0; rank];
+    for (pos, &axis) in order.iter().enumerate() {
+        perm[axis] = pos as i64;
+    }
+    if perm.iter().enumerate().all(|(i, &p)| p == i as i64) {
+        return Ok(bc);
+    }
+    bc.transpose(&perm).map_err(Error::from)
+}
+
 /// A scalar→scalar→scalar computation for use as a `reduce` combiner.
 pub fn combiner(
     name: &str,
@@ -135,6 +193,37 @@ mod tests {
         let x = HostArray::f32(vec![8], vec![1.0; 8]);
         let out = exe.run(&[&x]).unwrap();
         assert_eq!(out[0].as_f32().unwrap(), &[8.0]);
+    }
+
+    #[test]
+    fn broadcast_in_dim_row_col_and_scalar() {
+        let client = Client::cpu().unwrap();
+        let run = |from: &[usize], to: &[usize], data: Vec<f32>| {
+            let b = xla::XlaBuilder::new("bc");
+            let p = param(&b, 0, DType::F32, from, "p").unwrap();
+            let r = broadcast_in_dim(&p, from, to).unwrap();
+            let exe =
+                client.compile_computation(&r.build().unwrap()).unwrap();
+            let x = HostArray::f32(from.to_vec(), data);
+            exe.run(&[&x]).unwrap()[0].as_f32().unwrap().to_vec()
+        };
+        // row vector [3] -> [2,3]: repeat rows
+        assert_eq!(
+            run(&[3], &[2, 3], vec![1.0, 2.0, 3.0]),
+            vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]
+        );
+        // column [2,1] -> [2,3]: repeat along the trailing axis
+        assert_eq!(
+            run(&[2, 1], &[2, 3], vec![10.0, 20.0]),
+            vec![10.0, 10.0, 10.0, 20.0, 20.0, 20.0]
+        );
+        // scalar [] -> [2,2]
+        assert_eq!(run(&[], &[2, 2], vec![7.0]), vec![7.0; 4]);
+        // identity-after-pad [3] -> [1,3]
+        assert_eq!(
+            run(&[3], &[1, 3], vec![1.0, 2.0, 3.0]),
+            vec![1.0, 2.0, 3.0]
+        );
     }
 
     #[test]

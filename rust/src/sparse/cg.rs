@@ -57,18 +57,15 @@ pub fn solve_scalar(
     CgOutcome { x, iterations: it, residual2: rz }
 }
 
-/// CG over `GpuArray` ops.  With the lazy array layer each update line
-/// (`x + α·p`, `r − α·ap`, `r + β·p`) fuses into **one** generated
-/// kernel per iteration — the α/β scalar expressions are baked into the
-/// fused DAG as rank-0 operands, so an iteration is 6 launches instead
-/// of the ~10 the eager op-per-kernel layer needed.  State vectors are
-/// materialized at the end of each iteration to keep expression graphs
-/// (and cache keys) bounded and iteration-invariant.
-///
-/// The `x` update is independent of the `r`/`p` chain within an
-/// iteration, so it materializes **asynchronously** on the exec
-/// subsystem (`materialize_async`) and is awaited at iteration end —
-/// on a multi-device toolkit the two update kernels overlap.
+/// CG over `GpuArray` ops.  The whole per-iteration update (α, x′, r′,
+/// ‖r′‖², β, p′) is handed to the graph planner as **one program** via
+/// `materialize_many` — no hand-placed per-expression `materialize`
+/// calls.  The planner clusters it into 2 launches (the dot-anchored
+/// x′/r′ cluster with its epilogues, then the ‖r′‖²-anchored p′
+/// cluster), runs independent clusters through the exec scheduler, and
+/// its cluster descriptors are iteration-invariant, so after the first
+/// iteration every kernel is a compile-cache hit (§4.2).  SpMV stays on
+/// the hand ELL graph (+1 launch/iter).
 pub fn solve_gpuarray(
     ctx: &ArrayContext,
     a: &Csr,
@@ -109,15 +106,16 @@ pub fn solve_gpuarray(
         let ap =
             GpuArray::from_buffer(ctx, ap_buf.into_iter().next().unwrap());
         let alpha = rz.div(&p.dot(&ap)?)?;
-        x = x.add(&p.mul(&alpha)?)?;
-        // x is independent of the r/p chain: overlap its launch
-        let x_done = x.materialize_async();
-        r = r.sub(&ap.mul(&alpha)?)?;
-        r.materialize()?;
-        let rz2 = r.norm2()?;
-        p = r.add(&p.mul(&rz2.div(&rz)?)?)?;
-        p.materialize()?;
-        x_done.wait()?;
+        let x2 = x.add(&p.mul(&alpha)?)?;
+        let r2 = r.sub(&ap.mul(&alpha)?)?;
+        let rz2 = r2.norm2()?;
+        let p2 = r2.add(&p.mul(&rz2.div(&rz)?)?)?;
+        // one planned program per iteration: the planner picks the
+        // materialization points (cluster boundaries), not this loop
+        ctx.materialize_many(&[&x2, &r2, &p2, &rz2])?;
+        x = x2;
+        r = r2;
+        p = p2;
         rz = rz2;
         it += 1;
         if it % check_every == 0 || it == max_iter {

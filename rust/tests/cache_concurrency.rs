@@ -128,6 +128,7 @@ fn lru_byte_budget_is_respected() {
         shards: 1,
         // ADD_HLO-sized sources cost len + 4096 nominal bytes each
         byte_budget: 2 * (ADD_HLO.len() as u64 + 4096),
+        cost_aware: false,
     };
     let cache =
         CompileCache::with_config(Client::cpu().unwrap(), tiny);

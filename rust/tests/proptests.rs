@@ -1,6 +1,8 @@
 //! Property-based tests over toolkit invariants, using the in-repo
 //! proptest harness (`rtcg::util::proptest`).
 
+use rtcg::array::plan::reference;
+use rtcg::array::{ArrayContext, GpuArray};
 use rtcg::copperhead::{ast, fuse, Copperhead, Shapes};
 use rtcg::mempool::MemoryPool;
 use rtcg::rtcg::dtype::{promote, DType};
@@ -232,6 +234,119 @@ fn gen_program(rng: &mut Rng, depth: usize) -> ast::Program {
         vec![("x", ast::Kind::Array(DType::F32))],
         gen_expr(rng, depth),
     )
+}
+
+#[test]
+fn prop_planned_execution_matches_per_node() {
+    // the graph planner (clustering + CSE + epilogue fusion) must be
+    // *semantically invisible*: for random DAGs with shared subgraphs,
+    // broadcasts, axis reductions, and matmuls, planned execution is
+    // bitwise identical to maximally-unfused op-per-kernel lowering.
+    // (The device rounds to f32 after every elementwise op and reduces
+    // in a fixed order, so fusion cannot change a single bit.)
+    let tk = Toolkit::init_ephemeral().unwrap();
+    let ctx = ArrayContext::new(tk);
+    check("planned-vs-per-node", &cfg(10), |rng, size| {
+        let n = 2 + rng.usize_below(3); // square so matmuls stay in-family
+        let err = |e: rtcg::util::error::Error| e.to_string();
+        // leaf pool over the broadcast shape family [n,n] / [n] / [n,1]
+        let mut pool: Vec<GpuArray> = Vec::new();
+        for _ in 0..2 {
+            pool.push(
+                ctx.to_gpu(&HostArray::f32(
+                    vec![n, n],
+                    rng.normal_vec(n * n),
+                ))
+                .map_err(err)?,
+            );
+        }
+        pool.push(
+            ctx.to_gpu(&HostArray::f32(vec![n], rng.normal_vec(n)))
+                .map_err(err)?,
+        );
+        pool.push(
+            ctx.to_gpu(&HostArray::f32(vec![n, 1], rng.normal_vec(n)))
+                .map_err(err)?,
+        );
+        let steps = 3 + size.min(12);
+        for _ in 0..steps {
+            // re-picking pool entries creates shared subgraphs (CSE +
+            // cross-cluster output material for the planner)
+            let a = pool[rng.usize_below(pool.len())].clone();
+            let b = pool[rng.usize_below(pool.len())].clone();
+            let next = match rng.usize_below(12) {
+                0 => a.add(&b),
+                1 => a.sub(&b),
+                2 => a.mul(&b),
+                3 => a.maximum(&b),
+                4 => a.minimum(&b),
+                5 => a.neg(),
+                6 => a.abs(),
+                7 => a.tanh(),
+                8 => a.scale(((rng.normal_f32() * 2.0) as i64) as f64),
+                9 | 10 => {
+                    // axis reductions, kept inside the shape family:
+                    // (0,false)→[n], (1,false)→[n], (1,true)→[n,1]
+                    let two: Vec<&GpuArray> = pool
+                        .iter()
+                        .filter(|g| g.shape().len() == 2)
+                        .collect();
+                    let g = two[rng.usize_below(two.len())];
+                    let (axis, keep) = match rng.usize_below(3) {
+                        0 => (0, false),
+                        1 => (1, false),
+                        _ => (1, true),
+                    };
+                    let axis = axis.min(g.shape().len() - 1);
+                    if rng.f32() < 0.5 {
+                        g.sum_axis(axis, keep)
+                    } else {
+                        g.max_axis(axis, keep)
+                    }
+                }
+                _ => {
+                    let sq: Vec<&GpuArray> = pool
+                        .iter()
+                        .filter(|g| g.shape() == [n, n])
+                        .collect();
+                    let x = sq[rng.usize_below(sq.len())];
+                    let y = sq[rng.usize_below(sq.len())];
+                    x.matmul_t(y)
+                }
+            };
+            pool.push(next.map_err(err)?);
+        }
+        let root_n = 1 + rng.usize_below(3);
+        let roots: Vec<&GpuArray> =
+            pool[pool.len() - root_n..].iter().collect();
+        // reference FIRST: it must not observe planner-materialized
+        // state (and it never mutates nodes, so the planned run below
+        // starts from the same lazy DAG)
+        let want = reference::run_per_node(&roots).map_err(err)?;
+        ctx.materialize_many(&roots).map_err(err)?;
+        for (rt, w) in roots.iter().zip(&want) {
+            let got = rt.get().map_err(err)?;
+            if got.shape != w.shape {
+                return Err(format!(
+                    "shape mismatch: {:?} vs {:?}",
+                    got.shape, w.shape
+                ));
+            }
+            let gf = got.as_f32().map_err(err)?;
+            let wf = w.as_f32().map_err(err)?;
+            for (i, (x, y)) in gf.iter().zip(wf).enumerate() {
+                if x.to_bits() != y.to_bits() {
+                    return Err(format!(
+                        "bitwise mismatch at {i}: {x:?} ({:#010x}) vs \
+                         {y:?} ({:#010x})",
+                        x.to_bits(),
+                        y.to_bits()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
 }
 
 #[test]

@@ -1,0 +1,84 @@
+//! Single-flight lazy materialization, pinned as a regression test:
+//! when many threads race to materialize the *same* lazy expression,
+//! exactly one kernel execution happens — the winner claims the node
+//! (`InFlight`), everyone else blocks on the claim and wakes to a
+//! device-resident buffer.  Before the claim protocol, N racing
+//! `get()`s each launched the kernel (N× device work and N buffers for
+//! one value).
+//!
+//! The simulated device is configured with a 500µs execute latency so
+//! the in-flight window is wide enough that the race actually happens.
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Barrier};
+
+use rtcg::array::ArrayContext;
+use rtcg::runtime::HostArray;
+use rtcg::Toolkit;
+
+fn execs(ctx: &ArrayContext) -> u64 {
+    ctx.toolkit().client().stats().executions.load(Ordering::Relaxed)
+}
+
+#[test]
+fn racing_gets_execute_exactly_once() {
+    let tk = Toolkit::init_sim(1, 500, 0).unwrap();
+    let ctx = ArrayContext::new(tk);
+    let threads = 8;
+    for round in 0..4u32 {
+        let x0 = 1.0 + round as f32;
+        let a = ctx
+            .to_gpu(&HostArray::f32(vec![64], vec![x0; 64]))
+            .unwrap();
+        let expr = a
+            .scale(2.0)
+            .unwrap()
+            .add_scalar(round as f64)
+            .unwrap()
+            .tanh()
+            .unwrap();
+        let want = (2.0f32 * x0 + round as f32).tanh();
+        let e0 = execs(&ctx);
+        let barrier = Arc::new(Barrier::new(threads));
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                let expr = expr.clone();
+                let barrier = barrier.clone();
+                s.spawn(move || {
+                    barrier.wait();
+                    let host = expr.get().unwrap();
+                    assert_eq!(host.as_f32().unwrap()[0], want);
+                });
+            }
+        });
+        assert_eq!(
+            execs(&ctx) - e0,
+            1,
+            "round {round}: {threads} racing gets must share one launch"
+        );
+    }
+}
+
+#[test]
+fn async_materialize_racing_blocking_get_is_single_flight() {
+    // `materialize_async` submits the launch to the exec scheduler;
+    // a concurrent blocking `get` on the same node must join that
+    // flight (or win it), never duplicate it
+    let tk = Toolkit::init_sim(2, 500, 0).unwrap();
+    let ctx = ArrayContext::new(tk);
+    let a = ctx
+        .to_gpu(&HostArray::f32(vec![32], vec![0.5; 32]))
+        .unwrap();
+    let expr = a.add_scalar(1.0).unwrap().sqrt().unwrap();
+    let e0 = execs(&ctx);
+    let fut = expr.materialize_async();
+    let host = expr.get().unwrap();
+    fut.wait().unwrap();
+    assert_eq!(host.as_f32().unwrap()[0], 1.5f32.sqrt());
+    assert_eq!(
+        execs(&ctx) - e0,
+        1,
+        "async + blocking materialization of one node must be one launch"
+    );
+    assert!(expr.is_materialized());
+}
