@@ -1,0 +1,277 @@
+//! Liveness-driven arena planning for whole programs.
+//!
+//! The planner sees every intermediate of a program before anything
+//! executes (the cluster schedule of `plan::execute`), which is exactly
+//! the information a memory planner needs: for each cross-cluster
+//! value we know the **wave** that defines it (`depth[of[i]]`) and the
+//! last wave that reads it (max depth over consuming clusters).  Those
+//! `[def, last_use]` intervals are packed by linear scan onto a single
+//! arena: walking waves in schedule order, a slot whose interval has
+//! ended returns to an address-ordered free-span list (coalescing with
+//! adjacent spans, mirroring the `mempool` heap), and each new value is
+//! placed first-fit — so non-overlapping intermediates **alias the
+//! same arena offsets** instead of each holding a buffer for the whole
+//! program (§6.3's pool idea taken to its planned conclusion).
+//!
+//! Two scheduling details make this sound:
+//!
+//! * clusters of the *same* wave run **concurrently** on the exec
+//!   scheduler, so a value last used at wave `d` is only reusable from
+//!   wave `d + 1` on (the scan frees `last_use < d`, strictly);
+//! * program **roots escape** — they are handed to the caller and must
+//!   outlive the program — so they are never packed; the arena holds
+//!   only in-program intermediates.
+//!
+//! The result maps straight onto the suballocating heap: `plan()`
+//! returns one arena size plus a `Slot {offset, bytes}` per packed
+//! node; `plan::execute` allocates that arena with one
+//! `MemoryPool::alloc_uninit` and every intermediate lives at its
+//! planned offset.
+
+use crate::mempool::align_up;
+
+use super::Graph;
+
+/// One packed intermediate: its byte range inside the program arena.
+#[derive(Clone, Copy)]
+pub(crate) struct Slot {
+    pub offset: usize,
+    pub bytes: usize,
+}
+
+/// The memory plan for one program.
+pub(crate) struct ArenaPlan {
+    /// packed arena size (bytes) for all in-program intermediates
+    pub size: usize,
+    /// bytes of escaping roots (they keep dedicated buffers)
+    pub escaped_bytes: usize,
+    /// what one-buffer-per-node would allocate for the same values
+    pub request_bytes: usize,
+    /// per graph-node slot; `Some` only for packed intermediates
+    pub slots: Vec<Option<Slot>>,
+}
+
+impl ArenaPlan {
+    /// Total planned working set: arena + escaping root buffers.
+    pub fn planned_bytes(&self) -> usize {
+        self.size + self.escaped_bytes
+    }
+}
+
+/// Insert `(off, len)` into an address-ordered free-span list, merging
+/// with adjacent neighbors (same discipline as `mempool`'s heap).
+fn insert_span(free: &mut Vec<(usize, usize)>, off: usize, len: usize) {
+    let mut i = free.partition_point(|&(o, _)| o < off);
+    let mut off = off;
+    let mut len = len;
+    if i > 0 && free[i - 1].0 + free[i - 1].1 == off {
+        off = free[i - 1].0;
+        len += free[i - 1].1;
+        free.remove(i - 1);
+        i -= 1;
+    }
+    if i < free.len() && off + len == free[i].0 {
+        len += free[i].1;
+        free.remove(i);
+    }
+    free.insert(i, (off, len));
+}
+
+/// Linear-scan interval packing.  `intervals` is
+/// `(node, def_wave, last_use_wave, bytes)`; writes each node's
+/// assigned range into `slots` and returns the arena size.
+fn pack(
+    intervals: &mut [(usize, usize, usize, usize)],
+    slots: &mut [Option<Slot>],
+) -> usize {
+    // by def wave; larger blocks first within a wave (better packing)
+    intervals.sort_by(|a, b| a.1.cmp(&b.1).then(b.3.cmp(&a.3)));
+    let mut free: Vec<(usize, usize)> = Vec::new();
+    let mut end = 0usize;
+    // (last_use, offset, bytes) of currently-live slots
+    let mut active: Vec<(usize, usize, usize)> = Vec::new();
+    let mut idx = 0;
+    let max_wave =
+        intervals.iter().map(|&(_, d, ..)| d).max().unwrap_or(0);
+    for d in 0..=max_wave {
+        // expire strictly-dead values: same-wave clusters may run
+        // concurrently, so `last_use == d` is NOT reusable at wave d
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].0 < d {
+                let (_, off, len) = active.remove(i);
+                insert_span(&mut free, off, len);
+            } else {
+                i += 1;
+            }
+        }
+        while idx < intervals.len() && intervals[idx].1 == d {
+            let (node, _, last, bytes) = intervals[idx];
+            idx += 1;
+            let mut fit = None;
+            for (p, &(o, l)) in free.iter().enumerate() {
+                if l >= bytes {
+                    fit = Some((p, o, l));
+                    break;
+                }
+            }
+            let offset = if let Some((p, o, l)) = fit {
+                if l == bytes {
+                    free.remove(p);
+                } else {
+                    free[p] = (o + bytes, l - bytes);
+                }
+                o
+            } else if free.last().is_some_and(|&(o, l)| o + l == end) {
+                // a trailing hole abutting the end extends in place
+                let (o, _) = free.pop().unwrap();
+                end = o + bytes;
+                o
+            } else {
+                let o = end;
+                end += bytes;
+                o
+            };
+            active.push((last, offset, bytes));
+            slots[node] = Some(Slot { offset, bytes });
+        }
+    }
+    end
+}
+
+/// Compute `[def, last_use]` wave intervals for every needed value of
+/// the program and pack the non-escaping ones onto one arena.
+///
+/// * `of[i]` — cluster index of node `i` (`None` for leaves and
+///   inlined const-likes);
+/// * `needed[i]` — node must surface as a cluster output (root or
+///   cross-cluster value);
+/// * `depth[c]` — wave index of cluster `c`.
+pub(crate) fn plan(
+    g: &Graph,
+    of: &[Option<usize>],
+    needed: &[bool],
+    depth: &[usize],
+) -> ArenaPlan {
+    let n = g.nodes.len();
+    let mut slots: Vec<Option<Slot>> = vec![None; n];
+    let mut is_root = vec![false; n];
+    for &r in &g.roots {
+        is_root[r] = true;
+    }
+
+    // last-use wave = max depth over clusters consuming the value
+    let mut last_use = vec![0usize; n];
+    for j in 0..n {
+        let Some(cj) = of[j] else { continue };
+        for &ch in &g.nodes[j].children {
+            if of[ch].is_some() && of[ch] != Some(cj) {
+                last_use[ch] = last_use[ch].max(depth[cj]);
+            }
+        }
+    }
+
+    let mut request_bytes = 0usize;
+    let mut escaped_bytes = 0usize;
+    let mut intervals: Vec<(usize, usize, usize, usize)> = Vec::new();
+    for i in 0..n {
+        if !needed[i] {
+            continue;
+        }
+        let Some(c) = of[i] else { continue };
+        let numel: usize = g.nodes[i].node.shape.iter().product();
+        let bytes = align_up(numel * g.nodes[i].node.dtype.size_bytes());
+        request_bytes += bytes;
+        if is_root[i] {
+            // escapes to the caller: never aliased
+            escaped_bytes += bytes;
+        } else {
+            intervals.push((i, depth[c], last_use[i], bytes));
+        }
+    }
+    let size = pack(&mut intervals, &mut slots);
+    ArenaPlan { size, escaped_bytes, request_bytes, slots }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sizes(slots: &[Option<Slot>]) -> Vec<(usize, usize)> {
+        slots
+            .iter()
+            .map(|s| {
+                s.as_ref().map(|s| (s.offset, s.bytes)).unwrap_or((0, 0))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn chain_aliases_dead_values() {
+        // A def 0 / last 1, B def 1 / last 2, C def 2 / last 3:
+        // C reuses A's range (A is dead by wave 2), so three equal
+        // values need two slots' worth of arena
+        let mut iv =
+            vec![(0, 0, 1, 64), (1, 1, 2, 64), (2, 2, 3, 64)];
+        let mut slots = vec![None, None, None];
+        let size = pack(&mut iv, &mut slots);
+        assert_eq!(size, 128);
+        let s = sizes(&slots);
+        assert_eq!(s[0], (0, 64));
+        assert_eq!(s[1], (64, 64));
+        assert_eq!(s[2], (0, 64), "C must alias A's range");
+    }
+
+    #[test]
+    fn same_wave_values_never_alias() {
+        // two values defined at wave 0 (concurrent clusters) and a
+        // third at wave 1 while the first two are last-used at wave 1:
+        // nothing may overlap yet
+        let mut iv =
+            vec![(0, 0, 1, 32), (1, 0, 1, 32), (2, 1, 2, 32)];
+        let mut slots = vec![None, None, None];
+        let size = pack(&mut iv, &mut slots);
+        assert_eq!(size, 96, "last_use == def wave is not reusable");
+        let s = sizes(&slots);
+        assert_ne!(s[0].0, s[1].0);
+        assert_ne!(s[2].0, s[0].0);
+        assert_ne!(s[2].0, s[1].0);
+    }
+
+    #[test]
+    fn freed_neighbors_coalesce_for_large_values() {
+        // two small adjacent values die; a later large value fits in
+        // their merged hole instead of growing the arena
+        let mut iv = vec![
+            (0, 0, 1, 32),
+            (1, 0, 1, 32),
+            (2, 1, 2, 16), // keeps the arena end busy at wave 1
+            (3, 2, 3, 64),
+        ];
+        let mut slots = vec![None; 4];
+        let size = pack(&mut iv, &mut slots);
+        let s = sizes(&slots);
+        assert_eq!(s[3], (0, 64), "merged hole of 0+1 fits the 64");
+        assert_eq!(size, 80);
+    }
+
+    #[test]
+    fn trailing_hole_extends_in_place() {
+        // a dead value at the arena end extends rather than appends
+        let mut iv = vec![(0, 0, 0, 32), (1, 1, 2, 48)];
+        let mut slots = vec![None, None];
+        let size = pack(&mut iv, &mut slots);
+        assert_eq!(size, 48, "reuse the trailing 32 and grow by 16");
+        assert_eq!(sizes(&slots)[1], (0, 48));
+    }
+
+    #[test]
+    fn span_insert_coalesces_both_sides() {
+        let mut free = vec![(0, 16), (48, 16)];
+        insert_span(&mut free, 16, 32);
+        assert_eq!(free, vec![(0, 64)]);
+        let mut free = vec![(32, 16)];
+        insert_span(&mut free, 0, 16);
+        assert_eq!(free, vec![(0, 16), (32, 16)]);
+    }
+}

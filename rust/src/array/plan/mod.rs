@@ -42,20 +42,36 @@
 //!    thread is marked in-flight and racing materializers wait on it
 //!    instead of re-launching.
 //!
+//! 5. **Memory planning** — before launch, [`liveness`] computes a
+//!    `[def, last_use]` wave interval for every cross-cluster
+//!    intermediate and packs non-overlapping intervals onto **one
+//!    arena** suballocated from the `mempool` heap
+//!    (`alloc_uninit`, since every slot is fully written before any
+//!    read).  `materialize_many` therefore allocates one block per
+//!    *program* instead of one buffer per node; dead intermediates
+//!    alias the ranges of earlier ones.  Roots escape the arena (the
+//!    caller owns them).  Arena slots carry a `written` flag: when a
+//!    racing program completes a node first (single-flight), the slot
+//!    stays unwritten and consumers fall back to the node's cached
+//!    device buffer.
+//!
 //! Planner decisions (programs, clusters, CSE hits, launches saved,
-//! epilogue fusions, auto-cuts) are counted in [`stats`] and mirrored
-//! into `coordinator::metrics::Snapshot`.
+//! epilogue fusions, auto-cuts, arena bytes planned vs requested) are
+//! counted in [`stats`] and mirrored into
+//! `coordinator::metrics::Snapshot`.
 
+pub(crate) mod liveness;
 pub(crate) mod lower;
 pub mod reference;
 pub mod stats;
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::array::{Claim, Expr, LazyNode};
 use crate::rtcg::module::Toolkit;
-use crate::runtime::DeviceBuffer;
+use crate::runtime::{DeviceBuffer, HostArray};
 use crate::util::error::{Error, Result};
 
 use lower::{LowerPlan, Step};
@@ -400,6 +416,73 @@ fn build_job(
 }
 
 // ---------------------------------------------------------------------------
+// Program arena: liveness-planned slots on one suballocated block
+// ---------------------------------------------------------------------------
+
+/// One intermediate's range inside the program arena.
+struct ArenaSlot {
+    offset: usize,
+    /// exact value bytes (numel × dtype size; ≤ the aligned slot)
+    bytes: usize,
+    /// set once the producing cluster has written the value; an
+    /// unwritten slot (the node raced to Ready under another program)
+    /// falls back to the node's cached device buffer
+    written: AtomicBool,
+}
+
+/// The single block backing all of a program's intermediates, with
+/// per-node slots at liveness-planned (possibly aliasing) offsets.
+struct ProgramArena {
+    block: Mutex<crate::mempool::Block>,
+    /// keyed by `Arc::as_ptr` of the producing [`LazyNode`]
+    slots: HashMap<usize, ArenaSlot>,
+}
+
+impl ProgramArena {
+    fn slot_of(&self, n: &Arc<LazyNode>) -> Option<&ArenaSlot> {
+        self.slots.get(&(Arc::as_ptr(n) as usize))
+    }
+
+    /// Stage a written slot's bytes back onto `device`.
+    fn read(
+        &self,
+        tk: &Toolkit,
+        n: &Arc<LazyNode>,
+        s: &ArenaSlot,
+        device: usize,
+    ) -> Result<DeviceBuffer> {
+        let host = {
+            let block = self.block.lock().unwrap();
+            HostArray::from_bytes(
+                n.dtype,
+                n.shape.clone(),
+                &block.as_slice()[s.offset..s.offset + s.bytes],
+            )?
+        };
+        tk.client().to_device_on(&host, device)
+    }
+
+    /// Copy a cluster output into its slot and publish it.
+    fn write(
+        &self,
+        n: &Arc<LazyNode>,
+        s: &ArenaSlot,
+        b: &DeviceBuffer,
+    ) -> Result<()> {
+        let host = b.to_host()?;
+        debug_assert_eq!(host.size_bytes(), s.bytes);
+        debug_assert_eq!(host.dtype(), n.dtype);
+        {
+            let mut block = self.block.lock().unwrap();
+            block.as_mut_slice()[s.offset..s.offset + s.bytes]
+                .copy_from_slice(host.data.as_bytes());
+        }
+        s.written.store(true, Ordering::Release);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Execution: single-flight claims + wave dispatch through `exec`
 // ---------------------------------------------------------------------------
 
@@ -430,7 +513,12 @@ impl Drop for ClaimGuard {
     }
 }
 
-fn run_cluster(tk: &Toolkit, job: &ClusterJob, device: usize) -> Result<()> {
+fn run_cluster(
+    tk: &Toolkit,
+    job: &ClusterJob,
+    device: usize,
+    arena: Option<&Arc<ProgramArena>>,
+) -> Result<()> {
     loop {
         let mut claimed: Vec<Arc<LazyNode>> = Vec::new();
         let mut flying: Vec<Arc<LazyNode>> = Vec::new();
@@ -458,6 +546,16 @@ fn run_cluster(tk: &Toolkit, job: &ClusterJob, device: usize) -> Result<()> {
             .inputs
             .iter()
             .map(|n| {
+                // in-program intermediates live at their planned arena
+                // offsets; anything else (leaves, raced-to-ready nodes)
+                // comes from the node's cached device buffer
+                if let Some(a) = arena {
+                    if let Some(s) = a.slot_of(n) {
+                        if s.written.load(Ordering::Acquire) {
+                            return a.read(tk, n, s, device);
+                        }
+                    }
+                }
                 n.cached().ok_or_else(|| {
                     Error::msg("cluster input lost its device buffer")
                 })
@@ -471,6 +569,13 @@ fn run_cluster(tk: &Toolkit, job: &ClusterJob, device: usize) -> Result<()> {
                 outs.len(),
                 job.outputs.len()
             )));
+        }
+        if let Some(a) = arena {
+            for (n, b) in job.outputs.iter().zip(&outs) {
+                if let Some(s) = a.slot_of(n) {
+                    a.write(n, s, b)?;
+                }
+            }
         }
         for (n, b) in job.outputs.iter().zip(&outs) {
             n.complete(b.clone());
@@ -533,11 +638,6 @@ pub(crate) fn execute(
         cuts,
     );
 
-    let mut jobs: Vec<Option<ClusterJob>> = Vec::with_capacity(clusters.len());
-    for (c, cl) in clusters.iter().enumerate() {
-        jobs.push(Some(build_job(&g, &of, c, &cl.members, &needed)?));
-    }
-
     // wave = all clusters at the same dependency depth
     let mut depth = vec![0usize; clusters.len()];
     for c in 0..clusters.len() {
@@ -548,13 +648,49 @@ pub(crate) fn execute(
             .max()
             .unwrap_or(0);
     }
+
+    // liveness-planned arena: one suballocated block per program,
+    // in-program intermediates at (possibly aliasing) planned offsets
+    let mplan = liveness::plan(&g, &of, &needed, &depth);
+    stats::note_arena(
+        mplan.planned_bytes() as u64,
+        mplan.request_bytes as u64,
+    );
+    let arena: Option<Arc<ProgramArena>> = if mplan.size > 0 {
+        let mut slots = HashMap::new();
+        for (i, s) in mplan.slots.iter().enumerate() {
+            if let Some(s) = s {
+                let numel: usize = g.nodes[i].node.shape.iter().product();
+                slots.insert(
+                    Arc::as_ptr(&g.nodes[i].node) as usize,
+                    ArenaSlot {
+                        offset: s.offset,
+                        bytes: numel * g.nodes[i].node.dtype.size_bytes(),
+                        written: AtomicBool::new(false),
+                    },
+                );
+            }
+        }
+        // uninit is safe: every slot is fully written before any read
+        // (unwritten slots fall back to the node's cached buffer)
+        let block = tk.staging_pool().alloc_uninit(mplan.size);
+        Some(Arc::new(ProgramArena { block: Mutex::new(block), slots }))
+    } else {
+        None
+    };
+
+    let mut jobs: Vec<Option<ClusterJob>> = Vec::with_capacity(clusters.len());
+    for (c, cl) in clusters.iter().enumerate() {
+        jobs.push(Some(build_job(&g, &of, c, &cl.members, &needed)?));
+    }
+
     let max_depth = depth.iter().copied().max().unwrap_or(0);
     for d in 0..=max_depth {
         let wave: Vec<usize> =
             (0..clusters.len()).filter(|&c| depth[c] == d).collect();
         if wave.len() == 1 {
             let job = jobs[wave[0]].take().unwrap();
-            run_cluster(tk, &job, device)?;
+            run_cluster(tk, &job, device, arena.as_ref())?;
         } else {
             // independent clusters: overlap on the exec scheduler
             let ex = tk.executor();
@@ -563,7 +699,10 @@ pub(crate) fn execute(
                 .map(|&c| {
                     let job = jobs[c].take().unwrap();
                     let tk2 = tk.clone();
-                    ex.submit(move |dev| run_cluster(&tk2, &job, dev))
+                    let ar = arena.clone();
+                    ex.submit(move |dev| {
+                        run_cluster(&tk2, &job, dev, ar.as_ref())
+                    })
                 })
                 .collect();
             let mut first_err: Option<Error> = None;
@@ -638,6 +777,54 @@ mod tests {
         assert!(after.programs > before.programs);
         assert!(after.clusters > before.clusters);
         assert!(after.launches_saved >= before.launches_saved);
+    }
+
+    #[test]
+    fn matmul_chain_aliases_dead_intermediates() {
+        // five stacked matmuls = five waves; intermediate k dies once
+        // wave k+1 has read it, so the liveness packer needs ~2 slots
+        // of arena for 4 intermediates — and aliasing must not corrupt
+        // the values (checked against the per-node reference)
+        let c = ArrayContext::new(Toolkit::init_ephemeral().unwrap());
+        let n = 8;
+        let mk = |seed: f32| {
+            c.to_gpu(&HostArray::f32(
+                vec![n, n],
+                (0..n * n)
+                    .map(|i| ((i as f32 * 0.13 + seed).sin()))
+                    .collect(),
+            ))
+            .unwrap()
+        };
+        let (a, b) = (mk(0.0), mk(5.0));
+        let build = || {
+            let mut x = a.matmul_t(&b).unwrap();
+            for _ in 0..4 {
+                x = x.matmul_t(&b).unwrap();
+            }
+            x
+        };
+        let expect = super::reference::run_per_node(&[&build()])
+            .unwrap()
+            .remove(0);
+        let before = super::stats::snapshot();
+        let planned = build();
+        let got = planned.get().unwrap();
+        let after = super::stats::snapshot();
+        let d_planned =
+            after.arena_bytes_planned - before.arena_bytes_planned;
+        let d_requested =
+            after.arena_bytes_requested - before.arena_bytes_requested;
+        assert!(
+            d_planned < d_requested,
+            "liveness must alias dead intermediates \
+             ({d_planned} planned vs {d_requested} requested)"
+        );
+        assert_eq!(
+            got.as_f32().unwrap(),
+            expect.as_f32().unwrap(),
+            "aliased execution must stay bitwise-identical"
+        );
     }
 
     #[test]

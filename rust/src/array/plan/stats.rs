@@ -17,6 +17,10 @@ pub struct PlannerStats {
     pub epilogue_fusions: AtomicU64,
     /// clusters cut because they hit the size cap (auto-materialize)
     pub auto_cuts: AtomicU64,
+    /// arena bytes actually planned (liveness-packed) across programs
+    pub arena_bytes_planned: AtomicU64,
+    /// bytes the same intermediates would need one-buffer-per-node
+    pub arena_bytes_requested: AtomicU64,
 }
 
 static STATS: PlannerStats = PlannerStats {
@@ -26,6 +30,8 @@ static STATS: PlannerStats = PlannerStats {
     launches_saved: AtomicU64::new(0),
     epilogue_fusions: AtomicU64::new(0),
     auto_cuts: AtomicU64::new(0),
+    arena_bytes_planned: AtomicU64::new(0),
+    arena_bytes_requested: AtomicU64::new(0),
 };
 
 pub fn global() -> &'static PlannerStats {
@@ -49,6 +55,14 @@ pub(crate) fn note_program(
     s.auto_cuts.fetch_add(auto_cuts, Ordering::Relaxed);
 }
 
+/// Record one program's liveness plan: `planned` arena bytes vs the
+/// `requested` bytes one-buffer-per-node would have used.
+pub(crate) fn note_arena(planned: u64, requested: u64) {
+    let s = global();
+    s.arena_bytes_planned.fetch_add(planned, Ordering::Relaxed);
+    s.arena_bytes_requested.fetch_add(requested, Ordering::Relaxed);
+}
+
 /// Point-in-time planner counters (mirrored into
 /// `coordinator::metrics::Snapshot.planner`).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
@@ -59,6 +73,16 @@ pub struct PlannerSnapshot {
     pub launches_saved: u64,
     pub epilogue_fusions: u64,
     pub auto_cuts: u64,
+    pub arena_bytes_planned: u64,
+    pub arena_bytes_requested: u64,
+}
+
+impl PlannerSnapshot {
+    /// Bytes the liveness packer aliased away (vs per-node buffers).
+    pub fn arena_bytes_saved(&self) -> u64 {
+        self.arena_bytes_requested
+            .saturating_sub(self.arena_bytes_planned)
+    }
 }
 
 pub fn snapshot() -> PlannerSnapshot {
@@ -70,5 +94,9 @@ pub fn snapshot() -> PlannerSnapshot {
         launches_saved: s.launches_saved.load(Ordering::Relaxed),
         epilogue_fusions: s.epilogue_fusions.load(Ordering::Relaxed),
         auto_cuts: s.auto_cuts.load(Ordering::Relaxed),
+        arena_bytes_planned: s.arena_bytes_planned.load(Ordering::Relaxed),
+        arena_bytes_requested: s
+            .arena_bytes_requested
+            .load(Ordering::Relaxed),
     }
 }

@@ -241,9 +241,17 @@ mod tests {
             frees: 9,
             bytes_held: 2048,
             bytes_active: 512,
+            bytes_owned: 2560,
+            peak_bytes_active: 1024,
+            arenas: 2,
+            splits: 5,
+            merges: 3,
+            largest_free: 1536,
         };
         m.update_pool(&ps);
-        assert_eq!(m.snapshot().pool, ps);
+        let got = m.snapshot().pool;
+        assert_eq!(got, ps);
+        assert!((got.fragmentation() - 0.25).abs() < 1e-12);
     }
 
     #[test]
@@ -257,9 +265,13 @@ mod tests {
             launches_saved: 11,
             epilogue_fusions: 3,
             auto_cuts: 1,
+            arena_bytes_planned: 4096,
+            arena_bytes_requested: 10240,
         };
         m.update_planner(&ps);
-        assert_eq!(m.snapshot().planner, ps);
+        let got = m.snapshot().planner;
+        assert_eq!(got, ps);
+        assert_eq!(got.arena_bytes_saved(), 6144);
     }
 
     #[test]

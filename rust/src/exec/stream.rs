@@ -163,7 +163,7 @@ fn run_op(client: &Client, pool: &MemoryPool, device: usize, op: Op) {
             // PoolStats).  The simulator's typed transfer entry point
             // then reads the host array directly; a real backend would
             // DMA from `block`.
-            let mut block = pool.alloc(host.size_bytes());
+            let mut block = pool.alloc_uninit(host.size_bytes());
             block
                 .as_mut_slice()
                 .copy_from_slice(host.data.as_bytes());

@@ -304,8 +304,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         m.exec_queue_depths
     );
     println!(
-        "staging pool: {} allocs ({} pool hits), {} B held / {} B active",
-        m.pool.allocs, m.pool.pool_hits, m.pool.bytes_held, m.pool.bytes_active
+        "staging pool: {} allocs ({} pool hits), {} arenas: {} B held / {} B active / {} B owned (peak {} B, frag {:.2})",
+        m.pool.allocs,
+        m.pool.pool_hits,
+        m.pool.arenas,
+        m.pool.bytes_held,
+        m.pool.bytes_active,
+        m.pool.bytes_owned,
+        m.pool.peak_bytes_active,
+        m.pool.fragmentation()
+    );
+    println!(
+        "memory planner: {} B arena planned vs {} B per-node ({} B aliased away)",
+        m.planner.arena_bytes_planned,
+        m.planner.arena_bytes_requested,
+        m.planner.arena_bytes_saved()
     );
     c.shutdown();
     Ok(())

@@ -159,6 +159,50 @@ impl HostArray {
         })
     }
 
+    /// Reconstruct a host tensor from raw native-endian bytes (the
+    /// planner's arena slots store values in this form).
+    pub fn from_bytes(
+        dtype: DType,
+        shape: Vec<usize>,
+        bytes: &[u8],
+    ) -> Result<HostArray> {
+        let n: usize = shape.iter().product();
+        if bytes.len() != n * dtype.size_bytes() {
+            return Err(Error::msg(format!(
+                "from_bytes: {} bytes for {n} × {}",
+                bytes.len(),
+                dtype.name()
+            )));
+        }
+        let data = match dtype {
+            DType::F32 => HostData::F32(
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_ne_bytes(c.try_into().unwrap()))
+                    .collect(),
+            ),
+            DType::F64 => HostData::F64(
+                bytes
+                    .chunks_exact(8)
+                    .map(|c| f64::from_ne_bytes(c.try_into().unwrap()))
+                    .collect(),
+            ),
+            DType::I32 => HostData::I32(
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| i32::from_ne_bytes(c.try_into().unwrap()))
+                    .collect(),
+            ),
+            DType::I64 => HostData::I64(
+                bytes
+                    .chunks_exact(8)
+                    .map(|c| i64::from_ne_bytes(c.try_into().unwrap()))
+                    .collect(),
+            ),
+        };
+        Ok(HostArray { shape, data })
+    }
+
     /// Convert to an XLA literal (H2D staging format).
     pub fn to_literal(&self) -> Result<xla::Literal> {
         xla::Literal::create_from_shape_and_untyped_data(
@@ -222,6 +266,28 @@ mod tests {
     fn dtype_mismatch_reads_fail() {
         let a = HostArray::i32(vec![1], vec![1]);
         assert!(a.as_f32().is_err());
+    }
+
+    #[test]
+    fn from_bytes_roundtrip() {
+        let a = HostArray::f32(vec![2, 2], vec![1.5, -2.0, 0.25, 8.0]);
+        let b = HostArray::from_bytes(
+            DType::F32,
+            vec![2, 2],
+            a.data.as_bytes(),
+        )
+        .unwrap();
+        assert_eq!(a, b);
+        let c = HostArray::i64(vec![3], vec![-1, 2, 1 << 40]);
+        let d = HostArray::from_bytes(
+            DType::I64,
+            vec![3],
+            c.data.as_bytes(),
+        )
+        .unwrap();
+        assert_eq!(c, d);
+        assert!(HostArray::from_bytes(DType::F32, vec![2], &[0u8; 7])
+            .is_err());
     }
 
     #[test]

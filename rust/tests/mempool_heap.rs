@@ -1,0 +1,191 @@
+//! Integration tests for the suballocating heap behind `mempool`:
+//! multi-threaded hammering (no lost blocks, no double-merge, no
+//! cross-block corruption) and the satellite regressions — zero-on-
+//! reuse, f32 alignment after odd-sized allocations, and `free_held`
+//! reconciliation with in-flight blocks.
+
+use std::sync::Arc;
+use std::thread;
+
+use rtcg::mempool::{align_up, MemoryPool};
+use rtcg::util::prng::Rng;
+
+fn assert_invariant(pool: &MemoryPool) {
+    let s = pool.stats();
+    assert_eq!(
+        s.bytes_held + s.bytes_active,
+        s.bytes_owned,
+        "held {} + active {} != owned {}",
+        s.bytes_held,
+        s.bytes_active,
+        s.bytes_owned
+    );
+}
+
+#[test]
+fn sixteen_threads_hammer_the_heap() {
+    // 16 threads × 200 rounds of alloc/write/verify/free with random
+    // sizes and lifetimes.  Each thread tags its blocks with a unique
+    // byte pattern and re-verifies before freeing: a double-merge or
+    // overlapping hand-out would corrupt someone's pattern; a lost
+    // block would leave bytes_active non-zero at the end.
+    let pool = Arc::new(MemoryPool::with_arena_bytes(64 * 1024));
+    let threads = 16;
+    let rounds = 200;
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let pool = pool.clone();
+            thread::spawn(move || {
+                let tag = 1 + t as u8; // 0 is the fresh-zero value
+                let mut rng = Rng::new(0xA11C + t as u64);
+                let mut live: Vec<(rtcg::mempool::Block, usize)> =
+                    Vec::new();
+                for round in 0..rounds {
+                    if rng.f32() < 0.55 || live.is_empty() {
+                        let sz = 1 + rng.usize_below(6000);
+                        let mut b = pool.alloc(sz);
+                        assert!(
+                            b.as_slice().iter().all(|&x| x == 0),
+                            "thread {t}: alloc handed out dirty bytes"
+                        );
+                        b.as_mut_slice().fill(tag);
+                        live.push((b, sz));
+                    } else {
+                        let i = rng.usize_below(live.len());
+                        let (b, sz) = live.swap_remove(i);
+                        assert_eq!(b.len(), sz);
+                        assert!(
+                            b.as_slice().iter().all(|&x| x == tag),
+                            "thread {t}: pattern corrupted (overlap \
+                             or double-merge)"
+                        );
+                        drop(b);
+                    }
+                    if round % 32 == 0 {
+                        pool.free_held();
+                    }
+                }
+                // survivors must still carry the tag, then drop with
+                // `live` as the thread exits
+                for (b, _) in &live {
+                    assert!(b.as_slice().iter().all(|&x| x == tag));
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("hammer thread panicked");
+    }
+    assert_invariant(&pool);
+    assert_eq!(
+        pool.stats().bytes_active,
+        0,
+        "lost blocks: active bytes after all threads finished"
+    );
+    pool.free_held();
+    let s = pool.stats();
+    assert_eq!(s.bytes_owned, 0);
+    assert_eq!(s.frees, s.allocs, "every alloc must be freed exactly once");
+}
+
+#[test]
+fn concurrent_churn_preserves_accounting() {
+    // tighter arenas force constant split/merge traffic under
+    // contention; the invariant must hold at quiescence
+    let pool = Arc::new(MemoryPool::with_arena_bytes(4096));
+    let handles: Vec<_> = (0..8)
+        .map(|t| {
+            let pool = pool.clone();
+            thread::spawn(move || {
+                let mut rng = Rng::new(77 + t as u64);
+                for _ in 0..500 {
+                    let a = pool.alloc_uninit(1 + rng.usize_below(512));
+                    let b = pool.alloc_uninit(1 + rng.usize_below(2048));
+                    drop(a);
+                    let c = pool.alloc_uninit(1 + rng.usize_below(128));
+                    drop(b);
+                    drop(c);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_invariant(&pool);
+    let s = pool.stats();
+    assert_eq!(s.bytes_active, 0);
+    assert_eq!(s.frees, s.allocs);
+    assert!(s.merges > 0, "churn must exercise coalescing");
+}
+
+#[test]
+fn recycled_block_never_leaks_prior_contents() {
+    // satellite regression (stale data): write a distinctive pattern,
+    // free, and re-allocate until the same arena range comes back —
+    // it must always read as zero
+    let pool = MemoryPool::with_arena_bytes(4096);
+    for round in 0..50 {
+        let mut b = pool.alloc(64 + (round % 7) * 16);
+        assert!(
+            b.as_slice().iter().all(|&x| x == 0),
+            "round {round}: prior contents leaked"
+        );
+        b.as_mut_slice().fill(0xEE);
+    }
+    assert!(pool.stats().pool_hits > 0, "recycling never happened");
+}
+
+#[test]
+fn f32_views_stay_aligned_under_odd_traffic() {
+    // satellite regression (soundness): interleave odd-sized
+    // allocations so any length-based layout would misalign, then take
+    // f32 views of everything
+    let pool = MemoryPool::new();
+    let mut odd = Vec::new();
+    let mut f32s = Vec::new();
+    for i in 0..32 {
+        odd.push(pool.alloc(1 + (i * 3) % 17));
+        f32s.push(pool.alloc(4 * (1 + i % 5)));
+    }
+    for (i, b) in f32s.iter_mut().enumerate() {
+        let v = b.as_f32_mut();
+        assert_eq!(
+            v.as_ptr() as usize % std::mem::align_of::<f32>(),
+            0,
+            "block {i} misaligned"
+        );
+        v.fill(i as f32 + 0.5);
+    }
+    for (i, b) in f32s.iter_mut().enumerate() {
+        assert!(b.as_f32_mut().iter().all(|&x| x == i as f32 + 0.5));
+    }
+}
+
+#[test]
+fn free_held_interleaves_safely_with_live_blocks() {
+    // satellite regression (accounting): free_held with blocks in
+    // flight keeps their arenas owned; the invariant holds through an
+    // alloc / free / free_held interleaving and ends fully drained
+    let pool = MemoryPool::with_arena_bytes(2048);
+    let a = pool.alloc(500);
+    let b = pool.alloc(3000); // dedicated oversize arena
+    assert_invariant(&pool);
+    pool.free_held(); // nothing evictable: both arenas have live blocks
+    assert_eq!(pool.stats().arenas, 2);
+    assert_invariant(&pool);
+    drop(b);
+    pool.free_held(); // oversize arena drains; a's arena stays
+    let s = pool.stats();
+    assert_eq!(s.arenas, 1);
+    assert_eq!(s.bytes_active, align_up(500));
+    assert_invariant(&pool);
+    let c = pool.alloc(100); // lands in a's arena
+    assert_eq!(pool.stats().arenas, 1);
+    drop(a);
+    drop(c);
+    pool.free_held();
+    let s = pool.stats();
+    assert_eq!((s.bytes_owned, s.bytes_held, s.bytes_active), (0, 0, 0));
+    assert_eq!(s.frees, s.allocs);
+}

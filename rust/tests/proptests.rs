@@ -121,28 +121,39 @@ fn prop_subst_is_total_on_known_keys() {
 
 #[test]
 fn prop_mempool_conservation() {
-    // bytes_active + bytes_held accounting is conserved across any
-    // interleaving of allocs and frees
+    // heap accounting is conserved across any interleaving of allocs,
+    // frees, and free_held: bytes_active tracks the aligned live spans
+    // exactly and `held + active == owned` at every step
     check("mempool-conservation", &cfg(48), |rng, size| {
-        let pool = MemoryPool::new();
+        let pool = MemoryPool::with_arena_bytes(8192);
         let mut live = Vec::new();
         let mut expected_active = 0usize;
         for _ in 0..size {
             if rng.f32() < 0.6 || live.is_empty() {
                 let sz = 1 + rng.usize_below(4096);
-                expected_active += MemoryPool::bin_for(sz);
+                expected_active += rtcg::mempool::align_up(sz);
                 live.push(pool.alloc(sz));
             } else {
                 let i = rng.usize_below(live.len());
                 let blk = live.swap_remove(i);
-                expected_active -= MemoryPool::bin_for(blk.len());
+                expected_active -= rtcg::mempool::align_up(blk.len());
                 drop(blk);
+            }
+            if rng.f32() < 0.1 {
+                // must reconcile with in-flight blocks, not zero out
+                pool.free_held();
             }
             let s = pool.stats();
             if s.bytes_active != expected_active {
                 return Err(format!(
                     "active {} != expected {expected_active}",
                     s.bytes_active
+                ));
+            }
+            if s.bytes_held + s.bytes_active != s.bytes_owned {
+                return Err(format!(
+                    "held {} + active {} != owned {}",
+                    s.bytes_held, s.bytes_active, s.bytes_owned
                 ));
             }
         }
@@ -238,14 +249,20 @@ fn gen_program(rng: &mut Rng, depth: usize) -> ast::Program {
 
 #[test]
 fn prop_planned_execution_matches_per_node() {
-    // the graph planner (clustering + CSE + epilogue fusion) must be
-    // *semantically invisible*: for random DAGs with shared subgraphs,
-    // broadcasts, axis reductions, and matmuls, planned execution is
-    // bitwise identical to maximally-unfused op-per-kernel lowering.
-    // (The device rounds to f32 after every elementwise op and reduces
-    // in a fixed order, so fusion cannot change a single bit.)
+    // the graph planner (clustering + CSE + epilogue fusion + the
+    // liveness-aliased program arena) must be *semantically invisible*:
+    // for random DAGs with shared subgraphs, broadcasts, axis
+    // reductions, and matmuls, planned execution is bitwise identical
+    // to maximally-unfused op-per-kernel lowering.  Cross-cluster
+    // intermediates are routed through liveness-packed (aliasing)
+    // arena slots, so a liveness bug — a live value's range reused too
+    // early — corrupts consumer reads and shows up as a bitwise
+    // mismatch here.  (The device rounds to f32 after every
+    // elementwise op and reduces in a fixed order, so fusion cannot
+    // change a single bit.)
     let tk = Toolkit::init_ephemeral().unwrap();
     let ctx = ArrayContext::new(tk);
+    let arena0 = rtcg::array::plan::stats::snapshot();
     check("planned-vs-per-node", &cfg(10), |rng, size| {
         let n = 2 + rng.usize_below(3); // square so matmuls stay in-family
         let err = |e: rtcg::util::error::Error| e.to_string();
@@ -316,6 +333,14 @@ fn prop_planned_execution_matches_per_node() {
             };
             pool.push(next.map_err(err)?);
         }
+        // a 4-deep matmul chain (pushed last, so always a root)
+        // guarantees ≥4 dependency waves: random steps alone can stay
+        // too shallow for the packer to ever reuse a dead interval
+        let mut chain = pool[0].clone();
+        for _ in 0..4 {
+            chain = chain.matmul_t(&pool[1]).map_err(err)?;
+        }
+        pool.push(chain);
         let root_n = 1 + rng.usize_below(3);
         let roots: Vec<&GpuArray> =
             pool[pool.len() - root_n..].iter().collect();
@@ -347,6 +372,18 @@ fn prop_planned_execution_matches_per_node() {
         }
         Ok(())
     });
+    // the property is only meaningful if aliasing was actually in
+    // play: across the random programs, liveness packing must have
+    // aliased at least some dead intermediates
+    let arena1 = rtcg::array::plan::stats::snapshot();
+    assert!(
+        arena1.arena_bytes_planned > arena0.arena_bytes_planned,
+        "random DAGs never exercised the liveness arena"
+    );
+    assert!(
+        arena1.arena_bytes_saved() > arena0.arena_bytes_saved(),
+        "random DAGs never aliased an intermediate"
+    );
 }
 
 #[test]
