@@ -1,10 +1,68 @@
 //! Coordinator request/response types.
+//!
+//! Serving-tier shape: a [`Request`] is an operation tagged with the
+//! tenant it belongs to.  Single-tenant callers build requests with
+//! `Op::…into()` (tenant 0); multi-tenant clients use
+//! [`Request::new`].
 
+use crate::elementwise::EwHost;
 use crate::runtime::HostArray;
 
-/// A unit of work submitted to the coordinator.
+/// Identifies a tenant for fair scheduling, quotas and per-tenant
+/// metrics.  Tenant 0 is the default for single-tenant callers.
+pub type TenantId = u32;
+
+/// A unit of work submitted to the coordinator: an operation on behalf
+/// of a tenant.
 #[derive(Debug)]
-pub enum Request {
+pub struct Request {
+    pub tenant: TenantId,
+    pub op: Op,
+}
+
+impl Request {
+    pub fn new(tenant: TenantId, op: Op) -> Request {
+        Request { tenant, op }
+    }
+
+    /// Material the consistent-hash router and the batching stage key
+    /// on: identical material ⇒ identical cache keys ⇒ same shard
+    /// (and, for elementwise, the same batch group).  `None` for ops
+    /// with no cache identity (Stats, Shutdown) — routable anywhere.
+    pub fn route_material(&self) -> Option<String> {
+        match &self.op {
+            Op::Launch { kernel, workload, variant, .. } => {
+                Some(format!(
+                    "launch|{kernel}|{workload}|{}",
+                    variant.as_deref().unwrap_or("")
+                ))
+            }
+            Op::RunSource { hlo_text, .. } => {
+                Some(format!("src|{hlo_text}"))
+            }
+            Op::Elementwise { decl, op, name, .. } => {
+                Some(crate::elementwise::descriptor_material(
+                    decl, op, name,
+                ))
+            }
+            Op::Tune { kernel, workload, .. } => {
+                Some(format!("tune|{kernel}|{workload}"))
+            }
+            Op::Stats | Op::Shutdown => None,
+        }
+    }
+}
+
+/// `Op::…into()` — a tenant-0 request, for single-tenant callers.
+impl From<Op> for Request {
+    fn from(op: Op) -> Request {
+        Request { tenant: 0, op }
+    }
+}
+
+/// The operation itself.
+#[derive(Debug)]
+pub enum Op {
     /// Launch a named AOT kernel variant with host inputs.
     Launch {
         kernel: String,
@@ -15,6 +73,18 @@ pub enum Request {
     },
     /// Compile + run run-time-generated HLO text (SourceModule service).
     RunSource { hlo_text: String, inputs: Vec<HostArray> },
+    /// A generated elementwise kernel call (§5.2 Fig 4 surface, served
+    /// remotely).  Requests with identical `(decl, op, name)` are
+    /// mergeable: the batching stage coalesces them into one launch.
+    Elementwise {
+        /// C-style declaration, e.g. `"float a, float *x, float *z"`
+        decl: String,
+        /// statements, e.g. `"z[i] = a*x[i]"`
+        op: String,
+        /// kernel name (part of the descriptor identity)
+        name: String,
+        args: Vec<EwHost>,
+    },
     /// Auto-tune a kernel/workload on the live backend and remember the
     /// winner in the tuning database.
     Tune { kernel: String, workload: String, seed: u64 },
@@ -22,6 +92,26 @@ pub enum Request {
     Stats,
     /// Orderly shutdown.
     Shutdown,
+}
+
+impl Op {
+    /// Host bytes this op stages through the pool — what the per-tenant
+    /// pool-byte quota meters at admission.
+    pub fn input_bytes(&self) -> u64 {
+        match self {
+            Op::Launch { inputs, .. } | Op::RunSource { inputs, .. } => {
+                inputs.iter().map(|a| a.size_bytes() as u64).sum()
+            }
+            Op::Elementwise { args, .. } => args
+                .iter()
+                .map(|a| match a {
+                    EwHost::V(arr) => arr.size_bytes() as u64,
+                    EwHost::S(_) => 8,
+                })
+                .sum(),
+            Op::Tune { .. } | Op::Stats | Op::Shutdown => 0,
+        }
+    }
 }
 
 /// Result of one request.

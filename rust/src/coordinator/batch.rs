@@ -1,0 +1,264 @@
+//! Cross-request batching stage (tentpole): sits between intake and
+//! dispatch, coalescing compatible work into one launch.
+//!
+//! Requests are grouped by *descriptor material* — elementwise calls
+//! with identical `(decl, op, name)`, or generated-source runs with
+//! identical HLO text.  A group flushes when it reaches `max_batch`
+//! requests or when its oldest member has waited `max_wait`, whichever
+//! comes first (the classic size/deadline policy).  `max_batch == 1`
+//! degenerates to unbatched dispatch through the same code path, which
+//! is what the fig8 bench compares against.
+//!
+//! The `Batcher` is pure policy: it owns no threads and performs no
+//! I/O.  The coordinator's service loop drives it with
+//! [`Batcher::next_deadline`]-bounded queue pops and executes the
+//! [`ReadyBatch`]es it hands back.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Size/deadline flush policy.
+#[derive(Debug, Clone)]
+pub struct BatchConfig {
+    /// flush a group at this many requests (1 = batching off)
+    pub max_batch: usize,
+    /// flush a group when its oldest member has waited this long
+    pub max_wait: Duration,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(1),
+        }
+    }
+}
+
+/// What kind of work a group holds (everything needed to launch it).
+#[derive(Debug, Clone, PartialEq)]
+pub enum GroupKind {
+    /// same-descriptor elementwise calls → ONE merged launch
+    Elementwise { decl: String, op: String, name: String },
+    /// identical generated HLO → one compile, k executions
+    Source { hlo_text: String },
+}
+
+/// A flushed group, ready to dispatch.
+#[derive(Debug)]
+pub struct ReadyBatch<E> {
+    pub kind: GroupKind,
+    pub entries: Vec<E>,
+    /// flushed by the deadline timer (vs reaching `max_batch`)
+    pub by_deadline: bool,
+}
+
+struct Group<E> {
+    kind: GroupKind,
+    entries: Vec<E>,
+    /// first arrival + max_wait; NOT extended by later arrivals
+    deadline: Instant,
+}
+
+/// Accumulates compatible requests into groups keyed on descriptor
+/// material.  Generic over the entry type so policy stays testable
+/// without coordinator plumbing.
+pub struct Batcher<E> {
+    cfg: BatchConfig,
+    groups: BTreeMap<String, Group<E>>,
+}
+
+impl<E> Batcher<E> {
+    pub fn new(cfg: BatchConfig) -> Batcher<E> {
+        Batcher { cfg, groups: BTreeMap::new() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.groups.is_empty()
+    }
+
+    /// Queued (not yet flushed) request count.
+    pub fn pending(&self) -> usize {
+        self.groups.values().map(|g| g.entries.len()).sum()
+    }
+
+    /// Add one request to its group; returns the group if this arrival
+    /// filled it to `max_batch` (size flush).  `now` feeds the
+    /// deadline of a freshly created group.
+    pub fn add(
+        &mut self,
+        material: String,
+        kind: GroupKind,
+        entry: E,
+        now: Instant,
+    ) -> Option<ReadyBatch<E>> {
+        let max_batch = self.cfg.max_batch.max(1);
+        let g = self.groups.entry(material.clone()).or_insert_with(|| {
+            Group {
+                kind,
+                entries: Vec::new(),
+                deadline: now + self.cfg.max_wait,
+            }
+        });
+        g.entries.push(entry);
+        if g.entries.len() >= max_batch {
+            let g = self.groups.remove(&material).unwrap();
+            Some(ReadyBatch {
+                kind: g.kind,
+                entries: g.entries,
+                by_deadline: false,
+            })
+        } else {
+            None
+        }
+    }
+
+    /// Earliest pending flush deadline — the service loop's queue-pop
+    /// timeout.  `None` when nothing is pending.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.groups.values().map(|g| g.deadline).min()
+    }
+
+    /// Remove and return every group whose deadline has passed.
+    pub fn take_expired(&mut self, now: Instant) -> Vec<ReadyBatch<E>> {
+        let due: Vec<String> = self
+            .groups
+            .iter()
+            .filter(|(_, g)| g.deadline <= now)
+            .map(|(k, _)| k.clone())
+            .collect();
+        due.into_iter()
+            .map(|k| {
+                let g = self.groups.remove(&k).unwrap();
+                ReadyBatch {
+                    kind: g.kind,
+                    entries: g.entries,
+                    by_deadline: true,
+                }
+            })
+            .collect()
+    }
+
+    /// Remove and return everything (shutdown: admitted work must
+    /// still execute and reply).
+    pub fn drain(&mut self) -> Vec<ReadyBatch<E>> {
+        let keys: Vec<String> = self.groups.keys().cloned().collect();
+        keys.into_iter()
+            .map(|k| {
+                let g = self.groups.remove(&k).unwrap();
+                ReadyBatch {
+                    kind: g.kind,
+                    entries: g.entries,
+                    by_deadline: true,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ew(name: &str) -> GroupKind {
+        GroupKind::Elementwise {
+            decl: "float a, float *x, float *z".into(),
+            op: "z[i] = a*x[i]".into(),
+            name: name.into(),
+        }
+    }
+
+    #[test]
+    fn size_flush_at_max_batch() {
+        let mut b: Batcher<u32> = Batcher::new(BatchConfig {
+            max_batch: 3,
+            max_wait: Duration::from_secs(600),
+        });
+        let t = Instant::now();
+        assert!(b.add("k1".into(), ew("k1"), 1, t).is_none());
+        assert!(b.add("k1".into(), ew("k1"), 2, t).is_none());
+        let ready = b.add("k1".into(), ew("k1"), 3, t).unwrap();
+        assert_eq!(ready.entries, vec![1, 2, 3]);
+        assert!(!ready.by_deadline);
+        assert_eq!(ready.kind, ew("k1"));
+        // the group is gone: the next add starts a fresh one
+        assert!(b.is_empty());
+        assert!(b.add("k1".into(), ew("k1"), 4, t).is_none());
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn distinct_materials_never_merge() {
+        let mut b: Batcher<u32> = Batcher::new(BatchConfig {
+            max_batch: 2,
+            max_wait: Duration::from_secs(600),
+        });
+        let t = Instant::now();
+        assert!(b.add("k1".into(), ew("k1"), 1, t).is_none());
+        assert!(b.add("k2".into(), ew("k2"), 2, t).is_none());
+        assert_eq!(b.pending(), 2);
+        // filling k1 flushes only k1's entries
+        let ready = b.add("k1".into(), ew("k1"), 3, t).unwrap();
+        assert_eq!(ready.entries, vec![1, 3]);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn deadline_flush_uses_first_arrival() {
+        let mut b: Batcher<u32> = Batcher::new(BatchConfig {
+            max_batch: 100,
+            max_wait: Duration::from_millis(10),
+        });
+        let t0 = Instant::now();
+        b.add("k1".into(), ew("k1"), 1, t0);
+        // a later arrival must NOT extend the group's deadline
+        b.add("k1".into(), ew("k1"), 2, t0 + Duration::from_millis(8));
+        let d = b.next_deadline().unwrap();
+        assert_eq!(d, t0 + Duration::from_millis(10));
+        // not yet due just before the deadline
+        assert!(b.take_expired(t0 + Duration::from_millis(9)).is_empty());
+        // due at the deadline: both entries, flagged by_deadline
+        let ready = b.take_expired(d);
+        assert_eq!(ready.len(), 1);
+        assert!(ready[0].by_deadline);
+        assert_eq!(ready[0].entries, vec![1, 2]);
+        assert!(b.next_deadline().is_none());
+    }
+
+    #[test]
+    fn max_batch_one_flushes_immediately() {
+        let mut b: Batcher<u32> = Batcher::new(BatchConfig {
+            max_batch: 1,
+            max_wait: Duration::from_secs(600),
+        });
+        let ready = b
+            .add("k1".into(), ew("k1"), 7, Instant::now())
+            .unwrap();
+        assert_eq!(ready.entries, vec![7]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn drain_returns_every_group() {
+        let mut b: Batcher<u32> = Batcher::new(BatchConfig {
+            max_batch: 10,
+            max_wait: Duration::from_secs(600),
+        });
+        let t = Instant::now();
+        b.add("k1".into(), ew("k1"), 1, t);
+        b.add("k2".into(), ew("k2"), 2, t);
+        b.add(
+            "s1".into(),
+            GroupKind::Source { hlo_text: "HloModule x".into() },
+            3,
+            t,
+        );
+        let all = b.drain();
+        assert_eq!(all.len(), 3);
+        assert_eq!(
+            all.iter().map(|r| r.entries.len()).sum::<usize>(),
+            3
+        );
+        assert!(b.is_empty() && b.pending() == 0);
+    }
+}

@@ -1,0 +1,541 @@
+//! Weighted-fair intake for the serving tier: deficit round-robin over
+//! per-tenant bounded FIFOs (replacing the single intake channel), plus
+//! the per-tenant admission quota table (pool bytes in flight and
+//! cumulative compile-cache bytes).
+//!
+//! DRR gives each tenant with queued work a quantum proportional to its
+//! weight per round, so a flood from one tenant cannot starve another:
+//! the light tenant's head-of-line item is served within one round
+//! regardless of how deep the heavy tenant's FIFO is.  Quotas bound how
+//! much *admitted-but-unfinished* work (pool bytes) and how much of the
+//! shared compile cache (distinct cache keys × entry cost) any tenant
+//! can claim; both are checked before a request is queued, so shedding
+//! is cheap and counted, never silent.
+
+use std::collections::{BTreeMap, HashSet, VecDeque};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::api::TenantId;
+
+/// Per-tenant scheduling weight and resource quotas.
+#[derive(Debug, Clone)]
+pub struct TenantPolicy {
+    /// DRR quantum: items served per round while others wait
+    pub weight: u32,
+    /// max admitted-but-unfinished input bytes (staging-pool pressure)
+    pub max_pool_bytes: u64,
+    /// max cumulative compile-cache bytes (distinct keys × entry cost)
+    pub max_cache_bytes: u64,
+}
+
+impl Default for TenantPolicy {
+    fn default() -> Self {
+        TenantPolicy {
+            weight: 1,
+            max_pool_bytes: u64::MAX,
+            max_cache_bytes: u64::MAX,
+        }
+    }
+}
+
+/// Fairness configuration: a default policy plus per-tenant overrides.
+#[derive(Debug, Clone, Default)]
+pub struct FairConfig {
+    pub default_policy: TenantPolicy,
+    pub tenants: Vec<(TenantId, TenantPolicy)>,
+}
+
+impl FairConfig {
+    pub fn policy(&self, t: TenantId) -> TenantPolicy {
+        self.tenants
+            .iter()
+            .find(|(id, _)| *id == t)
+            .map(|(_, p)| p.clone())
+            .unwrap_or_else(|| self.default_policy.clone())
+    }
+}
+
+/// Result of a non-blocking push.
+#[derive(Debug)]
+pub enum TryPush<T> {
+    Accepted,
+    /// this tenant's FIFO is at capacity — item returned to the caller
+    Full(T),
+    /// queue closed — item returned to the caller
+    Closed(T),
+}
+
+/// Result of a deadline-bounded pop.
+#[derive(Debug)]
+pub enum PopResult<T> {
+    Item(T),
+    TimedOut,
+    Closed,
+}
+
+struct TenantQueue<T> {
+    items: VecDeque<T>,
+    weight: u32,
+    /// remaining quantum for the current head-of-line turn
+    deficit: u32,
+    in_active: bool,
+}
+
+struct Inner<T> {
+    queues: BTreeMap<TenantId, TenantQueue<T>>,
+    /// round-robin rotation of tenants with queued work
+    active: VecDeque<TenantId>,
+    len: usize,
+    closed: bool,
+}
+
+/// Deficit-round-robin fair queue over per-tenant bounded FIFOs.
+pub struct FairQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cfg: FairConfig,
+    /// per-tenant FIFO capacity (the old single-queue `queue_depth`)
+    depth: usize,
+}
+
+impl<T> FairQueue<T> {
+    pub fn new(depth: usize, cfg: FairConfig) -> Self {
+        FairQueue {
+            inner: Mutex::new(Inner {
+                queues: BTreeMap::new(),
+                active: VecDeque::new(),
+                len: 0,
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cfg,
+            depth: depth.max(1),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Current per-tenant FIFO depths (non-empty tenants only).
+    pub fn depths(&self) -> Vec<(TenantId, usize)> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .queues
+            .iter()
+            .filter(|(_, q)| !q.items.is_empty())
+            .map(|(&t, q)| (t, q.items.len()))
+            .collect()
+    }
+
+    /// Non-blocking push; `Full` when this tenant's FIFO is at
+    /// capacity (other tenants' queues are unaffected).
+    pub fn try_push(&self, t: TenantId, item: T) -> TryPush<T> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return TryPush::Closed(item);
+        }
+        if self.tenant_len(&inner, t) >= self.depth {
+            return TryPush::Full(item);
+        }
+        self.push_locked(&mut inner, t, item);
+        drop(inner);
+        self.not_empty.notify_one();
+        TryPush::Accepted
+    }
+
+    /// Blocking push: waits while this tenant's FIFO is full.
+    /// `Err(item)` if the queue closes while waiting.
+    pub fn push_wait(&self, t: TenantId, item: T) -> Result<(), T> {
+        let mut inner = self.inner.lock().unwrap();
+        while !inner.closed && self.tenant_len(&inner, t) >= self.depth {
+            inner = self.not_full.wait(inner).unwrap();
+        }
+        if inner.closed {
+            return Err(item);
+        }
+        self.push_locked(&mut inner, t, item);
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking DRR pop; `None` once the queue is closed *and* empty
+    /// (a close drains: queued items are still handed out).
+    pub fn pop(&self) -> Option<T> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = Self::pop_locked(&mut inner) {
+                drop(inner);
+                self.not_full.notify_all();
+                return Some(item);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.not_empty.wait(inner).unwrap();
+        }
+    }
+
+    /// DRR pop bounded by a deadline (for the batching stage's flush
+    /// timer): returns `TimedOut` if nothing arrives by `deadline`.
+    pub fn pop_deadline(&self, deadline: Instant) -> PopResult<T> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = Self::pop_locked(&mut inner) {
+                drop(inner);
+                self.not_full.notify_all();
+                return PopResult::Item(item);
+            }
+            if inner.closed {
+                return PopResult::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return PopResult::TimedOut;
+            }
+            let (guard, timeout) = self
+                .not_empty
+                .wait_timeout(inner, deadline - now)
+                .unwrap();
+            inner = guard;
+            if timeout.timed_out() && inner.len == 0 {
+                return if inner.closed {
+                    PopResult::Closed
+                } else {
+                    PopResult::TimedOut
+                };
+            }
+        }
+    }
+
+    /// Close the queue: wakes every blocked producer/consumer.
+    /// Already-queued items remain poppable (drain semantics).
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    fn tenant_len(&self, inner: &Inner<T>, t: TenantId) -> usize {
+        inner.queues.get(&t).map(|q| q.items.len()).unwrap_or(0)
+    }
+
+    fn push_locked(&self, inner: &mut Inner<T>, t: TenantId, item: T) {
+        let weight = self.cfg.policy(t).weight.max(1);
+        let q = inner.queues.entry(t).or_insert_with(|| TenantQueue {
+            items: VecDeque::new(),
+            weight,
+            deficit: 0,
+            in_active: false,
+        });
+        q.items.push_back(item);
+        if !q.in_active {
+            q.in_active = true;
+            inner.active.push_back(t);
+        }
+        inner.len += 1;
+    }
+
+    /// One DRR step: serve the head-of-rotation tenant, decrement its
+    /// deficit, rotate when its quantum (or queue) is exhausted.
+    fn pop_locked(inner: &mut Inner<T>) -> Option<T> {
+        loop {
+            let t = *inner.active.front()?;
+            let stale = inner
+                .queues
+                .get(&t)
+                .map(|q| q.items.is_empty())
+                .unwrap_or(true);
+            if stale {
+                inner.active.pop_front();
+                if let Some(q) = inner.queues.get_mut(&t) {
+                    q.in_active = false;
+                    q.deficit = 0;
+                }
+                continue;
+            }
+            let (item, turn_over, now_empty) = {
+                let q = inner.queues.get_mut(&t).unwrap();
+                if q.deficit == 0 {
+                    q.deficit = q.weight.max(1);
+                }
+                let item = q.items.pop_front().unwrap();
+                q.deficit -= 1;
+                let now_empty = q.items.is_empty();
+                let turn_over = q.deficit == 0 || now_empty;
+                if turn_over {
+                    q.deficit = 0;
+                }
+                if now_empty {
+                    q.in_active = false;
+                }
+                (item, turn_over, now_empty)
+            };
+            inner.len -= 1;
+            if turn_over {
+                inner.active.pop_front();
+                if !now_empty {
+                    inner.active.push_back(t);
+                }
+            }
+            return Some(item);
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct Usage {
+    pool_in_flight: u64,
+    cache_charged: u64,
+    cache_keys: HashSet<u64>,
+}
+
+/// Per-tenant quota accounting, checked at admission.
+///
+/// Pool bytes are a *gauge*: debited on admit, credited back when the
+/// request completes (success or error) — they bound in-flight work.
+/// Cache bytes are a *cumulative* charge over distinct cache keys: a
+/// tenant re-running a cached kernel is never re-charged, but each new
+/// key it compiles claims quota forever (the shared cache's LRU may
+/// evict the entry, yet the tenant's entitlement to fill it remains
+/// spent — quota is about fill pressure, not residency).
+pub struct TenantTable {
+    cfg: FairConfig,
+    inner: Mutex<BTreeMap<TenantId, Usage>>,
+}
+
+impl TenantTable {
+    pub fn new(cfg: FairConfig) -> Self {
+        TenantTable { cfg, inner: Mutex::new(BTreeMap::new()) }
+    }
+
+    pub fn policy(&self, t: TenantId) -> TenantPolicy {
+        self.cfg.policy(t)
+    }
+
+    /// Check both quotas and, if both pass, commit the debit/charge
+    /// atomically.  `cache_key` is `(key_hash, entry_cost_bytes)` for
+    /// ops with a cacheable compile; `None` for the rest.
+    pub fn admit(
+        &self,
+        t: TenantId,
+        pool_bytes: u64,
+        cache_key: Option<(u64, u64)>,
+    ) -> Result<(), String> {
+        let policy = self.cfg.policy(t);
+        let mut inner = self.inner.lock().unwrap();
+        let u = inner.entry(t).or_default();
+        if u.pool_in_flight.saturating_add(pool_bytes)
+            > policy.max_pool_bytes
+        {
+            return Err(format!(
+                "tenant {t}: pool quota exceeded ({} B in flight + {} B \
+                 > {} B cap)",
+                u.pool_in_flight, pool_bytes, policy.max_pool_bytes
+            ));
+        }
+        let fresh_charge = match cache_key {
+            Some((hash, cost)) if !u.cache_keys.contains(&hash) => {
+                if u.cache_charged.saturating_add(cost)
+                    > policy.max_cache_bytes
+                {
+                    return Err(format!(
+                        "tenant {t}: compile-cache quota exceeded \
+                         ({} B charged + {} B > {} B cap)",
+                        u.cache_charged, cost, policy.max_cache_bytes
+                    ));
+                }
+                Some((hash, cost))
+            }
+            _ => None,
+        };
+        u.pool_in_flight += pool_bytes;
+        if let Some((hash, cost)) = fresh_charge {
+            u.cache_keys.insert(hash);
+            u.cache_charged += cost;
+        }
+        Ok(())
+    }
+
+    /// Return pool bytes when an admitted request finishes.
+    pub fn credit_pool(&self, t: TenantId, pool_bytes: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(u) = inner.get_mut(&t) {
+            u.pool_in_flight =
+                u.pool_in_flight.saturating_sub(pool_bytes);
+        }
+    }
+
+    /// `(tenant, pool_bytes_in_flight, cache_bytes_charged)` rows for
+    /// the metrics mirror.
+    pub fn usage(&self) -> Vec<(TenantId, u64, u64)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(&t, u)| (t, u.pool_in_flight, u.cache_charged))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn two_tenant_cfg() -> FairConfig {
+        FairConfig {
+            default_policy: TenantPolicy::default(),
+            tenants: vec![
+                (1, TenantPolicy { weight: 2, ..Default::default() }),
+                (2, TenantPolicy { weight: 1, ..Default::default() }),
+            ],
+        }
+    }
+
+    #[test]
+    fn drr_serves_proportionally_to_weight() {
+        let q = FairQueue::new(16, two_tenant_cfg());
+        for i in 0..4 {
+            assert!(matches!(
+                q.try_push(1, format!("a{i}")),
+                TryPush::Accepted
+            ));
+        }
+        for i in 0..4 {
+            assert!(matches!(
+                q.try_push(2, format!("b{i}")),
+                TryPush::Accepted
+            ));
+        }
+        let order: Vec<String> = (0..8).map(|_| q.pop().unwrap()).collect();
+        // weight 2 tenant gets two items per round, weight 1 gets one
+        assert_eq!(
+            order,
+            vec!["a0", "a1", "b0", "a2", "a3", "b1", "b2", "b3"]
+        );
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn interleaved_arrivals_cannot_starve_a_light_tenant() {
+        let q = FairQueue::new(64, FairConfig::default());
+        for i in 0..32 {
+            assert!(matches!(q.try_push(9, i), TryPush::Accepted));
+        }
+        // late-arriving light tenant is served on the very next round
+        assert!(matches!(q.try_push(5, 1000), TryPush::Accepted));
+        let first_two = [q.pop().unwrap(), q.pop().unwrap()];
+        assert!(
+            first_two.contains(&1000),
+            "light tenant not served within one round: {first_two:?}"
+        );
+    }
+
+    #[test]
+    fn per_tenant_capacity_is_independent() {
+        let q = FairQueue::new(2, FairConfig::default());
+        assert!(matches!(q.try_push(1, 10), TryPush::Accepted));
+        assert!(matches!(q.try_push(1, 11), TryPush::Accepted));
+        // tenant 1 is full — its item bounces back…
+        match q.try_push(1, 12) {
+            TryPush::Full(v) => assert_eq!(v, 12),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        // …but tenant 2 still has room
+        assert!(matches!(q.try_push(2, 20), TryPush::Accepted));
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.depths(), vec![(1, 2), (2, 1)]);
+    }
+
+    #[test]
+    fn blocking_push_waits_for_room_and_close_unblocks() {
+        let q = Arc::new(FairQueue::new(1, FairConfig::default()));
+        assert!(q.push_wait(1, 0).is_ok());
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.push_wait(1, 1));
+        // the pusher blocks until we pop; pop is the event that makes
+        // room, so join-after-pop is deterministic
+        assert_eq!(q.pop(), Some(0));
+        h.join().unwrap().unwrap();
+        assert_eq!(q.pop(), Some(1));
+
+        // a blocked pusher on a closed queue gets its item back
+        assert!(q.push_wait(2, 7).is_ok());
+        let q3 = q.clone();
+        let h = std::thread::spawn(move || q3.push_wait(2, 8));
+        // close wakes it regardless of whether it blocked yet
+        std::thread::sleep(Duration::from_millis(10));
+        q.close();
+        assert_eq!(h.join().unwrap(), Err(8));
+        // close drains: the queued item is still served, then Closed
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn pop_deadline_times_out_then_delivers() {
+        let q = FairQueue::new(4, FairConfig::default());
+        let t = Instant::now();
+        match q.pop_deadline(t + Duration::from_millis(5)) {
+            PopResult::TimedOut => {}
+            other => panic!("expected TimedOut, got {other:?}"),
+        }
+        assert!(t.elapsed() >= Duration::from_millis(5));
+        assert!(matches!(q.try_push(1, 42), TryPush::Accepted));
+        match q.pop_deadline(Instant::now() + Duration::from_secs(5)) {
+            PopResult::Item(v) => assert_eq!(v, 42),
+            other => panic!("expected Item, got {other:?}"),
+        }
+        q.close();
+        match q.pop_deadline(Instant::now() + Duration::from_secs(5)) {
+            PopResult::Closed => {}
+            other => panic!("expected Closed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn quota_table_debits_credits_and_rejects() {
+        let cfg = FairConfig {
+            default_policy: TenantPolicy {
+                weight: 1,
+                max_pool_bytes: 1000,
+                max_cache_bytes: 100,
+            },
+            tenants: vec![],
+        };
+        let tbl = TenantTable::new(cfg);
+        // pool gauge: admit to the cap, reject past it, credit frees
+        assert!(tbl.admit(1, 600, None).is_ok());
+        assert!(tbl.admit(1, 400, None).is_ok());
+        let err = tbl.admit(1, 1, None).unwrap_err();
+        assert!(err.contains("pool quota"), "{err}");
+        // another tenant has its own gauge
+        assert!(tbl.admit(2, 1000, None).is_ok());
+        tbl.credit_pool(1, 400);
+        assert!(tbl.admit(1, 300, None).is_ok());
+
+        // cache charge is cumulative over *distinct* keys
+        assert!(tbl.admit(3, 0, Some((0xAA, 60))).is_ok());
+        // same key again: no new charge, still admitted
+        assert!(tbl.admit(3, 0, Some((0xAA, 60))).is_ok());
+        assert!(tbl.admit(3, 0, Some((0xBB, 40))).is_ok());
+        let err = tbl.admit(3, 0, Some((0xCC, 1))).unwrap_err();
+        assert!(err.contains("compile-cache quota"), "{err}");
+        // a failed admission must not leak a partial charge
+        let rows = tbl.usage();
+        let row3 = rows.iter().find(|r| r.0 == 3).unwrap();
+        assert_eq!((row3.1, row3.2), (0, 100));
+        let row1 = rows.iter().find(|r| r.0 == 1).unwrap();
+        assert_eq!(row1.1, 900);
+    }
+}

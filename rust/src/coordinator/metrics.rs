@@ -1,14 +1,18 @@
 //! Coordinator metrics — the §5 run-time services (timing, counters)
 //! surfaced at system level: the unified compile-cache counters (Fig 2
-//! economics as a live observable), the §6.3 staging-pool stats, and
-//! queue saturation signals (wait-time histogram + full-queue
-//! rejections) for the bounded request channel.
+//! economics as a live observable), the §6.3 staging-pool stats, queue
+//! saturation signals (wait-time histogram + full-queue rejections)
+//! for the bounded request channel, and the serving-tier observables:
+//! per-tenant counters (jobs, rejections, queue wait, quota usage) and
+//! cross-request batching counters.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::array::plan::stats::PlannerSnapshot;
+use crate::coordinator::api::TenantId;
 use crate::mempool::PoolStats;
 use crate::rtcg::cache::CacheSnapshot;
 
@@ -47,6 +51,136 @@ impl QueueWaitHisto {
     pub fn snapshot(&self) -> [u64; QUEUE_WAIT_BUCKET_COUNT] {
         std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
     }
+
+    /// Interpolated quantile (in µs) of the live histogram; see
+    /// [`QueueWaitHisto::quantile_of`].
+    pub fn quantile(&self, q: f64) -> f64 {
+        Self::quantile_of(&self.snapshot(), q)
+    }
+
+    /// Extract the `q`-quantile (0.0–1.0) in µs from fixed-bucket
+    /// counts, linearly interpolating inside the bucket that holds the
+    /// rank.  The bucket covering `(prev_bound, bound]` is treated as
+    /// uniform over that range (the first bucket starts at 0; the
+    /// overflow bucket is capped at 10× the last bound).  Returns 0.0
+    /// for an empty histogram.
+    pub fn quantile_of(
+        counts: &[u64; QUEUE_WAIT_BUCKET_COUNT],
+        q: f64,
+    ) -> f64 {
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let last = QUEUE_WAIT_BUCKETS_US.len() - 1;
+        let rank = q.clamp(0.0, 1.0) * total as f64;
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let below = cum;
+            cum += c;
+            if cum as f64 >= rank {
+                let lo = if i == 0 {
+                    0.0
+                } else {
+                    QUEUE_WAIT_BUCKETS_US[i - 1] as f64
+                };
+                let hi = if i <= last {
+                    QUEUE_WAIT_BUCKETS_US[i] as f64
+                } else {
+                    QUEUE_WAIT_BUCKETS_US[last] as f64 * 10.0
+                };
+                let frac =
+                    ((rank - below as f64) / c as f64).clamp(0.0, 1.0);
+                return lo + frac * (hi - lo);
+            }
+        }
+        // unreachable: cum == total ≥ rank by the final iteration
+        QUEUE_WAIT_BUCKETS_US[last] as f64 * 10.0
+    }
+}
+
+/// Live per-tenant counters.  One instance per tenant, shared between
+/// the admission path and the dispatch/batching paths via `Arc`.
+#[derive(Debug, Default)]
+pub struct TenantStats {
+    /// requests accepted and executed (or batched) for this tenant
+    pub jobs: AtomicU64,
+    /// requests shed at admission (queue full, quota, backlog cap)
+    pub rejections: AtomicU64,
+    /// requests that completed with an error response
+    pub errors: AtomicU64,
+    /// admission wait (enqueue → execution start) for this tenant
+    pub queue_wait_hist: QueueWaitHisto,
+}
+
+/// Point-in-time per-tenant copy for reporting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSnapshot {
+    pub tenant: TenantId,
+    pub jobs: u64,
+    pub rejections: u64,
+    pub errors: u64,
+    /// pool bytes currently admitted but not yet completed
+    pub pool_bytes_in_flight: u64,
+    /// cumulative compile-cache bytes charged to this tenant's quota
+    pub cache_bytes_charged: u64,
+    pub queue_wait_hist: [u64; QUEUE_WAIT_BUCKET_COUNT],
+}
+
+impl TenantSnapshot {
+    /// Interpolated queue-wait quantile (µs) for this tenant.
+    pub fn queue_wait_quantile(&self, q: f64) -> f64 {
+        QueueWaitHisto::quantile_of(&self.queue_wait_hist, q)
+    }
+}
+
+/// Cross-request batching counters (the serving tier's batching stage
+/// between intake and dispatch).
+#[derive(Debug, Default)]
+pub struct BatchStats {
+    /// batched launches dispatched (each covers ≥1 request)
+    pub batches: AtomicU64,
+    /// requests that travelled inside those batches
+    pub batched_jobs: AtomicU64,
+    /// batches flushed because they reached `max_batch`
+    pub size_flushes: AtomicU64,
+    /// batches flushed because `max_wait` expired first
+    pub deadline_flushes: AtomicU64,
+    /// launches avoided by coalescing (batched_jobs − batches)
+    pub launches_saved: AtomicU64,
+    /// compiles shared across requests in one batch
+    pub shared_compiles: AtomicU64,
+}
+
+impl BatchStats {
+    pub fn snapshot(&self) -> BatchSnapshot {
+        BatchSnapshot {
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_jobs: self.batched_jobs.load(Ordering::Relaxed),
+            size_flushes: self.size_flushes.load(Ordering::Relaxed),
+            deadline_flushes: self
+                .deadline_flushes
+                .load(Ordering::Relaxed),
+            launches_saved: self.launches_saved.load(Ordering::Relaxed),
+            shared_compiles: self
+                .shared_compiles
+                .load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time batching counters for reporting.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BatchSnapshot {
+    pub batches: u64,
+    pub batched_jobs: u64,
+    pub size_flushes: u64,
+    pub deadline_flushes: u64,
+    pub launches_saved: u64,
+    pub shared_compiles: u64,
 }
 
 #[derive(Debug, Default)]
@@ -86,6 +220,16 @@ pub struct Metrics {
     // discipline; the live counters are process-global in
     // `array::plan::stats`)
     planner: Mutex<PlannerSnapshot>,
+    /// batched elementwise requests served (tentpole op kind)
+    pub elementwise_jobs: AtomicU64,
+    /// cross-request batching counters
+    pub batch: BatchStats,
+    // per-tenant live counters; created lazily on first touch
+    tenants: Mutex<BTreeMap<TenantId, Arc<TenantStats>>>,
+    // per-tenant quota usage gauges (pool bytes in flight, cumulative
+    // cache bytes charged), mirrored from the admission table on the
+    // Stats path like the other gauges
+    tenant_usage: Mutex<BTreeMap<TenantId, (u64, u64)>>,
 }
 
 /// A point-in-time copy for reporting.
@@ -113,6 +257,12 @@ pub struct Snapshot {
     pub pool: PoolStats,
     /// graph-planner decision counters (see `array::plan::stats`)
     pub planner: PlannerSnapshot,
+    /// batched elementwise requests served
+    pub elementwise_jobs: u64,
+    /// cross-request batching counters (see [`BatchStats`])
+    pub batch: BatchSnapshot,
+    /// per-tenant counters + quota gauges, sorted by tenant id
+    pub tenants: Vec<TenantSnapshot>,
 }
 
 impl Metrics {
@@ -159,7 +309,46 @@ impl Metrics {
         *self.planner.lock().unwrap() = s.clone();
     }
 
+    /// Live counters for one tenant (created on first touch).
+    pub fn tenant(&self, t: TenantId) -> Arc<TenantStats> {
+        self.tenants
+            .lock()
+            .unwrap()
+            .entry(t)
+            .or_default()
+            .clone()
+    }
+
+    /// Refresh the per-tenant quota-usage gauges
+    /// (`(tenant, pool_bytes_in_flight, cache_bytes_charged)` rows).
+    pub fn update_tenant_usage(&self, rows: Vec<(TenantId, u64, u64)>) {
+        let mut usage = self.tenant_usage.lock().unwrap();
+        for (t, pool, cache) in rows {
+            usage.insert(t, (pool, cache));
+        }
+    }
+
     pub fn snapshot(&self) -> Snapshot {
+        let usage = self.tenant_usage.lock().unwrap().clone();
+        let tenants = self
+            .tenants
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(&t, s)| {
+                let (pool, cache) =
+                    usage.get(&t).copied().unwrap_or((0, 0));
+                TenantSnapshot {
+                    tenant: t,
+                    jobs: s.jobs.load(Ordering::Relaxed),
+                    rejections: s.rejections.load(Ordering::Relaxed),
+                    errors: s.errors.load(Ordering::Relaxed),
+                    pool_bytes_in_flight: pool,
+                    cache_bytes_charged: cache,
+                    queue_wait_hist: s.queue_wait_hist.snapshot(),
+                }
+            })
+            .collect();
         Snapshot {
             requests: self.requests.load(Ordering::Relaxed),
             launches: self.launches.load(Ordering::Relaxed),
@@ -192,6 +381,11 @@ impl Metrics {
             },
             pool: self.pool.lock().unwrap().clone(),
             planner: self.planner.lock().unwrap().clone(),
+            elementwise_jobs: self
+                .elementwise_jobs
+                .load(Ordering::Relaxed),
+            batch: self.batch.snapshot(),
+            tenants,
         }
     }
 }
@@ -280,6 +474,86 @@ mod tests {
         assert!(m.snapshot().exec_queue_depths.is_empty());
         m.update_exec_depths(vec![3, 0, 7]);
         assert_eq!(m.snapshot().exec_queue_depths, vec![3, 0, 7]);
+    }
+
+    #[test]
+    fn quantile_interpolates_within_buckets() {
+        // empty histogram → 0
+        let empty = [0u64; QUEUE_WAIT_BUCKET_COUNT];
+        assert_eq!(QueueWaitHisto::quantile_of(&empty, 0.5), 0.0);
+
+        // 100 samples all in bucket 1 — the (10µs, 100µs] range
+        let mut counts = [0u64; QUEUE_WAIT_BUCKET_COUNT];
+        counts[1] = 100;
+        let p50 = QueueWaitHisto::quantile_of(&counts, 0.5);
+        let p99 = QueueWaitHisto::quantile_of(&counts, 0.99);
+        assert!((p50 - 55.0).abs() < 1e-9, "p50 {p50}");
+        assert!((p99 - 99.1).abs() < 1e-9, "p99 {p99}");
+
+        // split across buckets: 50 in bucket 0, 50 in bucket 2
+        let mut counts = [0u64; QUEUE_WAIT_BUCKET_COUNT];
+        counts[0] = 50;
+        counts[2] = 50;
+        // p25 → rank 25 lands mid-bucket-0 → 5µs
+        let p25 = QueueWaitHisto::quantile_of(&counts, 0.25);
+        assert!((p25 - 5.0).abs() < 1e-9, "p25 {p25}");
+        // p75 → rank 75 lands mid-bucket-2 → 100 + 0.5·900 = 550µs
+        let p75 = QueueWaitHisto::quantile_of(&counts, 0.75);
+        assert!((p75 - 550.0).abs() < 1e-9, "p75 {p75}");
+        // p100 → top of last populated bucket
+        let p100 = QueueWaitHisto::quantile_of(&counts, 1.0);
+        assert!((p100 - 1_000.0).abs() < 1e-9, "p100 {p100}");
+
+        // overflow bucket interpolates toward 10× the last bound
+        let mut counts = [0u64; QUEUE_WAIT_BUCKET_COUNT];
+        counts[QUEUE_WAIT_BUCKET_COUNT - 1] = 10;
+        let p = QueueWaitHisto::quantile_of(&counts, 0.5);
+        assert!(p > 1_000_000.0 && p <= 10_000_000.0, "overflow {p}");
+
+        // the live histogram agrees with the associated fn
+        let h = QueueWaitHisto::default();
+        for _ in 0..100 {
+            h.observe_ns(50_000); // 50µs → bucket 1
+        }
+        assert!((h.quantile(0.5) - 55.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tenant_and_batch_counters_surface_in_snapshot() {
+        let m = Metrics::default();
+        assert!(m.snapshot().tenants.is_empty());
+        let t7 = m.tenant(7);
+        t7.jobs.fetch_add(3, Ordering::Relaxed);
+        t7.rejections.fetch_add(1, Ordering::Relaxed);
+        t7.queue_wait_hist.observe_ns(50_000);
+        // same Arc on re-touch
+        m.tenant(7).jobs.fetch_add(1, Ordering::Relaxed);
+        m.tenant(2).errors.fetch_add(2, Ordering::Relaxed);
+        m.update_tenant_usage(vec![(7, 4096, 8192)]);
+        m.batch.batches.fetch_add(2, Ordering::Relaxed);
+        m.batch.batched_jobs.fetch_add(9, Ordering::Relaxed);
+        m.batch.launches_saved.fetch_add(7, Ordering::Relaxed);
+        m.elementwise_jobs.fetch_add(9, Ordering::Relaxed);
+
+        let s = m.snapshot();
+        assert_eq!(s.elementwise_jobs, 9);
+        assert_eq!(s.batch.batches, 2);
+        assert_eq!(s.batch.batched_jobs, 9);
+        assert_eq!(s.batch.launches_saved, 7);
+        // sorted by tenant id
+        assert_eq!(
+            s.tenants.iter().map(|t| t.tenant).collect::<Vec<_>>(),
+            vec![2, 7]
+        );
+        let t = &s.tenants[1];
+        assert_eq!((t.jobs, t.rejections, t.errors), (4, 1, 0));
+        assert_eq!(t.pool_bytes_in_flight, 4096);
+        assert_eq!(t.cache_bytes_charged, 8192);
+        assert_eq!(t.queue_wait_hist.iter().sum::<u64>(), 1);
+        assert!(t.queue_wait_quantile(0.5) > 10.0);
+        let t2 = &s.tenants[0];
+        assert_eq!((t2.jobs, t2.errors), (0, 2));
+        assert_eq!(t2.pool_bytes_in_flight, 0);
     }
 
     #[test]

@@ -1,18 +1,48 @@
-//! L3 coordinator: a threaded request-service loop exposing the toolkit
-//! as a service — kernel launches, array ops, tuning jobs — with
-//! metrics.  The paper's two-tier thesis at system scale: the high-level
-//! tier orchestrates ("control input is needed by the GPU about once
-//! every millisecond"), generated device code computes.
+//! L3 coordinator: a multi-tenant serving tier exposing the toolkit
+//! as a service — kernel launches, generated-source runs, elementwise
+//! calls, tuning jobs — with per-tenant fairness, quotas, and metrics.
 //!
-//! Since the exec subsystem landed, the service thread is an admission
-//! queue, not an executor: launches and source runs dispatch to
-//! `exec::Scheduler`'s per-device workers and reply from there, while
-//! the bounded intake channel exposes saturation (queue-wait histogram,
-//! full-queue rejection counter) through `metrics::Snapshot`.
+//! This is the paper's §2 thesis ("Scripting: Enough for GPUs" — the
+//! high-level tier orchestrates, "control input is needed by the GPU
+//! about once every millisecond", generated device code computes)
+//! pushed to system scale.  Each serving-tier stage maps onto a §2
+//! claim:
+//!
+//! - **Cross-request batching** (`batch`) is §2's throughput argument
+//!   inverted: because control decisions are needed only ~once per
+//!   millisecond, a millisecond-scale `max_wait` window is free — the
+//!   tier spends it coalescing identically-described requests from
+//!   *different* callers into one launch, amortizing the (slow,
+//!   scripted) control path over many (fast, generated) device
+//!   executions.  RTCG makes the merge cheap: a batched elementwise
+//!   kernel depends only on total length, so equal-length batches
+//!   share one compiled executable (Fig 2 economics across tenants).
+//! - **Weighted-fair scheduling + quotas** (`fair`) keep the
+//!   control-tier latency budget honest under multi-tenancy: deficit
+//!   round-robin intake bounds any tenant's head-of-line wait to one
+//!   round, and admission quotas (pool bytes in flight, cumulative
+//!   compile-cache bytes) bound how much of the shared caches one
+//!   tenant's run-time code generation can claim.
+//! - **Sharded coordinators** (`router`) scale the control tier the
+//!   same way §2 scales the device tier — by replication behind a
+//!   consistent-hash ring keyed on cache identity, so each shard's
+//!   compile cache holds exactly the working set routed to it.
+//!
+//! The service thread itself (`server`) remains an admission queue,
+//! not an executor: resolved work dispatches to `exec::Scheduler`'s
+//! per-device workers, and saturation is observable end to end
+//! (per-tenant wait histograms, rejection counters, batching
+//! counters) through `metrics::Snapshot`.
 
 pub mod api;
+pub mod batch;
+pub mod fair;
 pub mod metrics;
+pub mod router;
 pub mod server;
 
-pub use api::{Request, Response};
+pub use api::{Op, Request, Response, TenantId};
+pub use batch::BatchConfig;
+pub use fair::{FairConfig, TenantPolicy};
+pub use router::Router;
 pub use server::{Coordinator, CoordinatorConfig};

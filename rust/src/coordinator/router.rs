@@ -1,0 +1,276 @@
+//! Scale-out: N coordinator shards behind a consistent-hash router.
+//!
+//! Routing is keyed on [`Request::route_material`] — the same string
+//! the compile cache and the batching stage key on — so identical
+//! generated kernels always land on the same shard: its compile cache
+//! accumulates exactly the working set routed to it (no cross-shard
+//! duplicate compiles), and mergeable requests meet in the same
+//! batcher.  The ring uses virtual nodes (64 per shard) so load
+//! spreads evenly, and growing the fleet only *moves* the keys that
+//! now belong to new shards — everything else stays put, keeping
+//! caches warm across resizes.
+//!
+//! Each shard is a full [`Coordinator`]: its own service thread, fair
+//! intake, batcher, and (via an injected toolkit) its own device pool.
+
+use std::sync::mpsc;
+
+use crate::coordinator::api::{Op, Request, Response};
+use crate::coordinator::metrics::Snapshot;
+use crate::coordinator::server::{Coordinator, CoordinatorConfig};
+use crate::util::error::Result;
+use crate::util::hash::fnv1a;
+
+/// Virtual nodes per shard: enough to spread load within a few
+/// percent, small enough that the ring stays cache-resident.
+const VNODES_PER_SHARD: usize = 64;
+
+/// The consistent-hash ring, separated from the shards so the routing
+/// math is testable without starting service threads.
+struct Ring {
+    /// (hash, shard) sorted by hash
+    points: Vec<(u64, usize)>,
+}
+
+impl Ring {
+    fn new(shards: usize) -> Ring {
+        let shards = shards.max(1);
+        let mut points = Vec::with_capacity(shards * VNODES_PER_SHARD);
+        for s in 0..shards {
+            for v in 0..VNODES_PER_SHARD {
+                points.push((
+                    fnv1a(format!("shard{s}|vnode{v}").as_bytes()),
+                    s,
+                ));
+            }
+        }
+        points.sort_unstable();
+        Ring { points }
+    }
+
+    /// Successor point at or after the key's hash, wrapping.  `None`
+    /// material (Stats, Shutdown — no cache identity) pins to shard 0.
+    fn shard_for(&self, material: Option<&str>) -> usize {
+        match material {
+            None => 0,
+            Some(m) => {
+                let h = fnv1a(m.as_bytes());
+                let i = self.points.partition_point(|&(ph, _)| ph < h);
+                self.points[i % self.points.len()].1
+            }
+        }
+    }
+}
+
+/// N coordinator shards behind a consistent-hash router.
+pub struct Router {
+    shards: Vec<Coordinator>,
+    ring: Ring,
+}
+
+impl Router {
+    /// Start `n` shards, each from `cfg_for(shard_index)` — the
+    /// factory typically injects a per-shard toolkit so every shard
+    /// owns its device pool.  Fails fast if any shard fails to start.
+    pub fn start(
+        n: usize,
+        mut cfg_for: impl FnMut(usize) -> CoordinatorConfig,
+    ) -> Result<Router> {
+        let n = n.max(1);
+        let mut shards = Vec::with_capacity(n);
+        for i in 0..n {
+            shards.push(Coordinator::start(cfg_for(i))?);
+        }
+        Ok(Router { shards, ring: Ring::new(n) })
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Which shard a request routes to.
+    pub fn shard_for(&self, req: &Request) -> usize {
+        self.ring.shard_for(req.route_material().as_deref())
+    }
+
+    pub fn submit(&self, req: impl Into<Request>) -> Response {
+        let req = req.into();
+        self.shards[self.shard_for(&req)].submit(req)
+    }
+
+    pub fn try_submit(&self, req: impl Into<Request>) -> Response {
+        let req = req.into();
+        self.shards[self.shard_for(&req)].try_submit(req)
+    }
+
+    /// Pipelined submit (see [`Coordinator::submit_async`]).
+    pub fn submit_async(
+        &self,
+        req: impl Into<Request>,
+    ) -> mpsc::Receiver<Response> {
+        let req = req.into();
+        self.shards[self.shard_for(&req)].submit_async(req)
+    }
+
+    /// Non-blocking pipelined submit.
+    pub fn try_submit_async(
+        &self,
+        req: impl Into<Request>,
+    ) -> mpsc::Receiver<Response> {
+        let req = req.into();
+        self.shards[self.shard_for(&req)].try_submit_async(req)
+    }
+
+    /// Per-shard metrics snapshots, in shard order.
+    pub fn metrics(&self) -> Vec<Snapshot> {
+        self.shards.iter().map(|s| s.metrics()).collect()
+    }
+
+    /// Submit a Stats request to EVERY shard (refreshing each shard's
+    /// cache/pool/usage mirrors, which plain `metrics()` does not) and
+    /// collect the snapshots in shard order.
+    pub fn stats_all(&self) -> Vec<Snapshot> {
+        self.shards
+            .iter()
+            .map(|s| match s.submit(Op::Stats) {
+                Response::Stats(snap) => snap,
+                _ => s.metrics(),
+            })
+            .collect()
+    }
+
+    /// Orderly shutdown of every shard (also triggered by drop, shard
+    /// by shard).
+    pub fn shutdown(&mut self) {
+        for s in &mut self.shards {
+            s.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batch::BatchConfig;
+    use crate::elementwise::EwHost;
+    use crate::rtcg::module::Toolkit;
+    use crate::runtime::HostArray;
+    use std::path::PathBuf;
+    use std::time::Duration;
+
+    fn materials(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("ewb|k{i}|float *x|x[i] = {i}")).collect()
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_total() {
+        let ring = Ring::new(4);
+        for m in materials(100) {
+            let s = ring.shard_for(Some(&m));
+            assert!(s < 4);
+            // stable across independently built rings
+            assert_eq!(s, Ring::new(4).shard_for(Some(&m)));
+        }
+        assert_eq!(ring.shard_for(None), 0);
+        // a single-shard ring routes everything to shard 0
+        let one = Ring::new(1);
+        for m in materials(20) {
+            assert_eq!(one.shard_for(Some(&m)), 0);
+        }
+    }
+
+    #[test]
+    fn virtual_nodes_spread_load() {
+        let ring = Ring::new(4);
+        let mut counts = [0usize; 4];
+        for m in materials(1000) {
+            counts[ring.shard_for(Some(&m))] += 1;
+        }
+        // perfectly uniform would be 250 each; vnodes should keep
+        // every shard within a loose 2× band of fair share
+        for (s, &c) in counts.iter().enumerate() {
+            assert!(
+                (125..=500).contains(&c),
+                "shard {s} got {c}/1000 keys: {counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn growing_the_ring_only_moves_keys_to_new_shards() {
+        // the consistent-hashing property that keeps caches warm:
+        // going 2 → 4 shards, a key either stays on its old shard or
+        // moves to a NEW shard — never between old shards
+        let ring2 = Ring::new(2);
+        let ring4 = Ring::new(4);
+        let mut moved = 0;
+        let all = materials(1000);
+        for m in &all {
+            let old = ring2.shard_for(Some(m));
+            let new = ring4.shard_for(Some(m));
+            if new < 2 {
+                assert_eq!(
+                    new, old,
+                    "key '{m}' moved between surviving shards"
+                );
+            } else {
+                moved += 1;
+            }
+        }
+        // roughly half the keyspace belongs to the new shards
+        assert!(
+            moved > 250 && moved < 750,
+            "moved {moved}/1000 keys to new shards"
+        );
+    }
+
+    #[test]
+    fn sharded_serving_round_trip() {
+        let mut router = Router::start(2, |_shard| CoordinatorConfig {
+            artifacts_dir: PathBuf::from("/nonexistent-artifacts"),
+            optional_artifacts: true,
+            toolkit: Some(Toolkit::init_ephemeral().unwrap()),
+            batch: BatchConfig {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+            },
+            ..Default::default()
+        })
+        .unwrap();
+        // distinct descriptors spread over shards; same descriptor
+        // always returns to the same shard
+        let mut shard_hits = [0u64; 2];
+        for i in 0..8 {
+            let req: Request = Op::Elementwise {
+                decl: "float a, float *x, float *z".into(),
+                op: "z[i] = a + x[i]".into(),
+                name: format!("add{i}"),
+                args: vec![
+                    EwHost::S(i as f64),
+                    EwHost::V(HostArray::f32(vec![2], vec![1.0, 2.0])),
+                ],
+            }
+            .into();
+            let shard = router.shard_for(&req);
+            assert_eq!(shard, router.shard_for(&req));
+            shard_hits[shard] += 1;
+            let out = router.submit(req).outputs().unwrap();
+            assert_eq!(
+                out[0].as_f32().unwrap(),
+                &[1.0 + i as f32, 2.0 + i as f32]
+            );
+        }
+        // per-shard metrics add up to the work we sent
+        let per_shard = router.metrics();
+        let served: u64 =
+            per_shard.iter().map(|m| m.elementwise_jobs).sum();
+        assert_eq!(served, 8);
+        for (s, m) in per_shard.iter().enumerate() {
+            assert_eq!(m.elementwise_jobs, shard_hits[s]);
+        }
+        // Stats pins to shard 0
+        let stats_req: Request = Op::Stats.into();
+        assert_eq!(router.shard_for(&stats_req), 0);
+        router.shutdown();
+    }
+}

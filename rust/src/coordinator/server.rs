@@ -1,50 +1,79 @@
-//! The coordinator event loop.
+//! The coordinator event loop — now a multi-tenant serving tier.
 //!
-//! The service thread owns request intake, the tuning database, and
-//! metrics, but no longer executes launches inline: `Launch` and
-//! `RunSource` jobs are resolved (variant choice, manifest lookup) on
-//! the service thread and then **dispatched to the exec scheduler**,
-//! whose per-device workers compile (behind the unified cache) and
-//! execute them concurrently — the coordinator is an admission queue in
-//! front of the multi-device pool, not a serial executor.  Replies flow
-//! back on each job's own channel from whichever worker ran it; the
-//! service thread quiesces the scheduler (barrier) before exiting, so
-//! shutdown never drops an accepted request.
+//! Three stages sit between a caller and a device worker:
 //!
-//! Backpressure is observable: the bounded intake channel counts
-//! full-queue rejections (`try_submit`); every accepted job's
-//! *end-to-end* admission wait — intake queue plus per-device
-//! scheduler queue, measured enqueue → execution start — feeds a
-//! fixed-bucket histogram (`metrics::QueueWaitHisto`); and Stats
-//! exports the per-device scheduler queue depths, where saturation
-//! accrues once intake admits a job.
+//! 1. **Admission**: per-tenant quotas (pool bytes in flight,
+//!    cumulative compile-cache bytes) are checked before a request is
+//!    queued; over-quota requests are shed immediately and counted.
+//! 2. **Weighted-fair intake**: a deficit-round-robin queue over
+//!    per-tenant bounded FIFOs (`fair::FairQueue`) replaces the single
+//!    intake channel, so one tenant's flood cannot starve another.
+//! 3. **Cross-request batching**: mergeable work (elementwise calls
+//!    with identical descriptors, source runs with identical HLO)
+//!    accumulates in `batch::Batcher` groups and flushes as ONE
+//!    dispatch when a group reaches `max_batch` or its oldest member
+//!    has waited `max_wait` — amortizing launch and compile cost
+//!    across requests from *different* callers.
+//!
+//! Execution itself is unchanged: resolved work dispatches to the exec
+//! scheduler's per-device workers, replies flow back on each request's
+//! own channel, and the service thread quiesces the pool (barrier)
+//! before exiting so shutdown never drops an accepted request.
+//!
+//! Backpressure is observable end to end: full-FIFO and quota
+//! rejections are counted globally and per tenant; every accepted
+//! job's admission wait (enqueue → execution start) feeds both the
+//! global and its tenant's wait histograms; and Stats exports
+//! scheduler depths, batching counters, and per-tenant rows.
 
 use std::path::PathBuf;
+use std::sync::atomic::Ordering;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::coordinator::api::{Request, Response};
-use crate::coordinator::metrics::{Metrics, Snapshot};
+use crate::coordinator::api::{Op, Request, Response, TenantId};
+use crate::coordinator::batch::{
+    BatchConfig, Batcher, GroupKind, ReadyBatch,
+};
+use crate::coordinator::fair::{
+    FairConfig, FairQueue, PopResult, TenantTable, TryPush,
+};
+use crate::coordinator::metrics::{Metrics, Snapshot, TenantStats};
+use crate::elementwise::EwHost;
 use crate::exec::Executor;
-use crate::kernels::Registry;
+use crate::kernels::{Manifest, Registry};
+use crate::rtcg::cache;
 use crate::rtcg::module::Toolkit;
 use crate::runtime::HostArray;
 use crate::tuner::{tune_measured, TuneOpts, TuningDb};
 use crate::util::error::{Error, Result};
+use crate::util::hash::fnv1a;
 
-#[derive(Debug, Clone)]
+#[derive(Clone)]
 pub struct CoordinatorConfig {
     pub artifacts_dir: PathBuf,
-    /// bounded intake-queue depth (backpressure on admission)
+    /// per-tenant intake-FIFO depth (backpressure on admission)
     pub queue_depth: usize,
-    /// shed Launch/RunSource dispatches once this many jobs are
-    /// outstanding across the device pool's (unbounded) worker queues
-    /// — the load-shedding bound the intake channel alone cannot
-    /// provide now that execution is asynchronous
+    /// shed Launch/RunSource/Elementwise dispatches once this many
+    /// jobs are outstanding across the device pool's (unbounded)
+    /// worker queues — the load-shedding bound the intake queues alone
+    /// cannot provide now that execution is asynchronous
     pub pool_backlog_cap: usize,
     /// persist tuning outcomes
     pub tuning_db: Option<PathBuf>,
+    /// run against this toolkit instead of `Toolkit::init()` — how
+    /// shards get their own backends and how tests/benches inject a
+    /// simulated device pool
+    pub toolkit: Option<Toolkit>,
+    /// serve without AOT artifacts: a missing manifest becomes an
+    /// empty pool (Launch requests then error per-request) instead of
+    /// failing startup — for tiers that only handle generated work
+    pub optional_artifacts: bool,
+    /// cross-request batching policy (`max_batch: 1` disables)
+    pub batch: BatchConfig,
+    /// tenant weights and quotas for the fair intake queue
+    pub fair: FairConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -54,6 +83,10 @@ impl Default for CoordinatorConfig {
             queue_depth: 64,
             pool_backlog_cap: 256,
             tuning_db: None,
+            toolkit: None,
+            optional_artifacts: false,
+            batch: BatchConfig::default(),
+            fair: FairConfig::default(),
         }
     }
 }
@@ -62,37 +95,64 @@ struct Job {
     req: Request,
     reply: mpsc::Sender<Response>,
     enqueued: Instant,
+    /// pool bytes debited from the tenant's quota at admission;
+    /// credited back when the reply is sent
+    pool_bytes: u64,
 }
 
 /// Handle to a running coordinator service thread.
 pub struct Coordinator {
-    tx: mpsc::SyncSender<Job>,
+    intake: Arc<FairQueue<Job>>,
+    table: Arc<TenantTable>,
     metrics: Arc<Metrics>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Coordinator {
     /// Start the service thread; fails fast if the artifacts are
-    /// missing (checked on the service thread, reported here).
+    /// missing (checked on the service thread, reported here) unless
+    /// `optional_artifacts` is set.
     pub fn start(cfg: CoordinatorConfig) -> Result<Coordinator> {
-        let (tx, rx) = mpsc::sync_channel::<Job>(cfg.queue_depth);
+        let intake =
+            Arc::new(FairQueue::new(cfg.queue_depth, cfg.fair.clone()));
+        let table = Arc::new(TenantTable::new(cfg.fair.clone()));
         let metrics = Arc::new(Metrics::default());
-        let m2 = metrics.clone();
+        let (i2, t2, m2) = (intake.clone(), table.clone(), metrics.clone());
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let handle = std::thread::Builder::new()
             .name("rtcg-coordinator".into())
-            .spawn(move || service_loop(cfg, rx, m2, ready_tx))
+            .spawn(move || service_loop(cfg, i2, t2, m2, ready_tx))
             .map_err(|e| Error::msg(format!("spawn failed: {e}")))?;
         ready_rx
             .recv()
             .map_err(|_| Error::msg("coordinator died during startup"))??;
-        Ok(Coordinator { tx, metrics, handle: Some(handle) })
+        Ok(Coordinator { intake, table, metrics, handle: Some(handle) })
     }
 
-    fn job_for(req: Request) -> (Job, mpsc::Receiver<Response>) {
-        let (reply_tx, reply_rx) = mpsc::channel();
-        let job = Job { req, reply: reply_tx, enqueued: Instant::now() };
-        (job, reply_rx)
+    /// Check the tenant's quotas and debit them; a rejection is
+    /// counted (globally and per tenant) and returned as the error
+    /// response.  On success, returns the pool bytes debited.
+    fn admit(&self, req: &Request) -> std::result::Result<u64, Response> {
+        let pool_bytes = req.op.input_bytes();
+        // only ops whose compile is keyed on request content charge
+        // cache quota; Launch reuses AOT artifacts, Tune is its own op
+        let cache_key = match &req.op {
+            Op::RunSource { .. } | Op::Elementwise { .. } => req
+                .route_material()
+                .map(|m| (fnv1a(m.as_bytes()), cache::entry_cost(&m))),
+            _ => None,
+        };
+        match self.table.admit(req.tenant, pool_bytes, cache_key) {
+            Ok(()) => Ok(pool_bytes),
+            Err(e) => {
+                self.metrics.note(&self.metrics.queue_rejections);
+                self.metrics
+                    .tenant(req.tenant)
+                    .rejections
+                    .fetch_add(1, Ordering::Relaxed);
+                Err(Response::Error(e))
+            }
+        }
     }
 
     fn await_reply(reply_rx: mpsc::Receiver<Response>) -> Response {
@@ -101,32 +161,92 @@ impl Coordinator {
             .unwrap_or(Response::Error("coordinator dropped reply".into()))
     }
 
-    /// Submit a request and wait for its response (blocks while the
-    /// bounded queue is full — backpressure).
-    pub fn submit(&self, req: Request) -> Response {
-        let (job, reply_rx) = Self::job_for(req);
-        if self.tx.send(job).is_err() {
-            return Response::Error("coordinator is down".into());
-        }
-        Self::await_reply(reply_rx)
+    /// Submit a request and wait for its response (blocks while this
+    /// tenant's bounded FIFO is full — backpressure).  Quota
+    /// violations and pool-backlog shedding still reject immediately:
+    /// blocking admission never bypasses load shedding.
+    pub fn submit(&self, req: impl Into<Request>) -> Response {
+        Self::await_reply(self.submit_async(req))
     }
 
-    /// Submit without blocking on a full queue: saturation turns into
-    /// an immediate, *counted* rejection (`Snapshot.queue_rejections`)
-    /// instead of caller backpressure — the load-shedding mode of the
-    /// ROADMAP's heavy-traffic north star.
-    pub fn try_submit(&self, req: Request) -> Response {
-        let (job, reply_rx) = Self::job_for(req);
-        match self.tx.try_send(job) {
-            Ok(()) => Self::await_reply(reply_rx),
-            Err(mpsc::TrySendError::Full(_)) => {
-                self.metrics.note(&self.metrics.queue_rejections);
-                Response::Error("coordinator queue is full".into())
+    /// Submit without blocking on a full FIFO: saturation turns into
+    /// an immediate, *counted* rejection (`Snapshot.queue_rejections`
+    /// and the tenant's row) instead of caller backpressure.
+    pub fn try_submit(&self, req: impl Into<Request>) -> Response {
+        Self::await_reply(self.try_submit_async(req))
+    }
+
+    /// Pipelined submit: returns the reply channel immediately so a
+    /// driver can keep a window of requests in flight.  Admission
+    /// rejections arrive on the channel like any other response.
+    pub fn submit_async(
+        &self,
+        req: impl Into<Request>,
+    ) -> mpsc::Receiver<Response> {
+        let req = req.into();
+        let tenant = req.tenant;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let pool_bytes = match self.admit(&req) {
+            Ok(b) => b,
+            Err(resp) => {
+                let _ = reply_tx.send(resp);
+                return reply_rx;
             }
-            Err(mpsc::TrySendError::Disconnected(_)) => {
-                Response::Error("coordinator is down".into())
+        };
+        let job = Job {
+            req,
+            reply: reply_tx.clone(),
+            enqueued: Instant::now(),
+            pool_bytes,
+        };
+        if self.intake.push_wait(tenant, job).is_err() {
+            self.table.credit_pool(tenant, pool_bytes);
+            let _ =
+                reply_tx.send(Response::Error("coordinator is down".into()));
+        }
+        reply_rx
+    }
+
+    /// Non-blocking pipelined submit (see [`Coordinator::try_submit`]).
+    pub fn try_submit_async(
+        &self,
+        req: impl Into<Request>,
+    ) -> mpsc::Receiver<Response> {
+        let req = req.into();
+        let tenant = req.tenant;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let pool_bytes = match self.admit(&req) {
+            Ok(b) => b,
+            Err(resp) => {
+                let _ = reply_tx.send(resp);
+                return reply_rx;
+            }
+        };
+        let job = Job {
+            req,
+            reply: reply_tx.clone(),
+            enqueued: Instant::now(),
+            pool_bytes,
+        };
+        match self.intake.try_push(tenant, job) {
+            TryPush::Accepted => {}
+            TryPush::Full(_) => {
+                self.table.credit_pool(tenant, pool_bytes);
+                self.metrics.note(&self.metrics.queue_rejections);
+                self.metrics
+                    .tenant(tenant)
+                    .rejections
+                    .fetch_add(1, Ordering::Relaxed);
+                let _ = reply_tx
+                    .send(Response::Error("coordinator queue is full".into()));
+            }
+            TryPush::Closed(_) => {
+                self.table.credit_pool(tenant, pool_bytes);
+                let _ = reply_tx
+                    .send(Response::Error("coordinator is down".into()));
             }
         }
+        reply_rx
     }
 
     pub fn metrics(&self) -> Snapshot {
@@ -134,10 +254,10 @@ impl Coordinator {
     }
 
     /// Orderly shutdown (also triggered by drop): the service thread
-    /// quiesces the exec scheduler before exiting, so every accepted
-    /// request's reply is delivered first.
+    /// flushes pending batches and quiesces the exec scheduler before
+    /// exiting, so every accepted request's reply is delivered first.
     pub fn shutdown(&mut self) {
-        let _ = self.submit(Request::Shutdown);
+        let _ = self.submit(Op::Shutdown);
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
@@ -150,15 +270,97 @@ impl Drop for Coordinator {
     }
 }
 
+/// Everything needed to finish one request, whichever thread finishes
+/// it: send the reply, credit the tenant's pool quota, and keep the
+/// global + per-tenant counters honest.  Consuming methods make
+/// "reply exactly once" structural.
+struct Done {
+    reply: mpsc::Sender<Response>,
+    tenant: TenantId,
+    pool_bytes: u64,
+    enqueued: Instant,
+    table: Arc<TenantTable>,
+    metrics: Arc<Metrics>,
+    tstats: Arc<TenantStats>,
+}
+
+impl Done {
+    /// Observe the admission wait (enqueue → execution start) on the
+    /// global and per-tenant histograms.  Called once, at the moment
+    /// the request actually starts executing.
+    fn observe_wait(&self) {
+        let ns = self.enqueued.elapsed().as_nanos() as u64;
+        self.metrics.queue_wait_hist.observe_ns(ns);
+        self.tstats.queue_wait_hist.observe_ns(ns);
+    }
+
+    /// Reply with an execution error (counted in `errors`).
+    fn error(self, msg: String) {
+        self.respond(Response::Error(msg));
+    }
+
+    /// Shed this request (counted in `queue_rejections`, not errors).
+    fn reject(self, msg: String) {
+        self.metrics.note(&self.metrics.queue_rejections);
+        self.tstats.rejections.fetch_add(1, Ordering::Relaxed);
+        self.finish(Response::Error(msg));
+    }
+
+    /// Reply with an execution result, counting errors.
+    fn respond(self, resp: Response) {
+        if matches!(resp, Response::Error(_)) {
+            self.metrics.note(&self.metrics.errors);
+            self.tstats.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        self.finish(resp);
+    }
+
+    fn finish(self, resp: Response) {
+        self.table.credit_pool(self.tenant, self.pool_bytes);
+        let _ = self.reply.send(resp);
+    }
+}
+
+/// A request parked in the batching stage.
+struct BatchEntry {
+    payload: Payload,
+    done: Done,
+}
+
+enum Payload {
+    Ew(Vec<EwHost>),
+    Src(Vec<HostArray>),
+}
+
 fn service_loop(
     cfg: CoordinatorConfig,
-    rx: mpsc::Receiver<Job>,
+    intake: Arc<FairQueue<Job>>,
+    table: Arc<TenantTable>,
     metrics: Arc<Metrics>,
     ready: mpsc::Sender<Result<()>>,
 ) {
+    // close intake on every exit path — init failure, panic, orderly
+    // shutdown — so producers blocked in push_wait always wake
+    struct CloseOnExit(Arc<FairQueue<Job>>);
+    impl Drop for CloseOnExit {
+        fn drop(&mut self) {
+            self.0.close();
+        }
+    }
+    let _closer = CloseOnExit(intake.clone());
+
     let init = (|| -> Result<(Registry, Option<TuningDb>)> {
-        let tk = Toolkit::init()?;
-        let registry = Registry::open(tk, &cfg.artifacts_dir)?;
+        let tk = match cfg.toolkit.clone() {
+            Some(tk) => tk,
+            None => Toolkit::init()?,
+        };
+        let manifest = if cfg.optional_artifacts {
+            Manifest::load(&cfg.artifacts_dir)
+                .unwrap_or_else(|_| Manifest::empty())
+        } else {
+            Manifest::load(&cfg.artifacts_dir)?
+        };
+        let registry = Registry::new(tk, manifest);
         let db = match &cfg.tuning_db {
             Some(p) => Some(TuningDb::open(p)?),
             None => None,
@@ -176,34 +378,62 @@ fn service_loop(
         }
     };
     // the toolkit's shared per-device pool: one scheduler serves the
-    // coordinator AND in-process async users (GpuArray, elementwise),
-    // so least-loaded placement sees every queue
+    // coordinator AND in-process async users, so least-loaded
+    // placement sees every queue
     let exec = registry.toolkit().executor();
+    let mut batcher: Batcher<BatchEntry> = Batcher::new(cfg.batch.clone());
 
-    while let Ok(job) = rx.recv() {
-        metrics.note(&metrics.requests);
-        // intake wait (the histogram observes the *end-to-end*
-        // admission wait per request inside dispatch, at execution
-        // start — for dispatched jobs that includes scheduler-queue
-        // time, where saturation actually accrues)
-        metrics.queue_wait_ns.fetch_add(
-            job.enqueued.elapsed().as_nanos() as u64,
-            std::sync::atomic::Ordering::Relaxed,
-        );
-        if dispatch(
-            &registry,
-            &mut db,
-            &metrics,
-            &exec,
-            cfg.pool_backlog_cap as u64,
-            job,
-        ) {
+    loop {
+        // while a batch is pending, bound the pop by its flush
+        // deadline; otherwise block until work (or close) arrives
+        let popped = match batcher.next_deadline() {
+            Some(d) => intake.pop_deadline(d),
+            None => match intake.pop() {
+                Some(j) => PopResult::Item(j),
+                None => PopResult::Closed,
+            },
+        };
+        let mut stop = false;
+        match popped {
+            PopResult::Item(job) => {
+                metrics.note(&metrics.requests);
+                // intake wait (histograms observe the end-to-end
+                // admission wait inside dispatch, at execution start)
+                metrics.queue_wait_ns.fetch_add(
+                    job.enqueued.elapsed().as_nanos() as u64,
+                    Ordering::Relaxed,
+                );
+                stop = dispatch(
+                    &registry,
+                    &mut db,
+                    &metrics,
+                    &exec,
+                    cfg.pool_backlog_cap as u64,
+                    &table,
+                    &mut batcher,
+                    job,
+                );
+            }
+            PopResult::TimedOut => {}
+            PopResult::Closed => stop = true,
+        }
+        for b in batcher.take_expired(Instant::now()) {
+            flush_batch(&registry, &metrics, &exec, b);
+        }
+        if stop {
             break;
         }
     }
-    // requests accepted into the intake queue behind the Shutdown job
-    // still get a reply — never a silently dropped channel
-    while let Ok(job) = rx.try_recv() {
+    // admitted-but-unflushed batches still execute and reply
+    for b in batcher.drain() {
+        flush_batch(&registry, &metrics, &exec, b);
+    }
+    intake.close();
+    // requests queued behind the Shutdown job still get a reply —
+    // never a silently dropped channel (close drains, so pop hands
+    // out the leftovers)
+    while let Some(job) = intake.pop() {
+        table.credit_pool(job.req.tenant, job.pool_bytes);
         let _ = job
             .reply
             .send(Response::Error("coordinator is shutting down".into()));
@@ -216,54 +446,72 @@ fn service_loop(
     }
 }
 
-/// Handle one job: cheap/stateful requests run inline, launches and
-/// source runs go to the scheduler.  Returns `true` on shutdown.
+/// Outstanding jobs across the device pool's worker queues.
+fn pool_backlog(exec: &Executor) -> u64 {
+    exec.scheduler().queue_depths().iter().sum()
+}
+
+/// Handle one job: cheap/stateful requests run inline, launches go to
+/// the scheduler, mergeable work parks in the batching stage.
+/// Returns `true` on shutdown.
+#[allow(clippy::too_many_arguments)]
 fn dispatch(
     registry: &Registry,
     db: &mut Option<TuningDb>,
     metrics: &Arc<Metrics>,
-    exec: &Executor,
+    exec: &Arc<Executor>,
     backlog_cap: u64,
+    table: &Arc<TenantTable>,
+    batcher: &mut Batcher<BatchEntry>,
     job: Job,
 ) -> bool {
-    let reply = job.reply;
-    let enqueued = job.enqueued;
-    // the admission-wait histogram observes at execution start: here
-    // for inline requests, at worker pickup for dispatched ones
-    let observe_wait = |m: &Metrics| {
-        m.queue_wait_hist
-            .observe_ns(enqueued.elapsed().as_nanos() as u64)
+    let Job { req, reply, enqueued, pool_bytes } = job;
+    let Request { tenant, op } = req;
+    let tstats = metrics.tenant(tenant);
+    let done = Done {
+        reply,
+        tenant,
+        pool_bytes,
+        enqueued,
+        table: table.clone(),
+        metrics: metrics.clone(),
+        tstats: tstats.clone(),
     };
-    match job.req {
-        Request::Shutdown => {
-            observe_wait(metrics);
-            let _ = reply.send(Response::ShuttingDown);
+    match op {
+        Op::Shutdown => {
+            done.observe_wait();
+            done.respond(Response::ShuttingDown);
             return true;
         }
-        Request::Stats => {
-            observe_wait(metrics);
-            // refresh the unified compile-cache, staging-pool, and
-            // scheduler-depth mirrors on demand only — snapshot_full()
-            // walks every shard lock, too costly to pay on the Launch
-            // hot path
+        Op::Stats => {
+            tstats.jobs.fetch_add(1, Ordering::Relaxed);
+            done.observe_wait();
+            // refresh the unified compile-cache, staging-pool,
+            // scheduler-depth, planner, and tenant-usage mirrors on
+            // demand only — snapshot_full() walks every shard lock,
+            // too costly to pay on the Launch hot path
             metrics.update_cache(&registry.toolkit().cache().snapshot_full());
             metrics.update_pool(&registry.toolkit().staging_pool().stats());
-            metrics
-                .update_exec_depths(exec.scheduler().queue_depths());
-            metrics
-                .update_planner(&crate::array::plan::stats::snapshot());
-            let _ = reply.send(Response::Stats(metrics.snapshot()));
+            metrics.update_exec_depths(exec.scheduler().queue_depths());
+            metrics.update_planner(&crate::array::plan::stats::snapshot());
+            metrics.update_tenant_usage(table.usage());
+            done.respond(Response::Stats(metrics.snapshot()));
         }
-        Request::Launch { kernel, workload, variant, inputs } => {
+        Op::Launch { kernel, workload, variant, inputs } => {
             // shed before counting: `launches` tracks dispatched work,
             // not rejected intents
-            if pool_saturated(exec, backlog_cap, metrics, &reply) {
+            let backlog = pool_backlog(exec);
+            if backlog >= backlog_cap {
+                done.reject(format!(
+                    "execution pool saturated ({backlog} jobs outstanding)"
+                ));
                 return false;
             }
             metrics.note(&metrics.launches);
+            tstats.jobs.fetch_add(1, Ordering::Relaxed);
             // variant resolution needs the tuning db → inline; the
             // compile + execute goes to a device worker
-            let resolved = (|| -> Result<crate::kernels::manifest::ManifestEntry> {
+            let resolved = (|| -> Result<crate::kernels::ManifestEntry> {
                 let name = match &variant {
                     Some(v) => v.clone(),
                     None => {
@@ -295,53 +543,78 @@ fn dispatch(
             })();
             match resolved {
                 Err(e) => {
-                    observe_wait(metrics);
-                    metrics.note(&metrics.errors);
-                    let _ = reply.send(Response::Error(e.to_string()));
+                    done.observe_wait();
+                    done.error(e.to_string());
                 }
                 Ok(entry) => {
                     let registry = registry.clone();
                     let metrics = metrics.clone();
                     let _ = exec.submit(move |device| {
-                        metrics.queue_wait_hist.observe_ns(
-                            enqueued.elapsed().as_nanos() as u64,
-                        );
+                        done.observe_wait();
                         let resp = metrics.time(|| {
                             run_entry(&registry, &entry, &inputs, device)
                         });
-                        if matches!(resp, Response::Error(_)) {
-                            metrics.note(&metrics.errors);
-                        }
-                        let _ = reply.send(resp);
+                        done.respond(resp);
                         Ok(())
                     });
                 }
             }
         }
-        Request::RunSource { hlo_text, inputs } => {
-            if pool_saturated(exec, backlog_cap, metrics, &reply) {
+        Op::RunSource { hlo_text, inputs } => {
+            let backlog = pool_backlog(exec);
+            if backlog >= backlog_cap {
+                done.reject(format!(
+                    "execution pool saturated ({backlog} jobs outstanding)"
+                ));
                 return false;
             }
             metrics.note(&metrics.source_runs);
-            let registry = registry.clone();
-            let metrics = metrics.clone();
-            let _ = exec.submit(move |device| {
-                metrics.queue_wait_hist.observe_ns(
-                    enqueued.elapsed().as_nanos() as u64,
-                );
-                let resp = metrics.time(|| {
-                    run_source(&registry, &hlo_text, &inputs, device)
-                });
-                if matches!(resp, Response::Error(_)) {
-                    metrics.note(&metrics.errors);
-                }
-                let _ = reply.send(resp);
-                Ok(())
-            });
+            tstats.jobs.fetch_add(1, Ordering::Relaxed);
+            let material = format!("src|{hlo_text}");
+            if let Some(b) = batcher.add(
+                material,
+                GroupKind::Source { hlo_text },
+                BatchEntry { payload: Payload::Src(inputs), done },
+                Instant::now(),
+            ) {
+                flush_batch(registry, metrics, exec, b);
+            }
         }
-        Request::Tune { kernel, workload, seed } => {
-            observe_wait(metrics);
+        Op::Elementwise { decl, op, name, args } => {
+            let backlog = pool_backlog(exec);
+            if backlog >= backlog_cap {
+                done.reject(format!(
+                    "execution pool saturated ({backlog} jobs outstanding)"
+                ));
+                return false;
+            }
+            metrics.note(&metrics.elementwise_jobs);
+            tstats.jobs.fetch_add(1, Ordering::Relaxed);
+            // validate up front (cheap, no compile): a bad request
+            // errors out alone instead of poisoning its batch group
+            match crate::elementwise::validate_hosts(
+                &decl, &op, &name, &args,
+            ) {
+                Err(e) => {
+                    done.observe_wait();
+                    done.error(e.to_string());
+                }
+                Ok((material, _n)) => {
+                    if let Some(b) = batcher.add(
+                        material,
+                        GroupKind::Elementwise { decl, op, name },
+                        BatchEntry { payload: Payload::Ew(args), done },
+                        Instant::now(),
+                    ) {
+                        flush_batch(registry, metrics, exec, b);
+                    }
+                }
+            }
+        }
+        Op::Tune { kernel, workload, seed } => {
+            done.observe_wait();
             metrics.note(&metrics.tunes);
+            tstats.jobs.fetch_add(1, Ordering::Relaxed);
             // tuning measures wall time per variant — quiesce the
             // device pool first, then run inline and serial, so
             // previously dispatched launches can't skew the numbers
@@ -374,42 +647,131 @@ fn dispatch(
                         pruned,
                     }
                 }
-                Err(e) => {
-                    metrics.note(&metrics.errors);
-                    Response::Error(e.to_string())
-                }
+                Err(e) => Response::Error(e.to_string()),
             };
-            let _ = reply.send(resp);
+            done.respond(resp);
         }
     }
     false
 }
 
-/// Load shedding at dispatch: the intake channel drains in
-/// microseconds now that execution is asynchronous, so saturation is
-/// judged against the device pool's outstanding backlog instead.  A
-/// shed request gets an immediate error reply and counts as a queue
-/// rejection.
-fn pool_saturated(
+/// Dispatch one flushed batch to a device worker.  Elementwise groups
+/// become ONE merged launch (`run_batched_hosts`: concatenated
+/// vectors, per-segment scalar parameter vectors, outputs split back
+/// per request); source groups share one compile and execute each
+/// member's inputs on the same worker.
+fn flush_batch(
+    registry: &Registry,
+    metrics: &Arc<Metrics>,
     exec: &Executor,
-    backlog_cap: u64,
-    metrics: &Metrics,
-    reply: &mpsc::Sender<Response>,
-) -> bool {
-    let backlog: u64 = exec.scheduler().queue_depths().iter().sum();
-    if backlog < backlog_cap {
-        return false;
+    batch: ReadyBatch<BatchEntry>,
+) {
+    let k = batch.entries.len() as u64;
+    if k == 0 {
+        return;
     }
-    metrics.note(&metrics.queue_rejections);
-    let _ = reply.send(Response::Error(format!(
-        "execution pool saturated ({backlog} jobs outstanding)"
-    )));
-    true
+    metrics.note(&metrics.batch.batches);
+    metrics.batch.batched_jobs.fetch_add(k, Ordering::Relaxed);
+    if batch.by_deadline {
+        metrics.note(&metrics.batch.deadline_flushes);
+    } else {
+        metrics.note(&metrics.batch.size_flushes);
+    }
+    match batch.kind {
+        GroupKind::Elementwise { decl, op, name } => {
+            metrics
+                .batch
+                .launches_saved
+                .fetch_add(k - 1, Ordering::Relaxed);
+            metrics
+                .batch
+                .shared_compiles
+                .fetch_add(k - 1, Ordering::Relaxed);
+            let mut dones = Vec::with_capacity(batch.entries.len());
+            let mut calls = Vec::with_capacity(batch.entries.len());
+            for e in batch.entries {
+                let BatchEntry { payload, done } = e;
+                match payload {
+                    Payload::Ew(args) => {
+                        calls.push(args);
+                        dones.push(done);
+                    }
+                    Payload::Src(_) => {
+                        done.error("internal: mixed batch entry".into())
+                    }
+                }
+            }
+            let registry = registry.clone();
+            let metrics = metrics.clone();
+            let _ = exec.submit(move |device| {
+                for d in &dones {
+                    d.observe_wait();
+                }
+                let r = metrics.time(|| {
+                    crate::elementwise::run_batched_hosts(
+                        registry.toolkit(),
+                        device,
+                        &decl,
+                        &op,
+                        &name,
+                        &calls,
+                    )
+                });
+                match r {
+                    Ok(outs) => {
+                        // outs[j] is call j's outputs, in batch order
+                        for (d, o) in dones.into_iter().zip(outs) {
+                            d.respond(Response::Outputs(o));
+                        }
+                    }
+                    Err(e) => {
+                        let msg = e.to_string();
+                        for d in dones {
+                            d.error(msg.clone());
+                        }
+                    }
+                }
+                Ok(())
+            });
+        }
+        GroupKind::Source { hlo_text } => {
+            // k executions on one worker: the first compiles (or
+            // mem-hits), the rest hit the cache without single-flight
+            // stalls — the shared-compile saving
+            metrics
+                .batch
+                .shared_compiles
+                .fetch_add(k - 1, Ordering::Relaxed);
+            let registry = registry.clone();
+            let metrics = metrics.clone();
+            let entries = batch.entries;
+            let _ = exec.submit(move |device| {
+                for e in entries {
+                    let BatchEntry { payload, done } = e;
+                    let inputs = match payload {
+                        Payload::Src(i) => i,
+                        Payload::Ew(_) => {
+                            done.error(
+                                "internal: mixed batch entry".into(),
+                            );
+                            continue;
+                        }
+                    };
+                    done.observe_wait();
+                    let resp = metrics.time(|| {
+                        run_source(&registry, &hlo_text, &inputs, device)
+                    });
+                    done.respond(resp);
+                }
+                Ok(())
+            });
+        }
+    }
 }
 
 fn run_entry(
     registry: &Registry,
-    entry: &crate::kernels::manifest::ManifestEntry,
+    entry: &crate::kernels::ManifestEntry,
     inputs: &[HostArray],
     device: usize,
 ) -> Response {
@@ -444,7 +806,10 @@ fn run_source(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::fair::TenantPolicy;
+    use crate::exec::Event;
     use crate::runtime::HostArray;
+    use std::time::Duration;
 
     fn start() -> Coordinator {
         let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
@@ -452,10 +817,22 @@ mod tests {
         Coordinator::start(CoordinatorConfig {
             artifacts_dir: dir,
             queue_depth: 8,
-            pool_backlog_cap: 256,
-            tuning_db: None,
+            ..Default::default()
         })
         .unwrap()
+    }
+
+    /// A coordinator with no service thread, for deterministic
+    /// admission-path tests; `close_first` must run before drop so the
+    /// drop-path Shutdown submit fails fast instead of waiting on a
+    /// reply that will never come.
+    fn serviceless(depth: usize, fair: FairConfig) -> Coordinator {
+        Coordinator {
+            intake: Arc::new(FairQueue::new(depth, fair.clone())),
+            table: Arc::new(TenantTable::new(fair)),
+            metrics: Arc::new(Metrics::default()),
+            handle: None,
+        }
     }
 
     #[test]
@@ -467,7 +844,7 @@ mod tests {
         let c = start();
         let n = 524288;
         let out = c
-            .submit(Request::Launch {
+            .submit(Op::Launch {
                 kernel: "axpy".into(),
                 workload: "axpy_524288".into(),
                 variant: Some("b8192".into()),
@@ -484,6 +861,9 @@ mod tests {
         let m = c.metrics();
         assert_eq!(m.launches, 1);
         assert_eq!(m.errors, 0);
+        // the launch is attributed to the default tenant
+        let t0 = m.tenants.iter().find(|t| t.tenant == 0).unwrap();
+        assert_eq!(t0.jobs, 1);
     }
 
     #[test]
@@ -502,7 +882,7 @@ ENTRY main {
 }
 "#;
         let out = c
-            .submit(Request::RunSource {
+            .submit(Op::RunSource {
                 hlo_text: hlo.into(),
                 inputs: vec![HostArray::f32(vec![3], vec![1., 2., 3.])],
             })
@@ -518,7 +898,7 @@ ENTRY main {
     )]
     fn errors_are_responses_not_crashes() {
         let c = start();
-        let r = c.submit(Request::Launch {
+        let r = c.submit(Op::Launch {
             kernel: "nope".into(),
             workload: "w".into(),
             variant: None,
@@ -526,33 +906,255 @@ ENTRY main {
         });
         assert!(matches!(r, Response::Error(_)));
         // service still alive
-        assert!(matches!(c.submit(Request::Stats), Response::Stats(_)));
+        assert!(matches!(c.submit(Op::Stats), Response::Stats(_)));
         assert_eq!(c.metrics().errors, 1);
     }
 
     #[test]
     fn full_queue_rejections_are_counted() {
-        // a Coordinator with no service thread: the bounded queue is
-        // filled directly, so try_submit's Full branch is deterministic
-        let (tx, rx) = mpsc::sync_channel::<Job>(1);
-        let metrics = Arc::new(Metrics::default());
-        let c = Coordinator { tx, metrics, handle: None };
+        // fill tenant 0's FIFO directly, so try_submit's Full branch
+        // is deterministic
+        let c = serviceless(1, FairConfig::default());
         let (plug_tx, _plug_rx) = mpsc::channel();
-        c.tx.send(Job {
-            req: Request::Stats,
-            reply: plug_tx,
-            enqueued: Instant::now(),
-        })
-        .unwrap();
-        let r = c.try_submit(Request::Stats);
+        assert!(matches!(
+            c.intake.try_push(
+                0,
+                Job {
+                    req: Op::Stats.into(),
+                    reply: plug_tx,
+                    enqueued: Instant::now(),
+                    pool_bytes: 0,
+                }
+            ),
+            TryPush::Accepted
+        ));
+        let r = c.try_submit(Op::Stats);
         assert!(matches!(r, Response::Error(_)));
         assert_eq!(c.metrics().queue_rejections, 1);
-        let r2 = c.try_submit(Request::Stats);
+        let r2 = c.try_submit(Op::Stats);
         assert!(matches!(r2, Response::Error(_)));
-        assert_eq!(c.metrics().queue_rejections, 2);
-        // disconnect so the drop-path Shutdown submit fails fast
-        // instead of blocking on the still-full queue
-        drop(rx);
+        let m = c.metrics();
+        assert_eq!(m.queue_rejections, 2);
+        let t0 = m.tenants.iter().find(|t| t.tenant == 0).unwrap();
+        assert_eq!(t0.rejections, 2);
+        // close so the drop-path Shutdown submit fails fast instead
+        // of blocking on the still-full FIFO
+        c.intake.close();
+    }
+
+    #[test]
+    fn quota_rejections_shed_at_admission() {
+        let fair = FairConfig {
+            default_policy: TenantPolicy {
+                weight: 1,
+                max_pool_bytes: 16,
+                max_cache_bytes: u64::MAX,
+            },
+            tenants: vec![],
+        };
+        let c = serviceless(8, fair);
+        // 8 f32 = 32 B > the 16 B pool quota: shed before queueing —
+        // even the *blocking* submit returns immediately
+        let r = c.submit(Request::new(
+            3,
+            Op::RunSource {
+                hlo_text: "HloModule q".into(),
+                inputs: vec![HostArray::f32(vec![8], vec![0.0; 8])],
+            },
+        ));
+        match r {
+            Response::Error(e) => {
+                assert!(e.contains("pool quota"), "{e}")
+            }
+            other => panic!("expected quota error, got {other:?}"),
+        }
+        assert!(c.intake.is_empty());
+        let m = c.metrics();
+        assert_eq!(m.queue_rejections, 1);
+        let t3 = m.tenants.iter().find(|t| t.tenant == 3).unwrap();
+        assert_eq!((t3.rejections, t3.jobs), (1, 0));
+        // nothing leaked: the failed admission left no pool debit
+        assert!(c.table.usage().iter().all(|&(_, pool, _)| pool == 0));
+        c.intake.close();
+    }
+
+    #[test]
+    fn blocking_submit_respects_pool_backlog_cap() {
+        // regression: `submit` must shed at the pool-backlog cap like
+        // `try_submit` — blocking admission is not a shedding bypass.
+        // Event-gated: the device pool is plugged with jobs that wait
+        // on a gate, so the backlog is exact and timing plays no part.
+        let tk = Toolkit::init_sim(1, 0, 0).unwrap();
+        let exec = tk.executor();
+        let gate = Event::new();
+        let started = Event::new();
+        let (g, s) = (gate.clone(), started.clone());
+        let _plug = exec.submit(move |_| {
+            s.record();
+            g.wait();
+            Ok(())
+        });
+        started.wait();
+        // two more gated jobs queue behind the running one: backlog
+        // ≥ 2 whichever way the scheduler counts the running job
+        let g2 = gate.clone();
+        let _q1 = exec.submit(move |_| {
+            g2.wait();
+            Ok(())
+        });
+        let g3 = gate.clone();
+        let _q2 = exec.submit(move |_| {
+            g3.wait();
+            Ok(())
+        });
+
+        let mut c = Coordinator::start(CoordinatorConfig {
+            artifacts_dir: PathBuf::from("/nonexistent-artifacts"),
+            optional_artifacts: true,
+            toolkit: Some(tk.clone()),
+            pool_backlog_cap: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        let r = c.submit(Op::RunSource {
+            hlo_text: "HloModule shed".into(),
+            inputs: vec![],
+        });
+        match r {
+            Response::Error(e) => {
+                assert!(e.contains("pool saturated"), "{e}")
+            }
+            other => panic!("expected shed, got {other:?}"),
+        }
+        let m = c.metrics();
+        assert_eq!(m.queue_rejections, 1);
+        // shed before counting: the request never became a source run
+        assert_eq!(m.source_runs, 0);
+        gate.record();
+        c.shutdown();
+    }
+
+    #[test]
+    fn elementwise_requests_batch_through_the_service() {
+        // hermetic serving-tier round trip on an injected toolkit:
+        // four same-descriptor requests from two tenants coalesce into
+        // ONE batched launch (max_batch = 4 → size flush; the long
+        // max_wait proves the flush wasn't the timer)
+        let tk = Toolkit::init_ephemeral().unwrap();
+        let mut c = Coordinator::start(CoordinatorConfig {
+            artifacts_dir: PathBuf::from("/nonexistent-artifacts"),
+            optional_artifacts: true,
+            toolkit: Some(tk),
+            batch: BatchConfig {
+                max_batch: 4,
+                max_wait: Duration::from_secs(600),
+            },
+            ..Default::default()
+        })
+        .unwrap();
+        let req = |tenant: TenantId, scale: f64, xs: Vec<f32>| {
+            Request::new(
+                tenant,
+                Op::Elementwise {
+                    decl: "float a, float *x, float *z".into(),
+                    op: "z[i] = a*x[i]".into(),
+                    name: "scale".into(),
+                    args: vec![
+                        EwHost::S(scale),
+                        EwHost::V(HostArray::f32(
+                            vec![xs.len()],
+                            xs,
+                        )),
+                    ],
+                },
+            )
+        };
+        let rx: Vec<_> = vec![
+            c.submit_async(req(1, 2.0, vec![1.0, 2.0])),
+            c.submit_async(req(2, 3.0, vec![10.0])),
+            c.submit_async(req(1, -1.0, vec![5.0, 6.0, 7.0])),
+            c.submit_async(req(2, 0.5, vec![8.0])),
+        ];
+        let outs: Vec<Vec<HostArray>> = rx
+            .into_iter()
+            .map(|r| {
+                Coordinator::await_reply(r).outputs().unwrap()
+            })
+            .collect();
+        assert_eq!(outs[0][0].as_f32().unwrap(), &[2.0, 4.0]);
+        assert_eq!(outs[1][0].as_f32().unwrap(), &[30.0]);
+        assert_eq!(outs[2][0].as_f32().unwrap(), &[-5.0, -6.0, -7.0]);
+        assert_eq!(outs[3][0].as_f32().unwrap(), &[4.0]);
+        let m = c.submit(Op::Stats);
+        let s = match m {
+            Response::Stats(s) => s,
+            other => panic!("expected stats, got {other:?}"),
+        };
+        assert_eq!(s.elementwise_jobs, 4);
+        assert_eq!(s.batch.batches, 1);
+        assert_eq!(s.batch.batched_jobs, 4);
+        assert_eq!(s.batch.size_flushes, 1);
+        assert_eq!(s.batch.deadline_flushes, 0);
+        assert_eq!(s.batch.launches_saved, 3);
+        assert_eq!(s.batch.shared_compiles, 3);
+        // both tenants' rows carry their own job counts and waits
+        let t1 = s.tenants.iter().find(|t| t.tenant == 1).unwrap();
+        let t2 = s.tenants.iter().find(|t| t.tenant == 2).unwrap();
+        assert_eq!((t1.jobs, t2.jobs), (2, 2));
+        assert_eq!(
+            t1.queue_wait_hist.iter().sum::<u64>(),
+            2,
+            "per-tenant waits observed at batch execution"
+        );
+        // the batch replied → no pool bytes remain in flight
+        assert!(s
+            .tenants
+            .iter()
+            .all(|t| t.pool_bytes_in_flight == 0));
+        c.shutdown();
+    }
+
+    #[test]
+    fn invalid_elementwise_errors_without_poisoning_batches() {
+        let tk = Toolkit::init_ephemeral().unwrap();
+        let mut c = Coordinator::start(CoordinatorConfig {
+            artifacts_dir: PathBuf::from("/nonexistent-artifacts"),
+            optional_artifacts: true,
+            toolkit: Some(tk),
+            batch: BatchConfig {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+            },
+            ..Default::default()
+        })
+        .unwrap();
+        // scalar passed where a vector is declared → validation error
+        let r = c.submit(Op::Elementwise {
+            decl: "float a, float *x, float *z".into(),
+            op: "z[i] = a*x[i]".into(),
+            name: "bad".into(),
+            args: vec![EwHost::S(1.0), EwHost::S(2.0)],
+        });
+        assert!(matches!(r, Response::Error(_)));
+        let m = c.metrics();
+        assert_eq!(m.errors, 1);
+        // the invalid request never formed a batch
+        assert_eq!(m.batch.batches, 0);
+        // a valid request still goes through afterwards
+        let out = c
+            .submit(Op::Elementwise {
+                decl: "float a, float *x, float *z".into(),
+                op: "z[i] = a*x[i]".into(),
+                name: "bad".into(),
+                args: vec![
+                    EwHost::S(2.0),
+                    EwHost::V(HostArray::f32(vec![2], vec![3.0, 4.0])),
+                ],
+            })
+            .outputs()
+            .unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[6.0, 8.0]);
+        c.shutdown();
     }
 
     #[test]
@@ -560,8 +1162,7 @@ ENTRY main {
         let r = Coordinator::start(CoordinatorConfig {
             artifacts_dir: PathBuf::from("/nonexistent-artifacts"),
             queue_depth: 2,
-            pool_backlog_cap: 256,
-            tuning_db: None,
+            ..Default::default()
         });
         assert!(r.is_err());
     }

@@ -65,32 +65,7 @@ impl ElementwiseKernel {
         name: &str,
     ) -> Result<ElementwiseKernel> {
         let ops = parse_ops(op)?;
-        // validate references
-        let mut scalars = Vec::new();
-        let mut vectors = Vec::new();
-        for a in &ops {
-            referenced(&a.expr, &mut scalars, &mut vectors);
-            if !args.iter().any(|x| x.vector && x.name == a.target) {
-                return Err(Error::msg(format!(
-                    "assignment target '{}' is not a declared vector",
-                    a.target
-                )));
-            }
-        }
-        for s in &scalars {
-            if !args.iter().any(|x| !x.vector && x.name == *s) {
-                return Err(Error::msg(format!(
-                    "'{s}' used as scalar but not declared as one"
-                )));
-            }
-        }
-        for v in &vectors {
-            if !args.iter().any(|x| x.vector && x.name == *v) {
-                return Err(Error::msg(format!(
-                    "'{v}' used as vector but not declared as one"
-                )));
-            }
-        }
+        check_refs(&args, &ops)?;
         Ok(ElementwiseKernel {
             ctx: ctx.clone(),
             name: name.to_string(),
@@ -309,6 +284,294 @@ impl ElementwiseKernel {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Host-level batched launches (the coordinator's cross-request path)
+// ---------------------------------------------------------------------------
+
+/// Host-level argument value for serving-tier requests: coordinator
+/// clients ship plain `HostArray`s, not `GpuArray` handles.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EwHost {
+    S(f64),
+    V(HostArray),
+}
+
+/// Shared reference validation for elementwise definitions.
+fn check_refs(args: &[Arg], ops: &[Assign]) -> Result<()> {
+    let mut scalars = Vec::new();
+    let mut vectors = Vec::new();
+    for a in ops {
+        referenced(&a.expr, &mut scalars, &mut vectors);
+        if !args.iter().any(|x| x.vector && x.name == a.target) {
+            return Err(Error::msg(format!(
+                "assignment target '{}' is not a declared vector",
+                a.target
+            )));
+        }
+    }
+    for s in &scalars {
+        if !args.iter().any(|x| !x.vector && x.name == *s) {
+            return Err(Error::msg(format!(
+                "'{s}' used as scalar but not declared as one"
+            )));
+        }
+    }
+    for v in &vectors {
+        if !args.iter().any(|x| x.vector && x.name == *v) {
+            return Err(Error::msg(format!(
+                "'{v}' used as vector but not declared as one"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Validate one host-level call's values against the declaration:
+/// kinds, 1-d shapes, declared dtypes (byte-level concatenation demands
+/// exact dtype match), consistent length.  Returns the vector length.
+fn check_call(args: &[Arg], vals: &[EwHost], name: &str) -> Result<usize> {
+    if vals.len() != args.len() {
+        return Err(Error::msg(format!(
+            "kernel '{name}' expects {} args, got {}",
+            args.len(),
+            vals.len()
+        )));
+    }
+    let mut n: Option<usize> = None;
+    for (a, v) in args.iter().zip(vals) {
+        match (a.vector, v) {
+            (true, EwHost::V(arr)) => {
+                if arr.shape.len() != 1 {
+                    return Err(Error::msg(format!(
+                        "'{}' must be 1-d",
+                        a.name
+                    )));
+                }
+                if arr.dtype() != a.dtype {
+                    return Err(Error::msg(format!(
+                        "'{}' expects dtype {}, got {}",
+                        a.name,
+                        a.dtype.name(),
+                        arr.dtype().name()
+                    )));
+                }
+                match n {
+                    None => n = Some(arr.len()),
+                    Some(m) if m == arr.len() => {}
+                    Some(m) => {
+                        return Err(Error::msg(format!(
+                            "length mismatch: '{}' has {} elements, \
+                             expected {m}",
+                            a.name,
+                            arr.len()
+                        )))
+                    }
+                }
+            }
+            (false, EwHost::S(_)) => {}
+            (true, EwHost::S(_)) => {
+                return Err(Error::msg(format!(
+                    "'{}' expects a vector",
+                    a.name
+                )))
+            }
+            (false, EwHost::V(_)) => {
+                return Err(Error::msg(format!(
+                    "'{}' expects a scalar",
+                    a.name
+                )))
+            }
+        }
+    }
+    n.ok_or_else(|| Error::msg("kernel has no vector args"))
+}
+
+/// Canonical descriptor material for a host-level elementwise request:
+/// requests with identical material are mergeable into one batched
+/// launch (and routable to the same coordinator shard).
+pub fn descriptor_material(decl: &str, op: &str, name: &str) -> String {
+    format!("ewb|{name}|{decl}|{op}")
+}
+
+/// Validate a host-level elementwise call without compiling anything:
+/// parse + reference-check the definition, check the values.  Returns
+/// `(descriptor_material, n)` — everything admission, routing and the
+/// batching stage need up front.
+pub fn validate_hosts(
+    decl: &str,
+    op: &str,
+    name: &str,
+    vals: &[EwHost],
+) -> Result<(String, usize)> {
+    let args = parse_decl(decl)?;
+    let ops = parse_ops(op)?;
+    check_refs(&args, &ops)?;
+    let n = check_call(&args, vals, name)?;
+    Ok((descriptor_material(decl, op, name), n))
+}
+
+/// Per-segment scalar promotion: the batched kernel takes scalars as
+/// full-length parameter *vectors* (each request's scalar repeated over
+/// its segment), so the compiled computation depends only on the total
+/// length — not on how many requests were merged or where the segment
+/// boundaries fall.
+fn seg_scalar_host(dtype: DType, segs: &[(f64, usize)]) -> HostArray {
+    let n: usize = segs.iter().map(|(_, l)| l).sum();
+    match dtype {
+        DType::F32 => {
+            let mut v = Vec::with_capacity(n);
+            for &(s, l) in segs {
+                v.extend(std::iter::repeat(s as f32).take(l));
+            }
+            HostArray::f32(vec![n], v)
+        }
+        DType::F64 => {
+            let mut v = Vec::with_capacity(n);
+            for &(s, l) in segs {
+                v.extend(std::iter::repeat(s).take(l));
+            }
+            HostArray::f64(vec![n], v)
+        }
+        DType::I32 => {
+            let mut v = Vec::with_capacity(n);
+            for &(s, l) in segs {
+                v.extend(std::iter::repeat(s as i32).take(l));
+            }
+            HostArray::i32(vec![n], v)
+        }
+        DType::I64 => {
+            let mut v = Vec::with_capacity(n);
+            for &(s, l) in segs {
+                v.extend(std::iter::repeat(s as i64).take(l));
+            }
+            HostArray::i64(vec![n], v)
+        }
+    }
+}
+
+/// Run `k` same-descriptor elementwise calls as ONE launch: vector
+/// arguments are byte-concatenated into a single `Σnⱼ`-length vector,
+/// scalars are promoted to per-segment constant vectors, the generated
+/// kernel runs once, and each output splits back into per-call slices.
+/// Because every generated op is pointwise, each lane sees exactly the
+/// operands it would have seen unbatched — results are bitwise equal.
+///
+/// Returns, per call, one output array per assignment statement.
+pub fn run_batched_hosts(
+    tk: &crate::rtcg::module::Toolkit,
+    device: usize,
+    decl: &str,
+    op: &str,
+    name: &str,
+    calls: &[Vec<EwHost>],
+) -> Result<Vec<Vec<HostArray>>> {
+    if calls.is_empty() {
+        return Ok(Vec::new());
+    }
+    let args = parse_decl(decl)?;
+    let ops = parse_ops(op)?;
+    check_refs(&args, &ops)?;
+    let seg_lens: Vec<usize> = calls
+        .iter()
+        .map(|vals| check_call(&args, vals, name))
+        .collect::<Result<_>>()?;
+    let n_total: usize = seg_lens.iter().sum();
+
+    // read set: params in declaration order, skipping write-only
+    let mut scalars = Vec::new();
+    let mut vectors = Vec::new();
+    for a in &ops {
+        referenced(&a.expr, &mut scalars, &mut vectors);
+    }
+    let read: Vec<usize> = args
+        .iter()
+        .enumerate()
+        .filter(|(_, a)| {
+            if a.vector {
+                vectors.contains(&a.name)
+            } else {
+                scalars.contains(&a.name)
+            }
+        })
+        .map(|(i, _)| i)
+        .collect();
+
+    // keyed on (definition, total length) only: batches with equal
+    // total length share one compile regardless of segmentation
+    let key = format!(
+        "ewb|{}|n{}|{}|{}",
+        name,
+        n_total,
+        args.iter()
+            .map(|a| format!(
+                "{}{}",
+                a.dtype.name(),
+                if a.vector { "v" } else { "s" }
+            ))
+            .collect::<Vec<_>>()
+            .join(","),
+        digest_hex(format!("{args:?}|{ops:?}").as_bytes())
+    );
+    let (args2, ops2, read2) = (args.clone(), ops.clone(), read.clone());
+    let exe = tk.cache().get_or_build(&key, move || {
+        build_elementwise_inner(&args2, &ops2, &read2, n_total, true)
+    })?;
+
+    // stage concatenated inputs (vectors) / promoted segments (scalars)
+    let mut staged: Vec<HostArray> = Vec::with_capacity(read.len());
+    for &i in &read {
+        let a = &args[i];
+        if a.vector {
+            let mut bytes =
+                Vec::with_capacity(n_total * a.dtype.size_bytes());
+            for vals in calls {
+                match &vals[i] {
+                    EwHost::V(arr) => {
+                        bytes.extend_from_slice(arr.data.as_bytes())
+                    }
+                    EwHost::S(_) => unreachable!("validated"),
+                }
+            }
+            staged.push(HostArray::from_bytes(
+                a.dtype,
+                vec![n_total],
+                &bytes,
+            )?);
+        } else {
+            let segs: Vec<(f64, usize)> = calls
+                .iter()
+                .zip(&seg_lens)
+                .map(|(vals, &l)| match &vals[i] {
+                    EwHost::S(s) => (*s, l),
+                    EwHost::V(_) => unreachable!("validated"),
+                })
+                .collect();
+            staged.push(seg_scalar_host(a.dtype, &segs));
+        }
+    }
+    let refs: Vec<&HostArray> = staged.iter().collect();
+    let outs = exe.run_on(device, &refs)?;
+
+    // split each statement output back into per-call slices
+    let mut result: Vec<Vec<HostArray>> =
+        calls.iter().map(|_| Vec::with_capacity(ops.len())).collect();
+    for out in &outs {
+        let dt = out.dtype();
+        let w = dt.size_bytes();
+        let bytes = out.data.as_bytes();
+        let mut off = 0usize;
+        for (j, &l) in seg_lens.iter().enumerate() {
+            result[j].push(HostArray::from_bytes(
+                dt,
+                vec![l],
+                &bytes[off..off + l * w],
+            )?);
+            off += l * w;
+        }
+    }
+    Ok(result)
+}
+
 /// Generated full-array reduction (§5.2: "the reduction code generator
 /// is similar in spirit").
 pub struct ReductionKernel {
@@ -427,6 +690,10 @@ struct Env<'a> {
     names: Vec<(String, xla::XlaOp, bool)>, // (name, op, is_vector)
     compute: DType,
     n: usize,
+    /// batched-launch mode: scalar names are bound to per-segment
+    /// constant *vectors* already shaped `[n]`, so `Expr::Scalar`
+    /// must skip the broadcast
+    seg_scalars: bool,
 }
 
 fn lower(e: &Expr, env: &Env) -> Result<xla::XlaOp> {
@@ -442,7 +709,12 @@ fn lower(e: &Expr, env: &Env) -> Result<xla::XlaOp> {
                 .find(|(n, _, vec)| n == name && !*vec)
                 .ok_or_else(|| Error::msg(format!("unbound scalar '{name}'")))?;
             let op = op.convert(env.compute.to_primitive_type())?;
-            hlobuild::broadcast_scalar(&op, &[env.n])
+            if env.seg_scalars {
+                // already a per-segment [n] vector parameter
+                Ok(op)
+            } else {
+                hlobuild::broadcast_scalar(&op, &[env.n])
+            }
         }
         Expr::Elem(name) => {
             let (_, op, _) = env
@@ -527,16 +799,29 @@ fn build_elementwise(
     read: &[usize],
     n: usize,
 ) -> Result<xla::XlaComputation> {
+    build_elementwise_inner(args, ops, read, n, false)
+}
+
+fn build_elementwise_inner(
+    args: &[Arg],
+    ops: &[Assign],
+    read: &[usize],
+    n: usize,
+    seg_scalars: bool,
+) -> Result<xla::XlaComputation> {
     let b = xla::XlaBuilder::new("elementwise");
     let mut env = Env {
         builder: &b,
         names: Vec::new(),
         compute: compute_dtype(args),
         n,
+        seg_scalars,
     };
     for (pi, &ai) in read.iter().enumerate() {
         let a = &args[ai];
-        let dims: &[usize] = if a.vector { &[n] } else { &[] };
+        // seg_scalars mode: every read param is a full-length vector
+        let dims: &[usize] =
+            if a.vector || seg_scalars { &[n] } else { &[] };
         let p = hlobuild::param(&b, pi as i64, a.dtype, dims, &a.name)?;
         env.names.push((a.name.clone(), p, a.vector));
     }
@@ -567,7 +852,13 @@ fn build_reduction(
 ) -> Result<xla::XlaComputation> {
     let b = xla::XlaBuilder::new("reduction");
     let compute = compute_dtype(args);
-    let mut env = Env { builder: &b, names: Vec::new(), compute, n };
+    let mut env = Env {
+        builder: &b,
+        names: Vec::new(),
+        compute,
+        n,
+        seg_scalars: false,
+    };
     for (pi, a) in args.iter().enumerate() {
         let dims: &[usize] = if a.vector { &[n] } else { &[] };
         let p = hlobuild::param(&b, pi as i64, a.dtype, dims, &a.name)?;
@@ -587,6 +878,7 @@ fn build_reduction(
         ],
         compute,
         n: 0,
+        seg_scalars: false,
     };
     // scalar context: lower without broadcasting (n == 0 means scalars)
     let combined = lower_scalar(reduce_expr, &cenv)?;
@@ -708,6 +1000,149 @@ mod tests {
                 &[k as f32, 2.0 * k as f32]
             );
         }
+    }
+
+    #[test]
+    fn batched_hosts_bitwise_equal_to_singleton_launches() {
+        let tk = Toolkit::init_ephemeral().unwrap();
+        let decl = "float a, float *x, float *y, float *z, float *w";
+        let op = "z[i] = a*x[i] + y[i]; w[i] = x[i] - a";
+        // three calls with distinct scalars AND distinct lengths
+        let calls: Vec<Vec<EwHost>> = [(2usize, 1.5), (3, -0.25), (4, 8.0)]
+            .iter()
+            .map(|&(n, s)| {
+                let xs: Vec<f32> =
+                    (0..n).map(|i| 0.1 + i as f32 * s as f32).collect();
+                let ys: Vec<f32> =
+                    (0..n).map(|i| 3.0 - i as f32).collect();
+                vec![
+                    EwHost::S(s),
+                    EwHost::V(HostArray::f32(vec![n], xs)),
+                    EwHost::V(HostArray::f32(vec![n], ys)),
+                    EwHost::V(HostArray::f32(vec![n], vec![0.0; n])),
+                    EwHost::V(HostArray::f32(vec![n], vec![0.0; n])),
+                ]
+            })
+            .collect();
+        let batched =
+            run_batched_hosts(&tk, 0, decl, op, "bt", &calls).unwrap();
+        assert_eq!(batched.len(), 3);
+        for (j, call) in calls.iter().enumerate() {
+            let single = run_batched_hosts(
+                &tk,
+                0,
+                decl,
+                op,
+                "bt",
+                std::slice::from_ref(call),
+            )
+            .unwrap();
+            // two statements per call, bitwise equal to the unbatched run
+            assert_eq!(batched[j].len(), 2);
+            assert_eq!(batched[j], single[0], "call {j}");
+        }
+        // and the classic GpuArray path agrees on the first call
+        let c = ArrayContext::new(tk);
+        let k = ElementwiseKernel::new(&c, decl, op, "bt").unwrap();
+        let xs = arr(&c, vec![0.1, 1.6]);
+        let ys = arr(&c, vec![3.0, 2.0]);
+        let z = arr(&c, vec![0.0; 2]);
+        let out = k
+            .call(&[
+                EwValue::S(1.5),
+                EwValue::V(&xs),
+                EwValue::V(&ys),
+                EwValue::V(&z),
+                EwValue::V(&z),
+            ])
+            .unwrap();
+        assert_eq!(
+            out[0].get().unwrap().as_f32().unwrap(),
+            batched[0][0].as_f32().unwrap()
+        );
+    }
+
+    #[test]
+    fn equal_total_length_batches_share_one_compile() {
+        let tk = Toolkit::init_ephemeral().unwrap();
+        let decl = "float a, float *x, float *z";
+        let op = "z[i] = a*x[i]";
+        let call = |n: usize, s: f64| -> Vec<EwHost> {
+            vec![
+                EwHost::S(s),
+                EwHost::V(HostArray::f32(vec![n], vec![1.0; n])),
+                EwHost::V(HostArray::f32(vec![n], vec![0.0; n])),
+            ]
+        };
+        // 2+2 and 1+3 and a single 4: all total length 4
+        run_batched_hosts(
+            &tk,
+            0,
+            decl,
+            op,
+            "share",
+            &[call(2, 1.0), call(2, 2.0)],
+        )
+        .unwrap();
+        run_batched_hosts(
+            &tk,
+            0,
+            decl,
+            op,
+            "share",
+            &[call(1, 3.0), call(3, 4.0)],
+        )
+        .unwrap();
+        run_batched_hosts(&tk, 0, decl, op, "share", &[call(4, 5.0)])
+            .unwrap();
+        let (hits, _, misses) = tk.cache().stats.snapshot();
+        assert_eq!(misses, 1, "segmentation must not shape the compile");
+        assert_eq!(hits, 2);
+    }
+
+    #[test]
+    fn batched_host_validation_rejects_bad_calls() {
+        let tk = Toolkit::init_ephemeral().unwrap();
+        let decl = "float a, float *x, float *z";
+        let op = "z[i] = a*x[i]";
+        // validate_hosts: good call yields stable descriptor material
+        let good = vec![
+            EwHost::S(1.0),
+            EwHost::V(HostArray::f32(vec![2], vec![1.0, 2.0])),
+            EwHost::V(HostArray::f32(vec![2], vec![0.0; 2])),
+        ];
+        let (mat, n) = validate_hosts(decl, op, "v", &good).unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(mat, descriptor_material(decl, op, "v"));
+        // scalar where a vector is declared
+        let bad = vec![EwHost::S(1.0), EwHost::S(2.0), EwHost::S(3.0)];
+        assert!(validate_hosts(decl, op, "v", &bad).is_err());
+        // dtype mismatch (f64 array for a float decl)
+        let bad = vec![
+            EwHost::S(1.0),
+            EwHost::V(HostArray::f64(vec![2], vec![1.0, 2.0])),
+            EwHost::V(HostArray::f32(vec![2], vec![0.0; 2])),
+        ];
+        assert!(validate_hosts(decl, op, "v", &bad).is_err());
+        // intra-call length mismatch
+        let bad = vec![
+            EwHost::S(1.0),
+            EwHost::V(HostArray::f32(vec![2], vec![1.0, 2.0])),
+            EwHost::V(HostArray::f32(vec![3], vec![0.0; 3])),
+        ];
+        assert!(validate_hosts(decl, op, "v", &bad).is_err());
+        // arity
+        assert!(validate_hosts(decl, op, "v", &good[..2]).is_err());
+        // a bad call inside a batch fails the whole batch cleanly
+        assert!(run_batched_hosts(
+            &tk,
+            0,
+            decl,
+            op,
+            "v",
+            &[good, vec![EwHost::S(1.0)]]
+        )
+        .is_err());
     }
 
     #[test]

@@ -5,4 +5,7 @@ pub mod ast;
 pub mod kernel;
 
 pub use ast::Arg;
-pub use kernel::{ElementwiseKernel, EwValue, EwValueOwned, ReductionKernel};
+pub use kernel::{
+    descriptor_material, run_batched_hosts, validate_hosts,
+    ElementwiseKernel, EwHost, EwValue, EwValueOwned, ReductionKernel,
+};

@@ -93,6 +93,16 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// An empty pool — for serving tiers that only handle generated
+    /// work (RunSource/Elementwise) with no AOT artifacts on disk.
+    pub fn empty() -> Manifest {
+        Manifest {
+            root: PathBuf::new(),
+            entries: Vec::new(),
+            index: HashMap::new(),
+        }
+    }
+
     /// Load `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");

@@ -10,8 +10,14 @@
 use std::path::PathBuf;
 
 use rtcg::apps::conv;
-use rtcg::coordinator::{Coordinator, CoordinatorConfig, Request};
+use rtcg::coordinator::metrics::{
+    QueueWaitHisto, Snapshot, QUEUE_WAIT_BUCKET_COUNT,
+};
+use rtcg::coordinator::{
+    CoordinatorConfig, Op, Request, Response, Router, TenantId,
+};
 use rtcg::device;
+use rtcg::elementwise::EwHost;
 use rtcg::kernels::Registry;
 use rtcg::rtcg::template::ctx;
 use rtcg::tuner::TuningDb;
@@ -25,6 +31,7 @@ const FLAGS: &[(&str, &str)] = &[
     ("kernel", "kernel family for `tune`"),
     ("workload", "workload id for `tune`"),
     ("requests", "request count for `serve` (default 64)"),
+    ("shards", "coordinator shard count for `serve` (default 1)"),
     ("seed", "workload RNG seed (default 42)"),
     ("device", "device profile name for modeled output"),
 ];
@@ -210,24 +217,30 @@ fn cmd_table1() -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let n = args.get_usize("requests", 64)?;
     let seed = args.get_usize("seed", 42)? as u64;
-    let mut c = Coordinator::start(CoordinatorConfig {
-        artifacts_dir: artifacts_dir(args),
-        queue_depth: 64,
-        pool_backlog_cap: 256,
-        tuning_db: None,
+    let shards = args.get_usize("shards", 1)?;
+    let dir = artifacts_dir(args);
+    let mut router = Router::start(shards, |_| CoordinatorConfig {
+        artifacts_dir: dir.clone(),
+        ..Default::default()
     })?;
-    println!("coordinator up; driving {n} synthetic requests…");
+    println!(
+        "serving tier up ({} shard{}); driving {n} synthetic requests…",
+        router.shard_count(),
+        if router.shard_count() == 1 { "" } else { "s" }
+    );
     let mut rng = Rng::new(seed);
     let nn = 524288;
     let mut errors = 0;
     for i in 0..n {
-        // load-shedding intake: a full queue is a counted rejection
-        // (Snapshot.queue_rejections), not caller backpressure.  This
-        // sequential driver blocks on each reply, so it never actually
-        // fills the queue — concurrent clients are what the mode is
-        // for; the Full branch itself is pinned by a coordinator test.
-        let resp = match i % 3 {
-            0 => c.try_submit(Request::Launch {
+        // load-shedding intake: a full tenant FIFO is a counted
+        // rejection (Snapshot.queue_rejections), not caller
+        // backpressure.  This sequential driver blocks on each reply,
+        // so it never actually fills a queue — concurrent clients are
+        // what the mode is for; the Full branch itself is pinned by a
+        // coordinator test.
+        let tenant = (i % 4) as TenantId;
+        let op = match i % 4 {
+            0 => Op::Launch {
                 kernel: "axpy".into(),
                 workload: format!("axpy_{nn}"),
                 variant: None,
@@ -237,8 +250,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     HostArray::f32(vec![1], vec![rng.normal_f32()]),
                     HostArray::f32(vec![nn], rng.uniform_vec(nn)),
                 ],
-            }),
-            1 => c.try_submit(Request::Launch {
+            },
+            1 => Op::Launch {
                 kernel: "spmv_ell".into(),
                 workload: "ell_poisson".into(),
                 variant: Some("rb256_rm".into()),
@@ -256,8 +269,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                         HostArray::f32(vec![r], rng.uniform_vec(r)),
                     ]
                 },
-            }),
-            _ => c.try_submit(Request::RunSource {
+            },
+            2 => Op::RunSource {
                 hlo_text: format!(
                     "HloModule sq_{i}\n\nENTRY main {{\n  p = f32[256] parameter(0)\n  ROOT r = f32[256] multiply(p, p)\n}}\n"
                 ),
@@ -265,46 +278,94 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     vec![256],
                     rng.uniform_vec(256),
                 )],
-            }),
+            },
+            // identical descriptor across requests: these coalesce in
+            // the batching stage (one launch per flushed group)
+            _ => Op::Elementwise {
+                decl: "float a, float *x, float *z".into(),
+                op: "z[i] = a*x[i] + x[i]".into(),
+                name: "serve_ew".into(),
+                args: vec![
+                    EwHost::S(rng.normal_f32() as f64),
+                    EwHost::V(HostArray::f32(
+                        vec![256],
+                        rng.uniform_vec(256),
+                    )),
+                ],
+            },
         };
-        if let rtcg::coordinator::Response::Error(e) = resp {
+        if let Response::Error(e) =
+            router.try_submit(Request::new(tenant, op))
+        {
             errors += 1;
             eprintln!("request {i}: {e}");
         }
     }
-    // Stats refreshes the cache + staging-pool mirrors
-    let m = match c.submit(Request::Stats) {
-        rtcg::coordinator::Response::Stats(s) => s,
-        _ => c.metrics(),
+    // a Stats request per shard refreshes every shard's mirrors
+    let per_shard = router.stats_all();
+    let sum = |f: fn(&Snapshot) -> u64| -> u64 {
+        per_shard.iter().map(f).sum()
     };
     println!(
-        "done: {} requests incl. final stats poll ({} launches, {} source runs), {} errors, {} queue rejections",
-        m.requests, m.launches, m.source_runs, errors, m.queue_rejections
+        "done: {} requests incl. final stats polls ({} launches, {} source runs, {} elementwise), {} errors, {} rejections",
+        sum(|m| m.requests),
+        sum(|m| m.launches),
+        sum(|m| m.source_runs),
+        sum(|m| m.elementwise_jobs),
+        errors,
+        sum(|m| m.queue_rejections)
     );
+    let busy: f64 = per_shard.iter().map(|m| m.busy_ms).sum();
+    println!("busy {busy:.1} ms (summed across shards and workers)");
+    for (s, m) in per_shard.iter().enumerate() {
+        println!(
+            "shard {s}: {} req ({} launch / {} src / {} ew) | batches {} carrying {} jobs ({} launches saved, {} shared compiles) | wait p50 {:.0}µs p99 {:.0}µs | exec depths {:?}",
+            m.requests,
+            m.launches,
+            m.source_runs,
+            m.elementwise_jobs,
+            m.batch.batches,
+            m.batch.batched_jobs,
+            m.batch.launches_saved,
+            m.batch.shared_compiles,
+            QueueWaitHisto::quantile_of(&m.queue_wait_hist, 0.5),
+            QueueWaitHisto::quantile_of(&m.queue_wait_hist, 0.99),
+            m.exec_queue_depths
+        );
+    }
+    // per-tenant rollup across shards: counters add, histograms merge
+    let mut tenants: std::collections::BTreeMap<
+        TenantId,
+        (u64, u64, u64, [u64; QUEUE_WAIT_BUCKET_COUNT]),
+    > = std::collections::BTreeMap::new();
+    for m in &per_shard {
+        for t in &m.tenants {
+            let row = tenants.entry(t.tenant).or_insert((
+                0,
+                0,
+                0,
+                [0; QUEUE_WAIT_BUCKET_COUNT],
+            ));
+            row.0 += t.jobs;
+            row.1 += t.rejections;
+            row.2 += t.errors;
+            for (acc, c) in row.3.iter_mut().zip(&t.queue_wait_hist) {
+                *acc += c;
+            }
+        }
+    }
+    for (t, (jobs, rej, errs, hist)) in &tenants {
+        println!(
+            "tenant {t}: {jobs} jobs, {rej} rejections, {errs} errors | wait p50 {:.0}µs p99 {:.0}µs",
+            QueueWaitHisto::quantile_of(hist, 0.5),
+            QueueWaitHisto::quantile_of(hist, 0.99)
+        );
+    }
+    // pool/planner detail from shard 0 (where Stats and default
+    // routing land)
+    let m = &per_shard[0];
     println!(
-        "busy {:.1} ms (summed across workers), mean queue wait {:.3} ms",
-        m.busy_ms,
-        m.queue_wait_ms / m.requests.max(1) as f64
-    );
-    let bounds = rtcg::coordinator::metrics::QUEUE_WAIT_BUCKETS_US;
-    let labels: Vec<String> = bounds
-        .iter()
-        .map(|b| format!("≤{b}µs"))
-        .chain(std::iter::once(">1s".to_string()))
-        .collect();
-    let cells: Vec<String> = m
-        .queue_wait_hist
-        .iter()
-        .zip(&labels)
-        .map(|(n, l)| format!("{l}:{n}"))
-        .collect();
-    println!("admission wait histogram: {}", cells.join(" "));
-    println!(
-        "exec queue depths at final stats: {:?}",
-        m.exec_queue_depths
-    );
-    println!(
-        "staging pool: {} allocs ({} pool hits), {} arenas: {} B held / {} B active / {} B owned (peak {} B, frag {:.2})",
+        "staging pool (shard 0): {} allocs ({} pool hits), {} arenas: {} B held / {} B active / {} B owned (peak {} B, frag {:.2})",
         m.pool.allocs,
         m.pool.pool_hits,
         m.pool.arenas,
@@ -320,6 +381,6 @@ fn cmd_serve(args: &Args) -> Result<()> {
         m.planner.arena_bytes_requested,
         m.planner.arena_bytes_saved()
     );
-    c.shutdown();
+    router.shutdown();
     Ok(())
 }

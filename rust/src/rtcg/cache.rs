@@ -52,7 +52,9 @@ use crate::util::json::Json;
 /// PJRT backend does not either).
 const EXE_NOMINAL_BYTES: u64 = 4096;
 
-fn entry_cost(key_material: &str) -> u64 {
+/// Bytes one cached executable is charged against the budget — also
+/// the unit the coordinator's per-tenant compile-cache quotas count in.
+pub fn entry_cost(key_material: &str) -> u64 {
     key_material.len() as u64 + EXE_NOMINAL_BYTES
 }
 
@@ -195,7 +197,6 @@ impl Drop for FlightGuard<'_> {
 struct Shard {
     map: HashMap<String, Entry>,
     inflight: HashMap<String, Arc<Flight>>,
-    clock: u64,
     bytes: u64,
 }
 
@@ -203,7 +204,13 @@ struct Shard {
 pub struct CompileCache {
     client: Client,
     shards: Vec<Mutex<Shard>>,
-    budget_per_shard: u64,
+    /// one shared in-memory budget all shards debit/credit — a hot
+    /// shard may hold most of it, but the *global* cap always holds
+    byte_budget: u64,
+    /// global bytes currently charged (the budget's live counter)
+    bytes: AtomicU64,
+    /// global LRU clock, so recency is comparable across shards
+    clock: AtomicU64,
     cost_aware: bool,
     disk_dir: Option<PathBuf>,
     pub stats: CacheStats,
@@ -225,7 +232,9 @@ impl CompileCache {
         CompileCache {
             client,
             shards: (0..shards).map(|_| Mutex::new(Shard::default())).collect(),
-            budget_per_shard: (cfg.byte_budget / shards as u64).max(1),
+            byte_budget: cfg.byte_budget.max(1),
+            bytes: AtomicU64::new(0),
+            clock: AtomicU64::new(0),
             cost_aware: cfg.cost_aware,
             disk_dir: cfg.disk_dir,
             stats: CacheStats::default(),
@@ -305,8 +314,7 @@ impl CompileCache {
         loop {
             let plan = {
                 let mut shard = self.shards[shard_ix].lock().unwrap();
-                shard.clock += 1;
-                let clock = shard.clock;
+                let clock = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
                 if let Some(e) = shard.map.get_mut(key) {
                     e.last_used = clock;
                     self.stats.mem_hits.fetch_add(1, Ordering::Relaxed);
@@ -342,20 +350,27 @@ impl CompileCache {
                     let result = fill();
                     let fill_ns = t0.elapsed().as_nanos() as u64;
                     if let Ok(exe) = &result {
-                        let mut shard = self.shards[shard_ix].lock().unwrap();
-                        shard.clock += 1;
-                        let clock = shard.clock;
-                        shard.bytes += cost;
-                        shard.map.insert(
-                            key.to_string(),
-                            Entry {
-                                exe: exe.clone(),
-                                bytes: cost,
-                                last_used: clock,
-                                fill_ns,
-                            },
-                        );
-                        self.evict_locked(&mut shard, key);
+                        let clock =
+                            self.clock.fetch_add(1, Ordering::Relaxed) + 1;
+                        {
+                            let mut shard =
+                                self.shards[shard_ix].lock().unwrap();
+                            shard.bytes += cost;
+                            shard.map.insert(
+                                key.to_string(),
+                                Entry {
+                                    exe: exe.clone(),
+                                    bytes: cost,
+                                    last_used: clock,
+                                    fill_ns,
+                                },
+                            );
+                        }
+                        self.bytes.fetch_add(cost, Ordering::Relaxed);
+                        // debit the *global* budget — eviction sweeps
+                        // every shard (locks taken one at a time), so a
+                        // hot shard can't exceed the shared cap
+                        self.enforce_budget(shard_ix, key);
                     }
                     drop(guard);
                     return result;
@@ -364,31 +379,57 @@ impl CompileCache {
         }
     }
 
-    /// Eviction down to the shard budget ("unused code variants can be
-    /// disposed of immediately", §4.2).  The freshly-inserted key is
-    /// never the victim, so one oversized entry still caches.  Pure LRU
-    /// by default; with [`CacheConfig::cost_aware`] the victim is the
+    /// Eviction down to the **global** byte budget ("unused code
+    /// variants can be disposed of immediately", §4.2).  Victims are
+    /// chosen across *all* shards — the global LRU clock makes recency
+    /// comparable — holding only one shard lock at a time (scan, then
+    /// re-verify under the victim shard's lock), so a hot shard's
+    /// overshoot is paid for wherever the coldest entry lives.  The
+    /// freshly-inserted key is never the victim, so one oversized entry
+    /// still caches.  Pure LRU by default; with
+    /// [`CacheConfig::cost_aware`] the victim is the
     /// cheapest-to-recompile entry (fill time, recency as tie-break) —
     /// losing it costs the least future compile latency.
-    fn evict_locked(&self, shard: &mut Shard, fresh: &str) {
+    fn enforce_budget(&self, fresh_ix: usize, fresh: &str) {
         let cost_aware = self.cost_aware;
-        while shard.bytes > self.budget_per_shard && shard.map.len() > 1 {
+        let rank = move |e: &Entry| {
+            (if cost_aware { e.fill_ns } else { 0 }, e.last_used)
+        };
+        while self.bytes.load(Ordering::Relaxed) > self.byte_budget {
+            // scan for the globally best victim, one shard at a time
+            let mut best: Option<((u64, u64), usize)> = None;
+            for (ix, slot) in self.shards.iter().enumerate() {
+                let shard = slot.lock().unwrap();
+                let local = shard
+                    .map
+                    .iter()
+                    .filter(|(k, _)| {
+                        ix != fresh_ix || k.as_str() != fresh
+                    })
+                    .map(|(_, e)| rank(e))
+                    .min();
+                if let Some(r) = local {
+                    if best.map_or(true, |(b, _)| r < b) {
+                        best = Some((r, ix));
+                    }
+                }
+            }
+            let Some((_, ix)) = best else { break };
+            // re-pick under the victim shard's lock (entries may have
+            // moved since the scan); a vanished victim just re-loops
+            let mut shard = self.shards[ix].lock().unwrap();
             let victim = shard
                 .map
                 .iter()
-                .filter(|(k, _)| k.as_str() != fresh)
-                .min_by_key(|(_, e)| {
-                    (if cost_aware { e.fill_ns } else { 0 }, e.last_used)
-                })
+                .filter(|(k, _)| ix != fresh_ix || k.as_str() != fresh)
+                .min_by_key(|(_, e)| rank(e))
                 .map(|(k, _)| k.clone());
-            match victim {
-                Some(k) => {
-                    if let Some(e) = shard.map.remove(&k) {
-                        shard.bytes = shard.bytes.saturating_sub(e.bytes);
-                        self.stats.evictions.fetch_add(1, Ordering::Relaxed);
-                    }
+            if let Some(k) = victim {
+                if let Some(e) = shard.map.remove(&k) {
+                    shard.bytes = shard.bytes.saturating_sub(e.bytes);
+                    self.bytes.fetch_sub(e.bytes, Ordering::Relaxed);
+                    self.stats.evictions.fetch_add(1, Ordering::Relaxed);
                 }
-                None => break,
             }
         }
     }
@@ -402,9 +443,10 @@ impl CompileCache {
         self.len() == 0
     }
 
-    /// Bytes currently charged against the in-memory budget.
+    /// Bytes currently charged against the shared in-memory budget
+    /// (the global counter every shard debits/credits).
     pub fn bytes_in_memory(&self) -> u64 {
-        self.shards.iter().map(|s| s.lock().unwrap().bytes).sum()
+        self.bytes.load(Ordering::Relaxed)
     }
 
     /// Drop all in-memory executables ("unused code variants can be
@@ -413,7 +455,9 @@ impl CompileCache {
         for s in &self.shards {
             let mut s = s.lock().unwrap();
             s.map.clear();
+            let freed = s.bytes;
             s.bytes = 0;
+            self.bytes.fetch_sub(freed, Ordering::Relaxed);
         }
     }
 
@@ -596,6 +640,75 @@ ENTRY main {
         c.get_or_compile(&src_b).unwrap();
         let (_, _, misses_after_b) = c.stats.snapshot();
         assert_eq!(misses_after_b, misses_after_a + 1);
+    }
+
+    #[test]
+    fn global_byte_budget_holds_across_shards() {
+        // Same-length keys so every entry costs the same; 8 shards but
+        // ONE budget of two entries.  Under the old per-shard budget
+        // slices each shard retained its own entry (a hot process could
+        // hold up to `shards` entries past the cap); the global
+        // accounting must evict across shards instead.
+        let keys: Vec<String> =
+            (0..6).map(|i| format!("gkey-{i:02}")).collect();
+        let cost = entry_cost(&keys[0]);
+        let c = CompileCache::with_config(
+            Client::cpu().unwrap(),
+            CacheConfig {
+                disk_dir: None,
+                shards: 8,
+                byte_budget: 2 * cost,
+                cost_aware: false,
+            },
+        );
+        let build = || {
+            let b = xla::XlaBuilder::new("dbl");
+            let p = crate::rtcg::hlobuild::param(
+                &b,
+                0,
+                crate::rtcg::dtype::DType::F32,
+                &[4],
+                "p",
+            )?;
+            p.add_(&p)?.build().map_err(Into::into)
+        };
+        // the keys must actually land on more than one shard for this
+        // to pin *cross*-shard eviction (deterministic hash — if a key
+        // change ever collapses this, pick different key names)
+        let spread: std::collections::HashSet<usize> = keys
+            .iter()
+            .map(|k| {
+                fnv1a(c.key_for(k).as_bytes()) as usize % c.shards.len()
+            })
+            .collect();
+        assert!(spread.len() >= 2, "keys collapsed onto one shard");
+        for k in &keys {
+            c.get_or_build(k, build).unwrap();
+            assert!(
+                c.bytes_in_memory() <= 2 * cost,
+                "global budget must hold after every insert"
+            );
+        }
+        assert_eq!(c.len(), 2, "one shared budget, not one per shard");
+        assert_eq!(c.stats.evictions.load(Ordering::Relaxed), 4);
+        // global LRU: the two most recently inserted keys survived —
+        // both still mem-hit (no new misses) …
+        let (_, _, misses_before) = c.stats.snapshot();
+        c.get_or_build(&keys[4], || unreachable!("keys[4] was evicted"))
+            .unwrap();
+        c.get_or_build(&keys[5], || unreachable!("keys[5] was evicted"))
+            .unwrap();
+        let (_, _, misses_after) = c.stats.snapshot();
+        assert_eq!(misses_before, misses_after);
+        // … and an early key was evicted from *its* shard even when the
+        // freshly-inserting shard was a different one (re-fill = miss)
+        c.get_or_build(&keys[0], build).unwrap();
+        let (_, _, misses_refill) = c.stats.snapshot();
+        assert_eq!(misses_refill, misses_after + 1);
+        // per-shard gauges reconcile with the global counter
+        let per_shard: u64 =
+            c.shards.iter().map(|s| s.lock().unwrap().bytes).sum();
+        assert_eq!(per_shard, c.bytes_in_memory());
     }
 
     #[test]

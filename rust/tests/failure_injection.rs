@@ -6,7 +6,7 @@
 
 use std::path::PathBuf;
 
-use rtcg::coordinator::{Coordinator, CoordinatorConfig, Request, Response};
+use rtcg::coordinator::{Coordinator, CoordinatorConfig, Op, Response};
 use rtcg::kernels::{Manifest, Registry};
 use rtcg::rtcg::template::{ctx, render};
 use rtcg::runtime::HostArray;
@@ -133,23 +133,22 @@ fn coordinator_survives_a_burst_of_bad_requests() {
     let mut c = Coordinator::start(CoordinatorConfig {
         artifacts_dir: artifacts(),
         queue_depth: 4,
-        pool_backlog_cap: 256,
-        tuning_db: None,
+        ..Default::default()
     })
     .unwrap();
     for i in 0..10 {
         let r = match i % 3 {
-            0 => c.submit(Request::Launch {
+            0 => c.submit(Op::Launch {
                 kernel: "missing".into(),
                 workload: "w".into(),
                 variant: None,
                 inputs: vec![],
             }),
-            1 => c.submit(Request::RunSource {
+            1 => c.submit(Op::RunSource {
                 hlo_text: "garbage".into(),
                 inputs: vec![],
             }),
-            _ => c.submit(Request::Launch {
+            _ => c.submit(Op::Launch {
                 kernel: "axpy".into(),
                 workload: "axpy_524288".into(),
                 variant: Some("b8192".into()),
@@ -159,7 +158,7 @@ fn coordinator_survives_a_burst_of_bad_requests() {
         assert!(matches!(r, Response::Error(_)), "req {i}: {r:?}");
     }
     // still serving good requests afterwards
-    assert!(matches!(c.submit(Request::Stats), Response::Stats(_)));
+    assert!(matches!(c.submit(Op::Stats), Response::Stats(_)));
     assert_eq!(c.metrics().errors, 10);
     c.shutdown();
 }

@@ -4,7 +4,7 @@
 use std::path::PathBuf;
 
 use rtcg::array::ArrayContext;
-use rtcg::coordinator::{Coordinator, CoordinatorConfig, Request, Response};
+use rtcg::coordinator::{Coordinator, CoordinatorConfig, Op, Response};
 use rtcg::copperhead::{prelude, Copperhead, Shapes};
 use rtcg::elementwise::{ElementwiseKernel, EwValue};
 use rtcg::kernels::Registry;
@@ -162,12 +162,11 @@ fn coordinator_serves_tuning_and_launches() {
     let mut c = Coordinator::start(CoordinatorConfig {
         artifacts_dir: artifacts(),
         queue_depth: 4,
-        pool_backlog_cap: 256,
-        tuning_db: None,
+        ..Default::default()
     })
     .unwrap();
     // tune a small pool, then launch without naming a variant
-    let resp = c.submit(Request::Tune {
+    let resp = c.submit(Op::Tune {
         kernel: "axpy".into(),
         workload: "axpy_524288".into(),
         seed: 9,
@@ -182,7 +181,7 @@ fn coordinator_serves_tuning_and_launches() {
     assert!(tuned_variant.starts_with('b'));
     let n = 524288;
     let out = c
-        .submit(Request::Launch {
+        .submit(Op::Launch {
             kernel: "axpy".into(),
             workload: "axpy_524288".into(),
             variant: None,

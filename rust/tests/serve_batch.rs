@@ -1,0 +1,283 @@
+//! Serving-tier batching correctness: racing tenants, identical and
+//! distinct descriptors, and the size/deadline flush policy.  The core
+//! claim under test is that cross-request batching is *invisible* to
+//! callers — a batched serving tier returns bitwise-identical results
+//! to an unbatched one — and that unfilled groups always flush by
+//! deadline, never strand a request.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use rtcg::coordinator::{
+    BatchConfig, Coordinator, CoordinatorConfig, Op, Request, Response,
+    TenantId,
+};
+use rtcg::elementwise::EwHost;
+use rtcg::exec::Event;
+use rtcg::runtime::HostArray;
+use rtcg::Toolkit;
+
+const N: usize = 24;
+
+/// Deterministic request mix: two descriptors (which never merge with
+/// each other), three tenants, varying lengths and scalars.  All
+/// values are exactly representable in f32 so expected outputs are
+/// exact, not approximate.
+fn mk_req(i: usize) -> Request {
+    let (op, name) = if i % 2 == 0 {
+        ("z[i] = a*x[i] + x[i]", "race_a")
+    } else {
+        ("z[i] = a*x[i] - x[i]", "race_b")
+    };
+    let len = 1 + i % 5;
+    let xs: Vec<f32> =
+        (0..len).map(|j| (i * 7 + j + 1) as f32 * 0.25).collect();
+    Request::new(
+        (i % 3 + 1) as TenantId,
+        Op::Elementwise {
+            decl: "float a, float *x, float *z".into(),
+            op: op.into(),
+            name: name.into(),
+            args: vec![
+                EwHost::S(i as f64 * 0.5 - 3.0),
+                EwHost::V(HostArray::f32(vec![len], xs)),
+            ],
+        },
+    )
+}
+
+/// Submit all N requests from three racing tenant threads (pipelined:
+/// each thread submits its whole share before collecting replies, so
+/// batching has cross-thread material to merge) and return the outputs
+/// in request order.
+fn run_all(c: &Coordinator, n: usize) -> Vec<Vec<HostArray>> {
+    let collected: Vec<(usize, Vec<HostArray>)> =
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for t in 0..3 {
+                handles.push(s.spawn(move || {
+                    let mut rxs = Vec::new();
+                    for i in (t..n).step_by(3) {
+                        rxs.push((i, c.submit_async(mk_req(i))));
+                    }
+                    let mut got = Vec::new();
+                    for (i, rx) in rxs {
+                        let resp =
+                            rx.recv().expect("reply channel closed");
+                        got.push((
+                            i,
+                            resp.outputs().expect("request failed"),
+                        ));
+                    }
+                    got
+                }));
+            }
+            let mut all = Vec::new();
+            for h in handles {
+                all.extend(h.join().unwrap());
+            }
+            all
+        });
+    let mut slots: Vec<Option<Vec<HostArray>>> =
+        (0..n).map(|_| None).collect();
+    for (i, o) in collected {
+        slots[i] = Some(o);
+    }
+    slots.into_iter().map(|s| s.unwrap()).collect()
+}
+
+fn serving_tier(batch: BatchConfig) -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        artifacts_dir: PathBuf::from("/nonexistent-artifacts"),
+        optional_artifacts: true,
+        toolkit: Some(Toolkit::init_ephemeral().unwrap()),
+        batch,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn stats(c: &Coordinator) -> rtcg::coordinator::metrics::Snapshot {
+    match c.submit(Op::Stats) {
+        Response::Stats(s) => s,
+        other => panic!("expected stats, got {other:?}"),
+    }
+}
+
+#[test]
+fn racing_tenants_batched_matches_unbatched_bitwise() {
+    let mut batched = serving_tier(BatchConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(20),
+    });
+    let mut unbatched = serving_tier(BatchConfig {
+        max_batch: 1, // every request flushes as a singleton
+        max_wait: Duration::from_millis(20),
+    });
+    let outs_b = run_all(&batched, N);
+    let outs_u = run_all(&unbatched, N);
+
+    // known values (exact in f32): request 0 is (a+1)*x with a = -3,
+    // x = [0.25]; request 1 is (a-1)*x with a = -2.5, x = [2, 2.25]
+    assert_eq!(outs_b[0][0].as_f32().unwrap(), &[-0.5]);
+    assert_eq!(outs_b[1][0].as_f32().unwrap(), &[-7.0, -7.875]);
+
+    // the tentpole invariant: batching is bitwise-invisible
+    for (i, (ob, ou)) in outs_b.iter().zip(&outs_u).enumerate() {
+        assert_eq!(ob.len(), ou.len(), "request {i} arity");
+        for (a, b) in ob.iter().zip(ou) {
+            assert_eq!(a.shape, b.shape, "request {i} shape");
+            let ab: Vec<u32> =
+                a.as_f32().unwrap().iter().map(|v| v.to_bits()).collect();
+            let bb: Vec<u32> =
+                b.as_f32().unwrap().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ab, bb, "request {i} not bitwise equal");
+        }
+    }
+
+    // batched tier: every request was served through the batcher, and
+    // distinct descriptors never merged (≥ 2 flushes); whether a given
+    // flush was by size or deadline depends on arrival order, but the
+    // totals must reconcile exactly
+    let sb = stats(&batched);
+    assert_eq!(sb.errors, 0);
+    assert_eq!(sb.elementwise_jobs, N as u64);
+    assert_eq!(sb.batch.batched_jobs, N as u64);
+    assert!(sb.batch.batches >= 2, "two descriptors cannot share one");
+    assert_eq!(
+        sb.batch.size_flushes + sb.batch.deadline_flushes,
+        sb.batch.batches
+    );
+    assert_eq!(sb.batch.launches_saved, N as u64 - sb.batch.batches);
+    for t in 1..=3u32 {
+        let row = sb.tenants.iter().find(|r| r.tenant == t).unwrap();
+        assert_eq!(row.jobs, 8, "tenant {t}");
+    }
+
+    // unbatched tier: same work, no merging at all
+    let su = stats(&unbatched);
+    assert_eq!(su.errors, 0);
+    assert_eq!(su.elementwise_jobs, N as u64);
+    assert_eq!(su.batch.batches, N as u64);
+    assert_eq!(su.batch.size_flushes, N as u64);
+    assert_eq!(su.batch.launches_saved, 0);
+    assert_eq!(su.batch.shared_compiles, 0);
+
+    batched.shutdown();
+    unbatched.shutdown();
+}
+
+#[test]
+fn identical_source_requests_share_one_compile() {
+    let tk = Toolkit::init_ephemeral().unwrap();
+    let mut c = Coordinator::start(CoordinatorConfig {
+        artifacts_dir: PathBuf::from("/nonexistent-artifacts"),
+        optional_artifacts: true,
+        toolkit: Some(tk.clone()),
+        batch: BatchConfig {
+            max_batch: 2, // deterministic size flush on the 2nd arrival
+            max_wait: Duration::from_secs(600),
+        },
+        ..Default::default()
+    })
+    .unwrap();
+    let hlo = r#"
+HloModule batch_pair
+
+ENTRY main {
+  p = f32[2] parameter(0)
+  ROOT r = f32[2] add(p, p)
+}
+"#;
+    // identical HLO, different inputs: one compile, two executions,
+    // each reply carrying its own request's results
+    let rx1 = c.submit_async(Op::RunSource {
+        hlo_text: hlo.into(),
+        inputs: vec![HostArray::f32(vec![2], vec![1.0, 2.0])],
+    });
+    let rx2 = c.submit_async(Op::RunSource {
+        hlo_text: hlo.into(),
+        inputs: vec![HostArray::f32(vec![2], vec![5.0, 9.0])],
+    });
+    let o1 = rx1.recv().unwrap().outputs().unwrap();
+    let o2 = rx2.recv().unwrap().outputs().unwrap();
+    assert_eq!(o1[0].as_f32().unwrap(), &[2.0, 4.0]);
+    assert_eq!(o2[0].as_f32().unwrap(), &[10.0, 18.0]);
+
+    let s = stats(&c);
+    assert_eq!(s.source_runs, 2);
+    assert_eq!(s.batch.batches, 1);
+    assert_eq!(s.batch.batched_jobs, 2);
+    assert_eq!(s.batch.size_flushes, 1);
+    assert_eq!(s.batch.shared_compiles, 1);
+    // the shared compile is visible in the cache: one miss (the
+    // compile), one hit (the second execution)
+    let (hits, _, misses) = tk.cache().stats.snapshot();
+    assert_eq!((hits, misses), (1, 1));
+    c.shutdown();
+}
+
+#[test]
+fn deadline_flush_delivers_unfilled_groups() {
+    // Event-gated, no sleeps: a gated job plugs the shared device
+    // pool, and a Tune request (which quiesces the pool with a barrier
+    // before measuring) parks the service loop on it.  The three
+    // elementwise requests below are therefore all queued in intake
+    // before the loop sees any of them — they land in one group whose
+    // 500 ms deadline starts counting only after the gate opens, and
+    // with max_batch = 100 that group can only ever flush by deadline.
+    let tk = Toolkit::init_ephemeral().unwrap();
+    let exec = tk.executor();
+    let gate = Event::new();
+    let g = gate.clone();
+    let _plug = exec.submit(move |_| {
+        g.wait();
+        Ok(())
+    });
+    let mut c = Coordinator::start(CoordinatorConfig {
+        artifacts_dir: PathBuf::from("/nonexistent-artifacts"),
+        optional_artifacts: true,
+        toolkit: Some(tk),
+        batch: BatchConfig {
+            max_batch: 100,
+            max_wait: Duration::from_millis(500),
+        },
+        ..Default::default()
+    })
+    .unwrap();
+    let tune_rx = c.submit_async(Op::Tune {
+        kernel: "none".into(),
+        workload: "w".into(),
+        seed: 1,
+    });
+    let mut rxs = Vec::new();
+    for i in 0..3u32 {
+        rxs.push(c.submit_async(Op::Elementwise {
+            decl: "float a, float *x, float *z".into(),
+            op: "z[i] = a*x[i]".into(),
+            name: "ddl".into(),
+            args: vec![
+                EwHost::S(f64::from(i + 1)),
+                EwHost::V(HostArray::f32(vec![2], vec![1.0, 2.0])),
+            ],
+        }));
+    }
+    gate.record();
+    // the empty manifest makes the tune itself error — incidental; it
+    // only exists to hold the loop at the barrier while we queue work
+    assert!(matches!(tune_rx.recv().unwrap(), Response::Error(_)));
+    let mut scale = 1.0f32;
+    for rx in rxs {
+        let out = rx.recv().unwrap().outputs().unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[scale, 2.0 * scale]);
+        scale += 1.0;
+    }
+    let s = stats(&c);
+    assert_eq!(s.elementwise_jobs, 3);
+    assert_eq!(s.batch.batches, 1);
+    assert_eq!(s.batch.batched_jobs, 3);
+    assert_eq!(s.batch.size_flushes, 0);
+    assert_eq!(s.batch.deadline_flushes, 1);
+    assert_eq!(s.batch.launches_saved, 2);
+    c.shutdown();
+}
