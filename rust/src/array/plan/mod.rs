@@ -70,6 +70,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::array::{Claim, Expr, LazyNode};
+use crate::cir::{self, Backend, BackendChoice};
 use crate::rtcg::module::Toolkit;
 use crate::runtime::{DeviceBuffer, HostArray};
 use crate::util::error::{Error, Result};
@@ -301,9 +302,58 @@ pub(crate) fn cluster_graph(
 struct ClusterJob {
     key: String,
     plan: LowerPlan,
+    /// backend-agnostic CIR rendering of the cluster: its per-backend
+    /// generated-source identity (folded into the compile-cache key)
+    cir: cir::kernel::Kernel,
     inputs: Vec<Arc<LazyNode>>,
     outputs: Vec<Arc<LazyNode>>,
     out_aliases: Vec<Vec<Arc<LazyNode>>>,
+}
+
+impl ClusterJob {
+    /// Modeled work shape of this cluster (drives per-program `auto`
+    /// backend selection): total output elements, ops per element from
+    /// the step count, streamed bytes from the parameter/output count.
+    fn work_shape(&self) -> cir::variants::WorkShape {
+        let n = self
+            .outputs
+            .iter()
+            .map(|o| o.shape.iter().product::<usize>())
+            .max()
+            .unwrap_or(1)
+            .max(1);
+        cir::variants::WorkShape::Elementwise {
+            n,
+            flops: self.plan.steps.len().max(1) as f64,
+            bytes: 4.0
+                * (self.plan.params.len() + self.outputs.len()).max(1)
+                    as f64,
+        }
+    }
+
+    /// Backend-specific cache-key material: the canonical descriptor
+    /// (full semantic identity) plus the CIR source text rendered for
+    /// `backend` (per-backend generated-source identity).
+    fn key_for(&self, backend: Backend) -> String {
+        format!(
+            "{}\n{}",
+            self.key,
+            cir::codegen::generate(&self.cir, backend)
+        )
+    }
+}
+
+/// Resolve the toolkit's backend policy for one cluster: a fixed
+/// choice passes through; `auto` asks the modeled cost which backend's
+/// best variant wins for this cluster's work shape.
+fn resolve_backend(tk: &Toolkit, job: &ClusterJob) -> Backend {
+    match tk.backend_choice() {
+        BackendChoice::Fixed(b) => b,
+        BackendChoice::Auto => cir::variants::auto_backend(
+            &job.work_shape(),
+            &crate::device::profile::C1060,
+        ),
+    }
 }
 
 struct Emitter<'a> {
@@ -412,7 +462,8 @@ fn build_job(
         outputs: out_steps,
     };
     let key = plan.descriptor();
-    Ok(ClusterJob { key, plan, inputs: em.inputs, outputs, out_aliases })
+    let cir = cir::lower::from_cluster(&plan, "cluster");
+    Ok(ClusterJob { key, plan, cir, inputs: em.inputs, outputs, out_aliases })
 }
 
 // ---------------------------------------------------------------------------
@@ -541,7 +592,12 @@ fn run_cluster(
             continue;
         }
         let guard = ClaimGuard::new(claimed);
-        let exe = tk.cache().get_or_build(&job.key, || job.plan.build())?;
+        let backend = resolve_backend(tk, job);
+        let exe = tk
+            .cache()
+            .get_or_build_for(backend, &job.key_for(backend), || {
+                job.plan.build()
+            })?;
         let ins: Vec<DeviceBuffer> = job
             .inputs
             .iter()

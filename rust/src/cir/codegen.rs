@@ -1,0 +1,332 @@
+//! CIR → kernel source text, in two flavors.
+//!
+//! The same [`Kernel`] prints as CUDA-style C (the HLO backend's
+//! "generated source" artifact — `__global__`, `blockIdx`,
+//! `__shared__`, `__syncthreads`, `expf`) or as OpenCL C (`__kernel`,
+//! `get_global_id`, `__local`, `barrier(CLK_LOCAL_MEM_FENCE)`, plain
+//! `exp`).  The text is the backend-specific *identity* of the variant:
+//! it is digested into the compile-cache key, shown by debug surfaces,
+//! and pinned by the golden codegen tests.
+
+use super::kernel::{Expr, Instr, Kernel, Stmt, Tag};
+use super::Backend;
+
+/// Render `k` for `backend`.
+pub fn generate(k: &Kernel, backend: Backend) -> String {
+    let mut out = String::new();
+    let flavor = match backend {
+        Backend::Hlo => "cuda",
+        Backend::Ocl => "opencl",
+    };
+    out.push_str(&format!("// cir: {} [{}]\n", k.name, flavor));
+    signature(k, backend, &mut out);
+    out.push_str(" {\n");
+
+    // hardware index bindings for parallel inames, in nesting order
+    for ax in &k.inames {
+        let idx = match (ax.tag, backend) {
+            (Tag::ParGlobal, Backend::Hlo) => {
+                "blockIdx.x * blockDim.x + threadIdx.x"
+            }
+            (Tag::ParGlobal, Backend::Ocl) => "get_global_id(0)",
+            (Tag::ParGroup, Backend::Hlo) => "blockIdx.x",
+            (Tag::ParGroup, Backend::Ocl) => "get_group_id(0)",
+            (Tag::ParLane, Backend::Hlo) => "threadIdx.x",
+            (Tag::ParLane, Backend::Ocl) => "get_local_id(0)",
+            _ => continue,
+        };
+        out.push_str(&format!("    const int {} = {};\n", ax.name, idx));
+    }
+
+    // scratch declarations + cooperative prefetch stages
+    let lane = k.inames.iter().find(|a| a.tag == Tag::ParLane);
+    let has_parallel = k.inames.iter().any(|a| a.tag.is_parallel());
+    for s in &k.scratch {
+        let qual = match backend {
+            Backend::Hlo => "__shared__",
+            Backend::Ocl => "__local",
+        };
+        out.push_str(&format!(
+            "    {qual} {} {}[{}];\n",
+            s.ctype, s.name, s.len
+        ));
+        let (init, step) = match lane {
+            Some(l) => (l.name.clone(), l.extent.to_string()),
+            None => ("0".to_string(), "1".to_string()),
+        };
+        out.push_str(&format!(
+            "    for (int p = {init}; p < {}; p += {step}) {{\n",
+            s.len
+        ));
+        let base = print_expr(&s.offset, 0);
+        let idx = if base == "0" {
+            "p".to_string()
+        } else {
+            format!("{base} + p")
+        };
+        out.push_str(&format!(
+            "        {}[p] = {}[{}];\n    }}\n",
+            s.name, s.src, idx
+        ));
+        if has_parallel {
+            out.push_str(match backend {
+                Backend::Hlo => "    __syncthreads();\n",
+                Backend::Ocl => "    barrier(CLK_LOCAL_MEM_FENCE);\n",
+            });
+        }
+    }
+
+    // instruction list: open/close sequential loops to match `within`
+    let mut open: Vec<&str> = Vec::new();
+    for instr in &k.body {
+        let target = seq_nest(k, instr);
+        while !open.is_empty()
+            && (open.len() > target.len()
+                || open[..] != target[..open.len()])
+        {
+            open.pop();
+            out.push_str(&format!("{}}}\n", pad(1 + open.len())));
+        }
+        while open.len() < target.len() {
+            let name = target[open.len()];
+            let ax = k.iname(name).expect("iname in within");
+            let depth = 1 + open.len();
+            if ax.tag == Tag::Unroll {
+                out.push_str(&format!(
+                    "{}{}\n",
+                    pad(depth),
+                    match backend {
+                        Backend::Hlo => "#pragma unroll",
+                        Backend::Ocl =>
+                            "__attribute__((opencl_unroll_hint))",
+                    }
+                ));
+            }
+            out.push_str(&format!(
+                "{}for (int {name} = 0; {name} < {}; ++{name}) {{\n",
+                pad(depth),
+                ax.extent
+            ));
+            open.push(name);
+        }
+        emit_stmt(k, instr, backend, 1 + open.len(), &mut out);
+    }
+    while open.pop().is_some() {
+        out.push_str(&format!("{}}}\n", pad(1 + open.len())));
+    }
+    out.push_str("}\n");
+    out
+}
+
+/// The sequential (loop-realized) part of an instruction's `within`,
+/// ordered by the kernel's iname nesting order.
+fn seq_nest<'a>(k: &'a Kernel, instr: &Instr) -> Vec<&'a str> {
+    k.inames
+        .iter()
+        .filter(|ax| {
+            !ax.tag.is_parallel()
+                && instr.within.iter().any(|w| *w == ax.name)
+        })
+        .map(|ax| ax.name.as_str())
+        .collect()
+}
+
+fn signature(k: &Kernel, backend: Backend, out: &mut String) {
+    let qual = match backend {
+        Backend::Hlo => "__global__ void",
+        Backend::Ocl => "__kernel void",
+    };
+    let args = k
+        .args
+        .iter()
+        .map(|a| {
+            if !a.is_vector {
+                return format!("{} {}", a.ctype, a.name);
+            }
+            match (backend, a.is_output) {
+                (Backend::Hlo, false) => {
+                    format!("const {}* __restrict__ {}", a.ctype, a.name)
+                }
+                (Backend::Hlo, true) => {
+                    format!("{}* __restrict__ {}", a.ctype, a.name)
+                }
+                (Backend::Ocl, false) => {
+                    format!("__global const {}* restrict {}", a.ctype, a.name)
+                }
+                (Backend::Ocl, true) => {
+                    format!("__global {}* restrict {}", a.ctype, a.name)
+                }
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(", ");
+    out.push_str(&format!("{qual} {}({args})", k.name));
+}
+
+fn pad(depth: usize) -> String {
+    "    ".repeat(depth)
+}
+
+fn emit_stmt(
+    k: &Kernel,
+    instr: &Instr,
+    backend: Backend,
+    depth: usize,
+    out: &mut String,
+) {
+    let guard = k
+        .guards
+        .iter()
+        .find(|g| instr.within.iter().any(|w| *w == g.inner));
+    let (depth, closing) = match guard {
+        Some(g) => {
+            out.push_str(&format!(
+                "{}if ({} < {}) {{\n",
+                pad(depth),
+                print_expr(&g.index, 0),
+                g.bound
+            ));
+            (depth + 1, true)
+        }
+        None => (depth, false),
+    };
+    let text = match &instr.what {
+        Stmt::Let { name, ctype, value } => {
+            format!("{ctype} {name} = {};", print_value(value, backend))
+        }
+        Stmt::Assign { var, value } => {
+            format!("{var} = {};", print_value(value, backend))
+        }
+        Stmt::Store { array, index, value } => format!(
+            "{array}[{}] = {};",
+            print_expr(index, 0),
+            print_value(value, backend)
+        ),
+    };
+    out.push_str(&format!("{}{}\n", pad(depth), text));
+    if closing {
+        out.push_str(&format!("{}}}\n", pad(depth - 1)));
+    }
+}
+
+fn prec(op: char) -> u8 {
+    match op {
+        '*' | '/' => 2,
+        _ => 1,
+    }
+}
+
+/// Index-context printing: backend-neutral integer arithmetic.
+fn print_expr(e: &Expr, parent: u8) -> String {
+    render(e, parent, None)
+}
+
+/// Value-context printing: math calls take the backend's flavor
+/// (CUDA `expf`, OpenCL `exp`).
+fn print_value(e: &Expr, backend: Backend) -> String {
+    render(e, 0, Some(backend))
+}
+
+fn render(e: &Expr, parent: u8, backend: Option<Backend>) -> String {
+    match e {
+        Expr::Num(v) => {
+            if v.fract() == 0.0 && v.abs() < 1e15 {
+                format!("{}", *v as i64)
+            } else {
+                format!("{v}f")
+            }
+        }
+        Expr::Var(n) => n.clone(),
+        Expr::Load(a, i) => format!("{a}[{}]", render(i, 0, backend)),
+        Expr::Neg(x) => format!("-{}", render(x, 3, backend)),
+        Expr::Bin(op, a, b) => {
+            let p = prec(*op);
+            let lhs = render(a, p, backend);
+            // right child needs parens at equal precedence for '-','/'
+            let rhs = render(b, p + u8::from(*op == '-' || *op == '/'), backend);
+            let s = format!("{lhs} {op} {rhs}");
+            if p < parent {
+                format!("({s})")
+            } else {
+                s
+            }
+        }
+        Expr::Call(f, args) => {
+            let name = call_name(f, backend);
+            let rendered = args
+                .iter()
+                .map(|a| render(a, 0, backend))
+                .collect::<Vec<_>>()
+                .join(", ");
+            format!("{name}({rendered})")
+        }
+    }
+}
+
+/// Per-backend math function spelling: CUDA uses the `f`-suffixed
+/// single-precision entry points, OpenCL C overloads the plain names.
+fn call_name(f: &str, backend: Option<Backend>) -> String {
+    let canonical = match f {
+        "abs" | "fabs" => "fabs",
+        "min" | "fminf" => "fmin",
+        "max" | "fmaxf" => "fmax",
+        other => other,
+    };
+    const MATH: &[&str] = &[
+        "exp", "log", "sqrt", "rsqrt", "sin", "cos", "tanh", "fabs",
+        "floor", "ceil", "pow", "fmin", "fmax",
+    ];
+    match backend {
+        Some(Backend::Hlo) if MATH.contains(&canonical) => {
+            format!("{canonical}f")
+        }
+        _ => canonical.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cir::lower;
+    use crate::cir::transform::{
+        split_iname, tag_parallel, unroll, SplitMode,
+    };
+
+    #[test]
+    fn parallel_loops_do_not_emit_for() {
+        let mut k = lower::saxpy_like("saxpy", 256);
+        tag_parallel(&mut k, "i", Tag::ParGlobal).unwrap();
+        let cu = generate(&k, Backend::Hlo);
+        assert!(cu.contains("blockIdx.x * blockDim.x + threadIdx.x"));
+        assert!(!cu.contains("for (int i"));
+        let cl = generate(&k, Backend::Ocl);
+        assert!(cl.contains("get_global_id(0)"));
+        assert!(cl.contains("__kernel void saxpy"));
+    }
+
+    #[test]
+    fn reduction_nesting_opens_and_closes() {
+        let k = lower::dot_like("dot", 64);
+        let cu = generate(&k, Backend::Hlo);
+        // init before the loop, accumulate inside, store after
+        let init = cu.find("float acc = 0;").unwrap();
+        let open = cu.find("for (int r").unwrap();
+        let acc = cu.find("acc = acc +").unwrap();
+        let store = cu.find("out[0] = acc;").unwrap();
+        assert!(init < open && open < acc && acc < store);
+    }
+
+    #[test]
+    fn guards_and_unroll_show_up() {
+        let mut k = lower::saxpy_like("saxpy", 100);
+        split_iname(&mut k, "i", 16, SplitMode::GuardRemainder).unwrap();
+        tag_parallel(&mut k, "i_outer", Tag::ParGroup).unwrap();
+        unroll(&mut k, "i_inner").unwrap();
+        let cu = generate(&k, Backend::Hlo);
+        assert!(cu.contains("#pragma unroll"));
+        assert!(cu.contains("if (i_outer * 16 + i_inner < 100) {"));
+        let cl = generate(&k, Backend::Ocl);
+        assert!(cl.contains("__attribute__((opencl_unroll_hint))"));
+        assert!(cl.contains("get_group_id(0)"));
+    }
+}

@@ -1,0 +1,403 @@
+//! The CIR kernel structure: typed loop nests with named iname axes.
+//!
+//! A [`Kernel`] is a Loo.py-style pair of (loop domain, instruction
+//! list): `inames` give the iteration axes in nesting order (outermost
+//! first), and every [`Instr`] names the inames it nests inside via
+//! `within`.  Code generation walks the instruction list in order,
+//! opening and closing sequential loops to match each instruction's
+//! `within` set — which is what lets a reduction express
+//! "init / accumulate / store" at three different nesting depths
+//! without an explicit tree.
+
+use crate::util::error::{Error, Result};
+
+/// How an iname is realized at code-generation time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tag {
+    /// an ordinary `for` loop
+    Seq,
+    /// flattened hardware index (CUDA `blockIdx*blockDim+threadIdx`,
+    /// OpenCL `get_global_id`)
+    ParGlobal,
+    /// the block/work-group index
+    ParGroup,
+    /// the lane/work-item index within a group
+    ParLane,
+    /// a `for` loop annotated for full unrolling
+    Unroll,
+}
+
+impl Tag {
+    pub fn is_parallel(self) -> bool {
+        matches!(self, Tag::ParGlobal | Tag::ParGroup | Tag::ParLane)
+    }
+}
+
+/// One named iteration axis.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Iname {
+    pub name: String,
+    pub extent: usize,
+    pub tag: Tag,
+    /// carries a loop-carried dependency (reduction axis): may never be
+    /// tagged parallel — the legality check `tag_parallel` enforces
+    pub seq_only: bool,
+}
+
+/// One kernel parameter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KArg {
+    pub name: String,
+    /// C scalar type name ("float", "double", "int", "long")
+    pub ctype: String,
+    /// pointer-to-global array (vs. by-value scalar)
+    pub is_vector: bool,
+    pub is_output: bool,
+}
+
+/// Scalar expressions over inames, arguments and local temporaries.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    Num(f64),
+    /// an iname, scalar argument, or `Let`-bound local
+    Var(String),
+    /// `array[index]` — global or scratch load
+    Load(String, Box<Expr>),
+    Neg(Box<Expr>),
+    Bin(char, Box<Expr>, Box<Expr>),
+    Call(String, Vec<Expr>),
+}
+
+impl Expr {
+    pub fn var(n: &str) -> Expr {
+        Expr::Var(n.to_string())
+    }
+
+    pub fn load(a: &str, idx: Expr) -> Expr {
+        Expr::Load(a.to_string(), Box::new(idx))
+    }
+
+    pub fn bin(op: char, a: Expr, b: Expr) -> Expr {
+        Expr::Bin(op, Box::new(a), Box::new(b))
+    }
+
+    /// Does the expression reference variable `name`?
+    pub fn refs(&self, name: &str) -> bool {
+        match self {
+            Expr::Num(_) => false,
+            Expr::Var(v) => v == name,
+            Expr::Load(_, i) => i.refs(name),
+            Expr::Neg(x) => x.refs(name),
+            Expr::Bin(_, a, b) => a.refs(name) || b.refs(name),
+            Expr::Call(_, args) => args.iter().any(|a| a.refs(name)),
+        }
+    }
+
+    /// Substitute every `Var(name)` with `with`.
+    pub fn subst(&mut self, name: &str, with: &Expr) {
+        match self {
+            Expr::Num(_) => {}
+            Expr::Var(v) => {
+                if v == name {
+                    *self = with.clone();
+                }
+            }
+            Expr::Load(_, i) => i.subst(name, with),
+            Expr::Neg(x) => x.subst(name, with),
+            Expr::Bin(_, a, b) => {
+                a.subst(name, with);
+                b.subst(name, with);
+            }
+            Expr::Call(_, args) => {
+                for a in args {
+                    a.subst(name, with);
+                }
+            }
+        }
+    }
+
+    /// Rewrite loads of `array` so the index becomes `new_idx` and the
+    /// array becomes `new_array` (the prefetch-into-scratch rewrite).
+    pub fn redirect_loads(
+        &mut self,
+        array: &str,
+        new_array: &str,
+        new_idx: &Expr,
+    ) {
+        match self {
+            Expr::Load(a, i) if a == array => {
+                *a = new_array.to_string();
+                **i = new_idx.clone();
+            }
+            Expr::Load(_, i) => i.redirect_loads(array, new_array, new_idx),
+            Expr::Neg(x) => x.redirect_loads(array, new_array, new_idx),
+            Expr::Bin(_, a, b) => {
+                a.redirect_loads(array, new_array, new_idx);
+                b.redirect_loads(array, new_array, new_idx);
+            }
+            Expr::Call(_, args) => {
+                for a in args {
+                    a.redirect_loads(array, new_array, new_idx);
+                }
+            }
+            Expr::Num(_) | Expr::Var(_) => {}
+        }
+    }
+
+    /// Collect `(array, index)` pairs of every load of `array`.
+    pub fn loads_of<'a>(&'a self, array: &str, out: &mut Vec<&'a Expr>) {
+        match self {
+            Expr::Load(a, i) => {
+                if a == array {
+                    out.push(i);
+                }
+                i.loads_of(array, out);
+            }
+            Expr::Neg(x) => x.loads_of(array, out),
+            Expr::Bin(_, a, b) => {
+                a.loads_of(array, out);
+                b.loads_of(array, out);
+            }
+            Expr::Call(_, args) => {
+                for a in args {
+                    a.loads_of(array, out);
+                }
+            }
+            Expr::Num(_) | Expr::Var(_) => {}
+        }
+    }
+}
+
+/// One statement inside the loop nest.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stmt {
+    /// `ctype name = value;`
+    Let { name: String, ctype: String, value: Expr },
+    /// `var = value;` (reduction accumulate)
+    Assign { var: String, value: Expr },
+    /// `array[index] = value;`
+    Store { array: String, index: Expr, value: Expr },
+}
+
+impl Stmt {
+    fn exprs_mut(&mut self) -> Vec<&mut Expr> {
+        match self {
+            Stmt::Let { value, .. } | Stmt::Assign { value, .. } => {
+                vec![value]
+            }
+            Stmt::Store { index, value, .. } => vec![index, value],
+        }
+    }
+
+    fn exprs(&self) -> Vec<&Expr> {
+        match self {
+            Stmt::Let { value, .. } | Stmt::Assign { value, .. } => {
+                vec![value]
+            }
+            Stmt::Store { index, value, .. } => vec![index, value],
+        }
+    }
+}
+
+/// An instruction: a statement plus the inames it nests inside.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Instr {
+    /// iname names this instruction is inside (order irrelevant; codegen
+    /// nests by the kernel's iname order)
+    pub within: Vec<String>,
+    pub what: Stmt,
+}
+
+/// A remainder guard introduced by a non-divisible `split_iname`: the
+/// guarded instructions only run while `index < bound`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Guard {
+    /// instructions within this iname are guarded
+    pub inner: String,
+    pub index: Expr,
+    pub bound: usize,
+}
+
+/// A prefetch staging buffer in on-chip scratch memory: `len` elements
+/// of `src` starting at `offset` are staged cooperatively before the
+/// loop over `iname`, and loads of `src` indexed by `iname` read the
+/// staged copy instead.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scratch {
+    pub name: String,
+    pub ctype: String,
+    pub len: usize,
+    pub src: String,
+    /// iname-free part of the staged footprint's base index
+    pub offset: Expr,
+    /// the sequential iname whose footprint is staged
+    pub iname: String,
+}
+
+/// A backend-agnostic kernel: loop domain + instruction list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Kernel {
+    pub name: String,
+    /// iteration axes in nesting order, outermost first
+    pub inames: Vec<Iname>,
+    pub args: Vec<KArg>,
+    pub scratch: Vec<Scratch>,
+    pub body: Vec<Instr>,
+    pub guards: Vec<Guard>,
+}
+
+impl Kernel {
+    pub fn new(name: &str) -> Kernel {
+        Kernel {
+            name: name.to_string(),
+            inames: Vec::new(),
+            args: Vec::new(),
+            scratch: Vec::new(),
+            body: Vec::new(),
+            guards: Vec::new(),
+        }
+    }
+
+    pub fn iname(&self, name: &str) -> Option<&Iname> {
+        self.inames.iter().find(|i| i.name == name)
+    }
+
+    pub fn iname_mut(&mut self, name: &str) -> Result<&mut Iname> {
+        self.inames
+            .iter_mut()
+            .find(|i| i.name == name)
+            .ok_or_else(|| Error::msg(format!("unknown iname '{name}'")))
+    }
+
+    pub fn add_iname(&mut self, name: &str, extent: usize, seq_only: bool) {
+        self.inames.push(Iname {
+            name: name.to_string(),
+            extent,
+            tag: Tag::Seq,
+            seq_only,
+        });
+    }
+
+    pub fn add_arg(&mut self, name: &str, ctype: &str, vector: bool, out: bool) {
+        self.args.push(KArg {
+            name: name.to_string(),
+            ctype: ctype.to_string(),
+            is_vector: vector,
+            is_output: out,
+        });
+    }
+
+    pub fn instr(&mut self, within: &[&str], what: Stmt) {
+        self.body.push(Instr {
+            within: within.iter().map(|s| s.to_string()).collect(),
+            what,
+        });
+    }
+
+    /// Is `array` the target of any store?
+    pub fn writes(&self, array: &str) -> bool {
+        self.body.iter().any(|i| {
+            matches!(&i.what, Stmt::Store { array: a, .. } if a == array)
+        })
+    }
+
+    /// Every index expression loading from `array`.
+    pub fn loads_of(&self, array: &str) -> Vec<&Expr> {
+        let mut out = Vec::new();
+        for i in &self.body {
+            for e in i.what.exprs() {
+                e.loads_of(array, &mut out);
+            }
+        }
+        out
+    }
+
+    /// Substitute `Var(name)` in every expression of the kernel.
+    pub(crate) fn subst_everywhere(&mut self, name: &str, with: &Expr) {
+        for i in &mut self.body {
+            for e in i.what.exprs_mut() {
+                e.subst(name, with);
+            }
+        }
+        for g in &mut self.guards {
+            g.index.subst(name, with);
+        }
+        for s in &mut self.scratch {
+            s.offset.subst(name, with);
+        }
+    }
+
+    /// Rewrite loads of `array` everywhere (prefetch).
+    pub(crate) fn redirect_loads(
+        &mut self,
+        array: &str,
+        new_array: &str,
+        new_idx: &Expr,
+    ) {
+        for i in &mut self.body {
+            for e in i.what.exprs_mut() {
+                e.redirect_loads(array, new_array, new_idx);
+            }
+        }
+    }
+
+    /// Total on-chip scratch footprint in bytes (4-byte elements for
+    /// "float"/"int", 8 otherwise).
+    pub fn scratch_bytes(&self) -> u64 {
+        self.scratch
+            .iter()
+            .map(|s| {
+                let w = match s.ctype.as_str() {
+                    "float" | "int" => 4,
+                    _ => 8,
+                };
+                (s.len * w) as u64
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expr_subst_and_refs() {
+        let mut e = Expr::bin(
+            '+',
+            Expr::load("x", Expr::var("i")),
+            Expr::var("a"),
+        );
+        assert!(e.refs("i"));
+        assert!(e.refs("a"));
+        assert!(!e.refs("j"));
+        e.subst(
+            "i",
+            &Expr::bin(
+                '+',
+                Expr::bin('*', Expr::var("i_o"), Expr::Num(4.0)),
+                Expr::var("i_i"),
+            ),
+        );
+        assert!(!e.refs("i"));
+        assert!(e.refs("i_o") && e.refs("i_i"));
+    }
+
+    #[test]
+    fn writes_and_loads() {
+        let mut k = Kernel::new("t");
+        k.add_iname("i", 8, false);
+        k.instr(
+            &["i"],
+            Stmt::Store {
+                array: "z".into(),
+                index: Expr::var("i"),
+                value: Expr::load("x", Expr::var("i")),
+            },
+        );
+        assert!(k.writes("z"));
+        assert!(!k.writes("x"));
+        assert_eq!(k.loads_of("x").len(), 1);
+        assert!(k.loads_of("z").is_empty());
+    }
+}

@@ -1,0 +1,445 @@
+//! Lowering into CIR: planner clusters, elementwise definitions, and
+//! the canonical kernel shapes the variant enumeration transforms.
+//!
+//! The CIR rendering of a cluster is *structural*: it mirrors the
+//! cluster's loop-nest shape and operation sequence (the identity the
+//! per-backend compile-cache key digests and debug surfaces show);
+//! bit-level semantics stay pinned to the cluster descriptor and the
+//! simulator executable the cache maps it to.
+
+use super::kernel::{Expr, Kernel, Stmt, Tag};
+use super::transform::{split_iname, tag_parallel, SplitMode};
+use crate::array::plan::lower::{LowerPlan, Step};
+use crate::elementwise::ast::{self, Arg, Assign};
+use crate::rtcg::dtype::DType;
+
+/// C scalar type name for a dtype.
+pub fn ctype(dt: DType) -> &'static str {
+    match dt {
+        DType::F32 => "float",
+        DType::F64 => "double",
+        DType::I32 => "int",
+        DType::I64 => "long",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Canonical shapes (the variant enumeration's starting points)
+// ---------------------------------------------------------------------------
+
+/// `z[i] = a * x[i] + y[i]` over `n` elements — the canonical
+/// elementwise/streaming shape.
+pub fn saxpy_like(name: &str, n: usize) -> Kernel {
+    let mut k = Kernel::new(name);
+    k.add_iname("i", n, false);
+    k.add_arg("a", "float", false, false);
+    k.add_arg("x", "float", true, false);
+    k.add_arg("y", "float", true, false);
+    k.add_arg("z", "float", true, true);
+    k.instr(
+        &["i"],
+        Stmt::Store {
+            array: "z".into(),
+            index: Expr::var("i"),
+            value: Expr::bin(
+                '+',
+                Expr::bin('*', Expr::var("a"), Expr::load("x", Expr::var("i"))),
+                Expr::load("y", Expr::var("i")),
+            ),
+        },
+    );
+    k
+}
+
+/// `out[0] = Σ x[r] * y[r]` — the canonical reduction shape.  The
+/// accumulation axis `r` is marked `seq_only`: `tag_parallel` must
+/// refuse it.
+pub fn dot_like(name: &str, n: usize) -> Kernel {
+    let mut k = Kernel::new(name);
+    k.add_iname("r", n, true);
+    k.add_arg("x", "float", true, false);
+    k.add_arg("y", "float", true, false);
+    k.add_arg("out", "float", true, true);
+    k.instr(
+        &[],
+        Stmt::Let {
+            name: "acc".into(),
+            ctype: "float".into(),
+            value: Expr::Num(0.0),
+        },
+    );
+    k.instr(
+        &["r"],
+        Stmt::Assign {
+            var: "acc".into(),
+            value: Expr::bin(
+                '+',
+                Expr::var("acc"),
+                Expr::bin(
+                    '*',
+                    Expr::load("x", Expr::var("r")),
+                    Expr::load("y", Expr::var("r")),
+                ),
+            ),
+        },
+    );
+    k.instr(
+        &[],
+        Stmt::Store {
+            array: "out".into(),
+            index: Expr::Num(0.0),
+            value: Expr::var("acc"),
+        },
+    );
+    k
+}
+
+/// `c[i*N + j] = Σ_r a[i*K + r] * b[r*N + j]` — the canonical matmul
+/// shape (row-parallel, column-parallel, sequential contraction).
+pub fn matmul_like(name: &str, m: usize, kdim: usize, n: usize) -> Kernel {
+    let mut k = Kernel::new(name);
+    k.add_iname("i", m, false);
+    k.add_iname("j", n, false);
+    k.add_iname("r", kdim, true);
+    k.add_arg("a", "float", true, false);
+    k.add_arg("b", "float", true, false);
+    k.add_arg("c", "float", true, true);
+    k.instr(
+        &["i", "j"],
+        Stmt::Let {
+            name: "acc".into(),
+            ctype: "float".into(),
+            value: Expr::Num(0.0),
+        },
+    );
+    k.instr(
+        &["i", "j", "r"],
+        Stmt::Assign {
+            var: "acc".into(),
+            value: Expr::bin(
+                '+',
+                Expr::var("acc"),
+                Expr::bin(
+                    '*',
+                    Expr::load(
+                        "a",
+                        Expr::bin(
+                            '+',
+                            Expr::bin(
+                                '*',
+                                Expr::var("i"),
+                                Expr::Num(kdim as f64),
+                            ),
+                            Expr::var("r"),
+                        ),
+                    ),
+                    Expr::load(
+                        "b",
+                        Expr::bin(
+                            '+',
+                            Expr::bin(
+                                '*',
+                                Expr::var("r"),
+                                Expr::Num(n as f64),
+                            ),
+                            Expr::var("j"),
+                        ),
+                    ),
+                ),
+            ),
+        },
+    );
+    k.instr(
+        &["i", "j"],
+        Stmt::Store {
+            array: "c".into(),
+            index: Expr::bin(
+                '+',
+                Expr::bin('*', Expr::var("i"), Expr::Num(n as f64)),
+                Expr::var("j"),
+            ),
+            value: Expr::var("acc"),
+        },
+    );
+    k
+}
+
+// ---------------------------------------------------------------------------
+// Elementwise definitions → CIR
+// ---------------------------------------------------------------------------
+
+fn from_ast(e: &ast::Expr) -> Expr {
+    match e {
+        ast::Expr::Num(v) => Expr::Num(*v),
+        ast::Expr::Scalar(n) => Expr::var(n),
+        ast::Expr::Elem(n) => Expr::load(n, Expr::var("i")),
+        ast::Expr::Neg(x) => Expr::Neg(Box::new(from_ast(x))),
+        ast::Expr::Bin(a, op, b) => Expr::bin(*op, from_ast(a), from_ast(b)),
+        ast::Expr::Call(f, args) => {
+            Expr::Call(f.clone(), args.iter().map(from_ast).collect())
+        }
+    }
+}
+
+/// The CIR kernel for a §5.2 elementwise definition over `n` elements:
+/// one `ParGlobal` axis, one store per assignment statement.
+pub fn from_elementwise(
+    name: &str,
+    args: &[Arg],
+    ops: &[Assign],
+    n: usize,
+) -> Kernel {
+    let mut k = Kernel::new(name);
+    k.add_iname("i", n, false);
+    for a in args {
+        let out = ops.iter().any(|st| st.target == a.name);
+        k.add_arg(&a.name, ctype(a.dtype), a.vector, out);
+    }
+    for st in ops {
+        k.instr(
+            &["i"],
+            Stmt::Store {
+                array: st.target.clone(),
+                index: Expr::var("i"),
+                value: from_ast(&st.expr),
+            },
+        );
+    }
+    tag_parallel(&mut k, "i", Tag::ParGlobal).expect("i is parallel-legal");
+    k
+}
+
+// ---------------------------------------------------------------------------
+// Planner clusters → CIR
+// ---------------------------------------------------------------------------
+
+fn elems(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+/// The CIR kernel for one planner cluster: a `ParGlobal` element axis,
+/// one `Let` per lowering step (reductions and matmuls open their own
+/// sequential `seq_only` contraction axes), one store per output.
+pub(crate) fn from_cluster(plan: &LowerPlan, name: &str) -> Kernel {
+    // re-propagate step shapes (the plan stores only parameter shapes)
+    let mut shapes: Vec<Vec<usize>> = Vec::with_capacity(plan.steps.len());
+    for step in &plan.steps {
+        let sh = match step {
+            Step::Param(p) => plan.params[*p].1.clone(),
+            Step::Lit(..) => vec![],
+            Step::Un(_, a) | Step::Cast(_, a) => shapes[*a].clone(),
+            Step::Bin(_, a, b) => {
+                if shapes[*a].len() >= shapes[*b].len() {
+                    shapes[*a].clone()
+                } else {
+                    shapes[*b].clone()
+                }
+            }
+            Step::Bcast { to, .. } => to.clone(),
+            Step::Reduce { dims, keep, child, .. } => {
+                let mut sh = Vec::new();
+                for (d, &e) in shapes[*child].iter().enumerate() {
+                    if dims.contains(&d) {
+                        if *keep {
+                            sh.push(1);
+                        }
+                    } else {
+                        sh.push(e);
+                    }
+                }
+                sh
+            }
+            Step::MatMul { a, b, ca, cb } => {
+                let mut sh: Vec<usize> = shapes[*a]
+                    .iter()
+                    .enumerate()
+                    .filter(|(d, _)| d != ca)
+                    .map(|(_, &e)| e)
+                    .collect();
+                sh.extend(
+                    shapes[*b]
+                        .iter()
+                        .enumerate()
+                        .filter(|(d, _)| d != cb)
+                        .map(|(_, &e)| e),
+                );
+                sh
+            }
+        };
+        shapes.push(sh);
+    }
+
+    let n = plan
+        .outputs
+        .iter()
+        .map(|&o| elems(&shapes[o]))
+        .max()
+        .unwrap_or(1)
+        .max(1);
+    let mut k = Kernel::new(name);
+    k.add_iname("i", n, false);
+    for (p, (dt, sh)) in plan.params.iter().enumerate() {
+        k.add_arg(&format!("p{p}"), ctype(*dt), !sh.is_empty(), false);
+    }
+
+    let t = |s: usize| format!("t{s}");
+    for (s, step) in plan.steps.iter().enumerate() {
+        let value = match step {
+            Step::Param(p) => {
+                if plan.params[*p].1.is_empty() {
+                    Expr::var(&format!("p{p}"))
+                } else {
+                    Expr::load(&format!("p{p}"), Expr::var("i"))
+                }
+            }
+            Step::Lit(_, v) => Expr::Num(*v),
+            Step::Un(op, a) => match op.name() {
+                "neg" => Expr::Neg(Box::new(Expr::var(&t(*a)))),
+                f => Expr::Call(f.to_string(), vec![Expr::var(&t(*a))]),
+            },
+            Step::Bin(op, a, b) => {
+                let (x, y) = (Expr::var(&t(*a)), Expr::var(&t(*b)));
+                match op.name() {
+                    "add" => Expr::bin('+', x, y),
+                    "sub" => Expr::bin('-', x, y),
+                    "mul" => Expr::bin('*', x, y),
+                    "div" => Expr::bin('/', x, y),
+                    f => Expr::Call(f.to_string(), vec![x, y]),
+                }
+            }
+            Step::Cast(dt, a) => Expr::Call(
+                format!("({})", ctype(*dt)),
+                vec![Expr::var(&t(*a))],
+            ),
+            Step::Bcast { child, .. } => Expr::var(&t(*child)),
+            Step::Reduce { kind, dims, child, .. } => {
+                let extent: usize = shapes[*child]
+                    .iter()
+                    .enumerate()
+                    .filter(|(d, _)| dims.contains(d))
+                    .map(|(_, &e)| e)
+                    .product::<usize>()
+                    .max(1);
+                let r = format!("r{s}");
+                k.add_iname(&r, extent, true);
+                let (init, comb) = match kind.name() {
+                    "max" => (f64::NEG_INFINITY, "fmax"),
+                    "min" => (f64::INFINITY, "fmin"),
+                    _ => (0.0, "+"),
+                };
+                let acc = format!("acc{s}");
+                k.instr(
+                    &["i"],
+                    Stmt::Let {
+                        name: acc.clone(),
+                        ctype: "float".into(),
+                        value: Expr::Num(init),
+                    },
+                );
+                let contrib = Expr::var(&t(*child));
+                let fold = if comb == "+" {
+                    Expr::bin('+', Expr::var(&acc), contrib)
+                } else {
+                    Expr::Call(
+                        comb.to_string(),
+                        vec![Expr::var(&acc), contrib],
+                    )
+                };
+                k.instr(
+                    &["i", &r],
+                    Stmt::Assign { var: acc.clone(), value: fold },
+                );
+                Expr::var(&acc)
+            }
+            Step::MatMul { a, b, ca, cb: _ } => {
+                let extent = shapes[*a].get(*ca).copied().unwrap_or(1);
+                let r = format!("r{s}");
+                k.add_iname(&r, extent, true);
+                let acc = format!("acc{s}");
+                k.instr(
+                    &["i"],
+                    Stmt::Let {
+                        name: acc.clone(),
+                        ctype: "float".into(),
+                        value: Expr::Num(0.0),
+                    },
+                );
+                k.instr(
+                    &["i", &r],
+                    Stmt::Assign {
+                        var: acc.clone(),
+                        value: Expr::bin(
+                            '+',
+                            Expr::var(&acc),
+                            Expr::bin(
+                                '*',
+                                Expr::var(&t(*a)),
+                                Expr::var(&t(*b)),
+                            ),
+                        ),
+                    },
+                );
+                Expr::var(&acc)
+            }
+        };
+        k.instr(
+            &["i"],
+            Stmt::Let { name: t(s), ctype: "float".into(), value },
+        );
+    }
+    for (o, &out) in plan.outputs.iter().enumerate() {
+        k.instr(
+            &["i"],
+            Stmt::Store {
+                array: format!("o{o}"),
+                index: Expr::var("i"),
+                value: Expr::var(&t(out)),
+            },
+        );
+    }
+    tag_parallel(&mut k, "i", Tag::ParGlobal).expect("i is parallel-legal");
+    k
+}
+
+/// Convenience: split the flat parallel axis of a canonical kernel into
+/// a (group, lane) pair of the given lane width, guarding the remainder
+/// when the extent does not divide.
+pub fn block_map(k: &mut Kernel, iname: &str, width: usize) {
+    let mode = if k.iname(iname).map(|a| a.extent % width) == Some(0) {
+        SplitMode::RequireDivisible
+    } else {
+        SplitMode::GuardRemainder
+    };
+    let (outer, inner) =
+        split_iname(k, iname, width, mode).expect("legal split");
+    tag_parallel(k, &outer, Tag::ParGroup).expect("outer is data-parallel");
+    tag_parallel(k, &inner, Tag::ParLane).expect("inner is data-parallel");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cir::{codegen, Backend};
+
+    #[test]
+    fn elementwise_lowers_and_prints_both_flavors() {
+        let args = ast::parse_decl("float a, float *x, float *z").unwrap();
+        let ops = ast::parse_ops("z[i] = a*x[i] + exp(x[i])").unwrap();
+        let k = from_elementwise("scale", &args, &ops, 128);
+        let cu = codegen::generate(&k, Backend::Hlo);
+        assert!(cu.contains("__global__ void scale"));
+        assert!(cu.contains("expf("));
+        let cl = codegen::generate(&k, Backend::Ocl);
+        assert!(cl.contains("__kernel void scale"));
+        assert!(cl.contains("exp(") && !cl.contains("expf("));
+    }
+
+    #[test]
+    fn block_map_splits_and_tags() {
+        let mut k = saxpy_like("s", 100);
+        block_map(&mut k, "i", 32);
+        assert_eq!(k.iname("i_outer").unwrap().tag, Tag::ParGroup);
+        assert_eq!(k.iname("i_inner").unwrap().tag, Tag::ParLane);
+        assert_eq!(k.guards.len(), 1, "100 % 32 needs a remainder guard");
+    }
+}

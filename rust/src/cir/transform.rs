@@ -1,0 +1,434 @@
+//! Loo.py-style kernel transformations (arXiv:1405.7470 §4).
+//!
+//! Each transformation is a *legality-checked rewrite*: it either
+//! returns the transformed kernel axis names or an error explaining why
+//! the rewrite would change program meaning.  The point (paper §4.1,
+//! §6.2) is that the tuner never has to trust a variant — anything the
+//! enumeration produces has already passed these checks.
+
+use super::kernel::{Expr, Guard, Kernel, Scratch, Stmt, Tag};
+use crate::util::error::{Error, Result};
+
+/// On-chip scratch capacity the prefetch legality check assumes when it
+/// has no device in hand (the smallest Table 1 part: 16 KiB).
+pub const SCRATCH_LIMIT_BYTES: usize = 16 << 10;
+
+/// What `split_iname` should do when the extent is not divisible by the
+/// split factor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SplitMode {
+    /// refuse the split (legality error) — the unguarded remainder
+    /// would execute out-of-domain iterations
+    RequireDivisible,
+    /// round the outer extent up and guard the body with
+    /// `outer*factor + inner < extent`
+    GuardRemainder,
+}
+
+/// Split `iname` of extent `n` into `iname_outer` (⌈n/factor⌉) and
+/// `iname_inner` (factor), rewriting every reference to
+/// `outer*factor + inner`.  Returns the two new axis names.
+pub fn split_iname(
+    k: &mut Kernel,
+    iname: &str,
+    factor: usize,
+    mode: SplitMode,
+) -> Result<(String, String)> {
+    if factor == 0 {
+        return Err(Error::msg("split factor must be ≥ 1"));
+    }
+    let pos = k
+        .inames
+        .iter()
+        .position(|i| i.name == iname)
+        .ok_or_else(|| Error::msg(format!("unknown iname '{iname}'")))?;
+    if k.inames[pos].tag != Tag::Seq {
+        return Err(Error::msg(format!(
+            "iname '{iname}' is already tagged {:?}; split before tagging",
+            k.inames[pos].tag
+        )));
+    }
+    let extent = k.inames[pos].extent;
+    let seq_only = k.inames[pos].seq_only;
+    let divisible = extent % factor == 0;
+    if !divisible && mode == SplitMode::RequireDivisible {
+        return Err(Error::msg(format!(
+            "non-divisible split of '{iname}' ({extent} % {factor} != 0) \
+             requires a remainder guard"
+        )));
+    }
+    if k.scratch.iter().any(|s| s.iname == iname) {
+        return Err(Error::msg(format!(
+            "iname '{iname}' is a prefetch footprint axis; \
+             prefetch after splitting, not before"
+        )));
+    }
+    let outer_name = format!("{iname}_outer");
+    let inner_name = format!("{iname}_inner");
+    let outer_extent = extent.div_ceil(factor);
+
+    // replace the axis by the (outer, inner) pair in nesting order
+    k.inames.splice(
+        pos..=pos,
+        [
+            super::kernel::Iname {
+                name: outer_name.clone(),
+                extent: outer_extent,
+                tag: Tag::Seq,
+                seq_only,
+            },
+            super::kernel::Iname {
+                name: inner_name.clone(),
+                extent: factor,
+                tag: Tag::Seq,
+                seq_only,
+            },
+        ],
+    );
+
+    // i  →  i_outer*factor + i_inner, everywhere
+    let replacement = Expr::bin(
+        '+',
+        Expr::bin('*', Expr::var(&outer_name), Expr::Num(factor as f64)),
+        Expr::var(&inner_name),
+    );
+    k.subst_everywhere(iname, &replacement);
+    for instr in &mut k.body {
+        if let Some(p) = instr.within.iter().position(|w| w == iname) {
+            instr.within.splice(
+                p..=p,
+                [outer_name.clone(), inner_name.clone()],
+            );
+        }
+    }
+    for g in &mut k.guards {
+        if g.inner == iname {
+            g.inner = inner_name.clone();
+        }
+    }
+    if !divisible {
+        k.guards.push(Guard {
+            inner: inner_name.clone(),
+            index: replacement,
+            bound: extent,
+        });
+    }
+    Ok((outer_name, inner_name))
+}
+
+/// Tag an iname for parallel execution across hardware axes.
+///
+/// Legality: the axis must exist, must not carry a loop-carried
+/// dependency (reduction axes are sequential by construction), and must
+/// not already be realized some other way.
+pub fn tag_parallel(k: &mut Kernel, iname: &str, tag: Tag) -> Result<()> {
+    if !tag.is_parallel() {
+        return Err(Error::msg(format!(
+            "{tag:?} is not a parallel tag"
+        )));
+    }
+    if k.inames
+        .iter()
+        .any(|i| i.name != iname && i.tag == tag)
+    {
+        return Err(Error::msg(format!(
+            "another iname is already tagged {tag:?}"
+        )));
+    }
+    let ax = k.iname_mut(iname)?;
+    if ax.seq_only {
+        return Err(Error::msg(format!(
+            "iname '{iname}' carries a loop-carried dependency \
+             (reduction axis) and cannot run in parallel"
+        )));
+    }
+    if ax.tag != Tag::Seq {
+        return Err(Error::msg(format!(
+            "iname '{iname}' is already tagged {:?}",
+            ax.tag
+        )));
+    }
+    ax.tag = tag;
+    Ok(())
+}
+
+/// Largest extent `unroll` accepts: beyond this the generated code
+/// would bloat past any instruction cache.
+pub const MAX_UNROLL_EXTENT: usize = 64;
+
+/// Mark a sequential iname for full unrolling.
+pub fn unroll(k: &mut Kernel, iname: &str) -> Result<()> {
+    let ax = k.iname_mut(iname)?;
+    if ax.tag.is_parallel() {
+        return Err(Error::msg(format!(
+            "cannot unroll parallel iname '{iname}'"
+        )));
+    }
+    if ax.tag == Tag::Unroll {
+        return Err(Error::msg(format!("iname '{iname}' already unrolled")));
+    }
+    if ax.extent > MAX_UNROLL_EXTENT {
+        return Err(Error::msg(format!(
+            "unroll of '{iname}' (extent {}) exceeds the {} limit",
+            ax.extent, MAX_UNROLL_EXTENT
+        )));
+    }
+    ax.tag = Tag::Unroll;
+    Ok(())
+}
+
+/// Stage the footprint of `array` along sequential iname `iname` into
+/// an on-chip scratch buffer, rewriting the loads to read the staged
+/// copy (Loo.py `add_prefetch`).
+///
+/// Legality:
+/// * `array` must be read-only in this kernel;
+/// * `iname` must exist and be sequential (the staged footprint is the
+///   loop's whole extent);
+/// * every load of `array` that references `iname` must be of the form
+///   `offset + iname` with an `iname`-free, loop-invariant `offset`
+///   (all loads must agree on one offset — one staged footprint);
+/// * the footprint must fit the scratch budget.
+pub fn prefetch(k: &mut Kernel, array: &str, iname: &str) -> Result<String> {
+    if k.writes(array) {
+        return Err(Error::msg(format!(
+            "cannot prefetch '{array}': it is written by this kernel"
+        )));
+    }
+    let ax = k
+        .iname(iname)
+        .ok_or_else(|| Error::msg(format!("unknown iname '{iname}'")))?;
+    if ax.tag.is_parallel() {
+        return Err(Error::msg(format!(
+            "prefetch footprint axis '{iname}' must be sequential"
+        )));
+    }
+    let extent = ax.extent;
+    let ctype = k
+        .args
+        .iter()
+        .find(|a| a.name == array && a.is_vector)
+        .map(|a| a.ctype.clone())
+        .ok_or_else(|| {
+            Error::msg(format!("'{array}' is not a vector argument"))
+        })?;
+    let width = if ctype == "float" || ctype == "int" { 4 } else { 8 };
+    let footprint = extent * width + k.scratch_bytes() as usize;
+    if footprint > SCRATCH_LIMIT_BYTES {
+        return Err(Error::msg(format!(
+            "prefetch footprint {footprint} B exceeds the \
+             {SCRATCH_LIMIT_BYTES} B scratch budget"
+        )));
+    }
+
+    // every iname-referencing load must decompose as offset + iname
+    let mut offset: Option<Expr> = None;
+    for idx in k.loads_of(array) {
+        if !idx.refs(iname) {
+            continue; // stays a global load
+        }
+        let off = strip_iname_term(idx, iname).ok_or_else(|| {
+            Error::msg(format!(
+                "load of '{array}' indexes '{iname}' non-affinely; \
+                 cannot stage a rectangular footprint"
+            ))
+        })?;
+        // the offset must not vary inside any sequential loop —
+        // the staged copy is fetched once, before the loops open
+        for ax in &k.inames {
+            if !ax.tag.is_parallel() && off.refs(&ax.name) {
+                return Err(Error::msg(format!(
+                    "prefetch offset of '{array}' varies with \
+                     sequential iname '{}'",
+                    ax.name
+                )));
+            }
+        }
+        match &offset {
+            None => offset = Some(off),
+            Some(prev) if *prev == off => {}
+            Some(_) => {
+                return Err(Error::msg(format!(
+                    "loads of '{array}' disagree on the staged \
+                     footprint offset"
+                )))
+            }
+        }
+    }
+    let offset = offset.ok_or_else(|| {
+        Error::msg(format!(
+            "no load of '{array}' references iname '{iname}'; \
+             nothing to prefetch"
+        ))
+    })?;
+
+    let sname = format!("s_{array}");
+    k.scratch.push(Scratch {
+        name: sname.clone(),
+        ctype,
+        len: extent,
+        src: array.to_string(),
+        offset,
+        iname: iname.to_string(),
+    });
+    // rewrite matching loads: array[offset + iname] → s_array[iname]
+    redirect_matching(k, array, &sname, iname);
+    Ok(sname)
+}
+
+/// If `idx` is `offset + iname` (in any association, coefficient 1),
+/// return the iname-free `offset`; `None` when the index is not of that
+/// shape.
+fn strip_iname_term(idx: &Expr, iname: &str) -> Option<Expr> {
+    // flatten the top-level sum
+    let mut terms = Vec::new();
+    flatten_sum(idx, &mut terms);
+    let (with, without): (Vec<&Expr>, Vec<&Expr>) =
+        terms.iter().partition(|t| t.refs(iname));
+    // exactly one term, and that term must be the bare iname
+    if with.len() != 1 || *with[0] != Expr::var(iname) {
+        return None;
+    }
+    Some(match without.len() {
+        0 => Expr::Num(0.0),
+        _ => without[1..].iter().fold((*without[0]).clone(), |acc, t| {
+            Expr::bin('+', acc, (*t).clone())
+        }),
+    })
+}
+
+fn flatten_sum<'a>(e: &'a Expr, out: &mut Vec<&'a Expr>) {
+    match e {
+        Expr::Bin('+', a, b) => {
+            flatten_sum(a, out);
+            flatten_sum(b, out);
+        }
+        other => out.push(other),
+    }
+}
+
+/// Rewrite only the loads whose index references `iname`.
+fn redirect_matching(k: &mut Kernel, array: &str, sname: &str, iname: &str) {
+    fn walk(e: &mut Expr, array: &str, sname: &str, iname: &str) {
+        match e {
+            Expr::Load(a, i) => {
+                walk(i, array, sname, iname);
+                if a == array && i.refs(iname) {
+                    *a = sname.to_string();
+                    **i = Expr::var(iname);
+                }
+            }
+            Expr::Neg(x) => walk(x, array, sname, iname),
+            Expr::Bin(_, a, b) => {
+                walk(a, array, sname, iname);
+                walk(b, array, sname, iname);
+            }
+            Expr::Call(_, args) => {
+                for a in args {
+                    walk(a, array, sname, iname);
+                }
+            }
+            Expr::Num(_) | Expr::Var(_) => {}
+        }
+    }
+    for instr in &mut k.body {
+        match &mut instr.what {
+            Stmt::Let { value, .. } | Stmt::Assign { value, .. } => {
+                walk(value, array, sname, iname)
+            }
+            Stmt::Store { index, value, .. } => {
+                walk(index, array, sname, iname);
+                walk(value, array, sname, iname);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cir::lower;
+
+    fn saxpy(n: usize) -> Kernel {
+        lower::saxpy_like("saxpy", n)
+    }
+
+    #[test]
+    fn split_divisible() {
+        let mut k = saxpy(64);
+        let (o, i) = split_iname(&mut k, "i", 16, SplitMode::RequireDivisible)
+            .unwrap();
+        assert_eq!((o.as_str(), i.as_str()), ("i_outer", "i_inner"));
+        assert_eq!(k.iname("i_outer").unwrap().extent, 4);
+        assert_eq!(k.iname("i_inner").unwrap().extent, 16);
+        assert!(k.iname("i").is_none());
+        assert!(k.guards.is_empty());
+    }
+
+    #[test]
+    fn split_non_divisible_rejected_without_guard() {
+        let mut k = saxpy(100);
+        let err = split_iname(&mut k, "i", 16, SplitMode::RequireDivisible)
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("remainder guard"),
+            "unexpected error: {err}"
+        );
+        // the kernel is untouched
+        assert!(k.iname("i").is_some());
+    }
+
+    #[test]
+    fn split_non_divisible_guarded() {
+        let mut k = saxpy(100);
+        split_iname(&mut k, "i", 16, SplitMode::GuardRemainder).unwrap();
+        assert_eq!(k.iname("i_outer").unwrap().extent, 7); // ⌈100/16⌉
+        assert_eq!(k.guards.len(), 1);
+        assert_eq!(k.guards[0].bound, 100);
+        assert_eq!(k.guards[0].inner, "i_inner");
+    }
+
+    #[test]
+    fn tag_parallel_rejects_reduction_axis() {
+        let mut k = lower::dot_like("dot", 256);
+        let err = tag_parallel(&mut k, "r", Tag::ParGlobal).unwrap_err();
+        assert!(err.to_string().contains("loop-carried"));
+    }
+
+    #[test]
+    fn tag_parallel_rejects_double_tagging() {
+        let mut k = saxpy(64);
+        tag_parallel(&mut k, "i", Tag::ParGlobal).unwrap();
+        assert!(tag_parallel(&mut k, "i", Tag::ParGroup).is_err());
+    }
+
+    #[test]
+    fn unroll_limits() {
+        let mut k = saxpy(4096);
+        // the whole axis is too big to unroll
+        assert!(unroll(&mut k, "i").is_err());
+        // but an inner split of 8 is fine
+        split_iname(&mut k, "i", 8, SplitMode::RequireDivisible).unwrap();
+        unroll(&mut k, "i_inner").unwrap();
+        assert_eq!(k.iname("i_inner").unwrap().tag, Tag::Unroll);
+        // parallel axes can never unroll
+        tag_parallel(&mut k, "i_outer", Tag::ParGlobal).unwrap();
+        assert!(unroll(&mut k, "i_outer").is_err());
+    }
+
+    #[test]
+    fn prefetch_rejects_written_arrays_and_overflow() {
+        let mut k = lower::dot_like("dot", 256);
+        assert!(prefetch(&mut k, "out", "r").is_err(), "written array");
+        // 8192 floats = 32 KiB > the 16 KiB budget
+        let mut big = lower::dot_like("dot", 8192);
+        let err = prefetch(&mut big, "x", "r").unwrap_err();
+        assert!(err.to_string().contains("scratch budget"));
+        // in budget: stages and rewrites the loads
+        let s = prefetch(&mut k, "x", "r").unwrap();
+        assert_eq!(s, "s_x");
+        assert_eq!(k.scratch.len(), 1);
+        assert!(k.loads_of("x").is_empty(), "loads now hit scratch");
+        assert!(!k.loads_of("s_x").is_empty());
+    }
+}

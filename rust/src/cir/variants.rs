@@ -1,0 +1,384 @@
+//! Variant enumeration: the transformation-generated search space the
+//! tuner grid-searches per (kernel, workload, backend, device).
+//!
+//! Every variant is produced by *applying* the legality-checked
+//! transformations to a canonical CIR kernel — combinations a check
+//! rejects (scratch overflow, unroll of a huge axis, …) simply drop
+//! out of the pool, which is the §4.1 point that validity itself is
+//! configuration-dependent and the pool must be enumerated, not
+//! assumed.
+
+use super::kernel::Kernel;
+use super::lower;
+use super::transform::{prefetch, split_iname, unroll, SplitMode};
+use super::Backend;
+use crate::device::desc::KernelDesc;
+use crate::device::profile::DeviceProfile;
+use crate::device::sim;
+
+/// Work-group / block widths the enumeration tries.
+pub const WIDTHS: [usize; 4] = [32, 64, 128, 256];
+/// Inner unroll factors the enumeration tries.
+pub const UNROLLS: [u32; 3] = [1, 2, 4];
+
+/// The three cluster shapes CIR kernels take.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkShape {
+    /// streaming map: `flops` and `bytes` per element
+    Elementwise { n: usize, flops: f64, bytes: f64 },
+    /// full reduction over `n` elements
+    Reduce { n: usize },
+    /// `m×k · k×n` matmul
+    MatMul { m: usize, k: usize, n: usize },
+}
+
+impl WorkShape {
+    /// Canonical (untransformed) CIR kernel for this shape.
+    pub fn base_kernel(&self, name: &str) -> Kernel {
+        match *self {
+            WorkShape::Elementwise { n, .. } => lower::saxpy_like(name, n),
+            WorkShape::Reduce { n } => lower::dot_like(name, n),
+            WorkShape::MatMul { m, k, n } => {
+                lower::matmul_like(name, m, k, n)
+            }
+        }
+    }
+
+    /// Total output-driving elements (what the launch grid covers).
+    pub fn elems(&self) -> usize {
+        match *self {
+            WorkShape::Elementwise { n, .. } => n,
+            WorkShape::Reduce { n } => n,
+            WorkShape::MatMul { m, n, .. } => m * n,
+        }
+    }
+}
+
+/// One enumerated variant: the transformed kernel plus the analytic
+/// descriptor the performance model scores.
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub name: String,
+    pub kernel: Kernel,
+    pub desc: KernelDesc,
+}
+
+/// The default (untuned) variant name: what a backend runs before any
+/// tuning has happened.
+pub fn default_variant() -> String {
+    variant_name(256, 1, false)
+}
+
+fn variant_name(width: usize, u: u32, pf: bool) -> String {
+    let mut s = format!("w{width}_u{u}");
+    if pf {
+        s.push_str("_pf");
+    }
+    s
+}
+
+/// Apply the transformation sequence `(width, unroll, prefetch)` to the
+/// canonical kernel of `shape`.  Returns `None` when any legality check
+/// rejects the combination.
+pub fn apply(
+    shape: &WorkShape,
+    kernel_name: &str,
+    width: usize,
+    u: u32,
+    pf: bool,
+) -> Option<Kernel> {
+    let mut k = shape.base_kernel(kernel_name);
+    match shape {
+        WorkShape::Elementwise { .. } => {
+            if pf {
+                return None; // nothing is reused; no footprint to stage
+            }
+            let span = width * u as usize;
+            let n = k.iname("i")?.extent;
+            let mode = if n % span == 0 {
+                SplitMode::RequireDivisible
+            } else {
+                SplitMode::GuardRemainder
+            };
+            let (outer, inner) = split_iname(&mut k, "i", span, mode).ok()?;
+            super::transform::tag_parallel(
+                &mut k,
+                &outer,
+                super::kernel::Tag::ParGroup,
+            )
+            .ok()?;
+            if u > 1 {
+                let (lane, un) =
+                    split_iname(&mut k, &inner, u as usize, mode).ok()?;
+                super::transform::tag_parallel(
+                    &mut k,
+                    &lane,
+                    super::kernel::Tag::ParLane,
+                )
+                .ok()?;
+                unroll(&mut k, &un).ok()?;
+            } else {
+                super::transform::tag_parallel(
+                    &mut k,
+                    &inner,
+                    super::kernel::Tag::ParLane,
+                )
+                .ok()?;
+            }
+        }
+        WorkShape::Reduce { .. } => {
+            if u > 1 {
+                let n = k.iname("r")?.extent;
+                let mode = if n % (u as usize) == 0 {
+                    SplitMode::RequireDivisible
+                } else {
+                    SplitMode::GuardRemainder
+                };
+                let (_, un) =
+                    split_iname(&mut k, "r", u as usize, mode).ok()?;
+                unroll(&mut k, &un).ok()?;
+                if pf {
+                    return None; // staged loads are split across axes
+                }
+            } else if pf {
+                prefetch(&mut k, "x", "r").ok()?;
+            }
+        }
+        WorkShape::MatMul { .. } => {
+            // each group takes one row i and a width-wide column strip;
+            // j_outer stays a sequential loop over strips
+            let n = k.iname("j")?.extent;
+            let mode = if n % width == 0 {
+                SplitMode::RequireDivisible
+            } else {
+                SplitMode::GuardRemainder
+            };
+            let (_, j_inner) = split_iname(&mut k, "j", width, mode).ok()?;
+            super::transform::tag_parallel(
+                &mut k,
+                "i",
+                super::kernel::Tag::ParGroup,
+            )
+            .ok()?;
+            super::transform::tag_parallel(
+                &mut k,
+                &j_inner,
+                super::kernel::Tag::ParLane,
+            )
+            .ok()?;
+            if pf {
+                prefetch(&mut k, "a", "r").ok()?;
+            }
+            if u > 1 {
+                let n = k.iname("r")?.extent;
+                let mode = if n % (u as usize) == 0 {
+                    SplitMode::RequireDivisible
+                } else {
+                    SplitMode::GuardRemainder
+                };
+                let (_, un) =
+                    split_iname(&mut k, "r", u as usize, mode).ok()?;
+                unroll(&mut k, &un).ok()?;
+            }
+        }
+    }
+    Some(k)
+}
+
+/// Analytic descriptor for the `(width, unroll, prefetch)` point of
+/// `shape` — what [`sim::estimate`] scores.
+fn desc_for(
+    kernel: &str,
+    shape: &WorkShape,
+    width: usize,
+    u: u32,
+    pf: bool,
+    scratch_bytes: u64,
+) -> KernelDesc {
+    let span = width * u as usize;
+    let (useful, executed, dram, ideal, matmul) = match *shape {
+        WorkShape::Elementwise { n, flops, bytes } => {
+            let f = n as f64 * flops;
+            let b = n as f64 * bytes;
+            (f, f, b, b, false)
+        }
+        WorkShape::Reduce { n } => {
+            let f = n as f64;
+            // a second stage folds the per-block partials
+            let b = (n as f64 + width as f64) * 4.0;
+            (f, f + width as f64, b, b, false)
+        }
+        WorkShape::MatMul { m, k, n } => {
+            let f = 2.0 * m as f64 * k as f64 * n as f64;
+            let ideal =
+                4.0 * (m * k + k * n + m * n) as f64;
+            // without staging, each lane tile re-streams the A row
+            let a_traffic = if pf {
+                4.0 * (m * k) as f64
+            } else {
+                4.0 * m as f64 * k as f64 * (n as f64 / width as f64).max(1.0)
+            };
+            let b_traffic =
+                4.0 * (k * n) as f64 * (m as f64 / 8.0).max(1.0) / 8.0;
+            let dram = (a_traffic + b_traffic + 4.0 * (m * n) as f64)
+                .max(ideal);
+            (f, f, dram, ideal, true)
+        }
+    };
+    let grid = shape.elems().div_ceil(span).max(1) as u64;
+    KernelDesc {
+        kernel: kernel.to_string(),
+        variant: variant_name(width, u, pf),
+        useful_flops: useful,
+        executed_flops: executed,
+        dram_bytes: dram,
+        ideal_bytes: ideal,
+        scratch_bytes,
+        block_contexts: width as u32,
+        grid,
+        inner_contig_bytes: (width * 4) as u64,
+        unroll: u,
+        matmul,
+        gather: false,
+    }
+}
+
+/// Enumerate the legal variant pool for `shape`.
+pub fn enumerate(kernel: &str, shape: &WorkShape) -> Vec<Variant> {
+    let mut out = Vec::new();
+    for &width in &WIDTHS {
+        for &u in &UNROLLS {
+            for pf in [false, true] {
+                let Some(k) = apply(shape, kernel, width, u, pf) else {
+                    continue; // a legality check rejected it
+                };
+                out.push(Variant {
+                    name: variant_name(width, u, pf),
+                    desc: desc_for(
+                        kernel,
+                        shape,
+                        width,
+                        u,
+                        pf,
+                        k.scratch_bytes(),
+                    ),
+                    kernel: k,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Best modeled seconds over the variant pool on `(backend, dev)`,
+/// with the winning variant name.  `None` if nothing in the pool is
+/// valid on the device.
+pub fn best_modeled(
+    kernel: &str,
+    shape: &WorkShape,
+    backend: Backend,
+    dev: &DeviceProfile,
+) -> Option<(String, f64)> {
+    let adj = backend.adjust(dev);
+    enumerate(kernel, shape)
+        .into_iter()
+        .filter_map(|v| {
+            sim::estimate(&v.desc, &adj).map(|e| (v.name, e.seconds))
+        })
+        .min_by(|a, b| a.1.total_cmp(&b.1))
+}
+
+/// Modeled seconds of one named variant (the untuned baseline uses
+/// [`default_variant`]).
+pub fn modeled_seconds(
+    kernel: &str,
+    shape: &WorkShape,
+    variant: &str,
+    backend: Backend,
+    dev: &DeviceProfile,
+) -> Option<f64> {
+    let adj = backend.adjust(dev);
+    enumerate(kernel, shape)
+        .into_iter()
+        .find(|v| v.name == variant)
+        .and_then(|v| sim::estimate(&v.desc, &adj))
+        .map(|e| e.seconds)
+}
+
+/// Backend the modeled cost favors for `shape` on `dev` — what
+/// `--backend auto` falls back to when the tuning DB has no entry.
+/// Ties break toward [`Backend::Hlo`].
+pub fn auto_backend(shape: &WorkShape, dev: &DeviceProfile) -> Backend {
+    let kernel = "auto";
+    let hlo = best_modeled(kernel, shape, Backend::Hlo, dev)
+        .map(|(_, s)| s)
+        .unwrap_or(f64::INFINITY);
+    let ocl = best_modeled(kernel, shape, Backend::Ocl, dev)
+        .map(|(_, s)| s)
+        .unwrap_or(f64::INFINITY);
+    if ocl < hlo {
+        Backend::Ocl
+    } else {
+        Backend::Hlo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profile::C1060;
+
+    #[test]
+    fn enumeration_is_nonempty_and_legality_filtered() {
+        let el = enumerate(
+            "saxpy",
+            &WorkShape::Elementwise { n: 4096, flops: 2.0, bytes: 12.0 },
+        );
+        assert!(!el.is_empty());
+        // elementwise never prefetches
+        assert!(el.iter().all(|v| !v.name.ends_with("_pf")));
+
+        // a reduction too large to stage loses its _pf variants
+        let big = enumerate("dot", &WorkShape::Reduce { n: 1 << 20 });
+        assert!(big.iter().all(|v| !v.name.ends_with("_pf")));
+        let small = enumerate("dot", &WorkShape::Reduce { n: 2048 });
+        assert!(small.iter().any(|v| v.name.ends_with("_pf")));
+    }
+
+    #[test]
+    fn tuned_beats_default_on_both_backends() {
+        let shape =
+            WorkShape::Elementwise { n: 1 << 20, flops: 2.0, bytes: 12.0 };
+        for b in Backend::ALL {
+            let tuned = best_modeled("saxpy", &shape, b, &C1060).unwrap();
+            let def = modeled_seconds(
+                "saxpy",
+                &shape,
+                &default_variant(),
+                b,
+                &C1060,
+            )
+            .unwrap();
+            assert!(
+                tuned.1 < def,
+                "{b:?}: tuned {} !< default {def}",
+                tuned.1
+            );
+        }
+    }
+
+    #[test]
+    fn auto_backend_differs_by_kernel_size() {
+        // tiny launch-bound kernel: HLO's cheaper launch wins
+        let tiny =
+            WorkShape::Elementwise { n: 1024, flops: 1.0, bytes: 12.0 };
+        assert_eq!(auto_backend(&tiny, &C1060), Backend::Hlo);
+        // huge streaming kernel: OCL's wider effective bandwidth wins
+        let huge = WorkShape::Elementwise {
+            n: 1 << 24,
+            flops: 1.0,
+            bytes: 12.0,
+        };
+        assert_eq!(auto_backend(&huge, &C1060), Backend::Ocl);
+    }
+}

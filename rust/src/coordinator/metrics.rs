@@ -205,14 +205,15 @@ pub struct Metrics {
     /// actually accrues once intake admits a job
     exec_queue_depths: Mutex<Vec<u64>>,
     // mirror of the unified compile cache (refreshed by the service
-    // loop; the cache itself lives behind the toolkit)
-    cache_mem_hits: AtomicU64,
-    cache_disk_hits: AtomicU64,
-    cache_misses: AtomicU64,
-    cache_single_flight_waits: AtomicU64,
-    cache_evictions: AtomicU64,
-    cache_entries: AtomicU64,
-    cache_bytes: AtomicU64,
+    // loop; the cache itself lives behind the toolkit).  Whole-struct
+    // swap like the pool/planner mirrors, so the per-backend hit/miss
+    // rows ride along without a counter per cell.
+    cache: Mutex<CacheSnapshot>,
+    /// serve-time backend policy tag ("hlo"/"ocl"/"auto") for this
+    /// coordinator shard
+    backend: Mutex<String>,
+    /// Launch requests whose variant came out of the tuning database
+    pub tuning_hits: AtomicU64,
     // mirror of the §6.3 staging pool (same refresh discipline as
     // the exec queue depths: whole-struct swap on the Stats path)
     pool: Mutex<PoolStats>,
@@ -251,8 +252,13 @@ pub struct Snapshot {
     pub queue_wait_hist: [u64; QUEUE_WAIT_BUCKET_COUNT],
     /// outstanding jobs per device worker at the last Stats refresh
     pub exec_queue_depths: Vec<u64>,
-    /// unified compile-cache counters (see `rtcg::cache`)
+    /// unified compile-cache counters, including the per-backend
+    /// hit/miss rows (see `rtcg::cache`)
     pub cache: CacheSnapshot,
+    /// this shard's serve-time backend policy tag ("hlo"/"ocl"/"auto")
+    pub backend: String,
+    /// Launch requests resolved through the tuning database
+    pub tuning_hits: u64,
     /// H2D staging-pool counters (see `mempool`)
     pub pool: PoolStats,
     /// graph-planner decision counters (see `array::plan::stats`)
@@ -284,14 +290,12 @@ impl Metrics {
 
     /// Refresh the cache mirror from a fresh [`CacheSnapshot`].
     pub fn update_cache(&self, s: &CacheSnapshot) {
-        self.cache_mem_hits.store(s.mem_hits, Ordering::Relaxed);
-        self.cache_disk_hits.store(s.disk_hits, Ordering::Relaxed);
-        self.cache_misses.store(s.misses, Ordering::Relaxed);
-        self.cache_single_flight_waits
-            .store(s.single_flight_waits, Ordering::Relaxed);
-        self.cache_evictions.store(s.evictions, Ordering::Relaxed);
-        self.cache_entries.store(s.entries, Ordering::Relaxed);
-        self.cache_bytes.store(s.bytes, Ordering::Relaxed);
+        *self.cache.lock().unwrap() = s.clone();
+    }
+
+    /// Record this shard's serve-time backend policy tag.
+    pub fn set_backend(&self, tag: &str) {
+        *self.backend.lock().unwrap() = tag.to_string();
     }
 
     /// Refresh the per-device scheduler queue-depth mirror.
@@ -368,17 +372,9 @@ impl Metrics {
                 .lock()
                 .unwrap()
                 .clone(),
-            cache: CacheSnapshot {
-                mem_hits: self.cache_mem_hits.load(Ordering::Relaxed),
-                disk_hits: self.cache_disk_hits.load(Ordering::Relaxed),
-                misses: self.cache_misses.load(Ordering::Relaxed),
-                single_flight_waits: self
-                    .cache_single_flight_waits
-                    .load(Ordering::Relaxed),
-                evictions: self.cache_evictions.load(Ordering::Relaxed),
-                entries: self.cache_entries.load(Ordering::Relaxed),
-                bytes: self.cache_bytes.load(Ordering::Relaxed),
-            },
+            cache: self.cache.lock().unwrap().clone(),
+            backend: self.backend.lock().unwrap().clone(),
+            tuning_hits: self.tuning_hits.load(Ordering::Relaxed),
             pool: self.pool.lock().unwrap().clone(),
             planner: self.planner.lock().unwrap().clone(),
             elementwise_jobs: self
@@ -411,6 +407,7 @@ mod tests {
 
     #[test]
     fn cache_mirror_roundtrips() {
+        use crate::rtcg::cache::BackendCacheRow;
         let m = Metrics::default();
         let cs = CacheSnapshot {
             mem_hits: 7,
@@ -420,9 +417,28 @@ mod tests {
             evictions: 1,
             entries: 2,
             bytes: 9000,
+            per_backend: [
+                BackendCacheRow { mem_hits: 5, disk_hits: 1, misses: 1 },
+                BackendCacheRow { mem_hits: 2, disk_hits: 0, misses: 1 },
+            ],
         };
         m.update_cache(&cs);
-        assert_eq!(m.snapshot().cache, cs);
+        let got = m.snapshot().cache;
+        assert_eq!(got, cs);
+        // the per-backend hit/miss rows survive the mirror
+        assert_eq!(got.per_backend[0].mem_hits, 5);
+        assert_eq!(got.per_backend[1].misses, 1);
+    }
+
+    #[test]
+    fn backend_and_tuning_hit_gauges_surface() {
+        let m = Metrics::default();
+        m.set_backend("auto");
+        m.note(&m.tuning_hits);
+        m.note(&m.tuning_hits);
+        let s = m.snapshot();
+        assert_eq!(s.backend, "auto");
+        assert_eq!(s.tuning_hits, 2);
     }
 
     #[test]

@@ -32,6 +32,7 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::cir::BackendChoice;
 use crate::coordinator::api::{Op, Request, Response, TenantId};
 use crate::coordinator::batch::{
     BatchConfig, Batcher, GroupKind, ReadyBatch,
@@ -74,6 +75,10 @@ pub struct CoordinatorConfig {
     pub batch: BatchConfig,
     /// tenant weights and quotas for the fair intake queue
     pub fair: FairConfig,
+    /// code-generation backend policy for this shard: a fixed backend,
+    /// or `Auto` — resolve per kernel through the tuning database
+    /// (fastest recorded backend) with a modeled-cost fallback
+    pub backend: BackendChoice,
 }
 
 impl Default for CoordinatorConfig {
@@ -87,6 +92,7 @@ impl Default for CoordinatorConfig {
             optional_artifacts: false,
             batch: BatchConfig::default(),
             fair: FairConfig::default(),
+            backend: BackendChoice::default(),
         }
     }
 }
@@ -377,6 +383,10 @@ fn service_loop(
             return;
         }
     };
+    // this shard's backend policy: every compile issued through the
+    // shared toolkit (and every toolkit clone) is keyed/tagged by it
+    registry.toolkit().set_backend_choice(cfg.backend);
+    metrics.set_backend(cfg.backend.tag());
     // the toolkit's shared per-device pool: one scheduler serves the
     // coordinator AND in-process async users, so least-loaded
     // placement sees every queue
@@ -517,10 +527,26 @@ fn dispatch(
                     None => {
                         let platform =
                             registry.toolkit().client().platform_name();
-                        db.as_ref()
-                            .and_then(|d| {
-                                d.lookup(&kernel, &workload, &platform)
-                            })
+                        // backend-aware db consultation: a fixed shard
+                        // reads its own backend's row; an auto shard
+                        // takes whichever backend's recorded winner is
+                        // fastest for this (kernel, workload, device)
+                        let tuned = db.as_ref().and_then(|d| {
+                            match registry.toolkit().backend_choice() {
+                                BackendChoice::Fixed(b) => d.lookup_for(
+                                    &kernel, &workload, &platform, b,
+                                ),
+                                BackendChoice::Auto => d
+                                    .best_backend(
+                                        &kernel, &workload, &platform,
+                                    )
+                                    .map(|(_, e)| e),
+                            }
+                        });
+                        if tuned.is_some() {
+                            metrics.note(&metrics.tuning_hits);
+                        }
+                        tuned
                             .map(|e| e.variant.clone())
                             .or_else(|| {
                                 registry
@@ -1154,6 +1180,32 @@ ENTRY main {
             .outputs()
             .unwrap();
         assert_eq!(out[0].as_f32().unwrap(), &[6.0, 8.0]);
+        c.shutdown();
+    }
+
+    #[test]
+    fn shard_backend_choice_is_applied_and_reported() {
+        use crate::cir::Backend;
+        let tk = Toolkit::init_ephemeral().unwrap();
+        let mut c = Coordinator::start(CoordinatorConfig {
+            artifacts_dir: PathBuf::from("/nonexistent-artifacts"),
+            optional_artifacts: true,
+            toolkit: Some(tk.clone()),
+            backend: BackendChoice::Fixed(Backend::Ocl),
+            ..Default::default()
+        })
+        .unwrap();
+        let s = match c.submit(Op::Stats) {
+            Response::Stats(s) => s,
+            other => panic!("expected stats, got {other:?}"),
+        };
+        assert_eq!(s.backend, "ocl");
+        assert_eq!(s.tuning_hits, 0);
+        // the shard's policy landed on the shared toolkit
+        assert_eq!(
+            tk.backend_choice(),
+            BackendChoice::Fixed(Backend::Ocl)
+        );
         c.shutdown();
     }
 

@@ -12,14 +12,43 @@
 //! this module remains the explicit, C-snippet surface.)
 
 use crate::array::{ArrayContext, GpuArray};
+use crate::cir::{self, Backend, BackendChoice};
 use crate::elementwise::ast::{
     parse_decl, parse_expr, parse_ops, referenced, Arg, Assign, Expr,
 };
 use crate::rtcg::dtype::{promote, DType};
 use crate::rtcg::hlobuild;
+use crate::rtcg::module::Toolkit;
 use crate::runtime::HostArray;
 use crate::util::error::{Error, Result};
 use crate::util::hash::digest_hex;
+
+/// Resolve the toolkit's backend policy for an elementwise-shaped
+/// launch of `n` elements: fixed choices pass through; `auto` asks the
+/// modeled cost ([`cir::variants::auto_backend`]).
+fn resolve_backend(tk: &Toolkit, n: usize, flops: f64, bytes: f64) -> Backend {
+    match tk.backend_choice() {
+        BackendChoice::Fixed(b) => b,
+        BackendChoice::Auto => cir::variants::auto_backend(
+            &cir::variants::WorkShape::Elementwise { n, flops, bytes },
+            &crate::device::profile::C1060,
+        ),
+    }
+}
+
+/// Per-backend generated-source identity of an elementwise definition:
+/// the CIR kernel rendered in the backend's source flavor, digested
+/// into the compile-cache key.
+fn cir_digest(
+    name: &str,
+    args: &[Arg],
+    ops: &[Assign],
+    n: usize,
+    backend: Backend,
+) -> String {
+    let k = cir::lower::from_elementwise(name, args, ops, n);
+    digest_hex(cir::codegen::generate(&k, backend).as_bytes())
+}
 
 /// Argument value at call time.
 pub enum EwValue<'a> {
@@ -184,9 +213,17 @@ impl ElementwiseKernel {
         // the key digests the full kernel definition (declaration +
         // statements), not just name/arity: the unified cache is
         // process-global, and two differently-defined kernels sharing a
-        // name must never execute each other's code
+        // name must never execute each other's code.  The CIR rendering
+        // for the chosen backend rides along so distinct generated
+        // source flavors get distinct cache identities.
+        let backend = resolve_backend(
+            self.ctx.toolkit(),
+            n,
+            self.ops.len().max(1) as f64,
+            4.0 * self.args.len().max(1) as f64,
+        );
         let key = format!(
-            "ew|{}|n{}|{}|{}",
+            "ew|{}|n{}|{}|{}|{}",
             self.name,
             n,
             self.args
@@ -200,14 +237,16 @@ impl ElementwiseKernel {
                 .join(","),
             digest_hex(
                 format!("{:?}|{:?}", self.args, self.ops).as_bytes()
-            )
+            ),
+            cir_digest(&self.name, &self.args, &self.ops, n, backend)
         );
         let args = self.args.clone();
         let ops = self.ops.clone();
         let read2 = read.clone();
-        let exe = self.ctx.toolkit().cache().get_or_build(&key, move || {
-            build_elementwise(&args, &ops, &read2, n)
-        })?;
+        let exe =
+            self.ctx.toolkit().cache().get_or_build_for(backend, &key, move || {
+                build_elementwise(&args, &ops, &read2, n)
+            })?;
 
         // stage inputs: device buffers for vectors, scalars each call
         let mut staged: Vec<crate::runtime::DeviceBuffer> = Vec::new();
@@ -497,9 +536,17 @@ pub fn run_batched_hosts(
         .collect();
 
     // keyed on (definition, total length) only: batches with equal
-    // total length share one compile regardless of segmentation
+    // total length share one compile regardless of segmentation.  Like
+    // the unbatched path, the backend-flavored CIR rendering is part of
+    // the identity.
+    let backend = resolve_backend(
+        tk,
+        n_total,
+        ops.len().max(1) as f64,
+        4.0 * args.len().max(1) as f64,
+    );
     let key = format!(
-        "ewb|{}|n{}|{}|{}",
+        "ewb|{}|n{}|{}|{}|{}",
         name,
         n_total,
         args.iter()
@@ -510,10 +557,11 @@ pub fn run_batched_hosts(
             ))
             .collect::<Vec<_>>()
             .join(","),
-        digest_hex(format!("{args:?}|{ops:?}").as_bytes())
+        digest_hex(format!("{args:?}|{ops:?}").as_bytes()),
+        cir_digest(name, &args, &ops, n_total, backend)
     );
     let (args2, ops2, read2) = (args.clone(), ops.clone(), read.clone());
-    let exe = tk.cache().get_or_build(&key, move || {
+    let exe = tk.cache().get_or_build_for(backend, &key, move || {
         build_elementwise_inner(&args2, &ops2, &read2, n_total, true)
     })?;
 
@@ -635,7 +683,15 @@ impl ReductionKernel {
             }
         }
         let n = n.ok_or_else(|| Error::msg("no vector args"))?;
-        // digest the whole definition into the key (see ElementwiseKernel)
+        // digest the whole definition into the key (see ElementwiseKernel);
+        // reductions have no CIR elementwise lowering, so the backend
+        // only tags the key rather than flavoring extra material
+        let backend = resolve_backend(
+            self.ctx.toolkit(),
+            n,
+            2.0,
+            4.0 * self.args.len().max(1) as f64,
+        );
         let key = format!(
             "red|{}|n{}|{}",
             self.name,
@@ -654,9 +710,10 @@ impl ReductionKernel {
             self.reduce_expr.clone(),
             self.neutral,
         );
-        let exe = self.ctx.toolkit().cache().get_or_build(&key, move || {
-            build_reduction(&args, &map_expr, &reduce_expr, neutral, n)
-        })?;
+        let exe =
+            self.ctx.toolkit().cache().get_or_build_for(backend, &key, move || {
+                build_reduction(&args, &map_expr, &reduce_expr, neutral, n)
+            })?;
         let mut staged = Vec::new();
         for (a, v) in self.args.iter().zip(values) {
             match v {

@@ -44,6 +44,7 @@ pub use future::{promise, ExecFuture, Promise};
 pub use scheduler::{Placement, Scheduler};
 pub use stream::Stream;
 
+use crate::cir::Backend;
 use crate::mempool::MemoryPool;
 use crate::runtime::Client;
 
@@ -52,6 +53,16 @@ use crate::runtime::Client;
 pub struct ExecConfig {
     /// placement policy for scheduler jobs and new streams
     pub placement: Placement,
+}
+
+/// One schedulable device as the exec subsystem sees it: a queue
+/// ordinal plus the code-generation backend work placed there compiles
+/// through.  The coordinator's stats surface and the serve CLI print
+/// these.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeviceDesc {
+    pub ordinal: usize,
+    pub backend: Backend,
 }
 
 impl Default for ExecConfig {
@@ -81,6 +92,18 @@ impl Executor {
 
     pub fn device_count(&self) -> usize {
         self.scheduler.device_count()
+    }
+
+    /// Backend-tagged descriptors for every schedulable device (the
+    /// backend is the client's tag — one executor compiles through one
+    /// backend at a time).
+    pub fn device_descs(&self) -> Vec<DeviceDesc> {
+        (0..self.device_count())
+            .map(|ordinal| DeviceDesc {
+                ordinal,
+                backend: self.client.backend(),
+            })
+            .collect()
     }
 
     pub fn scheduler(&self) -> &Scheduler {

@@ -31,6 +31,8 @@ pub mod rtcg;
 
 pub mod array;
 
+pub mod cir;
+
 pub mod exec;
 
 pub mod elementwise;
@@ -51,5 +53,6 @@ pub mod apps;
 
 pub mod coordinator;
 
+pub use cir::{Backend, BackendChoice};
 pub use rtcg::module::Toolkit;
 pub use runtime::{Client, HostArray};

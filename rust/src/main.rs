@@ -32,6 +32,10 @@ const FLAGS: &[(&str, &str)] = &[
     ("workload", "workload id for `tune`"),
     ("requests", "request count for `serve` (default 64)"),
     ("shards", "coordinator shard count for `serve` (default 1)"),
+    (
+        "backend",
+        "codegen backend for `serve`: hlo | ocl | auto (default hlo)",
+    ),
     ("seed", "workload RNG seed (default 42)"),
     ("device", "device profile name for modeled output"),
 ];
@@ -218,15 +222,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n = args.get_usize("requests", 64)?;
     let seed = args.get_usize("seed", 42)? as u64;
     let shards = args.get_usize("shards", 1)?;
+    let backend_arg = args.get_or("backend", "hlo").to_string();
+    let backend =
+        rtcg::BackendChoice::parse(&backend_arg).ok_or_else(|| {
+            rtcg::util::error::Error::msg(format!(
+                "unknown backend '{backend_arg}' (expected hlo, ocl, or auto)"
+            ))
+        })?;
     let dir = artifacts_dir(args);
     let mut router = Router::start(shards, |_| CoordinatorConfig {
         artifacts_dir: dir.clone(),
+        backend,
         ..Default::default()
     })?;
     println!(
-        "serving tier up ({} shard{}); driving {n} synthetic requests…",
+        "serving tier up ({} shard{}, backend {}); driving {n} synthetic requests…",
         router.shard_count(),
-        if router.shard_count() == 1 { "" } else { "s" }
+        if router.shard_count() == 1 { "" } else { "s" },
+        backend
     );
     let mut rng = Rng::new(seed);
     let nn = 524288;
@@ -319,7 +332,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("busy {busy:.1} ms (summed across shards and workers)");
     for (s, m) in per_shard.iter().enumerate() {
         println!(
-            "shard {s}: {} req ({} launch / {} src / {} ew) | batches {} carrying {} jobs ({} launches saved, {} shared compiles) | wait p50 {:.0}µs p99 {:.0}µs | exec depths {:?}",
+            "shard {s} [backend {}, {} tuning-db hits]: {} req ({} launch / {} src / {} ew) | batches {} carrying {} jobs ({} launches saved, {} shared compiles) | wait p50 {:.0}µs p99 {:.0}µs | exec depths {:?}",
+            m.backend,
+            m.tuning_hits,
             m.requests,
             m.launches,
             m.source_runs,
@@ -374,6 +389,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         m.pool.bytes_owned,
         m.pool.peak_bytes_active,
         m.pool.fragmentation()
+    );
+    println!(
+        "compile cache (shard 0): {} entries, per-backend hit/miss — hlo {}+{}/{}, ocl {}+{}/{} (mem+disk/miss)",
+        m.cache.entries,
+        m.cache.per_backend[0].mem_hits,
+        m.cache.per_backend[0].disk_hits,
+        m.cache.per_backend[0].misses,
+        m.cache.per_backend[1].mem_hits,
+        m.cache.per_backend[1].disk_hits,
+        m.cache.per_backend[1].misses
     );
     println!(
         "memory planner: {} B arena planned vs {} B per-node ({} B aliased away)",

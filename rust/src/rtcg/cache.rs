@@ -42,6 +42,7 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
+use crate::cir::Backend;
 use crate::runtime::{Client, Executable};
 use crate::util::error::Result;
 use crate::util::hash::{digest_hex, fnv1a};
@@ -58,7 +59,18 @@ pub fn entry_cost(key_material: &str) -> u64 {
     key_material.len() as u64 + EXE_NOMINAL_BYTES
 }
 
-/// Monotonic counters for every cache outcome.
+/// Per-backend slice of the cache counters: hit/miss traffic through
+/// one code-generation target's keys.
+#[derive(Debug, Default)]
+pub struct BackendStats {
+    pub mem_hits: AtomicU64,
+    pub disk_hits: AtomicU64,
+    pub misses: AtomicU64,
+}
+
+/// Monotonic counters for every cache outcome.  The global counters
+/// aggregate across backends; `per_backend[Backend::index()]` splits
+/// the same traffic by code-generation target.
 #[derive(Debug, Default)]
 pub struct CacheStats {
     pub mem_hits: AtomicU64,
@@ -68,6 +80,8 @@ pub struct CacheStats {
     pub single_flight_waits: AtomicU64,
     /// entries dropped by the LRU byte-budget policy
     pub evictions: AtomicU64,
+    /// the same hit/miss traffic, split by backend (hlo, ocl)
+    pub per_backend: [BackendStats; 2],
 }
 
 impl CacheStats {
@@ -81,7 +95,16 @@ impl CacheStats {
     }
 }
 
+/// Point-in-time copy of one backend's hit/miss counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BackendCacheRow {
+    pub mem_hits: u64,
+    pub disk_hits: u64,
+    pub misses: u64,
+}
+
 /// Point-in-time copy of all cache counters plus occupancy gauges.
+/// `per_backend` is indexed by [`Backend::index`] (0 = hlo, 1 = ocl).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct CacheSnapshot {
     pub mem_hits: u64,
@@ -91,6 +114,7 @@ pub struct CacheSnapshot {
     pub evictions: u64,
     pub entries: u64,
     pub bytes: u64,
+    pub per_backend: [BackendCacheRow; 2],
 }
 
 /// Cache construction knobs.
@@ -245,24 +269,49 @@ impl CompileCache {
         &self.client
     }
 
-    /// Cache key: digest(key material) ‖ platform identity ‖ toolkit
-    /// version.  Platform sensitivity is what lets one cache directory
-    /// serve several backends (§5).
-    pub fn key_for(&self, key_material: &str) -> String {
+    /// Cache key: digest(key material) ‖ platform identity ‖ backend
+    /// tag ‖ toolkit version.  Platform and backend sensitivity are
+    /// what let one cache directory serve several backends (§5): the
+    /// same descriptor compiled through the HLO/CUDA-flavored and the
+    /// OpenCL-flavored target occupies two distinct entries.
+    pub fn key_for_backend(
+        &self,
+        backend: Backend,
+        key_material: &str,
+    ) -> String {
         let env = format!(
-            "{}|{}|rtcg-{}",
+            "{}|{}|{}|rtcg-{}",
             digest_hex(key_material.as_bytes()),
             self.client.platform_id(),
+            backend.tag(),
             env!("CARGO_PKG_VERSION"),
         );
         digest_hex(env.as_bytes())
     }
 
+    /// Backend-untagged key: the HLO backend (the crate's historical
+    /// single-backend behavior).
+    pub fn key_for(&self, key_material: &str) -> String {
+        self.key_for_backend(Backend::Hlo, key_material)
+    }
+
     /// The Fig 2 workflow over HLO **text**: memory hit → disk note →
-    /// compile (single-flighted) + store.
+    /// compile (single-flighted) + store.  Compiles through the HLO
+    /// backend; see [`CompileCache::get_or_compile_for`].
     pub fn get_or_compile(&self, source: &str) -> Result<Executable> {
-        let key = self.key_for(source);
-        self.get_or_insert(&key, entry_cost(source), || {
+        self.get_or_compile_for(Backend::Hlo, source)
+    }
+
+    /// [`CompileCache::get_or_compile`] with an explicit backend tag in
+    /// the key and per-backend stats attribution.
+    pub fn get_or_compile_for(
+        &self,
+        backend: Backend,
+        source: &str,
+    ) -> Result<Executable> {
+        let key = self.key_for_backend(backend, source);
+        let by = &self.stats.per_backend[backend.index()];
+        self.get_or_insert(&key, backend, entry_cost(source), || {
             if self.disk_lookup(&key) {
                 // The generation product is already persisted (a prior
                 // process compiled this source): count a disk hit and
@@ -270,9 +319,11 @@ impl CompileCache {
                 // itself cannot be skipped — this substrate has no
                 // executable serialization (see module docs).
                 self.stats.disk_hits.fetch_add(1, Ordering::Relaxed);
+                by.disk_hits.fetch_add(1, Ordering::Relaxed);
                 self.client.compile_hlo_text(source)
             } else {
                 self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                by.misses.fetch_add(1, Ordering::Relaxed);
                 let exe = self.client.compile_hlo_text(source)?;
                 self.disk_store(&key, source);
                 Ok(exe)
@@ -284,15 +335,30 @@ impl CompileCache {
     /// layer's fused expressions, elementwise kernels, Copperhead
     /// programs): same shards, same single-flight, same stats.  No disk
     /// level — there is no source text to persist, only the in-memory
-    /// builder graph.
+    /// builder graph.  Compiles through the HLO backend; see
+    /// [`CompileCache::get_or_build_for`].
     pub fn get_or_build(
         &self,
         key_material: &str,
         build: impl FnOnce() -> Result<xla::XlaComputation>,
     ) -> Result<Executable> {
-        let key = self.key_for(key_material);
-        self.get_or_insert(&key, entry_cost(key_material), || {
+        self.get_or_build_for(Backend::Hlo, key_material, build)
+    }
+
+    /// [`CompileCache::get_or_build`] with an explicit backend tag in
+    /// the key and per-backend stats attribution.
+    pub fn get_or_build_for(
+        &self,
+        backend: Backend,
+        key_material: &str,
+        build: impl FnOnce() -> Result<xla::XlaComputation>,
+    ) -> Result<Executable> {
+        let key = self.key_for_backend(backend, key_material);
+        self.get_or_insert(&key, backend, entry_cost(key_material), || {
             self.stats.misses.fetch_add(1, Ordering::Relaxed);
+            self.stats.per_backend[backend.index()]
+                .misses
+                .fetch_add(1, Ordering::Relaxed);
             let comp = build()?;
             self.client.compile_computation(&comp)
         })
@@ -302,6 +368,7 @@ impl CompileCache {
     fn get_or_insert(
         &self,
         key: &str,
+        backend: Backend,
         cost: u64,
         fill: impl FnOnce() -> Result<Executable>,
     ) -> Result<Executable> {
@@ -318,6 +385,9 @@ impl CompileCache {
                 if let Some(e) = shard.map.get_mut(key) {
                     e.last_used = clock;
                     self.stats.mem_hits.fetch_add(1, Ordering::Relaxed);
+                    self.stats.per_backend[backend.index()]
+                        .mem_hits
+                        .fetch_add(1, Ordering::Relaxed);
                     return Ok(e.exe.clone());
                 }
                 if let Some(f) = shard.inflight.get(key) {
@@ -463,6 +533,11 @@ impl CompileCache {
 
     /// All counters plus occupancy gauges, for metrics export.
     pub fn snapshot_full(&self) -> CacheSnapshot {
+        let row = |b: &BackendStats| BackendCacheRow {
+            mem_hits: b.mem_hits.load(Ordering::Relaxed),
+            disk_hits: b.disk_hits.load(Ordering::Relaxed),
+            misses: b.misses.load(Ordering::Relaxed),
+        };
         CacheSnapshot {
             mem_hits: self.stats.mem_hits.load(Ordering::Relaxed),
             disk_hits: self.stats.disk_hits.load(Ordering::Relaxed),
@@ -474,6 +549,10 @@ impl CompileCache {
             evictions: self.stats.evictions.load(Ordering::Relaxed),
             entries: self.len() as u64,
             bytes: self.bytes_in_memory(),
+            per_backend: [
+                row(&self.stats.per_backend[0]),
+                row(&self.stats.per_backend[1]),
+            ],
         }
     }
 
@@ -801,6 +880,40 @@ ENTRY main {
             "disk hit must skip the redundant disk_store"
         );
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn backend_tags_the_key() {
+        let c = cache();
+        assert_ne!(
+            c.key_for_backend(Backend::Hlo, "k"),
+            c.key_for_backend(Backend::Ocl, "k"),
+            "same material, different backend, different key"
+        );
+        assert_eq!(
+            c.key_for("k"),
+            c.key_for_backend(Backend::Hlo, "k"),
+            "legacy keys are HLO keys"
+        );
+        // the same source compiled through both backends occupies two
+        // distinct cache entries
+        c.get_or_compile_for(Backend::Hlo, ADD_HLO).unwrap();
+        c.get_or_compile_for(Backend::Ocl, ADD_HLO).unwrap();
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn per_backend_stats_split_the_traffic() {
+        let c = cache();
+        c.get_or_compile_for(Backend::Hlo, ADD_HLO).unwrap(); // miss
+        c.get_or_compile_for(Backend::Hlo, ADD_HLO).unwrap(); // hit
+        c.get_or_compile_for(Backend::Ocl, ADD_HLO).unwrap(); // miss
+        let s = c.snapshot_full();
+        assert_eq!((s.mem_hits, s.misses), (1, 2), "global aggregates");
+        let hlo = s.per_backend[Backend::Hlo.index()];
+        let ocl = s.per_backend[Backend::Ocl.index()];
+        assert_eq!((hlo.mem_hits, hlo.misses), (1, 1));
+        assert_eq!((ocl.mem_hits, ocl.misses), (0, 1));
     }
 
     #[test]

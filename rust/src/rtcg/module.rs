@@ -3,8 +3,10 @@
 //! makes no assumptions about the origins of the code it processes"),
 //! get back a callable, with caching and compilation invisible.
 
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::cir::{Backend, BackendChoice};
 use crate::exec::{ExecConfig, Executor};
 use crate::mempool::MemoryPool;
 use crate::rtcg::cache::CompileCache;
@@ -23,6 +25,9 @@ pub struct Toolkit {
     cache: Arc<CompileCache>,
     pool: MemoryPool,
     exec: ExecSlot,
+    /// serve-time backend policy, shared by all clones:
+    /// 0 = hlo, 1 = ocl, 2 = auto (consult tuning DB / modeled cost)
+    backend: Arc<AtomicU8>,
 }
 
 impl Toolkit {
@@ -31,6 +36,7 @@ impl Toolkit {
             cache: Arc::new(cache),
             pool: MemoryPool::new(),
             exec: Arc::new(Mutex::new(None)),
+            backend: Arc::new(AtomicU8::new(0)),
         }
     }
 
@@ -66,6 +72,35 @@ impl Toolkit {
         &self.cache
     }
 
+    /// The toolkit-wide backend policy (shared by clones).
+    pub fn backend_choice(&self) -> BackendChoice {
+        match self.backend.load(Ordering::Relaxed) {
+            1 => BackendChoice::Fixed(Backend::Ocl),
+            2 => BackendChoice::Auto,
+            _ => BackendChoice::Fixed(Backend::Hlo),
+        }
+    }
+
+    pub fn set_backend_choice(&self, choice: BackendChoice) {
+        let v = match choice {
+            BackendChoice::Fixed(Backend::Hlo) => 0,
+            BackendChoice::Fixed(Backend::Ocl) => 1,
+            BackendChoice::Auto => 2,
+        };
+        self.backend.store(v, Ordering::Relaxed);
+    }
+
+    /// The concrete backend compiles go through right now.  `Auto`
+    /// resolves here to its HLO default; per-kernel auto resolution
+    /// (tuning DB, modeled cost) happens in the callers that know the
+    /// kernel's work shape.
+    pub fn backend(&self) -> Backend {
+        match self.backend_choice() {
+            BackendChoice::Fixed(b) => b,
+            BackendChoice::Auto => Backend::Hlo,
+        }
+    }
+
     /// The shared H2D staging pool (§6.3); exec streams stage async
     /// transfers through it, and the coordinator exports its stats.
     pub fn staging_pool(&self) -> &MemoryPool {
@@ -88,10 +123,11 @@ impl Toolkit {
         e
     }
 
-    /// Compile HLO text through the cache (Fig 2 workflow).
+    /// Compile HLO text through the cache (Fig 2 workflow), keyed by
+    /// the toolkit's current backend.
     pub fn source_module(&self, hlo_text: &str) -> Result<SourceModule> {
         Ok(SourceModule {
-            exe: self.cache.get_or_compile(hlo_text)?,
+            exe: self.cache.get_or_compile_for(self.backend(), hlo_text)?,
         })
     }
 
@@ -223,6 +259,27 @@ ENTRY main {
             &ctx(vec![("n", 8.into()), ("k", 4.into())]),
         )
         .unwrap();
+        assert_eq!(tk.cache().len(), 2);
+    }
+
+    #[test]
+    fn backend_choice_is_shared_and_keys_the_cache() {
+        let tk = Toolkit::init_ephemeral().unwrap();
+        assert_eq!(
+            tk.backend_choice(),
+            BackendChoice::Fixed(Backend::Hlo)
+        );
+        let clone = tk.clone();
+        clone.set_backend_choice(BackendChoice::Auto);
+        assert_eq!(tk.backend_choice(), BackendChoice::Auto);
+        assert_eq!(tk.backend(), Backend::Hlo, "auto defaults to hlo");
+
+        // the same source through two fixed backends = two entries
+        tk.set_backend_choice(BackendChoice::Fixed(Backend::Hlo));
+        let c = ctx(vec![("n", 8.into()), ("k", 3.into())]);
+        tk.source_module_from_template(MUL_TPL, &c).unwrap();
+        tk.set_backend_choice(BackendChoice::Fixed(Backend::Ocl));
+        tk.source_module_from_template(MUL_TPL, &c).unwrap();
         assert_eq!(tk.cache().len(), 2);
     }
 

@@ -10,6 +10,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::cir::Backend;
 use crate::runtime::host::HostArray;
 use crate::util::error::{Error, Result};
 
@@ -30,6 +31,8 @@ pub struct ClientStats {
 pub struct Client {
     inner: Arc<xla::PjRtClient>,
     stats: Arc<ClientStats>,
+    /// code-generation target this client's compiles are attributed to
+    backend: Backend,
 }
 
 impl Client {
@@ -37,6 +40,7 @@ impl Client {
         Ok(Client {
             inner: Arc::new(xla::PjRtClient::cpu()?),
             stats: Arc::new(ClientStats::default()),
+            backend: Backend::Hlo,
         })
     }
 
@@ -55,7 +59,48 @@ impl Client {
                 xla::SimOptions { device_count: devices, exec_us, transfer_us },
             )?),
             stats: Arc::new(ClientStats::default()),
+            backend: Backend::Hlo,
         })
+    }
+
+    /// Simulator constructor with a backend-specific cost model: the
+    /// OpenCL-flavored target pays a buffer-mapping copy on transfers
+    /// ([`Backend::transfer_scale`]), making backend choice measurable
+    /// at the transfer level too.
+    pub fn sim_for_backend(
+        devices: usize,
+        exec_us: u64,
+        transfer_us: u64,
+        backend: Backend,
+    ) -> Result<Client> {
+        let scaled =
+            (transfer_us as f64 * backend.transfer_scale()).round() as u64;
+        Ok(Client {
+            inner: Arc::new(xla::PjRtClient::with_options(
+                xla::SimOptions {
+                    device_count: devices,
+                    exec_us,
+                    transfer_us: scaled,
+                },
+            )?),
+            stats: Arc::new(ClientStats::default()),
+            backend,
+        })
+    }
+
+    /// Tag this client handle with a backend (shares the underlying
+    /// PJRT client and stats).
+    pub fn with_backend(&self, backend: Backend) -> Client {
+        Client {
+            inner: self.inner.clone(),
+            stats: self.stats.clone(),
+            backend,
+        }
+    }
+
+    /// The code-generation target this client is tagged with.
+    pub fn backend(&self) -> Backend {
+        self.backend
     }
 
     /// Identity string folded into compile-cache keys — the cache "is

@@ -3,12 +3,17 @@
 //! achieved by either optimizing in situ or shipping with a database of
 //! optimization configurations for different platforms."
 //!
-//! Keyed by (kernel, workload, device); JSON on disk next to the
-//! compile cache.
+//! Keyed by (kernel, workload, device, backend); JSON on disk next to
+//! the compile cache.  Databases written before the second backend
+//! landed used three-part `kernel|workload|device` keys — those load
+//! fine and are treated as HLO-backend entries (the only backend that
+//! existed when they were recorded), so an upgrade never invalidates a
+//! shipped tuning database.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
+use crate::cir::Backend;
 use crate::tuner::search::TuneResult;
 use crate::util::error::{Error, Result};
 use crate::util::json::Json;
@@ -25,7 +30,12 @@ pub struct TuningDb {
     map: BTreeMap<String, DbEntry>,
 }
 
-fn key(kernel: &str, workload: &str, device: &str) -> String {
+fn key(kernel: &str, workload: &str, device: &str, backend: Backend) -> String {
+    format!("{kernel}|{workload}|{device}|{}", backend.tag())
+}
+
+/// Pre-backend key shape, kept readable for migration.
+fn legacy_key(kernel: &str, workload: &str, device: &str) -> String {
     format!("{kernel}|{workload}|{device}")
 }
 
@@ -78,19 +88,64 @@ impl TuningDb {
         self.map.is_empty()
     }
 
+    /// HLO-backend lookup (the pre-backend API; callers that know their
+    /// backend use [`lookup_for`](Self::lookup_for)).
     pub fn lookup(
         &self,
         kernel: &str,
         workload: &str,
         device: &str,
     ) -> Option<&DbEntry> {
-        self.map.get(&key(kernel, workload, device))
+        self.lookup_for(kernel, workload, device, Backend::Hlo)
+    }
+
+    /// Backend-aware lookup.  HLO misses fall back to the legacy
+    /// three-part key so databases written before the second backend
+    /// keep resolving.
+    pub fn lookup_for(
+        &self,
+        kernel: &str,
+        workload: &str,
+        device: &str,
+        backend: Backend,
+    ) -> Option<&DbEntry> {
+        if let Some(e) = self.map.get(&key(kernel, workload, device, backend)) {
+            return Some(e);
+        }
+        if backend == Backend::Hlo {
+            return self.map.get(&legacy_key(kernel, workload, device));
+        }
+        None
+    }
+
+    /// The backend whose recorded winner is fastest for this
+    /// (kernel, workload, device) — what `--backend auto` consults.
+    /// `None` if neither backend has an entry.
+    pub fn best_backend(
+        &self,
+        kernel: &str,
+        workload: &str,
+        device: &str,
+    ) -> Option<(Backend, &DbEntry)> {
+        Backend::ALL
+            .iter()
+            .filter_map(|&b| {
+                self.lookup_for(kernel, workload, device, b).map(|e| (b, e))
+            })
+            .min_by(|(_, a), (_, b)| {
+                a.seconds
+                    .partial_cmp(&b.seconds)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
     }
 
     /// Record a tuning outcome (in memory; call [`save`](Self::save)).
+    /// The result's backend tag keys the entry; unparseable tags (old
+    /// serializations) are treated as HLO.
     pub fn record(&mut self, r: &TuneResult) {
+        let backend = Backend::parse(&r.backend).unwrap_or(Backend::Hlo);
         self.map.insert(
-            key(&r.kernel, &r.workload, &r.device),
+            key(&r.kernel, &r.workload, &r.device, backend),
             DbEntry {
                 variant: r.best_variant.clone(),
                 seconds: r.best_seconds,
@@ -125,15 +180,26 @@ mod tests {
     use crate::tuner::search::Candidate;
 
     fn result(kernel: &str, device: &str, variant: &str) -> TuneResult {
+        result_for(kernel, device, variant, "hlo", 0.5)
+    }
+
+    fn result_for(
+        kernel: &str,
+        device: &str,
+        variant: &str,
+        backend: &str,
+        seconds: f64,
+    ) -> TuneResult {
         TuneResult {
             kernel: kernel.into(),
             workload: "w".into(),
             device: device.into(),
+            backend: backend.into(),
             best_variant: variant.into(),
-            best_seconds: 0.5,
+            best_seconds: seconds,
             candidates: vec![Candidate {
                 variant: variant.into(),
-                seconds: Some(0.5),
+                seconds: Some(seconds),
                 pruned: false,
             }],
             tuning_seconds: 1.2,
@@ -174,6 +240,57 @@ mod tests {
         db.record(&result("k", "d", "v2"));
         assert_eq!(db.len(), 1);
         assert_eq!(db.lookup("k", "w", "d").unwrap().variant, "v2");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn backends_key_distinct_entries_and_best_backend_picks_min() {
+        let dir = std::env::temp_dir()
+            .join(format!("rtcg-db-test3-{}", std::process::id()));
+        let mut db = TuningDb::open(&dir.join("t.json")).unwrap();
+        db.record(&result_for("k", "d", "vh", "hlo", 0.5));
+        db.record(&result_for("k", "d", "vo", "ocl", 0.3));
+        assert_eq!(db.len(), 2, "backends must not collide");
+        assert_eq!(
+            db.lookup_for("k", "w", "d", Backend::Hlo).unwrap().variant,
+            "vh"
+        );
+        assert_eq!(
+            db.lookup_for("k", "w", "d", Backend::Ocl).unwrap().variant,
+            "vo"
+        );
+        let (b, e) = db.best_backend("k", "w", "d").unwrap();
+        assert_eq!(b, Backend::Ocl);
+        assert_eq!(e.variant, "vo");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn legacy_three_part_keys_resolve_as_hlo() {
+        // a database written before the second backend existed
+        let dir = std::env::temp_dir()
+            .join(format!("rtcg-db-test4-{}", std::process::id()));
+        let path = dir.join("tuning.json");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            &path,
+            r#"{"conv|w|C1060": {"variant": "legacy_v", "seconds": 0.7}}"#,
+        )
+        .unwrap();
+        let db = TuningDb::open(&path).unwrap();
+        // HLO lookups fall back to the legacy key...
+        assert_eq!(
+            db.lookup_for("conv", "w", "C1060", Backend::Hlo)
+                .unwrap()
+                .variant,
+            "legacy_v"
+        );
+        assert_eq!(db.lookup("conv", "w", "C1060").unwrap().variant, "legacy_v");
+        // ...but OCL does not inherit HLO's tuning
+        assert!(db.lookup_for("conv", "w", "C1060", Backend::Ocl).is_none());
+        // and auto sees the legacy entry as the (only) HLO winner
+        let (b, _) = db.best_backend("conv", "w", "C1060").unwrap();
+        assert_eq!(b, Backend::Hlo);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -42,6 +42,8 @@ pub struct TuneResult {
     pub kernel: String,
     pub workload: String,
     pub device: String,
+    /// code-generation backend this result was tuned for ("hlo"/"ocl")
+    pub backend: String,
     pub best_variant: String,
     pub best_seconds: f64,
     pub candidates: Vec<Candidate>,
@@ -128,6 +130,7 @@ pub fn tune_measured(
         kernel: entries[0].kernel.clone(),
         workload: entries[0].workload.clone(),
         device: registry.toolkit().client().platform_name(),
+        backend: registry.toolkit().backend().tag().to_string(),
         best_variant,
         best_seconds,
         candidates,
@@ -183,11 +186,33 @@ pub fn tune_modeled(
         kernel: kernel.to_string(),
         workload: workload.to_string(),
         device: device.name.to_string(),
+        backend: crate::cir::Backend::Hlo.tag().to_string(),
         best_variant,
         best_seconds,
         candidates,
         tuning_seconds: started.elapsed().as_secs_f64(),
     })
+}
+
+/// Model-based tuning over the CIR transformation variant space (§6.2's
+/// grid search, per (kernel, workload, backend, device)): enumerate the
+/// legality-checked variants, cost each under the backend-adjusted
+/// device model, keep the fastest.
+pub fn tune_cir(
+    kernel: &str,
+    workload: &str,
+    shape: &crate::cir::variants::WorkShape,
+    backend: crate::cir::Backend,
+    device: &DeviceProfile,
+) -> Result<TuneResult> {
+    let descs: Vec<KernelDesc> = crate::cir::variants::enumerate(kernel, shape)
+        .into_iter()
+        .map(|v| v.desc)
+        .collect();
+    let adjusted = backend.adjust(device);
+    let mut r = tune_modeled(kernel, workload, &descs, &adjusted)?;
+    r.backend = backend.tag().to_string();
+    Ok(r)
 }
 
 #[cfg(test)]
@@ -253,5 +278,21 @@ mod tests {
     #[test]
     fn empty_pool_is_an_error() {
         assert!(tune_modeled("k", "w", &[], &C1060).is_err());
+    }
+
+    #[test]
+    fn cir_tuning_records_backend_and_beats_default() {
+        use crate::cir::{variants, Backend};
+        let shape = variants::WorkShape::Elementwise {
+            n: 1 << 20,
+            flops: 2.0,
+            bytes: 12.0,
+        };
+        for b in Backend::ALL {
+            let r = tune_cir("saxpy", "n1m", &shape, b, &C1060).unwrap();
+            assert_eq!(r.backend, b.tag());
+            let boost = r.boost_over(&variants::default_variant()).unwrap();
+            assert!(boost >= 1.0, "backend {b}: boost {boost}");
+        }
     }
 }

@@ -1,0 +1,266 @@
+//! Golden codegen tests for the CIR backends (paper §4.1, §6.2).
+//!
+//! The generated source text is the backend-specific *identity* of a
+//! kernel variant — it is digested into compile-cache keys — so these
+//! tests pin the full text for each Loo.py-style transformation
+//! (`split_iname`, `tag_parallel`, `unroll`, `prefetch`) on both the
+//! CUDA-flavored HLO backend and the OpenCL-flavored backend.  A
+//! formatting change that alters any of these strings silently
+//! invalidates every cached binary, which is exactly why it should
+//! have to update a golden here.
+
+use rtcg::cir::codegen::generate;
+use rtcg::cir::kernel::{Expr, Kernel, Stmt, Tag};
+use rtcg::cir::lower::{dot_like, matmul_like, saxpy_like};
+use rtcg::cir::transform::{
+    prefetch, split_iname, tag_parallel, unroll, SplitMode,
+};
+use rtcg::cir::Backend;
+
+#[test]
+fn saxpy_untransformed_golden() {
+    let k = saxpy_like("saxpy", 8);
+    let cu = generate(&k, Backend::Hlo);
+    let cl = generate(&k, Backend::Ocl);
+    assert_eq!(
+        cu,
+        "\
+// cir: saxpy [cuda]
+__global__ void saxpy(float a, const float* __restrict__ x, const float* __restrict__ y, float* __restrict__ z) {
+    for (int i = 0; i < 8; ++i) {
+        z[i] = a * x[i] + y[i];
+    }
+}
+"
+    );
+    assert_eq!(
+        cl,
+        "\
+// cir: saxpy [opencl]
+__kernel void saxpy(float a, __global const float* restrict x, __global const float* restrict y, __global float* restrict z) {
+    for (int i = 0; i < 8; ++i) {
+        z[i] = a * x[i] + y[i];
+    }
+}
+"
+    );
+    // the two flavors are distinct texts — distinct cache identities
+    assert_ne!(cu, cl);
+}
+
+#[test]
+fn split_and_tag_parallel_golden() {
+    let mut k = saxpy_like("saxpy", 128);
+    let (outer, inner) =
+        split_iname(&mut k, "i", 32, SplitMode::RequireDivisible).unwrap();
+    tag_parallel(&mut k, &outer, Tag::ParGroup).unwrap();
+    tag_parallel(&mut k, &inner, Tag::ParLane).unwrap();
+    assert_eq!(
+        generate(&k, Backend::Hlo),
+        "\
+// cir: saxpy [cuda]
+__global__ void saxpy(float a, const float* __restrict__ x, const float* __restrict__ y, float* __restrict__ z) {
+    const int i_outer = blockIdx.x;
+    const int i_inner = threadIdx.x;
+    z[i_outer * 32 + i_inner] = a * x[i_outer * 32 + i_inner] + y[i_outer * 32 + i_inner];
+}
+"
+    );
+    assert_eq!(
+        generate(&k, Backend::Ocl),
+        "\
+// cir: saxpy [opencl]
+__kernel void saxpy(float a, __global const float* restrict x, __global const float* restrict y, __global float* restrict z) {
+    const int i_outer = get_group_id(0);
+    const int i_inner = get_local_id(0);
+    z[i_outer * 32 + i_inner] = a * x[i_outer * 32 + i_inner] + y[i_outer * 32 + i_inner];
+}
+"
+    );
+}
+
+#[test]
+fn guarded_split_with_unroll_golden() {
+    let mut k = saxpy_like("saxpy", 100);
+    // 100 is not divisible by 16: the guarded split rounds the outer
+    // extent up to 7 and fences the body with `index < 100`
+    let (outer, inner) =
+        split_iname(&mut k, "i", 16, SplitMode::GuardRemainder).unwrap();
+    tag_parallel(&mut k, &outer, Tag::ParGroup).unwrap();
+    unroll(&mut k, &inner).unwrap();
+    assert_eq!(
+        generate(&k, Backend::Hlo),
+        "\
+// cir: saxpy [cuda]
+__global__ void saxpy(float a, const float* __restrict__ x, const float* __restrict__ y, float* __restrict__ z) {
+    const int i_outer = blockIdx.x;
+    #pragma unroll
+    for (int i_inner = 0; i_inner < 16; ++i_inner) {
+        if (i_outer * 16 + i_inner < 100) {
+            z[i_outer * 16 + i_inner] = a * x[i_outer * 16 + i_inner] + y[i_outer * 16 + i_inner];
+        }
+    }
+}
+"
+    );
+    assert_eq!(
+        generate(&k, Backend::Ocl),
+        "\
+// cir: saxpy [opencl]
+__kernel void saxpy(float a, __global const float* restrict x, __global const float* restrict y, __global float* restrict z) {
+    const int i_outer = get_group_id(0);
+    __attribute__((opencl_unroll_hint))
+    for (int i_inner = 0; i_inner < 16; ++i_inner) {
+        if (i_outer * 16 + i_inner < 100) {
+            z[i_outer * 16 + i_inner] = a * x[i_outer * 16 + i_inner] + y[i_outer * 16 + i_inner];
+        }
+    }
+}
+"
+    );
+}
+
+#[test]
+fn sequential_reduction_golden() {
+    let k = dot_like("dot", 4);
+    assert_eq!(
+        generate(&k, Backend::Hlo),
+        "\
+// cir: dot [cuda]
+__global__ void dot(const float* __restrict__ x, const float* __restrict__ y, float* __restrict__ out) {
+    float acc = 0;
+    for (int r = 0; r < 4; ++r) {
+        acc = acc + x[r] * y[r];
+    }
+    out[0] = acc;
+}
+"
+    );
+}
+
+#[test]
+fn prefetch_golden() {
+    let mut k = matmul_like("mm", 4, 8, 4);
+    tag_parallel(&mut k, "i", Tag::ParGroup).unwrap();
+    let staged = prefetch(&mut k, "a", "r").unwrap();
+    assert_eq!(staged, "s_a");
+    assert_eq!(
+        generate(&k, Backend::Hlo),
+        "\
+// cir: mm [cuda]
+__global__ void mm(const float* __restrict__ a, const float* __restrict__ b, float* __restrict__ c) {
+    const int i = blockIdx.x;
+    __shared__ float s_a[8];
+    for (int p = 0; p < 8; p += 1) {
+        s_a[p] = a[i * 8 + p];
+    }
+    __syncthreads();
+    for (int j = 0; j < 4; ++j) {
+        float acc = 0;
+        for (int r = 0; r < 8; ++r) {
+            acc = acc + s_a[r] * b[r * 4 + j];
+        }
+        c[i * 4 + j] = acc;
+    }
+}
+"
+    );
+    assert_eq!(
+        generate(&k, Backend::Ocl),
+        "\
+// cir: mm [opencl]
+__kernel void mm(__global const float* restrict a, __global const float* restrict b, __global float* restrict c) {
+    const int i = get_group_id(0);
+    __local float s_a[8];
+    for (int p = 0; p < 8; p += 1) {
+        s_a[p] = a[i * 8 + p];
+    }
+    barrier(CLK_LOCAL_MEM_FENCE);
+    for (int j = 0; j < 4; ++j) {
+        float acc = 0;
+        for (int r = 0; r < 8; ++r) {
+            acc = acc + s_a[r] * b[r * 4 + j];
+        }
+        c[i * 4 + j] = acc;
+    }
+}
+"
+    );
+}
+
+#[test]
+fn math_calls_take_backend_flavor() {
+    let mut k = Kernel::new("ew");
+    k.add_iname("i", 4, false);
+    tag_parallel(&mut k, "i", Tag::ParGlobal).unwrap();
+    k.add_arg("x", "float", true, false);
+    k.add_arg("z", "float", true, true);
+    k.instr(
+        &["i"],
+        Stmt::Store {
+            array: "z".into(),
+            index: Expr::var("i"),
+            value: Expr::bin(
+                '+',
+                Expr::Call(
+                    "exp".into(),
+                    vec![Expr::load("x", Expr::var("i"))],
+                ),
+                // "abs" canonicalizes to fabs, then takes the flavor
+                Expr::Call(
+                    "abs".into(),
+                    vec![Expr::load("x", Expr::var("i"))],
+                ),
+            ),
+        },
+    );
+    assert_eq!(
+        generate(&k, Backend::Hlo),
+        "\
+// cir: ew [cuda]
+__global__ void ew(const float* __restrict__ x, float* __restrict__ z) {
+    const int i = blockIdx.x * blockDim.x + threadIdx.x;
+    z[i] = expf(x[i]) + fabsf(x[i]);
+}
+"
+    );
+    assert_eq!(
+        generate(&k, Backend::Ocl),
+        "\
+// cir: ew [opencl]
+__kernel void ew(__global const float* restrict x, __global float* restrict z) {
+    const int i = get_global_id(0);
+    z[i] = exp(x[i]) + fabs(x[i]);
+}
+"
+    );
+}
+
+#[test]
+fn split_legality_rejects_unsound_remainder() {
+    // 100 % 16 != 0: without a remainder guard the split would run
+    // 7*16 = 112 out-of-domain iterations — the transformation must
+    // refuse rather than silently generate a wrong kernel
+    let mut k = saxpy_like("saxpy", 100);
+    let err = split_iname(&mut k, "i", 16, SplitMode::RequireDivisible)
+        .unwrap_err();
+    assert!(
+        err.to_string().contains("remainder guard"),
+        "unexpected error: {err}"
+    );
+    // the failed rewrite left the kernel untouched
+    assert_eq!(k, saxpy_like("saxpy", 100));
+}
+
+#[test]
+fn prefetch_legality_rejects_loop_variant_offset() {
+    // without `i` parallel, the staged footprint of `a` (offset i*K)
+    // would change every iteration of the sequential i loop — one
+    // up-front fetch cannot represent it
+    let mut k = matmul_like("mm", 4, 8, 4);
+    let err = prefetch(&mut k, "a", "r").unwrap_err();
+    assert!(
+        err.to_string().contains("varies with"),
+        "unexpected error: {err}"
+    );
+}

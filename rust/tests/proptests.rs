@@ -13,7 +13,7 @@ use rtcg::util::json::Json;
 use rtcg::util::prng::Rng;
 use rtcg::util::proptest::{check, Config};
 use rtcg::util::stats::Summary;
-use rtcg::Toolkit;
+use rtcg::{Backend, BackendChoice, Toolkit};
 
 fn cfg(cases: usize) -> Config {
     Config { cases, ..Default::default() }
@@ -383,6 +383,146 @@ fn prop_planned_execution_matches_per_node() {
     assert!(
         arena1.arena_bytes_saved() > arena0.arena_bytes_saved(),
         "random DAGs never aliased an intermediate"
+    );
+}
+
+/// Replay one recorded random-DAG program against a context and return
+/// the materialized roots.  The program is pure data (op codes + pick
+/// indices), so both backends see the *identical* lazy DAG.
+#[allow(clippy::type_complexity)]
+fn replay_program(
+    ctx: &ArrayContext,
+    n: usize,
+    leaves: &[HostArray],
+    steps: &[(usize, usize, usize, i64, usize)],
+    root_n: usize,
+) -> std::result::Result<Vec<HostArray>, String> {
+    let err = |e: rtcg::util::error::Error| e.to_string();
+    let mut pool: Vec<GpuArray> = Vec::new();
+    for h in leaves {
+        pool.push(ctx.to_gpu(h).map_err(err)?);
+    }
+    for &(op, ia, ib, coef, red) in steps {
+        let a = pool[ia % pool.len()].clone();
+        let b = pool[ib % pool.len()].clone();
+        let next = match op {
+            0 => a.add(&b),
+            1 => a.sub(&b),
+            2 => a.mul(&b),
+            3 => a.maximum(&b),
+            4 => a.minimum(&b),
+            5 => a.neg(),
+            6 => a.abs(),
+            7 => a.tanh(),
+            8 => a.scale(coef as f64),
+            9 | 10 => {
+                let two: Vec<&GpuArray> = pool
+                    .iter()
+                    .filter(|g| g.shape().len() == 2)
+                    .collect();
+                let g = two[ia % two.len()];
+                let (axis, keep) = match red {
+                    0 => (0, false),
+                    1 => (1, false),
+                    _ => (1, true),
+                };
+                if coef % 2 == 0 {
+                    g.sum_axis(axis, keep)
+                } else {
+                    g.max_axis(axis, keep)
+                }
+            }
+            _ => {
+                let sq: Vec<&GpuArray> = pool
+                    .iter()
+                    .filter(|g| g.shape() == [n, n])
+                    .collect();
+                let x = sq[ia % sq.len()];
+                let y = sq[ib % sq.len()];
+                x.matmul_t(y)
+            }
+        };
+        pool.push(next.map_err(err)?);
+    }
+    let root_n = root_n.min(pool.len());
+    let roots: Vec<&GpuArray> =
+        pool[pool.len() - root_n..].iter().collect();
+    ctx.materialize_many(&roots).map_err(err)?;
+    roots.iter().map(|r| r.get().map_err(err)).collect()
+}
+
+#[test]
+fn prop_backends_agree() {
+    // The backend choice must be semantically invisible: the OpenCL-
+    // flavored target changes generated-source flavor, cache identity,
+    // and modeled cost — never results.  Random planned DAGs executed
+    // under a toolkit fixed to each backend are bitwise identical.
+    let tk_hlo = Toolkit::init_ephemeral().unwrap();
+    tk_hlo.set_backend_choice(BackendChoice::Fixed(Backend::Hlo));
+    let tk_ocl = Toolkit::init_ephemeral().unwrap();
+    tk_ocl.set_backend_choice(BackendChoice::Fixed(Backend::Ocl));
+    let ocl_probe = tk_ocl.clone();
+    let cx_hlo = ArrayContext::new(tk_hlo);
+    let cx_ocl = ArrayContext::new(tk_ocl);
+    check("backends-agree", &cfg(8), |rng, size| {
+        let n = 2 + rng.usize_below(3);
+        let mut leaves = Vec::new();
+        for _ in 0..2 {
+            leaves.push(HostArray::f32(vec![n, n], rng.normal_vec(n * n)));
+        }
+        leaves.push(HostArray::f32(vec![n], rng.normal_vec(n)));
+        leaves.push(HostArray::f32(vec![n, 1], rng.normal_vec(n)));
+        // the program is drawn ONCE, then replayed on both backends
+        let steps: Vec<(usize, usize, usize, i64, usize)> = (0..3
+            + size.min(10))
+            .map(|_| {
+                (
+                    rng.usize_below(12),
+                    rng.usize_below(1 << 16),
+                    rng.usize_below(1 << 16),
+                    (rng.normal_f32() * 2.0) as i64,
+                    rng.usize_below(3),
+                )
+            })
+            .collect();
+        let root_n = 1 + rng.usize_below(3);
+        let a = replay_program(&cx_hlo, n, &leaves, &steps, root_n)?;
+        let b = replay_program(&cx_ocl, n, &leaves, &steps, root_n)?;
+        if a.len() != b.len() {
+            return Err(format!(
+                "root count differs: {} vs {}",
+                a.len(),
+                b.len()
+            ));
+        }
+        for (x, y) in a.iter().zip(&b) {
+            if x.shape != y.shape {
+                return Err(format!(
+                    "shape mismatch: {:?} vs {:?}",
+                    x.shape, y.shape
+                ));
+            }
+            let xf = x.as_f32().map_err(|e| e.to_string())?;
+            let yf = y.as_f32().map_err(|e| e.to_string())?;
+            for (i, (u, v)) in xf.iter().zip(yf).enumerate() {
+                if u.to_bits() != v.to_bits() {
+                    return Err(format!(
+                        "backend mismatch at {i}: {u:?} ({:#010x}) vs \
+                         {v:?} ({:#010x})",
+                        u.to_bits(),
+                        v.to_bits()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+    // the OCL side really went through OCL-tagged compiles: its
+    // per-backend cache row accumulated misses the HLO row didn't
+    let snap = ocl_probe.cache().snapshot_full();
+    assert!(
+        snap.per_backend[Backend::Ocl.index()].misses > 0,
+        "OCL toolkit never compiled through an ocl-tagged key"
     );
 }
 
