@@ -344,15 +344,31 @@ impl ClusterJob {
 }
 
 /// Resolve the toolkit's backend policy for one cluster: a fixed
-/// choice passes through; `auto` asks the modeled cost which backend's
-/// best variant wins for this cluster's work shape.
-fn resolve_backend(tk: &Toolkit, job: &ClusterJob) -> Backend {
+/// choice passes through; `auto` prefers in-situ measured evidence —
+/// once the per-kernel profile table has seen this cluster's compiled
+/// kernels on both backends (§6.2's measured selection), the faster
+/// measured backend wins — and falls back to the modeled cost until
+/// that evidence exists.
+fn resolve_backend(tk: &Toolkit, job: &ClusterJob, device: usize) -> Backend {
     match tk.backend_choice() {
         BackendChoice::Fixed(b) => b,
-        BackendChoice::Auto => cir::variants::auto_backend(
-            &job.work_shape(),
-            &crate::device::profile::C1060,
-        ),
+        BackendChoice::Auto => {
+            // the profile table keys on the cache's backend-independent
+            // material digest; a cluster's key material embeds its
+            // per-backend generated source, so ask the cache for the
+            // digest each backend's executable was tagged with
+            let digest_for =
+                |b: Backend| tk.cache().keys_for(b, &job.key_for(b)).1;
+            if let Some(b) =
+                crate::tuner::search::measured_backend(device, digest_for)
+            {
+                return b;
+            }
+            cir::variants::auto_backend(
+                &job.work_shape(),
+                &crate::device::profile::C1060,
+            )
+        }
     }
 }
 
@@ -564,7 +580,30 @@ impl Drop for ClaimGuard {
     }
 }
 
+/// One cluster launch, wrapped in a `PlanCluster` trace span (the
+/// array layer's unit of work; its children are the cache lookup,
+/// transfers, and kernel execution the launch performs).
 fn run_cluster(
+    tk: &Toolkit,
+    job: &ClusterJob,
+    device: usize,
+    arena: Option<&Arc<ProgramArena>>,
+) -> Result<()> {
+    crate::trace::span_on(
+        crate::trace::SpanKind::PlanCluster,
+        device as i64,
+        || {
+            format!(
+                "{}steps/{}outs",
+                job.plan.steps.len(),
+                job.outputs.len()
+            )
+        },
+        || run_cluster_inner(tk, job, device, arena),
+    )
+}
+
+fn run_cluster_inner(
     tk: &Toolkit,
     job: &ClusterJob,
     device: usize,
@@ -592,7 +631,7 @@ fn run_cluster(
             continue;
         }
         let guard = ClaimGuard::new(claimed);
-        let backend = resolve_backend(tk, job);
+        let backend = resolve_backend(tk, job, device);
         let exe = tk
             .cache()
             .get_or_build_for(backend, &job.key_for(backend), || {

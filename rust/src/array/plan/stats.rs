@@ -83,6 +83,31 @@ impl PlannerSnapshot {
         self.arena_bytes_requested
             .saturating_sub(self.arena_bytes_planned)
     }
+
+    /// Field-wise max of two snapshots.  The planner counters are
+    /// process-global, so per-shard mirrors of the same process are
+    /// stale copies of one table: a fleet merge keeps the freshest
+    /// (largest) reading rather than summing duplicates.
+    pub fn max_of(&self, other: &PlannerSnapshot) -> PlannerSnapshot {
+        PlannerSnapshot {
+            programs: self.programs.max(other.programs),
+            clusters: self.clusters.max(other.clusters),
+            cse_hits: self.cse_hits.max(other.cse_hits),
+            launches_saved: self
+                .launches_saved
+                .max(other.launches_saved),
+            epilogue_fusions: self
+                .epilogue_fusions
+                .max(other.epilogue_fusions),
+            auto_cuts: self.auto_cuts.max(other.auto_cuts),
+            arena_bytes_planned: self
+                .arena_bytes_planned
+                .max(other.arena_bytes_planned),
+            arena_bytes_requested: self
+                .arena_bytes_requested
+                .max(other.arena_bytes_requested),
+        }
+    }
 }
 
 pub fn snapshot() -> PlannerSnapshot {

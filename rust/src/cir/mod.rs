@@ -53,7 +53,9 @@ use crate::device::profile::DeviceProfile;
 /// `Hlo` is the existing CUDA-flavored backend (HLO text compiled via
 /// the simulator's PJRT analog); `Ocl` is the OpenCL-flavored target
 /// with its own launch/transfer/width cost model.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+#[derive(
+    Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default,
+)]
 pub enum Backend {
     #[default]
     Hlo,

@@ -7,6 +7,7 @@
 
 use crate::elementwise::EwHost;
 use crate::runtime::HostArray;
+use crate::trace::TraceCtx;
 
 /// Identifies a tenant for fair scheduling, quotas and per-tenant
 /// metrics.  Tenant 0 is the default for single-tenant callers.
@@ -18,11 +19,15 @@ pub type TenantId = u32;
 pub struct Request {
     pub tenant: TenantId,
     pub op: Op,
+    /// Tracing context ([`TraceCtx::NONE`] = unsampled).  The router
+    /// or the shard's intake starts a trace via the global sampler;
+    /// callers never set this by hand.
+    pub trace: TraceCtx,
 }
 
 impl Request {
     pub fn new(tenant: TenantId, op: Op) -> Request {
-        Request { tenant, op }
+        Request { tenant, op, trace: TraceCtx::NONE }
     }
 
     /// Material the consistent-hash router and the batching stage key
@@ -56,7 +61,7 @@ impl Request {
 /// `Op::…into()` — a tenant-0 request, for single-tenant callers.
 impl From<Op> for Request {
     fn from(op: Op) -> Request {
-        Request { tenant: 0, op }
+        Request::new(0, op)
     }
 }
 

@@ -51,6 +51,9 @@ pub struct ReadyBatch<E> {
     pub entries: Vec<E>,
     /// flushed by the deadline timer (vs reaching `max_batch`)
     pub by_deadline: bool,
+    /// when the group opened (first member's arrival) — the start of
+    /// the batch-formation window trace spans measure
+    pub opened: Instant,
 }
 
 struct Group<E> {
@@ -58,6 +61,8 @@ struct Group<E> {
     entries: Vec<E>,
     /// first arrival + max_wait; NOT extended by later arrivals
     deadline: Instant,
+    /// first arrival (the batch window's start)
+    opened: Instant,
 }
 
 /// Accumulates compatible requests into groups keyed on descriptor
@@ -98,6 +103,7 @@ impl<E> Batcher<E> {
                 kind,
                 entries: Vec::new(),
                 deadline: now + self.cfg.max_wait,
+                opened: now,
             }
         });
         g.entries.push(entry);
@@ -107,6 +113,7 @@ impl<E> Batcher<E> {
                 kind: g.kind,
                 entries: g.entries,
                 by_deadline: false,
+                opened: g.opened,
             })
         } else {
             None
@@ -134,6 +141,7 @@ impl<E> Batcher<E> {
                     kind: g.kind,
                     entries: g.entries,
                     by_deadline: true,
+                    opened: g.opened,
                 }
             })
             .collect()
@@ -150,6 +158,7 @@ impl<E> Batcher<E> {
                     kind: g.kind,
                     entries: g.entries,
                     by_deadline: true,
+                    opened: g.opened,
                 }
             })
             .collect()

@@ -15,14 +15,17 @@ use crate::array::plan::stats::PlannerSnapshot;
 use crate::coordinator::api::TenantId;
 use crate::mempool::PoolStats;
 use crate::rtcg::cache::CacheSnapshot;
+use crate::trace::{ProfileRow, RecorderStats};
+use crate::util::stats;
 
-/// Upper bounds (µs) of the queue-wait histogram buckets; a seventh
-/// implicit bucket catches everything larger.
-pub const QUEUE_WAIT_BUCKETS_US: [u64; 6] =
-    [10, 100, 1_000, 10_000, 100_000, 1_000_000];
+/// Upper bounds (µs) of the queue-wait histogram buckets; one more
+/// implicit bucket catches everything larger.  Shared with the
+/// per-kernel latency histograms in [`crate::trace::profile`] so wait
+/// and execution distributions line up bucket-for-bucket.
+pub const QUEUE_WAIT_BUCKETS_US: [u64; 6] = stats::LATENCY_BUCKETS_US;
 
 /// Number of histogram buckets (bounds + overflow).
-pub const QUEUE_WAIT_BUCKET_COUNT: usize = QUEUE_WAIT_BUCKETS_US.len() + 1;
+pub const QUEUE_WAIT_BUCKET_COUNT: usize = stats::LATENCY_BUCKET_COUNT;
 
 /// Lock-free fixed-bucket histogram of queue-wait times.
 #[derive(Debug)]
@@ -231,6 +234,12 @@ pub struct Metrics {
     // cache bytes charged), mirrored from the admission table on the
     // Stats path like the other gauges
     tenant_usage: Mutex<BTreeMap<TenantId, (u64, u64)>>,
+    // mirror of the process-global per-kernel profile table
+    // (`trace::profile()`), refreshed on the Stats path
+    profile: Mutex<Vec<ProfileRow>>,
+    // mirror of the process-global span-recorder counters
+    // (`trace::recorder().stats()`), same refresh discipline
+    trace: Mutex<RecorderStats>,
 }
 
 /// A point-in-time copy for reporting.
@@ -269,6 +278,11 @@ pub struct Snapshot {
     pub batch: BatchSnapshot,
     /// per-tenant counters + quota gauges, sorted by tenant id
     pub tenants: Vec<TenantSnapshot>,
+    /// per-kernel measured rows (see [`crate::trace::ProfileTable`]),
+    /// sorted by (digest, backend, device)
+    pub profile: Vec<ProfileRow>,
+    /// span-recorder counters (traces started, spans recorded/dropped)
+    pub trace: RecorderStats,
 }
 
 impl Metrics {
@@ -332,6 +346,17 @@ impl Metrics {
         }
     }
 
+    /// Refresh the per-kernel profile mirror from
+    /// `trace::profile().rows()`.
+    pub fn update_profile(&self, rows: Vec<ProfileRow>) {
+        *self.profile.lock().unwrap() = rows;
+    }
+
+    /// Refresh the span-recorder counter mirror.
+    pub fn update_trace(&self, s: RecorderStats) {
+        *self.trace.lock().unwrap() = s;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let usage = self.tenant_usage.lock().unwrap().clone();
         let tenants = self
@@ -382,8 +407,286 @@ impl Metrics {
                 .load(Ordering::Relaxed),
             batch: self.batch.snapshot(),
             tenants,
+            profile: self.profile.lock().unwrap().clone(),
+            trace: *self.trace.lock().unwrap(),
         }
     }
+}
+
+impl Snapshot {
+    /// Merge per-shard snapshots into one fleet-wide view.
+    ///
+    /// Shard-owned data (request counters, queue histograms, cache,
+    /// pool, batch, tenant rows) is *summed* — each shard counted its
+    /// own work.  Process-global mirrors that every shard re-exports
+    /// (planner, per-kernel profile, span-recorder counters) are
+    /// merged by *max* so a shared table is not multiply counted when
+    /// shards live in one process.  `exec_queue_depths` concatenate in
+    /// shard order; distinct backend tags join with `","`.
+    pub fn merge(shards: &[Snapshot]) -> Snapshot {
+        let mut out = Metrics::default().snapshot();
+        let mut tenants: BTreeMap<TenantId, TenantSnapshot> =
+            BTreeMap::new();
+        let mut profile: BTreeMap<
+            crate::trace::ProfileKey,
+            ProfileRow,
+        > = BTreeMap::new();
+        let mut backends: Vec<String> = Vec::new();
+        for s in shards {
+            out.requests += s.requests;
+            out.launches += s.launches;
+            out.source_runs += s.source_runs;
+            out.tunes += s.tunes;
+            out.errors += s.errors;
+            out.queue_rejections += s.queue_rejections;
+            out.busy_ms += s.busy_ms;
+            out.queue_wait_ms += s.queue_wait_ms;
+            for (a, b) in
+                out.queue_wait_hist.iter_mut().zip(s.queue_wait_hist)
+            {
+                *a += b;
+            }
+            out.exec_queue_depths
+                .extend(s.exec_queue_depths.iter().copied());
+            out.cache.absorb(&s.cache);
+            if !s.backend.is_empty()
+                && !backends.contains(&s.backend)
+            {
+                backends.push(s.backend.clone());
+            }
+            out.tuning_hits += s.tuning_hits;
+            out.pool.absorb(&s.pool);
+            out.planner = out.planner.max_of(&s.planner);
+            out.elementwise_jobs += s.elementwise_jobs;
+            out.batch.batches += s.batch.batches;
+            out.batch.batched_jobs += s.batch.batched_jobs;
+            out.batch.size_flushes += s.batch.size_flushes;
+            out.batch.deadline_flushes += s.batch.deadline_flushes;
+            out.batch.launches_saved += s.batch.launches_saved;
+            out.batch.shared_compiles += s.batch.shared_compiles;
+            for t in &s.tenants {
+                let e = tenants.entry(t.tenant).or_insert_with(|| {
+                    TenantSnapshot {
+                        tenant: t.tenant,
+                        jobs: 0,
+                        rejections: 0,
+                        errors: 0,
+                        pool_bytes_in_flight: 0,
+                        cache_bytes_charged: 0,
+                        queue_wait_hist: [0; QUEUE_WAIT_BUCKET_COUNT],
+                    }
+                });
+                e.jobs += t.jobs;
+                e.rejections += t.rejections;
+                e.errors += t.errors;
+                e.pool_bytes_in_flight += t.pool_bytes_in_flight;
+                e.cache_bytes_charged += t.cache_bytes_charged;
+                for (a, b) in
+                    e.queue_wait_hist.iter_mut().zip(t.queue_wait_hist)
+                {
+                    *a += b;
+                }
+            }
+            for r in &s.profile {
+                match profile.get_mut(&r.key) {
+                    Some(have) if have.launches >= r.launches => {}
+                    _ => {
+                        profile.insert(r.key.clone(), r.clone());
+                    }
+                }
+            }
+            out.trace.traces = out.trace.traces.max(s.trace.traces);
+            out.trace.recorded =
+                out.trace.recorded.max(s.trace.recorded);
+            out.trace.dropped = out.trace.dropped.max(s.trace.dropped);
+        }
+        out.backend = backends.join(",");
+        out.tenants = tenants.into_values().collect();
+        out.profile = profile.into_values().collect();
+        out
+    }
+
+    /// Render the snapshot as Prometheus-style text exposition:
+    /// `# TYPE`-annotated families, `{label="value"}` rows, histogram
+    /// buckets cumulative with a trailing `+Inf`.
+    pub fn render_text(&self) -> String {
+        let mut o = String::new();
+        let fam = |o: &mut String, name: &str, ty: &str| {
+            o.push_str(&format!("# TYPE {name} {ty}\n"));
+        };
+        let row = |o: &mut String, name: &str, labels: &str, v: f64| {
+            if labels.is_empty() {
+                o.push_str(&format!("{name} {v}\n"));
+            } else {
+                o.push_str(&format!("{name}{{{labels}}} {v}\n"));
+            }
+        };
+        let hist = |o: &mut String,
+                    name: &str,
+                    labels: &str,
+                    counts: &[u64; QUEUE_WAIT_BUCKET_COUNT]| {
+            let mut cum = 0u64;
+            for (i, &c) in counts.iter().enumerate() {
+                cum += c;
+                let le = if i < QUEUE_WAIT_BUCKETS_US.len() {
+                    QUEUE_WAIT_BUCKETS_US[i].to_string()
+                } else {
+                    "+Inf".to_string()
+                };
+                let sep = if labels.is_empty() { "" } else { "," };
+                o.push_str(&format!(
+                    "{name}_bucket{{{labels}{sep}le=\"{le}\"}} {cum}\n"
+                ));
+            }
+            o.push_str(&format!(
+                "{name}_count{} {cum}\n",
+                if labels.is_empty() {
+                    String::new()
+                } else {
+                    format!("{{{labels}}}")
+                }
+            ));
+        };
+
+        for (name, v) in [
+            ("rtcg_requests_total", self.requests),
+            ("rtcg_launches_total", self.launches),
+            ("rtcg_source_runs_total", self.source_runs),
+            ("rtcg_elementwise_jobs_total", self.elementwise_jobs),
+            ("rtcg_tunes_total", self.tunes),
+            ("rtcg_tuning_hits_total", self.tuning_hits),
+            ("rtcg_errors_total", self.errors),
+            ("rtcg_queue_rejections_total", self.queue_rejections),
+        ] {
+            fam(&mut o, name, "counter");
+            row(&mut o, name, "", v as f64);
+        }
+        fam(&mut o, "rtcg_busy_ms", "counter");
+        row(&mut o, "rtcg_busy_ms", "", self.busy_ms);
+        fam(&mut o, "rtcg_queue_wait_us", "histogram");
+        hist(&mut o, "rtcg_queue_wait_us", "", &self.queue_wait_hist);
+
+        fam(&mut o, "rtcg_exec_queue_depth", "gauge");
+        for (i, d) in self.exec_queue_depths.iter().enumerate() {
+            row(
+                &mut o,
+                "rtcg_exec_queue_depth",
+                &format!("device=\"{i}\""),
+                *d as f64,
+            );
+        }
+
+        for (name, v) in [
+            ("rtcg_cache_mem_hits_total", self.cache.mem_hits),
+            ("rtcg_cache_disk_hits_total", self.cache.disk_hits),
+            ("rtcg_cache_misses_total", self.cache.misses),
+            (
+                "rtcg_cache_single_flight_waits_total",
+                self.cache.single_flight_waits,
+            ),
+            ("rtcg_cache_evictions_total", self.cache.evictions),
+        ] {
+            fam(&mut o, name, "counter");
+            row(&mut o, name, "", v as f64);
+        }
+        fam(&mut o, "rtcg_cache_entries", "gauge");
+        row(&mut o, "rtcg_cache_entries", "", self.cache.entries as f64);
+        fam(&mut o, "rtcg_cache_bytes", "gauge");
+        row(&mut o, "rtcg_cache_bytes", "", self.cache.bytes as f64);
+
+        for (name, f) in [
+            ("rtcg_batches_total", self.batch.batches),
+            ("rtcg_batched_jobs_total", self.batch.batched_jobs),
+            (
+                "rtcg_batch_launches_saved_total",
+                self.batch.launches_saved,
+            ),
+        ] {
+            fam(&mut o, name, "counter");
+            row(&mut o, name, "", f as f64);
+        }
+
+        fam(&mut o, "rtcg_pool_bytes_active", "gauge");
+        row(
+            &mut o,
+            "rtcg_pool_bytes_active",
+            "",
+            self.pool.bytes_active as f64,
+        );
+        fam(&mut o, "rtcg_pool_bytes_held", "gauge");
+        row(
+            &mut o,
+            "rtcg_pool_bytes_held",
+            "",
+            self.pool.bytes_held as f64,
+        );
+
+        fam(&mut o, "rtcg_tenant_jobs_total", "counter");
+        for t in &self.tenants {
+            row(
+                &mut o,
+                "rtcg_tenant_jobs_total",
+                &format!("tenant=\"{}\"", t.tenant),
+                t.jobs as f64,
+            );
+        }
+        fam(&mut o, "rtcg_tenant_rejections_total", "counter");
+        for t in &self.tenants {
+            row(
+                &mut o,
+                "rtcg_tenant_rejections_total",
+                &format!("tenant=\"{}\"", t.tenant),
+                t.rejections as f64,
+            );
+        }
+
+        fam(&mut o, "rtcg_kernel_launches_total", "counter");
+        for r in &self.profile {
+            row(
+                &mut o,
+                "rtcg_kernel_launches_total",
+                &kernel_labels(r),
+                r.launches as f64,
+            );
+        }
+        fam(&mut o, "rtcg_kernel_time_ns_total", "counter");
+        for r in &self.profile {
+            row(
+                &mut o,
+                "rtcg_kernel_time_ns_total",
+                &kernel_labels(r),
+                r.total_ns as f64,
+            );
+        }
+        fam(&mut o, "rtcg_kernel_time_us", "histogram");
+        for r in &self.profile {
+            hist(
+                &mut o,
+                "rtcg_kernel_time_us",
+                &kernel_labels(r),
+                &r.lat_buckets,
+            );
+        }
+
+        for (name, v) in [
+            ("rtcg_trace_traces_total", self.trace.traces),
+            ("rtcg_trace_spans_recorded_total", self.trace.recorded),
+            ("rtcg_trace_spans_dropped_total", self.trace.dropped),
+        ] {
+            fam(&mut o, name, "counter");
+            row(&mut o, name, "", v as f64);
+        }
+        o
+    }
+}
+
+fn kernel_labels(r: &ProfileRow) -> String {
+    format!(
+        "digest=\"{}\",backend=\"{}\",device=\"{}\"",
+        r.key.digest,
+        r.key.backend.tag(),
+        r.key.device
+    )
 }
 
 #[cfg(test)]
@@ -434,11 +737,14 @@ mod tests {
     fn backend_and_tuning_hit_gauges_surface() {
         let m = Metrics::default();
         m.set_backend("auto");
+        // distinct note sites must land on distinct counters — a
+        // double-note of the same counter would hide a miswired site
         m.note(&m.tuning_hits);
-        m.note(&m.tuning_hits);
+        m.note(&m.launches);
         let s = m.snapshot();
         assert_eq!(s.backend, "auto");
-        assert_eq!(s.tuning_hits, 2);
+        assert_eq!(s.tuning_hits, 1);
+        assert_eq!(s.launches, 1);
     }
 
     #[test]
@@ -570,6 +876,210 @@ mod tests {
         let t2 = &s.tenants[0];
         assert_eq!((t2.jobs, t2.errors), (0, 2));
         assert_eq!(t2.pool_bytes_in_flight, 0);
+    }
+
+    #[test]
+    fn merge_sums_shard_data_and_maxes_global_mirrors() {
+        use crate::cir::Backend;
+        use crate::trace::{ProfileKey, ProfileRow};
+
+        let a = Metrics::default();
+        a.requests.fetch_add(3, Ordering::Relaxed);
+        a.set_backend("hlo");
+        a.queue_wait_hist.observe_ns(5_000);
+        a.tenant(1).jobs.fetch_add(2, Ordering::Relaxed);
+        a.update_tenant_usage(vec![(1, 100, 10)]);
+        a.update_exec_depths(vec![4]);
+        a.update_planner(&PlannerSnapshot {
+            programs: 5,
+            ..Default::default()
+        });
+        a.update_trace(RecorderStats {
+            traces: 2,
+            recorded: 20,
+            dropped: 0,
+        });
+        let row = ProfileRow {
+            key: ProfileKey {
+                digest: "abc".into(),
+                backend: Backend::Hlo,
+                device: 0,
+            },
+            launches: 4,
+            total_ns: 8_000,
+            min_ns: 1_000,
+            max_ns: 3_000,
+            lat_buckets: [0; QUEUE_WAIT_BUCKET_COUNT],
+            bytes_in: 64,
+            bytes_out: 32,
+        };
+        a.update_profile(vec![row.clone()]);
+
+        let b = Metrics::default();
+        b.requests.fetch_add(2, Ordering::Relaxed);
+        b.set_backend("hlo");
+        b.queue_wait_hist.observe_ns(5_000);
+        b.tenant(1).jobs.fetch_add(1, Ordering::Relaxed);
+        b.tenant(2).jobs.fetch_add(5, Ordering::Relaxed);
+        b.update_tenant_usage(vec![(1, 50, 5), (2, 9, 9)]);
+        b.update_exec_depths(vec![1, 2]);
+        // same process-global planner/trace/profile mirrors, slightly
+        // staler on this shard
+        b.update_planner(&PlannerSnapshot {
+            programs: 4,
+            ..Default::default()
+        });
+        b.update_trace(RecorderStats {
+            traces: 1,
+            recorded: 15,
+            dropped: 0,
+        });
+        let stale = ProfileRow { launches: 3, ..row.clone() };
+        b.update_profile(vec![stale]);
+
+        let m = Snapshot::merge(&[a.snapshot(), b.snapshot()]);
+        // shard-owned data sums
+        assert_eq!(m.requests, 5);
+        assert_eq!(m.queue_wait_hist[0], 2);
+        assert_eq!(m.exec_queue_depths, vec![4, 1, 2]);
+        assert_eq!(m.backend, "hlo");
+        let t1 = m.tenants.iter().find(|t| t.tenant == 1).unwrap();
+        assert_eq!(t1.jobs, 3);
+        assert_eq!(t1.pool_bytes_in_flight, 150);
+        assert_eq!(m.tenants.len(), 2);
+        // process-global mirrors take the freshest copy, not the sum
+        assert_eq!(m.planner.programs, 5);
+        assert_eq!(m.trace.traces, 2);
+        assert_eq!(m.profile.len(), 1);
+        assert_eq!(m.profile[0].launches, 4);
+
+        // distinct backend tags join
+        let c = Metrics::default();
+        c.set_backend("ocl");
+        let m2 = Snapshot::merge(&[a.snapshot(), c.snapshot()]);
+        assert_eq!(m2.backend, "hlo,ocl");
+
+        // merging nothing yields the empty snapshot
+        assert_eq!(Snapshot::merge(&[]).requests, 0);
+    }
+
+    #[test]
+    fn render_text_golden() {
+        use crate::cir::Backend;
+        use crate::trace::{ProfileKey, ProfileRow};
+
+        let m = Metrics::default();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.launches.fetch_add(2, Ordering::Relaxed);
+        m.errors.fetch_add(1, Ordering::Relaxed);
+        m.set_backend("hlo");
+        m.queue_wait_hist.observe_ns(5_000); // bucket 0
+        m.queue_wait_hist.observe_ns(50_000); // bucket 1
+        m.update_exec_depths(vec![2, 0]);
+        m.tenant(7).jobs.fetch_add(4, Ordering::Relaxed);
+        m.update_trace(RecorderStats {
+            traces: 1,
+            recorded: 9,
+            dropped: 0,
+        });
+        let mut lat = [0u64; QUEUE_WAIT_BUCKET_COUNT];
+        lat[1] = 2;
+        m.update_profile(vec![ProfileRow {
+            key: ProfileKey {
+                digest: "abcdef123456".into(),
+                backend: Backend::Hlo,
+                device: 0,
+            },
+            launches: 2,
+            total_ns: 90_000,
+            min_ns: 40_000,
+            max_ns: 50_000,
+            lat_buckets: lat,
+            bytes_in: 128,
+            bytes_out: 64,
+        }]);
+
+        let text = m.snapshot().render_text();
+        let expect = "\
+# TYPE rtcg_requests_total counter
+rtcg_requests_total 3
+# TYPE rtcg_launches_total counter
+rtcg_launches_total 2
+# TYPE rtcg_source_runs_total counter
+rtcg_source_runs_total 0
+# TYPE rtcg_elementwise_jobs_total counter
+rtcg_elementwise_jobs_total 0
+# TYPE rtcg_tunes_total counter
+rtcg_tunes_total 0
+# TYPE rtcg_tuning_hits_total counter
+rtcg_tuning_hits_total 0
+# TYPE rtcg_errors_total counter
+rtcg_errors_total 1
+# TYPE rtcg_queue_rejections_total counter
+rtcg_queue_rejections_total 0
+# TYPE rtcg_busy_ms counter
+rtcg_busy_ms 0
+# TYPE rtcg_queue_wait_us histogram
+rtcg_queue_wait_us_bucket{le=\"10\"} 1
+rtcg_queue_wait_us_bucket{le=\"100\"} 2
+rtcg_queue_wait_us_bucket{le=\"1000\"} 2
+rtcg_queue_wait_us_bucket{le=\"10000\"} 2
+rtcg_queue_wait_us_bucket{le=\"100000\"} 2
+rtcg_queue_wait_us_bucket{le=\"1000000\"} 2
+rtcg_queue_wait_us_bucket{le=\"+Inf\"} 2
+rtcg_queue_wait_us_count 2
+# TYPE rtcg_exec_queue_depth gauge
+rtcg_exec_queue_depth{device=\"0\"} 2
+rtcg_exec_queue_depth{device=\"1\"} 0
+# TYPE rtcg_cache_mem_hits_total counter
+rtcg_cache_mem_hits_total 0
+# TYPE rtcg_cache_disk_hits_total counter
+rtcg_cache_disk_hits_total 0
+# TYPE rtcg_cache_misses_total counter
+rtcg_cache_misses_total 0
+# TYPE rtcg_cache_single_flight_waits_total counter
+rtcg_cache_single_flight_waits_total 0
+# TYPE rtcg_cache_evictions_total counter
+rtcg_cache_evictions_total 0
+# TYPE rtcg_cache_entries gauge
+rtcg_cache_entries 0
+# TYPE rtcg_cache_bytes gauge
+rtcg_cache_bytes 0
+# TYPE rtcg_batches_total counter
+rtcg_batches_total 0
+# TYPE rtcg_batched_jobs_total counter
+rtcg_batched_jobs_total 0
+# TYPE rtcg_batch_launches_saved_total counter
+rtcg_batch_launches_saved_total 0
+# TYPE rtcg_pool_bytes_active gauge
+rtcg_pool_bytes_active 0
+# TYPE rtcg_pool_bytes_held gauge
+rtcg_pool_bytes_held 0
+# TYPE rtcg_tenant_jobs_total counter
+rtcg_tenant_jobs_total{tenant=\"7\"} 4
+# TYPE rtcg_tenant_rejections_total counter
+rtcg_tenant_rejections_total{tenant=\"7\"} 0
+# TYPE rtcg_kernel_launches_total counter
+rtcg_kernel_launches_total{digest=\"abcdef123456\",backend=\"hlo\",device=\"0\"} 2
+# TYPE rtcg_kernel_time_ns_total counter
+rtcg_kernel_time_ns_total{digest=\"abcdef123456\",backend=\"hlo\",device=\"0\"} 90000
+# TYPE rtcg_kernel_time_us histogram
+rtcg_kernel_time_us_bucket{digest=\"abcdef123456\",backend=\"hlo\",device=\"0\",le=\"10\"} 0
+rtcg_kernel_time_us_bucket{digest=\"abcdef123456\",backend=\"hlo\",device=\"0\",le=\"100\"} 2
+rtcg_kernel_time_us_bucket{digest=\"abcdef123456\",backend=\"hlo\",device=\"0\",le=\"1000\"} 2
+rtcg_kernel_time_us_bucket{digest=\"abcdef123456\",backend=\"hlo\",device=\"0\",le=\"10000\"} 2
+rtcg_kernel_time_us_bucket{digest=\"abcdef123456\",backend=\"hlo\",device=\"0\",le=\"100000\"} 2
+rtcg_kernel_time_us_bucket{digest=\"abcdef123456\",backend=\"hlo\",device=\"0\",le=\"1000000\"} 2
+rtcg_kernel_time_us_bucket{digest=\"abcdef123456\",backend=\"hlo\",device=\"0\",le=\"+Inf\"} 2
+rtcg_kernel_time_us_count{digest=\"abcdef123456\",backend=\"hlo\",device=\"0\"} 2
+# TYPE rtcg_trace_traces_total counter
+rtcg_trace_traces_total 1
+# TYPE rtcg_trace_spans_recorded_total counter
+rtcg_trace_spans_recorded_total 9
+# TYPE rtcg_trace_spans_dropped_total counter
+rtcg_trace_spans_dropped_total 0
+";
+        assert_eq!(text, expect, "exposition drifted:\n{text}");
     }
 
     #[test]

@@ -18,6 +18,7 @@ use std::sync::mpsc;
 use crate::coordinator::api::{Op, Request, Response};
 use crate::coordinator::metrics::Snapshot;
 use crate::coordinator::server::{Coordinator, CoordinatorConfig};
+use crate::trace::{self, SpanKind};
 use crate::util::error::Result;
 use crate::util::hash::fnv1a;
 
@@ -79,7 +80,11 @@ impl Router {
         let n = n.max(1);
         let mut shards = Vec::with_capacity(n);
         for i in 0..n {
-            shards.push(Coordinator::start(cfg_for(i))?);
+            // number the shards so trace spans attribute correctly
+            // even when the factory leaves `shard` at its default
+            let mut cfg = cfg_for(i);
+            cfg.shard = i as u32;
+            shards.push(Coordinator::start(cfg)?);
         }
         Ok(Router { shards, ring: Ring::new(n) })
     }
@@ -93,14 +98,39 @@ impl Router {
         self.ring.shard_for(req.route_material().as_deref())
     }
 
+    /// Begin the request's trace here (so the routing decision itself
+    /// is traced), pick its shard, and record the `RouterHop` span.
+    fn route(&self, req: impl Into<Request>) -> (Request, usize) {
+        let mut req = req.into();
+        let rec = trace::recorder();
+        if !req.trace.is_sampled() && rec.enabled() {
+            req.trace = rec.begin();
+        }
+        let t0_ns =
+            if req.trace.is_sampled() { rec.now_ns() } else { 0 };
+        let shard = self.shard_for(&req);
+        if req.trace.is_sampled() {
+            rec.set_thread_tenant(req.tenant);
+            rec.set_thread_shard(shard as u32);
+            let _g = trace::enter(req.trace);
+            trace::event(
+                SpanKind::RouterHop,
+                || format!("shard{shard}"),
+                t0_ns,
+                0,
+            );
+        }
+        (req, shard)
+    }
+
     pub fn submit(&self, req: impl Into<Request>) -> Response {
-        let req = req.into();
-        self.shards[self.shard_for(&req)].submit(req)
+        let (req, shard) = self.route(req);
+        self.shards[shard].submit(req)
     }
 
     pub fn try_submit(&self, req: impl Into<Request>) -> Response {
-        let req = req.into();
-        self.shards[self.shard_for(&req)].try_submit(req)
+        let (req, shard) = self.route(req);
+        self.shards[shard].try_submit(req)
     }
 
     /// Pipelined submit (see [`Coordinator::submit_async`]).
@@ -108,8 +138,8 @@ impl Router {
         &self,
         req: impl Into<Request>,
     ) -> mpsc::Receiver<Response> {
-        let req = req.into();
-        self.shards[self.shard_for(&req)].submit_async(req)
+        let (req, shard) = self.route(req);
+        self.shards[shard].submit_async(req)
     }
 
     /// Non-blocking pipelined submit.
@@ -117,8 +147,8 @@ impl Router {
         &self,
         req: impl Into<Request>,
     ) -> mpsc::Receiver<Response> {
-        let req = req.into();
-        self.shards[self.shard_for(&req)].try_submit_async(req)
+        let (req, shard) = self.route(req);
+        self.shards[shard].try_submit_async(req)
     }
 
     /// Per-shard metrics snapshots, in shard order.
@@ -137,6 +167,12 @@ impl Router {
                 _ => s.metrics(),
             })
             .collect()
+    }
+
+    /// One fleet-wide snapshot: refresh every shard's mirrors and fold
+    /// the per-shard snapshots with [`Snapshot::merge`].
+    pub fn merged_stats(&self) -> Snapshot {
+        Snapshot::merge(&self.stats_all())
     }
 
     /// Orderly shutdown of every shard (also triggered by drop, shard
@@ -271,6 +307,14 @@ mod tests {
         // Stats pins to shard 0
         let stats_req: Request = Op::Stats.into();
         assert_eq!(router.shard_for(&stats_req), 0);
+        // the merged fleet snapshot folds both shards into one view
+        let merged = router.merged_stats();
+        assert_eq!(merged.elementwise_jobs, 8);
+        assert_eq!(merged.batch.batched_jobs, 8);
+        assert_eq!(merged.backend, per_shard[0].backend);
+        let t0 =
+            merged.tenants.iter().find(|t| t.tenant == 0).unwrap();
+        assert!(t0.jobs >= 8, "fleet tenant rows sum: {}", t0.jobs);
         router.shutdown();
     }
 }

@@ -47,6 +47,7 @@ use crate::kernels::{Manifest, Registry};
 use crate::rtcg::cache;
 use crate::rtcg::module::Toolkit;
 use crate::runtime::HostArray;
+use crate::trace::{self, SpanKind, TraceCtx};
 use crate::tuner::{tune_measured, TuneOpts, TuningDb};
 use crate::util::error::{Error, Result};
 use crate::util::hash::fnv1a;
@@ -79,6 +80,9 @@ pub struct CoordinatorConfig {
     /// or `Auto` — resolve per kernel through the tuning database
     /// (fastest recorded backend) with a modeled-cost fallback
     pub backend: BackendChoice,
+    /// shard id stamped on every trace span this coordinator records
+    /// (the router numbers its shards; standalone coordinators are 0)
+    pub shard: u32,
 }
 
 impl Default for CoordinatorConfig {
@@ -93,6 +97,7 @@ impl Default for CoordinatorConfig {
             batch: BatchConfig::default(),
             fair: FairConfig::default(),
             backend: BackendChoice::default(),
+            shard: 0,
         }
     }
 }
@@ -104,6 +109,9 @@ struct Job {
     /// pool bytes debited from the tenant's quota at admission;
     /// credited back when the reply is sent
     pool_bytes: u64,
+    /// recorder timestamp at submit — start of the root span and of
+    /// the queue-wait span (0 when the request is unsampled)
+    t0_ns: u64,
 }
 
 /// Handle to a running coordinator service thread.
@@ -111,7 +119,39 @@ pub struct Coordinator {
     intake: Arc<FairQueue<Job>>,
     table: Arc<TenantTable>,
     metrics: Arc<Metrics>,
+    shard: u32,
     handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Record a trace's root `Request` span.  Every sampled trace gets
+/// exactly one of these — from `Done::finish` on the normal path, or
+/// from the rejection/shutdown paths that never build a `Done` — so an
+/// exported trace always reconstructs to a rooted tree.
+fn record_root(
+    ctx: TraceCtx,
+    t0_ns: u64,
+    shard: u32,
+    tenant: TenantId,
+    detail: &str,
+) {
+    if !ctx.is_sampled() {
+        return;
+    }
+    let rec = trace::recorder();
+    let end_ns = rec.now_ns();
+    rec.record(trace::Span {
+        trace_id: ctx.trace_id,
+        span_id: ctx.parent_span,
+        parent: 0,
+        link: 0,
+        kind: SpanKind::Request,
+        start_ns: t0_ns,
+        dur_ns: end_ns.saturating_sub(t0_ns),
+        shard,
+        tenant,
+        device: -1,
+        detail: detail.to_string(),
+    });
 }
 
 impl Coordinator {
@@ -123,6 +163,7 @@ impl Coordinator {
             Arc::new(FairQueue::new(cfg.queue_depth, cfg.fair.clone()));
         let table = Arc::new(TenantTable::new(cfg.fair.clone()));
         let metrics = Arc::new(Metrics::default());
+        let shard = cfg.shard;
         let (i2, t2, m2) = (intake.clone(), table.clone(), metrics.clone());
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let handle = std::thread::Builder::new()
@@ -132,7 +173,13 @@ impl Coordinator {
         ready_rx
             .recv()
             .map_err(|_| Error::msg("coordinator died during startup"))??;
-        Ok(Coordinator { intake, table, metrics, handle: Some(handle) })
+        Ok(Coordinator {
+            intake,
+            table,
+            metrics,
+            shard,
+            handle: Some(handle),
+        })
     }
 
     /// Check the tenant's quotas and debit them; a rejection is
@@ -189,12 +236,16 @@ impl Coordinator {
         &self,
         req: impl Into<Request>,
     ) -> mpsc::Receiver<Response> {
-        let req = req.into();
+        let (req, t0_ns) = self.trace_intake(req.into());
         let tenant = req.tenant;
+        let trace_ctx = req.trace;
         let (reply_tx, reply_rx) = mpsc::channel();
-        let pool_bytes = match self.admit(&req) {
+        let pool_bytes = match self.traced_admit(&req, t0_ns) {
             Ok(b) => b,
             Err(resp) => {
+                record_root(
+                    trace_ctx, t0_ns, self.shard, tenant, "rejected",
+                );
                 let _ = reply_tx.send(resp);
                 return reply_rx;
             }
@@ -204,9 +255,11 @@ impl Coordinator {
             reply: reply_tx.clone(),
             enqueued: Instant::now(),
             pool_bytes,
+            t0_ns,
         };
         if self.intake.push_wait(tenant, job).is_err() {
             self.table.credit_pool(tenant, pool_bytes);
+            record_root(trace_ctx, t0_ns, self.shard, tenant, "closed");
             let _ =
                 reply_tx.send(Response::Error("coordinator is down".into()));
         }
@@ -218,12 +271,16 @@ impl Coordinator {
         &self,
         req: impl Into<Request>,
     ) -> mpsc::Receiver<Response> {
-        let req = req.into();
+        let (req, t0_ns) = self.trace_intake(req.into());
         let tenant = req.tenant;
+        let trace_ctx = req.trace;
         let (reply_tx, reply_rx) = mpsc::channel();
-        let pool_bytes = match self.admit(&req) {
+        let pool_bytes = match self.traced_admit(&req, t0_ns) {
             Ok(b) => b,
             Err(resp) => {
+                record_root(
+                    trace_ctx, t0_ns, self.shard, tenant, "rejected",
+                );
                 let _ = reply_tx.send(resp);
                 return reply_rx;
             }
@@ -233,6 +290,7 @@ impl Coordinator {
             reply: reply_tx.clone(),
             enqueued: Instant::now(),
             pool_bytes,
+            t0_ns,
         };
         match self.intake.try_push(tenant, job) {
             TryPush::Accepted => {}
@@ -243,16 +301,55 @@ impl Coordinator {
                     .tenant(tenant)
                     .rejections
                     .fetch_add(1, Ordering::Relaxed);
+                record_root(
+                    trace_ctx, t0_ns, self.shard, tenant, "queue_full",
+                );
                 let _ = reply_tx
                     .send(Response::Error("coordinator queue is full".into()));
             }
             TryPush::Closed(_) => {
                 self.table.credit_pool(tenant, pool_bytes);
+                record_root(
+                    trace_ctx, t0_ns, self.shard, tenant, "closed",
+                );
                 let _ = reply_tx
                     .send(Response::Error("coordinator is down".into()));
             }
         }
         reply_rx
+    }
+
+    /// Start a trace for this request if the global sampler elects it
+    /// (unless the router already did) and return the submit-time
+    /// recorder timestamp (0 when unsampled — never read).
+    fn trace_intake(&self, mut req: Request) -> (Request, u64) {
+        let rec = trace::recorder();
+        if !req.trace.is_sampled() && rec.enabled() {
+            req.trace = rec.begin();
+        }
+        let t0_ns =
+            if req.trace.is_sampled() { rec.now_ns() } else { 0 };
+        (req, t0_ns)
+    }
+
+    /// [`Coordinator::admit`] wrapped in an `Admission` span (child of
+    /// the request root) when the request is sampled.
+    fn traced_admit(
+        &self,
+        req: &Request,
+        t0_ns: u64,
+    ) -> std::result::Result<u64, Response> {
+        if !req.trace.is_sampled() {
+            return self.admit(req);
+        }
+        let rec = trace::recorder();
+        rec.set_thread_shard(self.shard);
+        rec.set_thread_tenant(req.tenant);
+        let _g = trace::enter(req.trace);
+        let out = self.admit(req);
+        let tag = if out.is_ok() { "ok" } else { "shed" };
+        trace::event(SpanKind::Admission, || tag.to_string(), t0_ns, 0);
+        out
     }
 
     pub fn metrics(&self) -> Snapshot {
@@ -288,9 +385,28 @@ struct Done {
     table: Arc<TenantTable>,
     metrics: Arc<Metrics>,
     tstats: Arc<TenantStats>,
+    /// the request's trace context (NONE = unsampled)
+    trace: TraceCtx,
+    /// recorder timestamp at submit (root/queue-wait span start)
+    t0_ns: u64,
+    /// shard id stamped on this request's spans
+    shard: u32,
 }
 
 impl Done {
+    /// Re-enter this request's trace context on the calling thread
+    /// (device workers) and restamp the thread's shard/tenant tags.
+    /// Harmless no-op context when the request is unsampled.
+    #[must_use = "the context reverts when the guard drops"]
+    fn trace_enter(&self) -> trace::Guard {
+        if self.trace.is_sampled() {
+            let rec = trace::recorder();
+            rec.set_thread_shard(self.shard);
+            rec.set_thread_tenant(self.tenant);
+        }
+        trace::enter(self.trace)
+    }
+
     /// Observe the admission wait (enqueue → execution start) on the
     /// global and per-tenant histograms.  Called once, at the moment
     /// the request actually starts executing.
@@ -298,6 +414,15 @@ impl Done {
         let ns = self.enqueued.elapsed().as_nanos() as u64;
         self.metrics.queue_wait_hist.observe_ns(ns);
         self.tstats.queue_wait_hist.observe_ns(ns);
+        if self.trace.is_sampled() {
+            let _g = self.trace_enter();
+            trace::event(
+                SpanKind::QueueWait,
+                String::new,
+                self.t0_ns,
+                0,
+            );
+        }
     }
 
     /// Reply with an execution error (counted in `errors`).
@@ -323,6 +448,14 @@ impl Done {
 
     fn finish(self, resp: Response) {
         self.table.credit_pool(self.tenant, self.pool_bytes);
+        let detail = if matches!(resp, Response::Error(_)) {
+            "error"
+        } else {
+            "ok"
+        };
+        record_root(
+            self.trace, self.t0_ns, self.shard, self.tenant, detail,
+        );
         let _ = self.reply.send(resp);
     }
 }
@@ -387,6 +520,8 @@ fn service_loop(
     // shared toolkit (and every toolkit clone) is keyed/tagged by it
     registry.toolkit().set_backend_choice(cfg.backend);
     metrics.set_backend(cfg.backend.tag());
+    // spans recorded from the service thread carry this shard's id
+    trace::recorder().set_thread_shard(cfg.shard);
     // the toolkit's shared per-device pool: one scheduler serves the
     // coordinator AND in-process async users, so least-loaded
     // placement sees every queue
@@ -421,6 +556,7 @@ fn service_loop(
                     cfg.pool_backlog_cap as u64,
                     &table,
                     &mut batcher,
+                    cfg.shard,
                     job,
                 );
             }
@@ -428,7 +564,7 @@ fn service_loop(
             PopResult::Closed => stop = true,
         }
         for b in batcher.take_expired(Instant::now()) {
-            flush_batch(&registry, &metrics, &exec, b);
+            flush_batch(&registry, &metrics, &exec, cfg.shard, b);
         }
         if stop {
             break;
@@ -436,7 +572,7 @@ fn service_loop(
     }
     // admitted-but-unflushed batches still execute and reply
     for b in batcher.drain() {
-        flush_batch(&registry, &metrics, &exec, b);
+        flush_batch(&registry, &metrics, &exec, cfg.shard, b);
     }
     intake.close();
     // requests queued behind the Shutdown job still get a reply —
@@ -444,6 +580,13 @@ fn service_loop(
     // out the leftovers)
     while let Some(job) = intake.pop() {
         table.credit_pool(job.req.tenant, job.pool_bytes);
+        record_root(
+            job.req.trace,
+            job.t0_ns,
+            cfg.shard,
+            job.req.tenant,
+            "shutdown",
+        );
         let _ = job
             .reply
             .send(Response::Error("coordinator is shutting down".into()));
@@ -473,10 +616,11 @@ fn dispatch(
     backlog_cap: u64,
     table: &Arc<TenantTable>,
     batcher: &mut Batcher<BatchEntry>,
+    shard: u32,
     job: Job,
 ) -> bool {
-    let Job { req, reply, enqueued, pool_bytes } = job;
-    let Request { tenant, op } = req;
+    let Job { req, reply, enqueued, pool_bytes, t0_ns } = job;
+    let Request { tenant, op, trace: tctx } = req;
     let tstats = metrics.tenant(tenant);
     let done = Done {
         reply,
@@ -486,7 +630,16 @@ fn dispatch(
         table: table.clone(),
         metrics: metrics.clone(),
         tstats: tstats.clone(),
+        trace: tctx,
+        t0_ns,
+        shard,
     };
+    // inline work below (variant resolution, Stats, Tune) records its
+    // spans under this request's root
+    if tctx.is_sampled() {
+        trace::recorder().set_thread_tenant(tenant);
+    }
+    let _tg = trace::enter(tctx);
     match op {
         Op::Shutdown => {
             done.observe_wait();
@@ -505,6 +658,8 @@ fn dispatch(
             metrics.update_exec_depths(exec.scheduler().queue_depths());
             metrics.update_planner(&crate::array::plan::stats::snapshot());
             metrics.update_tenant_usage(table.usage());
+            metrics.update_profile(trace::profile().rows());
+            metrics.update_trace(trace::recorder().stats());
             done.respond(Response::Stats(metrics.snapshot()));
         }
         Op::Launch { kernel, workload, variant, inputs } => {
@@ -576,6 +731,7 @@ fn dispatch(
                     let registry = registry.clone();
                     let metrics = metrics.clone();
                     let _ = exec.submit(move |device| {
+                        let _g = done.trace_enter();
                         done.observe_wait();
                         let resp = metrics.time(|| {
                             run_entry(&registry, &entry, &inputs, device)
@@ -652,11 +808,20 @@ fn dispatch(
                 .map(|t| t.shape[0])
                 .unwrap_or(1);
             let r = metrics.time(|| {
-                tune_measured(
-                    registry,
-                    &entries,
-                    &|e| Ok(registry.synth_inputs(e, seed, index_bound)),
-                    &TuneOpts::default(),
+                trace::span(
+                    SpanKind::Tune,
+                    || format!("{kernel}/{workload}"),
+                    || {
+                        tune_measured(
+                            registry,
+                            &entries,
+                            &|e| {
+                                Ok(registry
+                                    .synth_inputs(e, seed, index_bound))
+                            },
+                            &TuneOpts::default(),
+                        )
+                    },
                 )
             });
             let resp = match r {
@@ -690,12 +855,19 @@ fn flush_batch(
     registry: &Registry,
     metrics: &Arc<Metrics>,
     exec: &Executor,
+    shard: u32,
     batch: ReadyBatch<BatchEntry>,
 ) {
     let k = batch.entries.len() as u64;
     if k == 0 {
         return;
     }
+    // One BatchForm span (living in the first sampled member's trace)
+    // covers the whole formation window; every sampled member records
+    // a BatchMember stub in its own trace linking to it.  The batched
+    // launch then runs under the BatchForm span so the shared
+    // KernelExec nests beneath it.
+    let batch_ctx = batch_spans(k, batch.opened, &batch.entries);
     metrics.note(&metrics.batch.batches);
     metrics.batch.batched_jobs.fetch_add(k, Ordering::Relaxed);
     if batch.by_deadline {
@@ -730,6 +902,12 @@ fn flush_batch(
             let registry = registry.clone();
             let metrics = metrics.clone();
             let _ = exec.submit(move |device| {
+                if batch_ctx.is_sampled() {
+                    trace::recorder().set_thread_shard(shard);
+                }
+                // the merged launch runs under the shared BatchForm
+                // span, in the first sampled member's trace
+                let _g = trace::enter(batch_ctx);
                 for d in &dones {
                     d.observe_wait();
                 }
@@ -783,6 +961,9 @@ fn flush_batch(
                             continue;
                         }
                     };
+                    // each member executes under its own trace, so
+                    // cache hit/wait spans attribute per request
+                    let _g = done.trace_enter();
                     done.observe_wait();
                     let resp = metrics.time(|| {
                         run_source(&registry, &hlo_text, &inputs, device)
@@ -793,6 +974,46 @@ fn flush_batch(
             });
         }
     }
+}
+
+/// Record the shared `BatchForm` span plus per-member `BatchMember`
+/// stubs for one flushed group.  Returns the context the batched
+/// launch runs under — the first sampled member's trace with the
+/// shared span as parent — or [`TraceCtx::NONE`] when no member was
+/// sampled.
+fn batch_spans(
+    k: u64,
+    opened: Instant,
+    entries: &[BatchEntry],
+) -> TraceCtx {
+    let lead = match entries
+        .iter()
+        .map(|e| &e.done)
+        .find(|d| d.trace.is_sampled())
+    {
+        Some(d) => d,
+        None => return TraceCtx::NONE,
+    };
+    let rec = trace::recorder();
+    let open_ns = rec
+        .now_ns()
+        .saturating_sub(opened.elapsed().as_nanos() as u64);
+    let shared = {
+        let _g = lead.trace_enter();
+        trace::event(
+            SpanKind::BatchForm,
+            || format!("{k} members"),
+            open_ns,
+            0,
+        )
+    };
+    for d in entries.iter().map(|e| &e.done) {
+        if d.trace.is_sampled() {
+            let _g = d.trace_enter();
+            trace::event(SpanKind::BatchMember, String::new, d.t0_ns, shared);
+        }
+    }
+    TraceCtx { trace_id: lead.trace.trace_id, parent_span: shared }
 }
 
 fn run_entry(
@@ -857,6 +1078,7 @@ mod tests {
             intake: Arc::new(FairQueue::new(depth, fair.clone())),
             table: Arc::new(TenantTable::new(fair)),
             metrics: Arc::new(Metrics::default()),
+            shard: 0,
             handle: None,
         }
     }
@@ -950,6 +1172,7 @@ ENTRY main {
                     reply: plug_tx,
                     enqueued: Instant::now(),
                     pool_bytes: 0,
+                    t0_ns: 0,
                 }
             ),
             TryPush::Accepted

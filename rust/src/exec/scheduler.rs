@@ -18,6 +18,7 @@ use std::sync::Arc;
 
 use crate::exec::future::{promise, ExecFuture};
 use crate::exec::worker::WorkerLoop;
+use crate::trace::{self, SpanKind};
 use crate::util::error::Result;
 
 /// How the scheduler places a job onto a device queue.
@@ -167,8 +168,27 @@ impl Scheduler {
             }
         }
         let (p, fut) = promise();
-        let w = &self.workers[device % self.workers.len()];
-        let job: Job = Box::new(move |d| p.complete(f(d)));
+        let dev = device % self.workers.len();
+        let w = &self.workers[dev];
+        // the placement decision itself is traced: which device queue
+        // won and how deep it was when the job landed there
+        let ctx = trace::current();
+        if ctx.is_sampled() {
+            let depth = w.queued.load(Ordering::Relaxed);
+            trace::event(
+                SpanKind::SchedPlace,
+                || format!("device{dev} queued{depth}"),
+                trace::recorder().now_ns(),
+                0,
+            );
+        }
+        // the worker thread re-enters the submitter's trace context so
+        // spans recorded inside the job (transfers, kernel exec) stay
+        // causally linked to the request
+        let job: Job = Box::new(move |d| {
+            let _g = trace::enter(ctx);
+            p.complete(f(d))
+        });
         w.queued.fetch_add(1, Ordering::Relaxed);
         // drained: dropping the job drops its promise, resolving the
         // future to an error instead of hanging

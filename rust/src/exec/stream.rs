@@ -28,6 +28,7 @@ use crate::exec::future::{promise, ExecFuture, Promise};
 use crate::exec::worker::WorkerLoop;
 use crate::mempool::MemoryPool;
 use crate::runtime::{Client, DeviceBuffer, Executable, HostArray};
+use crate::trace::{self, TraceCtx};
 use crate::util::error::{Error, Result};
 
 enum Op {
@@ -50,10 +51,19 @@ enum Op {
     Marker(Promise<()>),
 }
 
+/// An op plus the trace context of the thread that enqueued it — the
+/// stream worker re-enters that context before running the op, so
+/// transfer and launch spans recorded deep in the runtime client stay
+/// linked to the originating request.
+struct Enqueued {
+    ctx: TraceCtx,
+    op: Op,
+}
+
 /// An asynchronous FIFO execution queue bound to one device.
 pub struct Stream {
     device: usize,
-    worker: WorkerLoop<Op>,
+    worker: WorkerLoop<Enqueued>,
 }
 
 impl Stream {
@@ -69,7 +79,12 @@ impl Stream {
     ) -> Stream {
         let worker = WorkerLoop::spawn(
             format!("rtcg-stream-d{device}"),
-            move || move |op: Op| run_op(&client, &pool, device, op),
+            move || {
+                move |e: Enqueued| {
+                    let _g = trace::enter(e.ctx);
+                    run_op(&client, &pool, device, e.op)
+                }
+            },
         );
         Stream { device, worker }
     }
@@ -82,7 +97,8 @@ impl Stream {
     fn enqueue(&self, op: Op) -> Result<()> {
         // a failed send drops the op (and any promise inside it),
         // resolving its future to an error rather than hanging
-        if self.worker.send(op) {
+        let e = Enqueued { ctx: trace::current(), op };
+        if self.worker.send(e) {
             Ok(())
         } else {
             Err(Error::msg("stream worker is gone"))

@@ -53,6 +53,8 @@ pub mod apps;
 
 pub mod coordinator;
 
+pub mod trace;
+
 pub use cir::{Backend, BackendChoice};
 pub use rtcg::module::Toolkit;
 pub use runtime::{Client, HostArray};

@@ -6,6 +6,8 @@
 //!   tune     measured auto-tuning of one kernel/workload (records db)
 //!   table1   the modeled Table 1 (paper-scale, simulated devices)
 //!   serve    run the coordinator service over a synthetic request mix
+//!   trace    summarize a Chrome trace file, or record one from a
+//!            small traced serve run (see TRACING.md)
 
 use std::path::PathBuf;
 
@@ -38,6 +40,20 @@ const FLAGS: &[(&str, &str)] = &[
     ),
     ("seed", "workload RNG seed (default 42)"),
     ("device", "device profile name for modeled output"),
+    (
+        "trace",
+        "write a Chrome trace-event JSON here (`serve`, `trace`)",
+    ),
+    (
+        "trace-sample",
+        "trace sampling rate 0.0-1.0 for `serve` (default 1.0 \
+         when --trace is given, else 0)",
+    ),
+    (
+        "metrics",
+        "write the merged Prometheus-style metrics exposition to \
+         this file (`serve`)",
+    ),
 ];
 
 fn main() {
@@ -55,9 +71,10 @@ fn main() {
         "tune" => cmd_tune(&args),
         "table1" => cmd_table1(),
         "serve" => cmd_serve(&args),
+        "trace" => cmd_trace(&args),
         other => {
             eprintln!("unknown command '{other}'");
-            eprintln!("commands: info demo tune table1 serve");
+            eprintln!("commands: info demo tune table1 serve trace");
             std::process::exit(2);
         }
     };
@@ -230,6 +247,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ))
         })?;
     let dir = artifacts_dir(args);
+    // tracing: --trace turns full sampling on unless --trace-sample
+    // dials it down (1% is the low-overhead production setting the
+    // fig10 bench pins)
+    let trace_path = args.get("trace").map(PathBuf::from);
+    let default_rate = if trace_path.is_some() { 1.0 } else { 0.0 };
+    let rate = args.get_f64("trace-sample", default_rate)?;
+    if rate > 0.0 {
+        rtcg::trace::recorder().configure(rate, 1 << 16);
+    }
     let mut router = Router::start(shards, |_| CoordinatorConfig {
         artifacts_dir: dir.clone(),
         backend,
@@ -406,6 +432,145 @@ fn cmd_serve(args: &Args) -> Result<()> {
         m.planner.arena_bytes_requested,
         m.planner.arena_bytes_saved()
     );
+    // one merged fleet snapshot: shard-owned counters sum, the
+    // process-global mirrors keep their freshest reading
+    let fleet = Snapshot::merge(&per_shard);
+    println!(
+        "fleet (merged over {} shard{}): {} req | {} launches / {} src / {} ew | cache {} hits / {} misses | {} kernel profile rows | trace {} traces, {} spans recorded, {} dropped",
+        per_shard.len(),
+        if per_shard.len() == 1 { "" } else { "s" },
+        fleet.requests,
+        fleet.launches,
+        fleet.source_runs,
+        fleet.elementwise_jobs,
+        fleet.cache.mem_hits + fleet.cache.disk_hits,
+        fleet.cache.misses,
+        fleet.profile.len(),
+        fleet.trace.traces,
+        fleet.trace.recorded,
+        fleet.trace.dropped,
+    );
+    if let Some(path) = args.get("metrics") {
+        std::fs::write(path, fleet.render_text())?;
+        println!("metrics exposition → {path}");
+    }
+    if let Some(path) = &trace_path {
+        let spans = rtcg::trace::recorder().drain();
+        std::fs::write(
+            path,
+            rtcg::trace::export::chrome_trace(&spans)
+                .to_string_pretty(),
+        )?;
+        match rtcg::trace::export::validate_tree(&spans) {
+            Ok(t) => println!(
+                "trace: {} spans across {} traces ({} batch links) → {}",
+                t.spans,
+                t.traces,
+                t.resolved_links,
+                path.display()
+            ),
+            Err(e) => println!(
+                "trace: malformed ({e}) → {}",
+                path.display()
+            ),
+        }
+    }
     router.shutdown();
     Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    use rtcg::trace::export;
+    // `rtcg trace <file>` summarizes an existing Chrome trace export;
+    // with no file it records a fresh one from a small traced run
+    // (see TRACING.md for how to read the output)
+    let spans = match args.positional.get(1) {
+        Some(path) => {
+            let doc = rtcg::util::json::Json::parse(
+                &std::fs::read_to_string(path)?,
+            )?;
+            export::spans_from_chrome(&doc)
+                .map_err(rtcg::util::error::Error::msg)?
+        }
+        None => record_demo_trace(args)?,
+    };
+    match export::validate_tree(&spans) {
+        Ok(t) => {
+            println!(
+                "{} spans across {} traces; {} batch-member links resolved",
+                t.spans, t.traces, t.resolved_links
+            );
+            for (kind, n) in &t.kinds {
+                println!("  {kind:<14} {n}");
+            }
+        }
+        Err(e) => println!("malformed trace: {e}"),
+    }
+    println!("--- flamegraph (kind paths, heaviest lineages) ---");
+    print!("{}", export::flamegraph(&spans));
+    Ok(())
+}
+
+/// Drive a small batched, sharded, mixed-tenant workload with full
+/// sampling and hand back the drained spans (written to --trace when
+/// given) — the annotated example TRACING.md walks through.
+fn record_demo_trace(args: &Args) -> Result<Vec<rtcg::trace::Span>> {
+    use rtcg::trace::export;
+    let seed = args.get_usize("seed", 42)? as u64;
+    rtcg::trace::recorder().configure(1.0, 1 << 16);
+    let mut router = Router::start(2, |_| CoordinatorConfig {
+        artifacts_dir: PathBuf::from("/nonexistent-artifacts"),
+        optional_artifacts: true,
+        batch: rtcg::coordinator::BatchConfig {
+            max_batch: 4,
+            max_wait: std::time::Duration::from_millis(2),
+        },
+        ..Default::default()
+    })?;
+    let mut rng = Rng::new(seed);
+    // identical descriptors submitted async so they coalesce in the
+    // batcher: the trace shows shared batch_form spans with members
+    // linking in from their own traces
+    let mut pending = Vec::new();
+    for i in 0..8u64 {
+        let tenant = (i % 2) as TenantId;
+        let op = Op::Elementwise {
+            decl: "float a, float *x, float *z".into(),
+            op: "z[i] = a*x[i] + x[i]".into(),
+            name: "trace_ew".into(),
+            args: vec![
+                EwHost::S(rng.normal_f32() as f64),
+                EwHost::V(HostArray::f32(
+                    vec![256],
+                    rng.uniform_vec(256),
+                )),
+            ],
+        };
+        pending.push(router.submit_async(Request::new(tenant, op)));
+    }
+    for rx in pending {
+        let _ = rx.recv();
+    }
+    // one generated-source run exercises the cache-miss/compile path
+    let _ = router.submit(Request::new(
+        0,
+        Op::RunSource {
+            hlo_text: "HloModule tr\n\nENTRY main {\n  \
+                       p = f32[64] parameter(0)\n  \
+                       ROOT r = f32[64] multiply(p, p)\n}\n"
+                .into(),
+            inputs: vec![HostArray::f32(vec![64], rng.uniform_vec(64))],
+        },
+    ));
+    let _ = router.merged_stats();
+    router.shutdown();
+    let spans = rtcg::trace::recorder().drain();
+    if let Some(path) = args.get("trace") {
+        std::fs::write(
+            path,
+            export::chrome_trace(&spans).to_string_pretty(),
+        )?;
+        println!("trace → {path}");
+    }
+    Ok(spans)
 }

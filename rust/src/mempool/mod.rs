@@ -97,6 +97,25 @@ impl PoolStats {
             1.0 - self.largest_free as f64 / self.bytes_held as f64
         }
     }
+
+    /// Merge another pool's counters into this one (fleet snapshot
+    /// union — each shard's toolkit owns its own staging pool).  Byte
+    /// gauges sum to fleet totals; `largest_free` takes the max since
+    /// spans in different pools cannot coalesce.
+    pub fn absorb(&mut self, other: &PoolStats) {
+        self.allocs += other.allocs;
+        self.pool_hits += other.pool_hits;
+        self.fresh_allocs += other.fresh_allocs;
+        self.frees += other.frees;
+        self.bytes_held += other.bytes_held;
+        self.bytes_active += other.bytes_active;
+        self.bytes_owned += other.bytes_owned;
+        self.peak_bytes_active += other.peak_bytes_active;
+        self.arenas += other.arenas;
+        self.splits += other.splits;
+        self.merges += other.merges;
+        self.largest_free = self.largest_free.max(other.largest_free);
+    }
 }
 
 /// Arena backing: `u64` words so the base pointer is 8-byte aligned

@@ -117,6 +117,27 @@ pub struct CacheSnapshot {
     pub per_backend: [BackendCacheRow; 2],
 }
 
+impl CacheSnapshot {
+    /// Merge another shard's cache counters into this one (fleet
+    /// snapshot union — each coordinator shard owns its own cache).
+    pub fn absorb(&mut self, other: &CacheSnapshot) {
+        self.mem_hits += other.mem_hits;
+        self.disk_hits += other.disk_hits;
+        self.misses += other.misses;
+        self.single_flight_waits += other.single_flight_waits;
+        self.evictions += other.evictions;
+        self.entries += other.entries;
+        self.bytes += other.bytes;
+        for (a, b) in
+            self.per_backend.iter_mut().zip(&other.per_backend)
+        {
+            a.mem_hits += b.mem_hits;
+            a.disk_hits += b.disk_hits;
+            a.misses += b.misses;
+        }
+    }
+}
+
 /// Cache construction knobs.
 #[derive(Debug, Clone)]
 pub struct CacheConfig {
@@ -279,14 +300,28 @@ impl CompileCache {
         backend: Backend,
         key_material: &str,
     ) -> String {
+        self.keys_for(backend, key_material).0
+    }
+
+    /// `(cache key, material digest)`: the backend+environment-tagged
+    /// key the shards index on, plus the backend-*independent* digest
+    /// of the raw material — the identity trace spans and the
+    /// per-kernel profile table use, so one kernel's rows on both
+    /// backends share a digest and stay comparable.
+    pub fn keys_for(
+        &self,
+        backend: Backend,
+        key_material: &str,
+    ) -> (String, String) {
+        let material = digest_hex(key_material.as_bytes());
         let env = format!(
             "{}|{}|{}|rtcg-{}",
-            digest_hex(key_material.as_bytes()),
+            material,
             self.client.platform_id(),
             backend.tag(),
             env!("CARGO_PKG_VERSION"),
         );
-        digest_hex(env.as_bytes())
+        (digest_hex(env.as_bytes()), material)
     }
 
     /// Backend-untagged key: the HLO backend (the crate's historical
@@ -309,9 +344,9 @@ impl CompileCache {
         backend: Backend,
         source: &str,
     ) -> Result<Executable> {
-        let key = self.key_for_backend(backend, source);
+        let (key, digest) = self.keys_for(backend, source);
         let by = &self.stats.per_backend[backend.index()];
-        self.get_or_insert(&key, backend, entry_cost(source), || {
+        self.get_or_insert(&key, &digest, backend, entry_cost(source), || {
             if self.disk_lookup(&key) {
                 // The generation product is already persisted (a prior
                 // process compiled this source): count a disk hit and
@@ -353,8 +388,8 @@ impl CompileCache {
         key_material: &str,
         build: impl FnOnce() -> Result<xla::XlaComputation>,
     ) -> Result<Executable> {
-        let key = self.key_for_backend(backend, key_material);
-        self.get_or_insert(&key, backend, entry_cost(key_material), || {
+        let (key, digest) = self.keys_for(backend, key_material);
+        self.get_or_insert(&key, &digest, backend, entry_cost(key_material), || {
             self.stats.misses.fetch_add(1, Ordering::Relaxed);
             self.stats.per_backend[backend.index()]
                 .misses
@@ -364,10 +399,15 @@ impl CompileCache {
         })
     }
 
-    /// Core: sharded lookup with single-flight fill.
+    /// Core: sharded lookup with single-flight fill.  `digest` is the
+    /// backend-independent material digest: it tags the returned
+    /// executable for per-kernel profiling and labels the cache spans
+    /// (hit / miss / single-flight-wait are distinct kinds, so a trace
+    /// shows *which* Fig 2 path a request took).
     fn get_or_insert(
         &self,
         key: &str,
+        digest: &str,
         backend: Backend,
         cost: u64,
         fill: impl FnOnce() -> Result<Executable>,
@@ -376,9 +416,18 @@ impl CompileCache {
             Wait(Arc<Flight>),
             Lead(Arc<Flight>),
         }
+        use crate::trace::{self, SpanKind};
+        let tag = || {
+            format!("{}|{}", backend.tag(), digest.get(..12).unwrap_or(digest))
+        };
         let shard_ix = fnv1a(key.as_bytes()) as usize % self.shards.len();
         let mut fill = Some(fill);
         loop {
+            let lookup_t0 = if trace::current().is_sampled() {
+                trace::recorder().now_ns()
+            } else {
+                0
+            };
             let plan = {
                 let mut shard = self.shards[shard_ix].lock().unwrap();
                 let clock = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
@@ -388,7 +437,10 @@ impl CompileCache {
                     self.stats.per_backend[backend.index()]
                         .mem_hits
                         .fetch_add(1, Ordering::Relaxed);
-                    return Ok(e.exe.clone());
+                    let exe = e.exe.clone();
+                    drop(shard);
+                    trace::event(SpanKind::CacheHit, tag, lookup_t0, 0);
+                    return Ok(exe);
                 }
                 if let Some(f) = shard.inflight.get(key) {
                     Plan::Wait(f.clone())
@@ -404,6 +456,7 @@ impl CompileCache {
                         .single_flight_waits
                         .fetch_add(1, Ordering::Relaxed);
                     f.wait();
+                    trace::event(SpanKind::CacheWait, tag, lookup_t0, 0);
                     // leader finished (or failed): loop re-checks the map
                 }
                 Plan::Lead(f) => {
@@ -417,7 +470,8 @@ impl CompileCache {
                     };
                     let fill = fill.take().expect("leader runs once");
                     let t0 = std::time::Instant::now();
-                    let result = fill();
+                    let result = trace::span(SpanKind::CacheMiss, tag, fill)
+                        .map(|e| e.with_profile_digest(digest));
                     let fill_ns = t0.elapsed().as_nanos() as u64;
                     if let Ok(exe) = &result {
                         let clock =

@@ -148,9 +148,17 @@ impl Client {
         comp: &xla::XlaComputation,
     ) -> Result<Executable> {
         let t = Instant::now();
-        let exe = self.inner.compile(comp)?;
+        let exe = crate::trace::span(
+            crate::trace::SpanKind::Compile,
+            || self.backend.tag().to_string(),
+            || self.inner.compile(comp),
+        )?;
         self.note_compile(t);
-        Ok(Executable { exe: Arc::new(exe), client: self.clone() })
+        Ok(Executable {
+            exe: Arc::new(exe),
+            client: self.clone(),
+            digest: None,
+        })
     }
 
     fn compile_proto(&self, proto: &xla::HloModuleProto) -> Result<Executable> {
@@ -184,27 +192,35 @@ impl Client {
     ) -> Result<DeviceBuffer> {
         use crate::runtime::host::HostData;
         self.stats.h2d_transfers.fetch_add(1, Ordering::Relaxed);
-        let d = Some(device);
-        let buf = match &a.data {
-            HostData::F32(v) => {
-                self.inner.buffer_from_host_buffer(v, &a.shape, d)?
-            }
-            HostData::F64(v) => {
-                self.inner.buffer_from_host_buffer(v, &a.shape, d)?
-            }
-            HostData::I32(v) => {
-                self.inner.buffer_from_host_buffer(v, &a.shape, d)?
-            }
-            HostData::I64(v) => {
-                self.inner.buffer_from_host_buffer(v, &a.shape, d)?
-            }
-        };
-        Ok(DeviceBuffer {
-            buf: Arc::new(buf),
-            shape: a.shape.clone(),
-            dtype: a.dtype(),
-            device,
-        })
+        let bytes = a.size_bytes();
+        crate::trace::span_on(
+            crate::trace::SpanKind::H2D,
+            device as i64,
+            || format!("{bytes}B"),
+            || {
+                let d = Some(device);
+                let buf = match &a.data {
+                    HostData::F32(v) => {
+                        self.inner.buffer_from_host_buffer(v, &a.shape, d)?
+                    }
+                    HostData::F64(v) => {
+                        self.inner.buffer_from_host_buffer(v, &a.shape, d)?
+                    }
+                    HostData::I32(v) => {
+                        self.inner.buffer_from_host_buffer(v, &a.shape, d)?
+                    }
+                    HostData::I64(v) => {
+                        self.inner.buffer_from_host_buffer(v, &a.shape, d)?
+                    }
+                };
+                Ok(DeviceBuffer {
+                    buf: Arc::new(buf),
+                    shape: a.shape.clone(),
+                    dtype: a.dtype(),
+                    device,
+                })
+            },
+        )
     }
 }
 
@@ -233,8 +249,16 @@ impl DeviceBuffer {
 
     /// Fetch to host (D2H).
     pub fn to_host(&self) -> Result<HostArray> {
-        let lit = self.buf.to_literal_sync()?;
-        HostArray::from_literal(&lit)
+        let bytes = self.size_bytes();
+        crate::trace::span_on(
+            crate::trace::SpanKind::D2H,
+            self.device as i64,
+            || format!("{bytes}B"),
+            || {
+                let lit = self.buf.to_literal_sync()?;
+                HostArray::from_literal(&lit)
+            },
+        )
     }
 }
 
@@ -244,9 +268,72 @@ impl DeviceBuffer {
 pub struct Executable {
     exe: Arc<xla::PjRtLoadedExecutable>,
     client: Client,
+    /// Backend-independent cache-material digest, set by the compile
+    /// cache: keys this executable's rows in the per-kernel
+    /// [`crate::trace::ProfileTable`].  `None` = unprofiled (direct
+    /// compiles that bypassed the cache).
+    digest: Option<Arc<str>>,
 }
 
 impl Executable {
+    /// Tag this executable with the cache-material digest its launches
+    /// are profiled under (shares the compiled module).
+    pub fn with_profile_digest(&self, digest: &str) -> Executable {
+        Executable {
+            exe: self.exe.clone(),
+            client: self.client.clone(),
+            digest: Some(Arc::from(digest)),
+        }
+    }
+
+    /// The profile digest, if the compile cache tagged one.
+    pub fn profile_digest(&self) -> Option<&str> {
+        self.digest.as_deref()
+    }
+
+    /// Feed one launch into the global per-kernel profile table and
+    /// (when the current thread is inside a sampled trace) record its
+    /// `kernel_exec` span.
+    fn note_profiled_launch(
+        &self,
+        device: usize,
+        started: Instant,
+        start_ns: u64,
+        bytes_in: u64,
+        bytes_out: u64,
+    ) {
+        let Some(digest) = self.digest.as_deref() else { return };
+        let dur_ns = started.elapsed().as_nanos() as u64;
+        crate::trace::profile().note_launch(
+            digest,
+            self.client.backend,
+            device,
+            dur_ns,
+            bytes_in,
+            bytes_out,
+        );
+        let cur = crate::trace::current();
+        if cur.is_sampled() {
+            let rec = crate::trace::recorder();
+            rec.record(crate::trace::Span {
+                trace_id: cur.trace_id,
+                span_id: rec.alloc_span_id(),
+                parent: cur.parent_span,
+                link: 0,
+                kind: crate::trace::SpanKind::KernelExec,
+                start_ns,
+                dur_ns,
+                shard: rec.thread_shard(),
+                tenant: rec.thread_tenant(),
+                device: device as i64,
+                detail: format!(
+                    "{}|{}",
+                    self.client.backend.tag(),
+                    digest.get(..12).unwrap_or(digest)
+                ),
+            });
+        }
+    }
     /// Execute with host arrays in and out (stages H2D per call).
     pub fn run(&self, args: &[&HostArray]) -> Result<Vec<HostArray>> {
         self.run_on(0, args)
@@ -260,10 +347,20 @@ impl Executable {
     ) -> Result<Vec<HostArray>> {
         let lits: Vec<xla::Literal> =
             args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        let bytes_in: u64 =
+            args.iter().map(|a| a.size_bytes() as u64).sum();
+        let start_ns = crate::trace::recorder().now_ns();
         let t = Instant::now();
         let outs = self.exe.execute_on::<xla::Literal>(device, &lits)?;
         let result = self.collect_outputs(outs);
         self.note_execute(t);
+        if let Ok(outs) = &result {
+            let bytes_out =
+                outs.iter().map(|a| a.size_bytes() as u64).sum();
+            self.note_profiled_launch(
+                device, t, start_ns, bytes_in, bytes_out,
+            );
+        }
         result
     }
 
@@ -282,6 +379,9 @@ impl Executable {
     ) -> Result<Vec<DeviceBuffer>> {
         let bufs: Vec<&xla::PjRtBuffer> =
             args.iter().map(|b| b.buf.as_ref()).collect();
+        let bytes_in: u64 =
+            args.iter().map(|b| b.size_bytes() as u64).sum();
+        let start_ns = crate::trace::recorder().now_ns();
         let t = Instant::now();
         let outs =
             self.exe.execute_b_on::<&xla::PjRtBuffer>(device, &bufs)?;
@@ -318,6 +418,9 @@ impl Executable {
                 }
             }
         }
+        let bytes_out =
+            result.iter().map(|b| b.size_bytes() as u64).sum();
+        self.note_profiled_launch(device, t, start_ns, bytes_in, bytes_out);
         Ok(result)
     }
 

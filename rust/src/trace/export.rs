@@ -1,0 +1,331 @@
+//! Trace export: Chrome trace-event JSON, a compact text flamegraph,
+//! and causal-tree validation.
+//!
+//! The JSON is the `traceEvents` "complete event" (`ph:"X"`) dialect
+//! that `chrome://tracing` and Perfetto load directly: one event per
+//! span, `ts`/`dur` in microseconds, `pid` = coordinator shard, `tid`
+//! = trace id (so one request reads as one horizontal track).  Span
+//! identity and causal links ride in `args`, which also makes the
+//! export round-trippable: [`spans_from_chrome`] reconstructs spans
+//! from a parsed file, and [`validate_tree`] is the single checker the
+//! integration test, the fig10 bench and `rtcg trace` all share.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use crate::util::json::Json;
+
+use super::{Span, SpanKind};
+
+/// Render spans as a Chrome trace-event JSON document.
+pub fn chrome_trace(spans: &[Span]) -> Json {
+    let events: Vec<Json> = spans
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("name", Json::str(s.kind.tag())),
+                ("cat", Json::str("rtcg")),
+                ("ph", Json::str("X")),
+                ("ts", Json::Num(s.start_ns as f64 / 1_000.0)),
+                ("dur", Json::Num(s.dur_ns as f64 / 1_000.0)),
+                ("pid", Json::num(s.shard)),
+                ("tid", Json::Num(s.trace_id as f64)),
+                (
+                    "args",
+                    Json::obj(vec![
+                        ("trace_id", Json::Num(s.trace_id as f64)),
+                        ("span_id", Json::Num(s.span_id as f64)),
+                        ("parent", Json::Num(s.parent as f64)),
+                        ("link", Json::Num(s.link as f64)),
+                        ("tenant", Json::num(s.tenant)),
+                        ("device", Json::Num(s.device as f64)),
+                        ("detail", Json::str(s.detail.clone())),
+                    ]),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+/// Reconstruct spans from a parsed Chrome trace document (the inverse
+/// of [`chrome_trace`]); used by `rtcg trace <file>` and the CI
+/// well-formedness check.
+pub fn spans_from_chrome(doc: &Json) -> Result<Vec<Span>, String> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .ok_or("missing traceEvents array")?;
+    let mut out = Vec::with_capacity(events.len());
+    for (i, ev) in events.iter().enumerate() {
+        let kind = ev
+            .get("name")
+            .and_then(|n| n.as_str())
+            .and_then(SpanKind::from_tag)
+            .ok_or_else(|| format!("event {i}: unknown span kind"))?;
+        let args = ev.get("args").ok_or_else(|| format!("event {i}: no args"))?;
+        let f = |k: &str| -> Result<u64, String> {
+            args.get(k)
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| format!("event {i}: missing args.{k}"))
+        };
+        out.push(Span {
+            trace_id: f("trace_id")?,
+            span_id: f("span_id")?,
+            parent: f("parent")?,
+            link: f("link")?,
+            kind,
+            start_ns: (ev
+                .get("ts")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("event {i}: missing ts"))?
+                * 1_000.0) as u64,
+            dur_ns: (ev
+                .get("dur")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("event {i}: missing dur"))?
+                * 1_000.0) as u64,
+            shard: ev.get("pid").and_then(|v| v.as_u64()).unwrap_or(0) as u32,
+            tenant: args.get("tenant").and_then(|v| v.as_u64()).unwrap_or(0)
+                as u32,
+            device: args.get("device").and_then(|v| v.as_i64()).unwrap_or(-1),
+            detail: args
+                .get("detail")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string(),
+        });
+    }
+    Ok(out)
+}
+
+/// What [`validate_tree`] found in a well-formed span set.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TreeSummary {
+    pub traces: usize,
+    pub spans: usize,
+    /// Count per span kind tag.
+    pub kinds: BTreeMap<&'static str, usize>,
+    /// `BatchMember` links resolved to a shared launch span.
+    pub resolved_links: usize,
+}
+
+/// Check that a drained span set forms complete causal trees:
+/// every trace has exactly one root and it is a `Request` span, every
+/// non-root parent id resolves *within its trace* (no orphans), and
+/// every nonzero `link` resolves to a recorded span (batch members →
+/// the shared launch).  Returns per-kind counts on success.
+pub fn validate_tree(spans: &[Span]) -> Result<TreeSummary, String> {
+    if spans.is_empty() {
+        return Err("no spans recorded".into());
+    }
+    let all_ids: HashSet<u64> = spans.iter().map(|s| s.span_id).collect();
+    if all_ids.len() != spans.len() {
+        return Err("duplicate span ids".into());
+    }
+    let mut by_trace: HashMap<u64, Vec<&Span>> = HashMap::new();
+    for s in spans {
+        if s.trace_id == 0 {
+            return Err(format!("span {} has trace_id 0", s.span_id));
+        }
+        by_trace.entry(s.trace_id).or_default().push(s);
+    }
+    let mut summary = TreeSummary {
+        traces: by_trace.len(),
+        spans: spans.len(),
+        ..TreeSummary::default()
+    };
+    for (trace_id, members) in &by_trace {
+        let ids: HashSet<u64> = members.iter().map(|s| s.span_id).collect();
+        let roots: Vec<&&Span> =
+            members.iter().filter(|s| s.parent == 0).collect();
+        if roots.len() != 1 {
+            return Err(format!(
+                "trace {trace_id}: {} roots (want exactly 1)",
+                roots.len()
+            ));
+        }
+        if roots[0].kind != SpanKind::Request {
+            return Err(format!(
+                "trace {trace_id}: root is {}, not request",
+                roots[0].kind.tag()
+            ));
+        }
+        for s in members {
+            if s.parent != 0 && !ids.contains(&s.parent) {
+                return Err(format!(
+                    "orphan span {} ({}) in trace {trace_id}: \
+                     parent {} not recorded",
+                    s.span_id,
+                    s.kind.tag(),
+                    s.parent
+                ));
+            }
+            if s.link != 0 {
+                if !all_ids.contains(&s.link) {
+                    return Err(format!(
+                        "span {} ({}) links to unrecorded span {}",
+                        s.span_id,
+                        s.kind.tag(),
+                        s.link
+                    ));
+                }
+                summary.resolved_links += 1;
+            }
+        }
+    }
+    for s in spans {
+        *summary.kinds.entry(s.kind.tag()).or_insert(0) += 1;
+    }
+    Ok(summary)
+}
+
+/// Compact text flamegraph: causal kind-paths aggregated across every
+/// trace, children indented under parents, heaviest first.
+///
+/// ```text
+/// request                    12 calls   8.31ms
+///   queue_wait               12 calls   1.02ms
+///   cache_miss                2 calls   4.75ms
+///     compile                 2 calls   4.70ms
+/// ```
+pub fn flamegraph(spans: &[Span]) -> String {
+    // total duration + call count per path of kind tags from the root
+    let mut agg: BTreeMap<Vec<&'static str>, (u64, u64)> = BTreeMap::new();
+    let by_id: HashMap<u64, &Span> =
+        spans.iter().map(|s| (s.span_id, s)).collect();
+    for s in spans {
+        let mut path = vec![s.kind.tag()];
+        let mut cur = s.parent;
+        let mut hops = 0;
+        while cur != 0 && hops < 64 {
+            match by_id.get(&cur) {
+                Some(p) => {
+                    path.push(p.kind.tag());
+                    cur = p.parent;
+                }
+                None => break,
+            }
+            hops += 1;
+        }
+        path.reverse();
+        let e = agg.entry(path).or_insert((0, 0));
+        e.0 += s.dur_ns;
+        e.1 += 1;
+    }
+    // BTreeMap iteration is lexicographic on the path, which places
+    // children directly after their parent — a stable depth-first
+    // rendering without a separate trie walk.
+    let mut out = String::new();
+    for (path, (dur, count)) in &agg {
+        let depth = path.len() - 1;
+        let name = path.last().unwrap();
+        let pad = 24usize.saturating_sub(depth * 2 + name.len());
+        out.push_str(&format!(
+            "{}{}{} {:>7} calls {:>10.2}ms\n",
+            "  ".repeat(depth),
+            name,
+            " ".repeat(pad),
+            count,
+            *dur as f64 / 1.0e6,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::SpanKind;
+    use super::*;
+
+    fn span(
+        trace: u64,
+        id: u64,
+        parent: u64,
+        link: u64,
+        kind: SpanKind,
+    ) -> Span {
+        Span {
+            trace_id: trace,
+            span_id: id,
+            parent,
+            link,
+            kind,
+            start_ns: id * 1_000,
+            dur_ns: 500,
+            shard: 0,
+            tenant: 1,
+            device: -1,
+            detail: format!("d{id}"),
+        }
+    }
+
+    fn sample_spans() -> Vec<Span> {
+        vec![
+            span(1, 10, 0, 0, SpanKind::Request),
+            span(1, 11, 10, 0, SpanKind::QueueWait),
+            span(1, 12, 10, 0, SpanKind::KernelExec),
+            span(2, 20, 0, 0, SpanKind::Request),
+            span(2, 21, 20, 12, SpanKind::BatchMember),
+        ]
+    }
+
+    #[test]
+    fn chrome_roundtrip_preserves_spans() {
+        let spans = sample_spans();
+        let doc = chrome_trace(&spans);
+        let text = doc.to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        let back = spans_from_chrome(&parsed).unwrap();
+        assert_eq!(back, spans);
+    }
+
+    #[test]
+    fn validate_accepts_complete_tree() {
+        let s = validate_tree(&sample_spans()).unwrap();
+        assert_eq!(s.traces, 2);
+        assert_eq!(s.spans, 5);
+        assert_eq!(s.kinds["request"], 2);
+        assert_eq!(s.resolved_links, 1);
+    }
+
+    #[test]
+    fn validate_rejects_orphans_and_bad_links() {
+        let mut spans = sample_spans();
+        spans[1].parent = 999;
+        let err = validate_tree(&spans).unwrap_err();
+        assert!(err.contains("orphan"), "{err}");
+
+        let mut spans = sample_spans();
+        spans[4].link = 999;
+        let err = validate_tree(&spans).unwrap_err();
+        assert!(err.contains("unrecorded"), "{err}");
+
+        let mut spans = sample_spans();
+        spans[0].parent = 11; // cycle, no root
+        let err = validate_tree(&spans).unwrap_err();
+        assert!(err.contains("roots"), "{err}");
+
+        assert!(validate_tree(&[]).is_err());
+    }
+
+    #[test]
+    fn validate_requires_request_root() {
+        let spans = vec![span(1, 10, 0, 0, SpanKind::QueueWait)];
+        let err = validate_tree(&spans).unwrap_err();
+        assert!(err.contains("not request"), "{err}");
+    }
+
+    #[test]
+    fn flamegraph_indents_children() {
+        let fg = flamegraph(&sample_spans());
+        assert!(fg.contains("request"));
+        assert!(fg.contains("  queue_wait"));
+        assert!(fg.contains("  kernel_exec"));
+        assert!(fg.contains("  batch_member"));
+        // counts surface
+        assert!(fg.lines().any(|l| l.contains("2 calls")), "{fg}");
+    }
+}

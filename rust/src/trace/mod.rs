@@ -1,0 +1,362 @@
+//! End-to-end request tracing and per-kernel profiling.
+//!
+//! The paper's whole argument is *measured*: Fig. 2 is the
+//! compile-vs-cache timeline that justifies run-time code generation,
+//! §6.2 selects tuned variants from in-situ timing evidence, and §6.3
+//! accounts for staging transfers around every launch.  This module is
+//! the repo's equivalent of the event-based timing PyCUDA leans on —
+//! a causal, sampled, low-overhead span recorder threaded through the
+//! whole serving path, plus a per-kernel profile table the tuner can
+//! consult as measured evidence alongside its modeled costs.
+//!
+//! ## Span kinds → paper sections
+//!
+//! | [`SpanKind`]        | where it is recorded                     | paper anchor |
+//! |---------------------|------------------------------------------|--------------|
+//! | `Request`           | coordinator, whole request lifetime      | Fig. 2 (end-to-end loop) |
+//! | `Admission`         | quota check at fair-queue intake         | §5 serving surface |
+//! | `QueueWait`         | fair-queue wait (enqueue → service pick) | §5, DRR intake |
+//! | `BatchForm`         | batch window (group open → flush), one   | §5.2 batched calls |
+//! |                     | span shared by all merged members        |              |
+//! | `BatchMember`       | per-member stub, `link` → shared batch   | §5.2          |
+//! | `RouterHop`         | consistent-hash shard pick + handoff     | scale-out tier |
+//! | `CacheHit`          | compile-cache memory hit                 | Fig. 2 (cached path) |
+//! | `CacheMiss`         | cache fill, covers the backend compile   | Fig. 2 (compile path) |
+//! | `CacheWait`         | single-flight wait on another's compile  | Fig. 2        |
+//! | `Compile`           | the backend compile call itself          | Fig. 2, §4    |
+//! | `SchedPlace`        | scheduler placement decision             | §5.4 streams/scheduling |
+//! | `H2D` / `D2H`       | host↔device staging transfer             | §6.3 transfer staging |
+//! | `KernelExec`        | device-worker execution of one launch    | §6.1–6.2      |
+//! | `PlanCluster`       | one planned array-layer cluster launch   | §5.3 lazy arrays |
+//! | `Tune`              | an in-situ tuning request                | §6.2 tuning evidence |
+//!
+//! Cache spans are tagged `backend|digest12` so a trace cross-links
+//! with [`ProfileTable`] rows and `TuningDb` keys.
+//!
+//! ## Architecture
+//!
+//! * [`TraceCtx`] is a 16-byte `Copy` pair `{trace_id, parent_span}`
+//!   carried inside `coordinator::api::Request` and re-entered (via
+//!   [`enter`]) on whichever thread continues the request — service
+//!   loop, exec worker, stream worker.  `trace_id == 0` means "not
+//!   sampled" and every instrumentation site is a single branch.
+//! * [`SpanRecorder`] stores completed spans in striped bounded rings:
+//!   a claim is one `fetch_add` on the stripe head, a full stripe
+//!   counts a drop (never blocks, never overwrites).  Sampling is a
+//!   deterministic counter period derived from the configured rate, so
+//!   tests are exact: rate 0.0 records nothing, rate 1.0 records all.
+//! * [`ProfileTable`] accumulates per-(cache-digest, backend, device)
+//!   launch counts, latency histograms (the same bucket boundaries as
+//!   the coordinator's queue-wait histogram — see
+//!   [`crate::util::stats::LATENCY_BUCKETS_US`]) and bytes moved.  It
+//!   is exported through `coordinator::metrics::Snapshot` and consulted
+//!   by `tuner::search::measured_backend` as in-situ §6.2 evidence.
+//! * [`export`] renders drained spans as Chrome trace-event JSON
+//!   (loadable in `chrome://tracing` / Perfetto) and as a compact text
+//!   flamegraph; `rtcg trace` and `rtcg serve --trace <path>
+//!   --trace-sample <rate>` drive it from the CLI.
+//!
+//! See `TRACING.md` at the repo root for a "reading a trace"
+//! walkthrough with an annotated example.
+
+pub mod export;
+pub mod profile;
+pub mod recorder;
+
+pub use profile::{ProfileKey, ProfileRow, ProfileTable};
+pub use recorder::{RecorderStats, Span, SpanRecorder};
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+/// Everything a request carries to keep its spans causally linked:
+/// which trace it belongs to and which span is the current parent.
+/// `trace_id == 0` ⇒ the request was not sampled and every
+/// instrumentation site short-circuits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceCtx {
+    pub trace_id: u64,
+    pub parent_span: u64,
+}
+
+impl TraceCtx {
+    pub const NONE: TraceCtx = TraceCtx { trace_id: 0, parent_span: 0 };
+
+    pub fn is_sampled(&self) -> bool {
+        self.trace_id != 0
+    }
+}
+
+impl Default for TraceCtx {
+    fn default() -> TraceCtx {
+        TraceCtx::NONE
+    }
+}
+
+/// What a span measures.  Kept flat (no payload) so the recorder slot
+/// stays POD-ish; variable detail goes in `Span::detail`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// Whole request lifetime inside a coordinator shard.
+    Request,
+    /// Admission/quota check at intake.
+    Admission,
+    /// Fair-queue wait: enqueue → service-loop pickup.
+    QueueWait,
+    /// Batch formation window: group open → flush.  One span shared by
+    /// every merged member (it lives in the first sampled member's
+    /// trace); members point at it via `Span::link`.
+    BatchForm,
+    /// Per-member stub inside its own trace; `link` names the shared
+    /// `BatchForm` span its launch was merged into.
+    BatchMember,
+    /// Router: consistent-hash shard pick + handoff.
+    RouterHop,
+    /// Compile-cache lookup served from memory.
+    CacheHit,
+    /// Compile-cache miss: span covers the fill (compile + insert).
+    CacheMiss,
+    /// Single-flight wait for a concurrent leader's fill.
+    CacheWait,
+    /// The backend compile call itself (child of `CacheMiss`).
+    Compile,
+    /// Scheduler placement decision (which device worker).
+    SchedPlace,
+    /// Host→device staging transfer.
+    H2D,
+    /// Device→host staging transfer.
+    D2H,
+    /// Kernel execution on the device worker.
+    KernelExec,
+    /// One planned array-layer cluster launch.
+    PlanCluster,
+    /// An in-situ tuning run.
+    Tune,
+}
+
+impl SpanKind {
+    pub const ALL: [SpanKind; 16] = [
+        SpanKind::Request,
+        SpanKind::Admission,
+        SpanKind::QueueWait,
+        SpanKind::BatchForm,
+        SpanKind::BatchMember,
+        SpanKind::RouterHop,
+        SpanKind::CacheHit,
+        SpanKind::CacheMiss,
+        SpanKind::CacheWait,
+        SpanKind::Compile,
+        SpanKind::SchedPlace,
+        SpanKind::H2D,
+        SpanKind::D2H,
+        SpanKind::KernelExec,
+        SpanKind::PlanCluster,
+        SpanKind::Tune,
+    ];
+
+    /// Stable tag used in exports and tests.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            SpanKind::Request => "request",
+            SpanKind::Admission => "admission",
+            SpanKind::QueueWait => "queue_wait",
+            SpanKind::BatchForm => "batch_form",
+            SpanKind::BatchMember => "batch_member",
+            SpanKind::RouterHop => "router_hop",
+            SpanKind::CacheHit => "cache_hit",
+            SpanKind::CacheMiss => "cache_miss",
+            SpanKind::CacheWait => "cache_wait",
+            SpanKind::Compile => "compile",
+            SpanKind::SchedPlace => "sched_place",
+            SpanKind::H2D => "h2d",
+            SpanKind::D2H => "d2h",
+            SpanKind::KernelExec => "kernel_exec",
+            SpanKind::PlanCluster => "plan_cluster",
+            SpanKind::Tune => "tune",
+        }
+    }
+
+    pub fn from_tag(tag: &str) -> Option<SpanKind> {
+        SpanKind::ALL.iter().copied().find(|k| k.tag() == tag)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// process-global recorder + profile table
+// ---------------------------------------------------------------------------
+
+static RECORDER: OnceLock<SpanRecorder> = OnceLock::new();
+static PROFILE: OnceLock<ProfileTable> = OnceLock::new();
+
+/// The process-global span recorder.  Starts disabled (sampling off);
+/// `SpanRecorder::configure` turns it on.
+pub fn recorder() -> &'static SpanRecorder {
+    RECORDER.get_or_init(SpanRecorder::default)
+}
+
+/// The process-global per-kernel profile table.  Always on — its
+/// accumulation cost is a few atomics per *launch*, not per op.
+pub fn profile() -> &'static ProfileTable {
+    PROFILE.get_or_init(ProfileTable::default)
+}
+
+// ---------------------------------------------------------------------------
+// thread-local current context
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static CURRENT: Cell<TraceCtx> = const { Cell::new(TraceCtx::NONE) };
+}
+
+/// The calling thread's current trace context ([`TraceCtx::NONE`]
+/// outside any [`enter`] scope).
+pub fn current() -> TraceCtx {
+    CURRENT.with(|c| c.get())
+}
+
+/// Restores the previous thread-local context on drop.
+pub struct Guard {
+    prev: TraceCtx,
+}
+
+impl Drop for Guard {
+    fn drop(&mut self) {
+        CURRENT.with(|c| c.set(self.prev));
+    }
+}
+
+/// Make `ctx` the calling thread's current context until the guard
+/// drops.  Worker threads re-enter the request's context this way so
+/// deep layers (cache, runtime client, array planner) need no ctx
+/// parameter.
+#[must_use = "the context reverts when the guard drops"]
+pub fn enter(ctx: TraceCtx) -> Guard {
+    let prev = CURRENT.with(|c| c.replace(ctx));
+    Guard { prev }
+}
+
+/// Run `f` inside a child span of the current context.  When the
+/// current context is unsampled this is one branch + the call.
+/// `detail` is only rendered for sampled spans.
+pub fn span<T>(
+    kind: SpanKind,
+    detail: impl FnOnce() -> String,
+    f: impl FnOnce() -> T,
+) -> T {
+    span_on(kind, -1, detail, f)
+}
+
+/// [`span`] with an explicit device tag (transfer and launch sites).
+pub fn span_on<T>(
+    kind: SpanKind,
+    device: i64,
+    detail: impl FnOnce() -> String,
+    f: impl FnOnce() -> T,
+) -> T {
+    let cur = current();
+    if !cur.is_sampled() {
+        return f();
+    }
+    let rec = recorder();
+    let id = rec.alloc_span_id();
+    let _g = enter(TraceCtx { trace_id: cur.trace_id, parent_span: id });
+    let start_ns = rec.now_ns();
+    let out = f();
+    let end_ns = rec.now_ns();
+    rec.record(Span {
+        trace_id: cur.trace_id,
+        span_id: id,
+        parent: cur.parent_span,
+        link: 0,
+        kind,
+        start_ns,
+        dur_ns: end_ns.saturating_sub(start_ns),
+        shard: rec.thread_shard(),
+        tenant: rec.thread_tenant(),
+        device,
+        detail: detail(),
+    });
+    out
+}
+
+/// Record a completed span `[start_ns, now]` under the current context
+/// without running a closure — for phases whose start predates the
+/// current stack frame (queue wait, batch windows).  Returns the new
+/// span's id (0 if unsampled) so callers can link to it.
+pub fn event(
+    kind: SpanKind,
+    detail: impl FnOnce() -> String,
+    start_ns: u64,
+    link: u64,
+) -> u64 {
+    let cur = current();
+    if !cur.is_sampled() {
+        return 0;
+    }
+    let rec = recorder();
+    let id = rec.alloc_span_id();
+    let end_ns = rec.now_ns();
+    rec.record(Span {
+        trace_id: cur.trace_id,
+        span_id: id,
+        parent: cur.parent_span,
+        link,
+        kind,
+        start_ns,
+        dur_ns: end_ns.saturating_sub(start_ns),
+        shard: rec.thread_shard(),
+        tenant: rec.thread_tenant(),
+        device: -1,
+        detail: detail(),
+    });
+    id
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctx_none_is_unsampled() {
+        assert!(!TraceCtx::NONE.is_sampled());
+        assert!(TraceCtx { trace_id: 3, parent_span: 0 }.is_sampled());
+        assert_eq!(TraceCtx::default(), TraceCtx::NONE);
+    }
+
+    #[test]
+    fn enter_restores_previous_ctx() {
+        assert_eq!(current(), TraceCtx::NONE);
+        let a = TraceCtx { trace_id: 1, parent_span: 10 };
+        let b = TraceCtx { trace_id: 2, parent_span: 20 };
+        {
+            let _g1 = enter(a);
+            assert_eq!(current(), a);
+            {
+                let _g2 = enter(b);
+                assert_eq!(current(), b);
+            }
+            assert_eq!(current(), a);
+        }
+        assert_eq!(current(), TraceCtx::NONE);
+    }
+
+    #[test]
+    fn span_outside_trace_is_transparent() {
+        // No ctx entered: the closure runs, nothing is recorded, and
+        // the detail closure is never rendered.
+        let out = span(
+            SpanKind::KernelExec,
+            || panic!("detail must not render when unsampled"),
+            || 41 + 1,
+        );
+        assert_eq!(out, 42);
+    }
+
+    #[test]
+    fn kind_tags_round_trip() {
+        for k in SpanKind::ALL {
+            assert_eq!(SpanKind::from_tag(k.tag()), Some(k));
+        }
+        assert_eq!(SpanKind::from_tag("nope"), None);
+    }
+}

@@ -1,0 +1,242 @@
+//! Per-kernel measured-performance accumulation.
+//!
+//! Every launch that goes through the compile cache lands one row
+//! here, keyed by (backend-independent cache-key digest, backend,
+//! device): launch count, latency histogram (same bucket edges as the
+//! coordinator's queue-wait histogram —
+//! [`crate::util::stats::LATENCY_BUCKETS_US`]), min/max/total
+//! nanoseconds, and bytes staged in/out.  This is the in-situ (§6.2)
+//! evidence channel: `tuner::search::measured_backend` consults it to
+//! prefer a backend with real measurements over the modeled cost
+//! comparison, exactly as the paper's tuner trusts event timings over
+//! occupancy estimates.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::cir::Backend;
+use crate::util::stats::{LATENCY_BUCKETS_US, LATENCY_BUCKET_COUNT};
+
+/// Identity of one profiled kernel on one backend+device.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ProfileKey {
+    /// Digest of the *backend-independent* kernel material (the same
+    /// digest cache spans carry), so the two backends' rows for one
+    /// kernel share a digest and are directly comparable.
+    pub digest: String,
+    pub backend: Backend,
+    pub device: usize,
+}
+
+/// Accumulated measurements for one [`ProfileKey`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfileRow {
+    pub key: ProfileKey,
+    pub launches: u64,
+    pub total_ns: u64,
+    pub min_ns: u64,
+    pub max_ns: u64,
+    /// Latency histogram over [`LATENCY_BUCKETS_US`] + overflow.
+    pub lat_buckets: [u64; LATENCY_BUCKET_COUNT],
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+impl ProfileRow {
+    fn new(key: ProfileKey) -> ProfileRow {
+        ProfileRow {
+            key,
+            launches: 0,
+            total_ns: 0,
+            min_ns: u64::MAX,
+            max_ns: 0,
+            lat_buckets: [0; LATENCY_BUCKET_COUNT],
+            bytes_in: 0,
+            bytes_out: 0,
+        }
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.launches == 0 {
+            0.0
+        } else {
+            self.total_ns as f64 / self.launches as f64
+        }
+    }
+
+    /// Merge another row for the same key (fleet snapshot union).
+    pub fn absorb(&mut self, other: &ProfileRow) {
+        debug_assert_eq!(self.key, other.key);
+        self.launches += other.launches;
+        self.total_ns += other.total_ns;
+        self.min_ns = self.min_ns.min(other.min_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+        for (a, b) in self.lat_buckets.iter_mut().zip(other.lat_buckets) {
+            *a += b;
+        }
+        self.bytes_in += other.bytes_in;
+        self.bytes_out += other.bytes_out;
+    }
+}
+
+/// Thread-safe accumulation table.  Launches are rare relative to the
+/// ops inside them, so a sharded mutex map is plenty; the hot path is
+/// one hash + one lock of a 16th of the table.
+pub struct ProfileTable {
+    shards: Vec<Mutex<HashMap<ProfileKey, ProfileRow>>>,
+}
+
+const TABLE_SHARDS: usize = 16;
+
+impl Default for ProfileTable {
+    fn default() -> ProfileTable {
+        ProfileTable {
+            shards: (0..TABLE_SHARDS)
+                .map(|_| Mutex::new(HashMap::new()))
+                .collect(),
+        }
+    }
+}
+
+impl ProfileTable {
+    fn shard_for(&self, key: &ProfileKey) -> &Mutex<HashMap<ProfileKey, ProfileRow>> {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in key.digest.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        h ^= key.device as u64;
+        &self.shards[(h as usize) % self.shards.len()]
+    }
+
+    /// Record one launch: `dur_ns` device-side latency plus the bytes
+    /// staged for it.
+    pub fn note_launch(
+        &self,
+        digest: &str,
+        backend: Backend,
+        device: usize,
+        dur_ns: u64,
+        bytes_in: u64,
+        bytes_out: u64,
+    ) {
+        let key = ProfileKey { digest: digest.to_string(), backend, device };
+        let mut map = self.shard_for(&key).lock().unwrap();
+        let row = map
+            .entry(key.clone())
+            .or_insert_with(|| ProfileRow::new(key));
+        row.launches += 1;
+        row.total_ns += dur_ns;
+        row.min_ns = row.min_ns.min(dur_ns);
+        row.max_ns = row.max_ns.max(dur_ns);
+        row.lat_buckets[bucket_for_ns(dur_ns)] += 1;
+        row.bytes_in += bytes_in;
+        row.bytes_out += bytes_out;
+    }
+
+    /// All rows, sorted by key (stable output for snapshots/tests).
+    pub fn rows(&self) -> Vec<ProfileRow> {
+        let mut out: Vec<ProfileRow> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.lock().unwrap().values().cloned().collect::<Vec<_>>())
+            .collect();
+        out.sort_by(|a, b| a.key.cmp(&b.key));
+        out
+    }
+
+    /// Measured mean latency for one kernel digest on one backend and
+    /// device, if at least `min_launches` launches back it.
+    pub fn measured_mean_ns(
+        &self,
+        digest: &str,
+        backend: Backend,
+        device: usize,
+        min_launches: u64,
+    ) -> Option<f64> {
+        let key = ProfileKey { digest: digest.to_string(), backend, device };
+        let map = self.shard_for(&key).lock().unwrap();
+        map.get(&key)
+            .filter(|r| r.launches >= min_launches)
+            .map(|r| r.mean_ns())
+    }
+
+    /// Forget everything (test isolation / bench phases).
+    pub fn reset(&self) {
+        for s in &self.shards {
+            s.lock().unwrap().clear();
+        }
+    }
+}
+
+/// Bucket index in [`LATENCY_BUCKETS_US`] (+1 overflow) for a latency.
+pub fn bucket_for_ns(dur_ns: u64) -> usize {
+    let us = dur_ns / 1_000;
+    LATENCY_BUCKETS_US
+        .iter()
+        .position(|&b| us <= b)
+        .unwrap_or(LATENCY_BUCKETS_US.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_snapshots() {
+        let t = ProfileTable::default();
+        t.note_launch("abc", Backend::Hlo, 0, 5_000, 100, 50);
+        t.note_launch("abc", Backend::Hlo, 0, 15_000, 100, 50);
+        t.note_launch("abc", Backend::Ocl, 0, 40_000, 100, 50);
+        t.note_launch("xyz", Backend::Hlo, 1, 1_000, 8, 8);
+        let rows = t.rows();
+        assert_eq!(rows.len(), 3);
+        let hlo = rows
+            .iter()
+            .find(|r| r.key.digest == "abc" && r.key.backend == Backend::Hlo)
+            .unwrap();
+        assert_eq!(hlo.launches, 2);
+        assert_eq!(hlo.total_ns, 20_000);
+        assert_eq!((hlo.min_ns, hlo.max_ns), (5_000, 15_000));
+        assert_eq!(hlo.bytes_in, 200);
+        assert_eq!(hlo.mean_ns(), 10_000.0);
+        // 5µs and 15µs land in the ≤10µs and ≤100µs buckets
+        assert_eq!(hlo.lat_buckets[0], 1);
+        assert_eq!(hlo.lat_buckets[1], 1);
+    }
+
+    #[test]
+    fn measured_mean_respects_min_launches() {
+        let t = ProfileTable::default();
+        t.note_launch("k", Backend::Hlo, 0, 2_000, 0, 0);
+        assert_eq!(t.measured_mean_ns("k", Backend::Hlo, 0, 2), None);
+        t.note_launch("k", Backend::Hlo, 0, 4_000, 0, 0);
+        assert_eq!(t.measured_mean_ns("k", Backend::Hlo, 0, 2), Some(3_000.0));
+        assert_eq!(t.measured_mean_ns("k", Backend::Ocl, 0, 1), None);
+        t.reset();
+        assert!(t.rows().is_empty());
+    }
+
+    #[test]
+    fn absorb_merges_rows() {
+        let t1 = ProfileTable::default();
+        let t2 = ProfileTable::default();
+        t1.note_launch("k", Backend::Hlo, 0, 2_000, 10, 0);
+        t2.note_launch("k", Backend::Hlo, 0, 6_000, 30, 5);
+        let mut a = t1.rows().remove(0);
+        let b = t2.rows().remove(0);
+        a.absorb(&b);
+        assert_eq!(a.launches, 2);
+        assert_eq!(a.total_ns, 8_000);
+        assert_eq!((a.min_ns, a.max_ns), (2_000, 6_000));
+        assert_eq!((a.bytes_in, a.bytes_out), (40, 5));
+    }
+
+    #[test]
+    fn bucket_edges_are_inclusive() {
+        assert_eq!(bucket_for_ns(10_000), 0); // exactly 10µs
+        assert_eq!(bucket_for_ns(10_001), 1);
+        assert_eq!(bucket_for_ns(1_000_000_000), 5); // exactly 1s
+        assert_eq!(bucket_for_ns(u64::MAX), LATENCY_BUCKETS_US.len());
+    }
+}

@@ -1,0 +1,363 @@
+//! Bounded, striped, sampled span storage.
+//!
+//! Recording must never block the serving path: a claim is one
+//! `fetch_add` on a stripe's head index into preallocated slots; a
+//! full stripe *drops* the span (counted) rather than overwriting or
+//! waiting.  The slot write itself takes an uncontended per-slot mutex
+//! — each claimed index is written by exactly one thread, so the lock
+//! never spins in practice; it only exists to make the slot `Sync`.
+//!
+//! Sampling is deterministic: a rate `r` becomes a period
+//! `round(1/r)` and every `period`-th `begin()` call starts a trace.
+//! `r <= 0` disables tracing entirely (the default), which keeps the
+//! disabled-path cost to one relaxed atomic load per request and one
+//! thread-local read per instrumentation site.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, RwLock};
+use std::time::Instant;
+
+use super::TraceCtx;
+
+/// One completed span.  `parent == 0` marks a trace root; `link != 0`
+/// points at a related span in a *different* trace (batch members →
+/// the shared batched launch).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub trace_id: u64,
+    pub span_id: u64,
+    pub parent: u64,
+    /// Cross-trace association (0 = none): a batch member's link names
+    /// the shared batched `KernelExec`/`BatchForm` span it rode in.
+    pub link: u64,
+    pub kind: super::SpanKind,
+    /// Nanoseconds since the recorder's epoch.
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// Coordinator shard that recorded the span (0 when unsharded).
+    pub shard: u32,
+    /// Tenant the enclosing request belongs to (0 = default tenant).
+    pub tenant: u32,
+    /// Device ordinal, -1 when not device-bound.
+    pub device: i64,
+    /// Free-form tag, e.g. `"hlo|3f9a2c41d0b1"` on cache spans.
+    pub detail: String,
+}
+
+/// Counters describing what the recorder has seen since the last
+/// `configure`/`reset`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RecorderStats {
+    /// Traces started (sampled `begin()` calls).
+    pub traces: u64,
+    /// Spans accepted into a ring.
+    pub recorded: u64,
+    /// Spans dropped because their stripe was full.
+    pub dropped: u64,
+}
+
+const STRIPES: usize = 8;
+
+struct Stripe {
+    head: AtomicUsize,
+    slots: Vec<Mutex<Option<Span>>>,
+}
+
+impl Stripe {
+    fn with_capacity(cap: usize) -> Stripe {
+        Stripe {
+            head: AtomicUsize::new(0),
+            slots: (0..cap).map(|_| Mutex::new(None)).collect(),
+        }
+    }
+}
+
+/// Striped bounded span storage with counter-period sampling.
+pub struct SpanRecorder {
+    /// Sampling period: 0 = disabled, 1 = every request, n = 1-in-n.
+    period: AtomicU64,
+    /// `begin()` calls since configure — drives the sampling counter.
+    intake: AtomicU64,
+    /// Monotone id source for trace and span ids (0 is reserved).
+    next_id: AtomicU64,
+    traces: AtomicU64,
+    recorded: AtomicU64,
+    dropped: AtomicU64,
+    /// Stripes are replaced wholesale on `configure`; record paths
+    /// take the (uncontended) read side.
+    stripes: RwLock<Vec<Stripe>>,
+    epoch: Instant,
+}
+
+thread_local! {
+    static THREAD_SHARD: Cell<u32> = const { Cell::new(0) };
+    static THREAD_TENANT: Cell<u32> = const { Cell::new(0) };
+}
+
+impl Default for SpanRecorder {
+    /// Disabled, with room for 64Ki spans once enabled.
+    fn default() -> SpanRecorder {
+        SpanRecorder::new(0.0, 1 << 16)
+    }
+}
+
+impl SpanRecorder {
+    pub fn new(sample_rate: f64, capacity: usize) -> SpanRecorder {
+        SpanRecorder {
+            period: AtomicU64::new(period_for(sample_rate)),
+            intake: AtomicU64::new(0),
+            next_id: AtomicU64::new(1),
+            traces: AtomicU64::new(0),
+            recorded: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            stripes: RwLock::new(make_stripes(capacity)),
+            epoch: Instant::now(),
+        }
+    }
+
+    /// (Re)configure sampling rate and total span capacity.  Discards
+    /// anything currently buffered and resets the counters.
+    pub fn configure(&self, sample_rate: f64, capacity: usize) {
+        let mut stripes = self.stripes.write().unwrap();
+        *stripes = make_stripes(capacity);
+        self.period.store(period_for(sample_rate), Ordering::Relaxed);
+        self.intake.store(0, Ordering::Relaxed);
+        self.traces.store(0, Ordering::Relaxed);
+        self.recorded.store(0, Ordering::Relaxed);
+        self.dropped.store(0, Ordering::Relaxed);
+    }
+
+    /// Is any sampling enabled at all?
+    pub fn enabled(&self) -> bool {
+        self.period.load(Ordering::Relaxed) != 0
+    }
+
+    /// Nanoseconds since this recorder's epoch (the time base of every
+    /// span it stores).
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Start (maybe) a new trace: returns a sampled context carrying a
+    /// fresh trace id and a preallocated root span id in
+    /// `parent_span`, or [`TraceCtx::NONE`] when this request is not
+    /// sampled.  The caller records the root `Request` span itself
+    /// when the request finishes, using that id.
+    pub fn begin(&self) -> TraceCtx {
+        let period = self.period.load(Ordering::Relaxed);
+        if period == 0 {
+            return TraceCtx::NONE;
+        }
+        let n = self.intake.fetch_add(1, Ordering::Relaxed);
+        if n % period != 0 {
+            return TraceCtx::NONE;
+        }
+        self.traces.fetch_add(1, Ordering::Relaxed);
+        TraceCtx {
+            trace_id: self.alloc_span_id(),
+            parent_span: self.alloc_span_id(),
+        }
+    }
+
+    /// Fresh nonzero id (shared namespace for trace and span ids).
+    pub fn alloc_span_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Store one completed span.  Never blocks on a full buffer — the
+    /// span is dropped and counted instead.
+    pub fn record(&self, span: Span) {
+        let stripes = self.stripes.read().unwrap();
+        if stripes.is_empty() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let stripe = &stripes[(span.span_id as usize) % stripes.len()];
+        let idx = stripe.head.fetch_add(1, Ordering::Relaxed);
+        if idx < stripe.slots.len() {
+            *stripe.slots[idx].lock().unwrap() = Some(span);
+            self.recorded.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Take every buffered span (ordered by start time) and reset the
+    /// rings.  Meant to be called at a quiet point (end of a serve
+    /// run, test teardown); spans recorded concurrently with the drain
+    /// may land in either batch.
+    pub fn drain(&self) -> Vec<Span> {
+        let stripes = self.stripes.read().unwrap();
+        let mut out = Vec::new();
+        for stripe in stripes.iter() {
+            let filled =
+                stripe.head.swap(0, Ordering::Relaxed).min(stripe.slots.len());
+            for slot in &stripe.slots[..filled] {
+                if let Some(s) = slot.lock().unwrap().take() {
+                    out.push(s);
+                }
+            }
+        }
+        out.sort_by_key(|s| (s.start_ns, s.span_id));
+        out
+    }
+
+    pub fn stats(&self) -> RecorderStats {
+        RecorderStats {
+            traces: self.traces.load(Ordering::Relaxed),
+            recorded: self.recorded.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Tag spans recorded on this thread with a coordinator shard id.
+    pub fn set_thread_shard(&self, shard: u32) {
+        THREAD_SHARD.with(|c| c.set(shard));
+    }
+
+    /// Tag spans recorded on this thread with a tenant id.
+    pub fn set_thread_tenant(&self, tenant: u32) {
+        THREAD_TENANT.with(|c| c.set(tenant));
+    }
+
+    pub fn thread_shard(&self) -> u32 {
+        THREAD_SHARD.with(|c| c.get())
+    }
+
+    pub fn thread_tenant(&self) -> u32 {
+        THREAD_TENANT.with(|c| c.get())
+    }
+}
+
+fn period_for(rate: f64) -> u64 {
+    if rate <= 0.0 {
+        0
+    } else {
+        (1.0 / rate.min(1.0)).round().max(1.0) as u64
+    }
+}
+
+fn make_stripes(capacity: usize) -> Vec<Stripe> {
+    if capacity == 0 {
+        return Vec::new();
+    }
+    let per = capacity.div_ceil(STRIPES).max(1);
+    (0..STRIPES).map(|_| Stripe::with_capacity(per)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::SpanKind;
+    use super::*;
+
+    fn span_with_id(r: &SpanRecorder, kind: SpanKind) -> Span {
+        Span {
+            trace_id: 1,
+            span_id: r.alloc_span_id(),
+            parent: 0,
+            link: 0,
+            kind,
+            start_ns: r.now_ns(),
+            dur_ns: 10,
+            shard: 0,
+            tenant: 0,
+            device: -1,
+            detail: String::new(),
+        }
+    }
+
+    #[test]
+    fn rate_zero_records_nothing() {
+        let r = SpanRecorder::new(0.0, 1024);
+        assert!(!r.enabled());
+        for _ in 0..100 {
+            assert_eq!(r.begin(), TraceCtx::NONE);
+        }
+        assert_eq!(r.stats(), RecorderStats::default());
+        assert!(r.drain().is_empty());
+    }
+
+    #[test]
+    fn rate_one_samples_every_request() {
+        let r = SpanRecorder::new(1.0, 1024);
+        for _ in 0..10 {
+            assert!(r.begin().is_sampled());
+        }
+        assert_eq!(r.stats().traces, 10);
+    }
+
+    #[test]
+    fn fractional_rate_is_a_counter_period() {
+        let r = SpanRecorder::new(0.25, 1024);
+        let sampled: Vec<bool> =
+            (0..12).map(|_| r.begin().is_sampled()).collect();
+        // period 4 ⇒ requests 0, 4, 8 sampled
+        let expect: Vec<bool> = (0..12).map(|i| i % 4 == 0).collect();
+        assert_eq!(sampled, expect);
+        assert_eq!(r.stats().traces, 3);
+    }
+
+    #[test]
+    fn overflow_increments_drop_counter() {
+        let cap = 16;
+        let r = SpanRecorder::new(1.0, cap);
+        // 8 stripes × ceil(16/8)=2 slots ⇒ exactly 16 fit when ids
+        // spread evenly; push far more than capacity
+        for _ in 0..100 {
+            let s = span_with_id(&r, SpanKind::KernelExec);
+            r.record(s);
+        }
+        let st = r.stats();
+        assert_eq!(st.recorded + st.dropped, 100);
+        assert_eq!(st.recorded, cap as u64);
+        assert!(st.dropped >= 84);
+        // drain returns only what was kept and resets the rings
+        assert_eq!(r.drain().len(), cap);
+        assert!(r.drain().is_empty());
+        // ...so new spans fit again
+        r.record(span_with_id(&r, SpanKind::KernelExec));
+        assert_eq!(r.drain().len(), 1);
+    }
+
+    #[test]
+    fn drain_orders_by_start_time() {
+        let r = SpanRecorder::new(1.0, 64);
+        let mut a = span_with_id(&r, SpanKind::Request);
+        let mut b = span_with_id(&r, SpanKind::QueueWait);
+        a.start_ns = 200;
+        b.start_ns = 100;
+        r.record(a.clone());
+        r.record(b.clone());
+        let got = r.drain();
+        assert_eq!(got, vec![b, a]);
+    }
+
+    #[test]
+    fn configure_resets_counters_and_capacity() {
+        let r = SpanRecorder::new(1.0, 8);
+        for _ in 0..20 {
+            r.begin();
+            r.record(span_with_id(&r, SpanKind::H2D));
+        }
+        assert!(r.stats().dropped > 0);
+        r.configure(0.5, 1024);
+        assert_eq!(r.stats(), RecorderStats::default());
+        assert!(r.enabled());
+        assert!(r.begin().is_sampled());
+        assert!(!r.begin().is_sampled());
+    }
+
+    #[test]
+    fn thread_tags_default_to_zero() {
+        let r = SpanRecorder::default();
+        assert_eq!(r.thread_shard(), 0);
+        assert_eq!(r.thread_tenant(), 0);
+        r.set_thread_shard(3);
+        r.set_thread_tenant(7);
+        assert_eq!((r.thread_shard(), r.thread_tenant()), (3, 7));
+        // reset for other tests on this thread
+        r.set_thread_shard(0);
+        r.set_thread_tenant(0);
+    }
+}

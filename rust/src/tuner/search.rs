@@ -194,6 +194,49 @@ pub fn tune_modeled(
     })
 }
 
+/// Launches of a kernel on a backend before its measured mean is
+/// trusted over the modeled cost (a couple of warmup-polluted samples
+/// must not flip a backend decision).
+pub const MIN_MEASURED_LAUNCHES: u64 = 3;
+
+/// In-situ measured evidence (§6.2): consult the process-global
+/// per-kernel [`crate::trace::ProfileTable`] for this kernel's mean
+/// execution latency on every candidate backend and return the
+/// measured-fastest one.  `digest_for` names the backend-independent
+/// profile digest the compile cache tagged that backend's executable
+/// with (per-backend generated source ⇒ per-backend digest).
+///
+/// Returns `None` until at least two backends have
+/// [`MIN_MEASURED_LAUNCHES`] of evidence on `device`: a one-sided
+/// measurement is not a comparison, so the modeled cost keeps deciding.
+pub fn measured_backend(
+    device: usize,
+    digest_for: impl Fn(crate::cir::Backend) -> String,
+) -> Option<crate::cir::Backend> {
+    let prof = crate::trace::profile();
+    let mut measured = 0usize;
+    let mut best: Option<(crate::cir::Backend, f64)> = None;
+    for b in crate::cir::Backend::ALL {
+        let Some(mean) = prof.measured_mean_ns(
+            &digest_for(b),
+            b,
+            device,
+            MIN_MEASURED_LAUNCHES,
+        ) else {
+            continue;
+        };
+        measured += 1;
+        if best.map(|(_, m)| mean < m).unwrap_or(true) {
+            best = Some((b, mean));
+        }
+    }
+    if measured >= 2 {
+        best.map(|(b, _)| b)
+    } else {
+        None
+    }
+}
+
 /// Model-based tuning over the CIR transformation variant space (§6.2's
 /// grid search, per (kernel, workload, backend, device)): enumerate the
 /// legality-checked variants, cost each under the backend-adjusted
@@ -278,6 +321,62 @@ mod tests {
     #[test]
     fn empty_pool_is_an_error() {
         assert!(tune_modeled("k", "w", &[], &C1060).is_err());
+    }
+
+    #[test]
+    fn measured_evidence_flips_backend_choice() {
+        use crate::cir::Backend;
+        // unique digests: the profile table is process-global and
+        // shared with every other test in the binary
+        let digest_for =
+            |b: Backend| format!("tuner-meas-test-{}", b.tag());
+        // no evidence: the modeled cost keeps deciding
+        assert_eq!(measured_backend(0, digest_for), None);
+        let prof = crate::trace::profile();
+        // one-sided evidence is not a comparison — still None
+        for _ in 0..MIN_MEASURED_LAUNCHES {
+            prof.note_launch(
+                &digest_for(Backend::Hlo),
+                Backend::Hlo,
+                0,
+                900_000,
+                0,
+                0,
+            );
+        }
+        assert_eq!(measured_backend(0, digest_for), None);
+        // the other side arrives, measured faster: resolution flips
+        for _ in 0..MIN_MEASURED_LAUNCHES {
+            prof.note_launch(
+                &digest_for(Backend::Ocl),
+                Backend::Ocl,
+                0,
+                100_000,
+                0,
+                0,
+            );
+        }
+        assert_eq!(measured_backend(0, digest_for), Some(Backend::Ocl));
+        // opposite evidence on another device flips the other way
+        for _ in 0..MIN_MEASURED_LAUNCHES {
+            prof.note_launch(
+                &digest_for(Backend::Hlo),
+                Backend::Hlo,
+                1,
+                50_000,
+                0,
+                0,
+            );
+            prof.note_launch(
+                &digest_for(Backend::Ocl),
+                Backend::Ocl,
+                1,
+                400_000,
+                0,
+                0,
+            );
+        }
+        assert_eq!(measured_backend(1, digest_for), Some(Backend::Hlo));
     }
 
     #[test]

@@ -3,6 +3,17 @@
 //! (Table 1, Table 4); `Summary` carries exactly that plus robust
 //! percentiles for the harness's own decisions.
 
+/// Shared latency histogram bucket boundaries (µs): the coordinator's
+/// queue-wait histogram and the trace layer's per-kernel profile
+/// histograms bin against the same edges, so merged snapshots and
+/// Prometheus exposition never mix bucket schemes.  Each value is an
+/// inclusive upper bound; one overflow bucket follows the last.
+pub const LATENCY_BUCKETS_US: [u64; 6] =
+    [10, 100, 1_000, 10_000, 100_000, 1_000_000];
+
+/// Bucket count including the trailing overflow bucket.
+pub const LATENCY_BUCKET_COUNT: usize = LATENCY_BUCKETS_US.len() + 1;
+
 /// Streaming mean/variance (Welford).
 #[derive(Debug, Clone, Default)]
 pub struct Welford {

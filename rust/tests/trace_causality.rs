@@ -1,0 +1,219 @@
+//! End-to-end trace causality: a batched, sharded, mixed-tenant run
+//! must drain as a *complete* set of causal span trees — every span's
+//! parent resolves inside its trace, every trace has exactly one
+//! `request` root, and every batch member links to the shared batch
+//! span its launch was merged into.  Plus the sampling contract: rate
+//! 0.0 records nothing, and a full ring counts drops instead of
+//! blocking or overwriting.
+//!
+//! The recorder and profile table are process-global, so the tests in
+//! this binary serialize on one mutex and reconfigure the recorder at
+//! their start (configure replaces the rings, giving a clean slate).
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use rtcg::coordinator::{
+    BatchConfig, CoordinatorConfig, Op, Request, Router, TenantId,
+};
+use rtcg::elementwise::EwHost;
+use rtcg::runtime::HostArray;
+use rtcg::trace::export::{chrome_trace, spans_from_chrome, validate_tree};
+use rtcg::trace::{Span, SpanKind};
+use rtcg::util::json::Json;
+use rtcg::Toolkit;
+
+static GLOBAL_RECORDER_LOCK: Mutex<()> = Mutex::new(());
+
+fn two_shard_router() -> Router {
+    Router::start(2, |_| CoordinatorConfig {
+        artifacts_dir: PathBuf::from("/nonexistent-artifacts"),
+        optional_artifacts: true,
+        toolkit: Some(Toolkit::init_ephemeral().unwrap()),
+        batch: BatchConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(5),
+        },
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn ew_req(i: u64) -> Request {
+    // two descriptors so the consistent-hash ring has two keys to
+    // spread; identical descriptors batch among themselves
+    let (op, name) = if i % 2 == 0 {
+        ("z[i] = a*x[i] + x[i]", "trace_a")
+    } else {
+        ("z[i] = a*x[i] - x[i]", "trace_b")
+    };
+    Request::new(
+        (i % 3) as TenantId,
+        Op::Elementwise {
+            decl: "float a, float *x, float *z".into(),
+            op: op.into(),
+            name: name.into(),
+            args: vec![
+                EwHost::S(i as f64 * 0.5),
+                EwHost::V(HostArray::f32(vec![4], vec![1.0, 2.0, 3.0, 4.0])),
+            ],
+        },
+    )
+}
+
+#[test]
+fn batched_sharded_run_drains_complete_causal_trees() {
+    let _serial = GLOBAL_RECORDER_LOCK
+        .lock()
+        .unwrap_or_else(|e| e.into_inner());
+    let rec = rtcg::trace::recorder();
+    rec.configure(1.0, 1 << 16);
+
+    let mut router = two_shard_router();
+    // pipelined async submits so the batcher has cross-request
+    // material to merge (a blocking driver never fills a group)
+    let mut pending = Vec::new();
+    for i in 0..16u64 {
+        pending.push(router.submit_async(ew_req(i)));
+    }
+    for rx in pending {
+        let resp = rx.recv().expect("reply channel closed");
+        assert!(resp.outputs().is_ok(), "request failed");
+    }
+    // a merged stats sweep traces a request on every shard
+    let merged = router.merged_stats();
+    assert_eq!(merged.elementwise_jobs, 16);
+    router.shutdown();
+
+    let spans = rec.drain();
+    let stats = rec.stats();
+    assert_eq!(stats.dropped, 0, "ring must not drop in this test");
+    assert!(stats.traces >= 16, "every request begins a trace");
+
+    // the tentpole invariant: a complete parent-linked tree per trace,
+    // no orphans, exactly one `request` root each
+    let summary = validate_tree(&spans)
+        .unwrap_or_else(|e| panic!("malformed trace: {e}"));
+    assert!(summary.traces >= 16);
+    for kind in [
+        "request",
+        "admission",
+        "queue_wait",
+        "batch_form",
+        "batch_member",
+        "router_hop",
+        "kernel_exec",
+        "cache_miss",
+    ] {
+        assert!(
+            summary.kinds.get(kind).copied().unwrap_or(0) > 0,
+            "expected at least one {kind} span; got kinds {:?}",
+            summary.kinds
+        );
+    }
+    // batching really merged: fewer launches than members
+    let members = summary.kinds["batch_member"];
+    let forms = summary.kinds["batch_form"];
+    assert_eq!(members, 16, "every sampled member records its stub");
+    assert!(forms < members, "groups must have merged ({forms} forms)");
+
+    // every batch member's link resolves to a shared batch_form span
+    let find = |id: u64| spans.iter().find(|s| s.span_id == id);
+    for s in spans.iter().filter(|s| s.kind == SpanKind::BatchMember) {
+        assert_ne!(s.link, 0, "member {} has no link", s.span_id);
+        let shared = find(s.link).expect("link target recorded");
+        assert_eq!(
+            shared.kind,
+            SpanKind::BatchForm,
+            "member {} links to a {} span",
+            s.span_id,
+            shared.kind.tag()
+        );
+    }
+    // the merged kernel execution nests under the shared batch span
+    // (in the leader's trace), tying members to one launch
+    for s in spans.iter().filter(|s| s.kind == SpanKind::BatchForm) {
+        assert!(
+            spans
+                .iter()
+                .any(|c| c.parent == s.span_id
+                    && c.trace_id == s.trace_id),
+            "batch_form {} has no children",
+            s.span_id
+        );
+    }
+
+    // the Chrome export round-trips every span's causal identity
+    // (timestamps ride as µs floats, so ns values are approximate)
+    let doc = chrome_trace(&spans);
+    let back = spans_from_chrome(&Json::parse(&doc.to_string()).unwrap())
+        .unwrap();
+    assert_eq!(back.len(), spans.len());
+    for (a, b) in back.iter().zip(&spans) {
+        assert_eq!(
+            (a.trace_id, a.span_id, a.parent, a.link, a.kind, a.shard),
+            (b.trace_id, b.span_id, b.parent, b.link, b.kind, b.shard),
+        );
+    }
+    validate_tree(&back).expect("round-tripped trace stays well-formed");
+}
+
+#[test]
+fn sampling_rate_zero_records_nothing() {
+    let _serial = GLOBAL_RECORDER_LOCK
+        .lock()
+        .unwrap_or_else(|e| e.into_inner());
+    let rec = rtcg::trace::recorder();
+    rec.configure(0.0, 1 << 12);
+    assert!(!rec.enabled());
+
+    let mut router = two_shard_router();
+    let mut pending = Vec::new();
+    for i in 0..8u64 {
+        pending.push(router.submit_async(ew_req(i)));
+    }
+    for rx in pending {
+        assert!(rx.recv().unwrap().outputs().is_ok());
+    }
+    router.shutdown();
+
+    let stats = rec.stats();
+    assert_eq!(stats.traces, 0, "rate 0.0 must begin no traces");
+    assert_eq!(stats.recorded, 0);
+    assert!(rec.drain().is_empty());
+}
+
+#[test]
+fn full_ring_counts_drops_instead_of_blocking() {
+    let _serial = GLOBAL_RECORDER_LOCK
+        .lock()
+        .unwrap_or_else(|e| e.into_inner());
+    let rec = rtcg::trace::recorder();
+    // tiny capacity: 16 slots across the stripes
+    rec.configure(1.0, 16);
+    let ctx = rec.begin();
+    assert!(ctx.is_sampled());
+    for i in 0..200u64 {
+        rec.record(Span {
+            trace_id: ctx.trace_id,
+            span_id: rec.alloc_span_id(),
+            parent: if i == 0 { 0 } else { ctx.parent_span },
+            link: 0,
+            kind: SpanKind::KernelExec,
+            start_ns: i,
+            dur_ns: 1,
+            shard: 0,
+            tenant: 0,
+            device: -1,
+            detail: String::new(),
+        });
+    }
+    let stats = rec.stats();
+    assert!(stats.dropped > 0, "overflow must count drops: {stats:?}");
+    assert_eq!(stats.recorded + stats.dropped, 200);
+    // what *was* recorded is intact and bounded by capacity
+    let spans = rec.drain();
+    assert!(!spans.is_empty());
+    assert!(spans.len() <= 16);
+}
